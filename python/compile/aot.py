@@ -1,0 +1,60 @@
+"""AOT pipeline: lower the L2 model (and raw L1 kernel) to HLO **text**
+artifacts consumed by the Rust runtime.
+
+HLO text — NOT ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import hashlib
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned on parse)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_artifact(name: str, out_dir: str) -> str:
+    fn = model.FUNCTIONS[name]
+    args = model.example_args()[name]
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    digest = hashlib.sha256(text.encode()).hexdigest()[:12]
+    print(f"wrote {path}: {len(text)} chars, sha256 {digest}")
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only", choices=sorted(model.FUNCTIONS), help="build one artifact"
+    )
+    ns = ap.parse_args()
+    os.makedirs(ns.out_dir, exist_ok=True)
+    names = [ns.only] if ns.only else sorted(model.FUNCTIONS)
+    for name in names:
+        build_artifact(name, ns.out_dir)
+
+
+if __name__ == "__main__":
+    main()

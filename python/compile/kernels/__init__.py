@@ -1,0 +1,10 @@
+"""L1 — Pallas kernels for the SMASH compute hot-spot.
+
+The TPU re-think of SMASH (see DESIGN.md §Hardware-Adaptation): the SPAD
+hashtable becomes a VMEM accumulator tile; the window distribution becomes
+the Pallas grid; atomic merging becomes race-free sequential accumulation
+over the k-grid; the DMA engine becomes the automatic BlockSpec pipeline.
+"""
+
+from .smash_spmm import ell_spmm, ell_spmm_blocked, ell_spmm_ftiled  # noqa: F401
+from . import ref  # noqa: F401

@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Everything here is straightforward, unfused jnp; the pytest suite asserts
+`assert_allclose(kernel(...), ref(...))` over shape/dtype sweeps.
+"""
+
+import jax.numpy as jnp
+
+
+def ell_spmm_ref(vals, cols, h):
+    """Row-wise product SpMM oracle: ``out[i] = Σ_k vals[i,k] · h[cols[i,k]]``.
+
+    Args:
+      vals: f32[n, k]   ELL values (zero-padded).
+      cols: i32[n, k]   ELL column indices (padding may point anywhere as
+                        long as the matching value is 0).
+      h:    f32[m, f]   dense right-hand side.
+
+    Returns:
+      f32[n, f]
+    """
+    gathered = h[cols]                       # [n, k, f]
+    return jnp.einsum("nk,nkf->nf", vals, gathered)
+
+
+def gcn_forward_ref(vals, cols, feats, w1, w2):
+    """2-layer GCN oracle: ``Â·relu(Â·H·W1)·W2`` with Â in ELL form."""
+    h1 = jnp.maximum(ell_spmm_ref(vals, cols, feats) @ w1, 0.0)
+    return ell_spmm_ref(vals, cols, h1) @ w2
+
+
+def dense_mm_ref(a, b):
+    """Plain matmul oracle."""
+    return a @ b

@@ -1,0 +1,181 @@
+"""SMASH-on-TPU: row-wise-product sparse×dense aggregation as a Pallas
+kernel.
+
+Mapping of the paper's mechanisms onto the TPU (DESIGN.md
+§Hardware-Adaptation):
+
+* PIUMA windows (§5.1.1)  -> the Pallas grid over output row-blocks; each
+  step owns a `(block_n, f)` output tile sized to VMEM, exactly like a
+  window's hashtable is sized to the SPAD.
+* SPAD hashtable merge    -> a VMEM accumulator tile. The TPU has no
+  scatter-atomics into VMEM, so merging is restructured: each grid step
+  accumulates its own tile across the ELL k-slices — race-free by
+  construction (the k loop is sequential inside the kernel), which is the
+  moral equivalent of "merge partial products the moment they are
+  produced, on-chip".
+* DMA engine (§5.3)       -> the BlockSpec pipeline double-buffers
+  HBM<->VMEM transfers of the value/index tiles automatically.
+* Tokenization (§5.2)     -> row-blocks are equal-sized; the ELL format
+  pre-balances FMAs per row (the format change plays the role of the
+  dynamic scheduler on a machine whose grid is statically scheduled).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; real-TPU performance is *estimated* in DESIGN.md from VMEM
+footprint and MXU utilization, not measured here.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmm_kernel(vals_ref, cols_ref, h_ref, out_ref):
+    """One grid step: out tile = Σ_k vals[:, k] · h[cols[:, k], :].
+
+    vals_ref: f32[block_n, k]   ELL values of this row block.
+    cols_ref: i32[block_n, k]   ELL column indices of this row block.
+    h_ref:    f32[m, f]         the full dense operand (fits VMEM at our
+                                model sizes; tiled variants split f).
+    out_ref:  f32[block_n, f]   output tile (the "window" accumulator).
+    """
+    vals = vals_ref[...]
+    cols = cols_ref[...]
+    h = h_ref[...]
+    # Gather the k neighbour rows for every row of the block, then merge
+    # immediately in VMEM (the SMASH on-chip merge): [bn, k, f] contracted
+    # over k without materializing partial products in HBM.
+    gathered = h[cols]  # [bn, k, f]
+    out_ref[...] = jnp.einsum(
+        "nk,nkf->nf", vals, gathered, preferred_element_type=jnp.float32
+    )
+
+
+def _spmm_pallas(vals, cols, h, block_n):
+    """The raw pallas_call (no autodiff)."""
+    n, k = vals.shape
+    m, f = h.shape
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _spmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, k), lambda i: (i, 0)),
+            pl.BlockSpec((m, f), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, f), jnp.float32),
+        interpret=True,
+    )(vals, cols, h)
+
+
+# Reverse-mode rule: the Pallas call itself is opaque to autodiff, but the
+# math is simple — ∂vals[n,k] = ⟨h[cols[n,k]], ḡ[n]⟩ (a gather-dot) and
+# ∂h = scatter-add of vals[n,k]·ḡ[n] at rows cols[n,k] (the transpose of
+# the row-wise product). This makes the GCN training-step artifact
+# (gcn_grad) differentiable end-to-end through both SpMMs.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _spmm_diff(vals, cols, h, block_n):
+    return _spmm_pallas(vals, cols, h, block_n)
+
+
+def _spmm_fwd(vals, cols, h, block_n):
+    return _spmm_pallas(vals, cols, h, block_n), (vals, cols, h)
+
+
+def _spmm_bwd(block_n, residuals, g):
+    vals, cols, h = residuals
+    gathered = h[cols]  # [n, k, f]
+    dvals = jnp.einsum("nf,nkf->nk", g, gathered)
+    contrib = jnp.einsum("nk,nf->nkf", vals, g)  # [n, k, f]
+    dh = (
+        jnp.zeros_like(h)
+        .at[cols.reshape(-1)]
+        .add(contrib.reshape(-1, h.shape[1]))
+    )
+    import numpy as _np
+
+    dcols = _np.zeros(cols.shape, dtype=jax.dtypes.float0)
+    return dvals, dcols, dh
+
+
+_spmm_diff.defvjp(_spmm_fwd, _spmm_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def ell_spmm_blocked(vals, cols, h, *, block_n=128):
+    """Blocked row-wise SpMM: grid over row blocks (the window structure).
+
+    Args:
+      vals: f32[n, k] ELL values, n divisible by block_n.
+      cols: i32[n, k] ELL indices.
+      h:    f32[m, f] dense operand.
+      block_n: rows per grid step (output tile height).
+
+    Returns:
+      f32[n, f] = A_ell @ h
+    """
+    n, _ = vals.shape
+    if n % block_n != 0:
+        raise ValueError(f"n={n} must be divisible by block_n={block_n}")
+    return _spmm_diff(vals, cols, h, block_n)
+
+
+def ell_spmm(vals, cols, h):
+    """Single-block convenience wrapper (block_n = n)."""
+    return ell_spmm_blocked(vals, cols, h, block_n=vals.shape[0])
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_f"))
+def ell_spmm_ftiled(vals, cols, h, *, block_n=128, block_f=32):
+    """Row-block × feature-tile grid: for wide dense operands whose full
+    `h` would not fit VMEM, tile the feature dimension too — the 2D window
+    decomposition of the SMASH write-up (output tiles sized to SPAD, here
+    VMEM). The gather of `h` rows is repeated per f-tile; the BlockSpec
+    pipeline overlaps those HBM reads with compute (the DMA-engine role).
+    """
+    n, k = vals.shape
+    m, f = h.shape
+    if n % block_n != 0:
+        raise ValueError(f"n={n} must be divisible by block_n={block_n}")
+    if f % block_f != 0:
+        raise ValueError(f"f={f} must be divisible by block_f={block_f}")
+    grid = (n // block_n, f // block_f)
+    return pl.pallas_call(
+        _spmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((m, block_f), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_f), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, f), jnp.float32),
+        interpret=True,
+    )(vals, cols, h)
+
+
+def vmem_footprint_bytes(n_block, k, m, f, dtype_bytes=4):
+    """Estimate the VMEM working set of one grid step (DESIGN.md §Perf).
+
+    vals tile + cols tile + h + gathered intermediate + out tile.
+    """
+    vals_t = n_block * k * dtype_bytes
+    cols_t = n_block * k * 4
+    h_t = m * f * dtype_bytes
+    gathered = n_block * k * f * dtype_bytes
+    out_t = n_block * f * dtype_bytes
+    return vals_t + cols_t + h_t + gathered + out_t
+
+
+def mxu_utilization_estimate(n, k, f):
+    """Fraction of MXU-issue slots doing useful FMAs for the contraction.
+
+    The einsum contracts k per output element: useful FMAs = n·k·f. The
+    MXU processes 128×128 tiles; padding waste comes from k < 128 on the
+    contraction dimension.
+    """
+    eff_k = min(k, 128)
+    return eff_k / 128.0

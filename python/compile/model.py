@@ -1,0 +1,107 @@
+"""L2 — the GCN forward pass (the paper's motivating workload, Fig 1.1),
+built on the L1 Pallas kernel.
+
+`logits = Â · relu(Â · H · W1) · W2` with the sparse aggregation `Â·X`
+running through :func:`kernels.ell_spmm_blocked` and the dense projections
+through MXU matmuls. Lowered once to HLO text by :mod:`compile.aot`.
+
+DIMS must mirror ``rust/src/runtime/gcn.rs::DIMS`` — the Rust runtime
+builds its input literals against this contract.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ell_spmm_blocked
+
+# The AOT contract (keep in sync with rust/src/runtime/gcn.rs::DIMS).
+DIMS = {
+    "n": 1024,       # graph nodes
+    "k": 16,         # ELL width (max neighbours, incl. self loop)
+    "f_in": 64,      # input feature width
+    "hidden": 32,    # hidden width
+    "classes": 8,    # output classes
+}
+
+# Row-block size for the Pallas grid (n must divide by it).
+BLOCK_N = 128
+
+
+def gcn_forward(ell_vals, ell_cols, feats, w1, w2):
+    """2-layer GCN forward pass.
+
+    Args:
+      ell_vals: f32[n, k]      normalized adjacency values (ELL).
+      ell_cols: i32[n, k]      ELL column indices.
+      feats:    f32[n, f_in]   node features.
+      w1:       f32[f_in, hidden]
+      w2:       f32[hidden, classes]
+
+    Returns:
+      (f32[n, classes],) — 1-tuple for the HLO return_tuple contract.
+    """
+    agg1 = ell_spmm_blocked(ell_vals, ell_cols, feats, block_n=BLOCK_N)
+    h1 = jnp.maximum(agg1 @ w1, 0.0)
+    agg2 = ell_spmm_blocked(ell_vals, ell_cols, h1, block_n=BLOCK_N)
+    return (agg2 @ w2,)
+
+
+def spmm_block(ell_vals, ell_cols, h):
+    """The raw aggregation kernel as its own artifact (microbench target)."""
+    return (ell_spmm_blocked(ell_vals, ell_cols, h, block_n=BLOCK_N),)
+
+
+def dense_mm(a, b):
+    """Generic dense matmul artifact (serving example / baseline)."""
+    return (a @ b,)
+
+
+def gcn_train_step(ell_vals, ell_cols, feats, w1, w2):
+    """One training step's worth of differentiation: mean-squared logits
+    loss, with gradients flowing through both Pallas SpMMs (fwd+bwd lowered
+    into one artifact). Returns (loss, dW1, dW2).
+    """
+
+    def loss_fn(params):
+        w1_, w2_ = params
+        (logits,) = gcn_forward(ell_vals, ell_cols, feats, w1_, w2_)
+        return jnp.mean(logits * logits)
+
+    loss, (dw1, dw2) = jax.value_and_grad(loss_fn)((w1, w2))
+    return (loss.reshape(1), dw1, dw2)
+
+
+def example_args():
+    """ShapeDtypeStructs for lowering the three artifacts."""
+    d = DIMS
+    f32, i32 = jnp.float32, jnp.int32
+    gcn = (
+        jax.ShapeDtypeStruct((d["n"], d["k"]), f32),
+        jax.ShapeDtypeStruct((d["n"], d["k"]), i32),
+        jax.ShapeDtypeStruct((d["n"], d["f_in"]), f32),
+        jax.ShapeDtypeStruct((d["f_in"], d["hidden"]), f32),
+        jax.ShapeDtypeStruct((d["hidden"], d["classes"]), f32),
+    )
+    spmm = (
+        jax.ShapeDtypeStruct((d["n"], d["k"]), f32),
+        jax.ShapeDtypeStruct((d["n"], d["k"]), i32),
+        jax.ShapeDtypeStruct((d["n"], d["f_in"]), f32),
+    )
+    dense = (
+        jax.ShapeDtypeStruct((256, 256), f32),
+        jax.ShapeDtypeStruct((256, 256), f32),
+    )
+    return {
+        "gcn_layer": gcn,
+        "spmm_block": spmm,
+        "dense_mm": dense,
+        "gcn_grad": gcn,
+    }
+
+
+FUNCTIONS = {
+    "gcn_layer": gcn_forward,
+    "spmm_block": spmm_block,
+    "dense_mm": dense_mm,
+    "gcn_grad": gcn_train_step,
+}

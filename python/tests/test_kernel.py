@@ -1,0 +1,183 @@
+"""L1 correctness: Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and dtypes; fixed-seed cases cover the edges the
+sweep might miss (k=1, f=1, zero matrices, duplicate columns).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import ell_spmm_ref
+from compile.kernels.smash_spmm import (
+    ell_spmm,
+    ell_spmm_blocked,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+
+
+def make_case(rng, n, k, m, f, dtype=np.float32):
+    vals = rng.standard_normal((n, k)).astype(dtype)
+    cols = rng.integers(0, m, (n, k)).astype(np.int32)
+    h = rng.standard_normal((m, f)).astype(dtype)
+    return jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(h)
+
+
+def check(vals, cols, h, block_n):
+    out = ell_spmm_blocked(vals, cols, h, block_n=block_n)
+    ref = ell_spmm_ref(vals, cols, h)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_basic():
+    rng = np.random.default_rng(0)
+    check(*make_case(rng, 64, 8, 32, 16), block_n=16)
+
+
+def test_single_block():
+    rng = np.random.default_rng(1)
+    vals, cols, h = make_case(rng, 32, 4, 16, 8)
+    out = ell_spmm(vals, cols, h)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ell_spmm_ref(vals, cols, h)), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_k_equals_one():
+    rng = np.random.default_rng(2)
+    check(*make_case(rng, 16, 1, 8, 4), block_n=8)
+
+
+def test_f_equals_one():
+    rng = np.random.default_rng(3)
+    check(*make_case(rng, 16, 4, 8, 1), block_n=8)
+
+
+def test_zero_values_give_zero():
+    n, k, m, f = 16, 4, 8, 4
+    vals = jnp.zeros((n, k), jnp.float32)
+    cols = jnp.zeros((n, k), jnp.int32)
+    h = jnp.ones((m, f), jnp.float32)
+    out = ell_spmm_blocked(vals, cols, h, block_n=8)
+    assert np.allclose(np.asarray(out), 0.0)
+
+
+def test_duplicate_columns_accumulate():
+    # two entries pointing at the same column must sum (the SMASH merge)
+    vals = jnp.asarray([[2.0, 3.0]], jnp.float32)
+    cols = jnp.asarray([[5, 5]], jnp.int32)
+    h = jnp.zeros((8, 2), jnp.float32).at[5].set(jnp.asarray([1.0, 10.0]))
+    out = ell_spmm(vals, cols, h)
+    np.testing.assert_allclose(np.asarray(out), [[5.0, 50.0]], rtol=1e-6)
+
+
+def test_padding_with_self_index_is_noop():
+    # zero-valued padding pointing at an arbitrary row contributes nothing
+    vals = jnp.asarray([[1.0, 0.0]], jnp.float32)
+    cols = jnp.asarray([[0, 3]], jnp.int32)
+    h = jnp.asarray(np.arange(8, dtype=np.float32).reshape(4, 2))
+    out = ell_spmm(vals, cols, h)
+    np.testing.assert_allclose(np.asarray(out), [[0.0, 1.0]])
+
+
+def test_bad_block_divisor_raises():
+    rng = np.random.default_rng(4)
+    vals, cols, h = make_case(rng, 30, 4, 8, 4)
+    with pytest.raises(ValueError, match="divisible"):
+        ell_spmm_blocked(vals, cols, h, block_n=16)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_blocks=st.integers(1, 4),
+    block_n=st.sampled_from([8, 16, 32]),
+    k=st.integers(1, 12),
+    m=st.sampled_from([8, 32, 100]),
+    f=st.sampled_from([1, 4, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_shape_sweep(n_blocks, block_n, k, m, f, seed):
+    rng = np.random.default_rng(seed)
+    n = n_blocks * block_n
+    check(*make_case(rng, n, k, m, f), block_n=block_n)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_values_extreme(seed):
+    # large/small magnitudes must still match the oracle within tolerance
+    rng = np.random.default_rng(seed)
+    vals = (rng.standard_normal((16, 4)) * 1e3).astype(np.float32)
+    cols = rng.integers(0, 8, (16, 4)).astype(np.int32)
+    h = (rng.standard_normal((8, 4)) * 1e-3).astype(np.float32)
+    out = ell_spmm_blocked(jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(h), block_n=8)
+    ref = ell_spmm_ref(jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(h))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+def test_perf_model_helpers():
+    fp = vmem_footprint_bytes(128, 16, 1024, 64)
+    assert fp > 0
+    # our model config fits comfortably in 16 MiB VMEM
+    assert fp < 16 * 1024 * 1024
+    u = mxu_utilization_estimate(1024, 16, 64)
+    assert 0.0 < u <= 1.0
+    assert u == 16 / 128
+
+
+def test_ftiled_matches_ref():
+    from compile.kernels.smash_spmm import ell_spmm_ftiled
+
+    rng = np.random.default_rng(5)
+    vals, cols, h = make_case(rng, 64, 6, 32, 64)
+    out = ell_spmm_ftiled(vals, cols, h, block_n=16, block_f=16)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ell_spmm_ref(vals, cols, h)), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_ftiled_bad_f_divisor():
+    from compile.kernels.smash_spmm import ell_spmm_ftiled
+
+    rng = np.random.default_rng(6)
+    vals, cols, h = make_case(rng, 32, 4, 16, 10)
+    with pytest.raises(ValueError, match="divisible"):
+        ell_spmm_ftiled(vals, cols, h, block_n=16, block_f=4)
+
+
+def test_spmm_gradients_match_numeric():
+    import jax
+
+    rng = np.random.default_rng(7)
+    vals, cols, h = make_case(rng, 16, 3, 8, 4)
+
+    def f(vh):
+        v, hh = vh
+        return jnp.sum(ell_spmm_blocked(v, cols, hh, block_n=8) ** 2)
+
+    g_vals, g_h = jax.grad(f)((vals, h))
+    # numeric check on a few coordinates
+    eps = 1e-3
+    base = float(f((vals, h)))
+    v2 = vals.at[3, 1].add(eps)
+    num = (float(f((v2, h))) - base) / eps
+    np.testing.assert_allclose(num, float(g_vals[3, 1]), rtol=2e-2, atol=2e-2)
+    h2 = h.at[5, 2].add(eps)
+    num_h = (float(f((vals, h2))) - base) / eps
+    np.testing.assert_allclose(num_h, float(g_h[5, 2]), rtol=2e-2, atol=2e-2)
+
+
+def test_bf16_inputs_supported():
+    # the TPU path runs bf16; interpret mode must accept it and stay close
+    # to the f32 oracle within bf16 tolerance
+    rng = np.random.default_rng(8)
+    vals32, cols, h32 = make_case(rng, 32, 4, 16, 8)
+    vals16 = vals32.astype(jnp.bfloat16)
+    h16 = h32.astype(jnp.bfloat16)
+    out = ell_spmm_blocked(
+        vals16.astype(jnp.float32), cols, h16.astype(jnp.float32), block_n=16
+    )
+    ref = ell_spmm_ref(vals32, cols, h32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-2, atol=2e-2)

@@ -1,0 +1,118 @@
+//! Ablation benches for the design choices DESIGN.md calls out: each knob
+//! of the SMASH configuration is flipped in isolation on the same workload
+//! so its contribution to the V1->V3 speedup is visible.
+//!
+//! * hash bits: high (V1) vs low/scrambled (V2) at fixed scheduling;
+//! * scheduling: static vs tokenized at fixed hashing;
+//! * table placement: SPAD vs DRAM-fragmented (+DMA) at fixed scheduling;
+//! * table load factor sweep (probe count vs window count trade-off);
+//! * tokens per row (1 vs 2 vs 4).
+
+use smash::config::{HashBits, KernelConfig, Scheduling, SimConfig, TablePlacement};
+use smash::gen::{rmat, RmatParams};
+use smash::kernels::run_smash;
+
+fn report(label: &str, kcfg: &KernelConfig, a: &smash::formats::Csr, b: &smash::formats::Csr) {
+    let scfg = SimConfig::piuma_block();
+    let r = run_smash(a, b, kcfg, &scfg).report;
+    println!(
+        "{:<34} {:>10.2} sim-ms  IPC {:>4.2}  DRAM {:>5.1}%  util {:>5.1}%  probes {:>5.2}  windows {}",
+        label,
+        r.ms,
+        r.ipc,
+        r.dram_util * 100.0,
+        r.avg_utilization * 100.0,
+        r.table.mean_probes(),
+        r.windows
+    );
+}
+
+fn main() {
+    println!("# Ablations (R-MAT 2^11, ~34K nnz per input)\n");
+    let a = rmat(&RmatParams::new(11, 34_000, 0xA));
+    let b = rmat(&RmatParams::new(11, 34_000, 0xB));
+
+    println!("## Hash bits (scheduling fixed at tokenized, SPAD table)");
+    let mut k = KernelConfig::v2();
+    k.hash_bits = HashBits::High;
+    report("high-order bits (V1 hashing)", &k, &a, &b);
+    k.hash_bits = HashBits::Low;
+    report("low-order/scrambled (V2 hashing)", &k, &a, &b);
+
+    println!("\n## Scheduling (hashing fixed at V2's)");
+    let mut k = KernelConfig::v2();
+    k.scheduling = Scheduling::StaticRoundRobin;
+    report("static round-robin (V1 sched)", &k, &a, &b);
+    k.scheduling = Scheduling::Tokenized;
+    report("tokenized producer-consumer", &k, &a, &b);
+
+    println!("\n## Table placement (V2 base)");
+    let mut k = KernelConfig::v2();
+    k.placement = TablePlacement::Spad;
+    report("SPAD tag-data table", &k, &a, &b);
+    let k = KernelConfig::v3();
+    report("DRAM tag-offset + DMA (V3)", &k, &a, &b);
+
+    println!("\n## Table load factor (V2)");
+    for load in [0.25, 0.5, 0.75, 0.9] {
+        let mut k = KernelConfig::v2();
+        k.table_load_factor = load;
+        report(&format!("load factor {load}"), &k, &a, &b);
+    }
+
+    println!("\n## Tokens per row (V2)");
+    for t in [1usize, 2, 4] {
+        let mut k = KernelConfig::v2();
+        k.tokens_per_row = t;
+        report(&format!("{t} token(s) per row"), &k, &a, &b);
+    }
+
+    println!("\n## Dense-row threshold (V2)");
+    for thr in [256usize, 1024, 4096, usize::MAX] {
+        let mut k = KernelConfig::v2();
+        k.dense_row_threshold = thr;
+        let label = if thr == usize::MAX {
+            "disabled".to_string()
+        } else {
+            format!("threshold {thr}")
+        };
+        report(&label, &k, &a, &b);
+    }
+
+    println!("\n## Remote vs local hashtable (V2; §4.1.2.2 remote atomics)");
+    // Windowed SMASH keeps every upsert SPAD-local; a distributed global
+    // table would push (blocks-1)/blocks of upserts over the fabric.
+    for blocks in [0usize, 2, 4, 8] {
+        let mut k = KernelConfig::v2();
+        k.remote_table_blocks = blocks;
+        let label = if blocks == 0 {
+            "all-local (windowed design)".to_string()
+        } else {
+            format!("distributed over {blocks} blocks")
+        };
+        report(&label, &k, &a, &b);
+    }
+
+    println!("\n## Die scale-out (V3, LPT window scheduling, small SPAD)");
+    // small SPAD -> many windows so blocks have work to distribute
+    let scfg = SimConfig::test_tiny();
+    let mut base = None;
+    for blocks in [1usize, 2, 4, 8] {
+        let (_, rep) = smash::coordinator::run_die(
+            &a,
+            &b,
+            &KernelConfig::v3(),
+            &scfg,
+            blocks,
+            smash::coordinator::SchedPolicy::Lpt,
+        );
+        let b0 = *base.get_or_insert(rep.ms);
+        println!(
+            "{:<34} {:>10.2} sim-ms  speedup {:>4.2}x  imbalance {:.3}",
+            format!("{blocks} block(s)"),
+            rep.ms,
+            b0 / rep.ms.max(1e-12),
+            rep.imbalance
+        );
+    }
+}

@@ -1,0 +1,50 @@
+//! Regenerates Figure 1.1: the GCN kernel execution-time breakdown that
+//! motivates the thesis (SpGEMM dominating a GCN forward pass), measured
+//! on our decomposed GCN pipeline, plus the AOT-artifact end-to-end
+//! latency when `artifacts/` exist.
+
+use smash::report::bar_chart;
+use smash::runtime::{gcn::DIMS, GcnModel, GcnWorkload};
+
+fn main() {
+    println!("# Figure 1.1 — GCN kernel execution time breakdown\n");
+    let w = GcnWorkload::synthetic(DIMS, 7);
+
+    // average the shares over a few repetitions for stability
+    let reps = 5;
+    let mut acc: Vec<(String, f64)> = Vec::new();
+    for _ in 0..reps {
+        for (i, (name, share)) in w.kernel_breakdown().into_iter().enumerate() {
+            if acc.len() <= i {
+                acc.push((name, 0.0));
+            }
+            acc[i].1 += share / reps as f64;
+        }
+    }
+    println!("{}", bar_chart("GCN forward pass time shares", &acc, 50));
+    let spgemm_share: f64 = acc
+        .iter()
+        .filter(|(n, _)| n.starts_with("SpGEMM"))
+        .map(|(_, s)| s)
+        .sum();
+    println!(
+        "SpGEMM share of the forward pass: {:.1}% (the paper's Fig 1.1 shows SpGEMM dominating)\n",
+        spgemm_share * 100.0
+    );
+
+    // Optional: the fused AOT artifact end-to-end (needs `make artifacts`).
+    match GcnModel::load() {
+        Ok(mut model) => {
+            let t0 = std::time::Instant::now();
+            let n = 10;
+            for _ in 0..n {
+                model.forward(&w).expect("forward");
+            }
+            println!(
+                "fused AOT artifact (PJRT): {:.2?} / inference over {n} runs",
+                t0.elapsed() / n
+            );
+        }
+        Err(e) => println!("(skipping AOT latency: {e})"),
+    }
+}

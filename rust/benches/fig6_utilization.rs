@@ -1,0 +1,34 @@
+//! Regenerates Figures 6.1–6.4: per-thread utilization timelines for the
+//! unbalanced (V1) and balanced (V2) workloads, average utilization bars,
+//! and the utilization histograms, plus the §6.5 single-window time claim
+//! (paper: 14.15 ms -> 4.09 ms).
+
+use smash::bench;
+use smash::config::{KernelConfig, SimConfig};
+use smash::kernels::run_smash;
+
+fn main() {
+    let scale = match std::env::var("SMASH_BENCH_SCALE").as_deref() {
+        Ok("full") => bench::Scale::Full,
+        _ => bench::Scale::Small,
+    };
+    println!("# Figures 6.1-6.4 (scale {scale:?})\n");
+    let (a, b) = bench::paper_inputs(scale);
+    let scfg = SimConfig::piuma_block();
+
+    let (chart1, r1) = bench::fig_6_1_6_2(&a, &b, false, &scfg);
+    println!("{chart1}");
+    let (chart2, r2) = bench::fig_6_1_6_2(&a, &b, true, &scfg);
+    println!("{chart2}");
+    println!(
+        "§6.5 single-window hashing time: V1 {:.2} ms -> V2 {:.2} ms ({:.1}x; paper: 14.15 -> 4.09 ms, 3.5x)\n",
+        r1.first_window_ms,
+        r2.first_window_ms,
+        r1.first_window_ms / r2.first_window_ms.max(1e-12),
+    );
+
+    let r3 = run_smash(&a, &b, &KernelConfig::v3(), &scfg).report;
+    let reports = vec![r1.clone(), r2.clone(), r3];
+    println!("{}", bench::fig_6_3(&reports));
+    println!("{}", bench::fig_6_4(&r1, &r2));
+}

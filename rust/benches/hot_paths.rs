@@ -1,0 +1,64 @@
+//! Microbenchmarks of the hot paths that dominate the end-to-end harness
+//! (the §Perf working set): R-MAT generation, CSR construction, the
+//! Gustavson oracle, the SMASH hashtable, and one simulated kernel run.
+//! Before/after numbers for the optimization log live in EXPERIMENTS.md.
+
+use smash::bench::Bench;
+use smash::config::{HashBits, KernelConfig, SimConfig};
+use smash::formats::Csr;
+use smash::gen::{rmat, RmatParams};
+use smash::kernels::{run_smash, TagTable};
+use smash::spgemm::{gustavson, rowwise_hash};
+use smash::util::prng::Xoshiro256;
+
+fn main() {
+    let mut h = Bench::new();
+
+    h.run("rmat_gen_2^12_100k_edges", || {
+        rmat(&RmatParams::new(12, 100_000, 7))
+    });
+
+    let a = rmat(&RmatParams::new(11, 34_000, 0xA));
+    let b = rmat(&RmatParams::new(11, 34_000, 0xB));
+
+    h.run("csr_from_triplets_34k", || {
+        let triplets: Vec<(usize, usize, f64)> = (0..a.rows)
+            .flat_map(|r| {
+                let (c, v) = a.row(r);
+                c.iter().zip(v).map(move |(c, v)| (r, *c as usize, *v))
+            })
+            .collect();
+        Csr::from_triplets(a.rows, a.cols, triplets)
+    });
+
+    h.run("csr_transpose_34k", || a.transpose());
+
+    h.run("gustavson_oracle_2^11", || gustavson(&a, &b));
+
+    h.run("rowwise_hash_native_2^11", || rowwise_hash(&a, &b));
+
+    h.run("tagtable_1M_upserts", || {
+        let mut t = TagTable::new(1 << 21, 22, HashBits::Low);
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        for _ in 0..1_000_000 {
+            t.upsert(rng.next_below(1 << 22), 1.0);
+        }
+        t.stats.upserts
+    });
+
+    h.run("smash_v3_sim_2^9", || {
+        let a = rmat(&RmatParams::new(9, 6_000, 1));
+        let b = rmat(&RmatParams::new(9, 6_000, 2));
+        run_smash(&a, &b, &KernelConfig::v3(), &SimConfig::piuma_block())
+            .report
+            .cycles
+    });
+
+    h.run("smash_v2_sim_2^9", || {
+        let a = rmat(&RmatParams::new(9, 6_000, 1));
+        let b = rmat(&RmatParams::new(9, 6_000, 2));
+        run_smash(&a, &b, &KernelConfig::v2(), &SimConfig::piuma_block())
+            .report
+            .cycles
+    });
+}

@@ -1,0 +1,23 @@
+//! Regenerates Table 1.1 (sparse graph datasets) and Table 1.2 (dataflow
+//! comparison: input/output reuse, intermediate size) from measured
+//! traffic counters, plus wall-clock timings of the four reference
+//! dataflows (the CPU-baseline comparison of §3.1).
+
+use smash::bench::{self, Bench};
+use smash::gen::{rmat, RmatParams};
+use smash::spgemm::Dataflow;
+
+fn main() {
+    println!("# Table 1.1 / Table 1.2\n");
+    println!("{}", bench::table_1_1(7).render());
+
+    let a = rmat(&RmatParams::new(11, 34_000, 0xA));
+    let b = rmat(&RmatParams::new(11, 34_000, 0xB));
+    println!("{}", bench::table_1_2(&a, &b).render());
+
+    println!("## Wall-clock of the reference dataflows (same inputs)\n");
+    let mut bench_h = Bench::new();
+    for df in Dataflow::ALL {
+        bench_h.run(df.name(), || df.multiply(&a, &b));
+    }
+}

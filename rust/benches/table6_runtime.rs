@@ -1,0 +1,40 @@
+//! Regenerates Tables 6.1–6.7 of the thesis: data characteristics, CSR
+//! footprints, DRAM bandwidth, L1 hit rates, aggregate IPC, and the
+//! headline runtime/speedup comparison, on the §6.1 R-MAT workload.
+//!
+//! `SMASH_BENCH_SCALE=full` runs the thesis' 16K×16K operating point
+//! (slower); the default small scale keeps the same skew at 2K.
+
+use smash::bench::{self, Scale};
+use smash::util::timer::time;
+
+fn main() {
+    let scale = match std::env::var("SMASH_BENCH_SCALE").as_deref() {
+        Ok("full") => Scale::Full,
+        _ => Scale::Small,
+    };
+    println!("# Tables 6.1-6.7 (scale {scale:?})\n");
+
+    let ((a, b), gen_dt) = time(|| bench::paper_inputs(scale));
+    println!("inputs generated in {gen_dt:.2?}\n");
+
+    let (t61, intensity) = bench::table_6_1(&a, &b);
+    println!("{}", t61.render());
+    println!(
+        "compression factor cf = {:.2} (paper: 1.23); arithmetic intensity AI = {:.3} (paper: 0.09)\n",
+        intensity.cf, intensity.ai
+    );
+
+    let (t62, t63) = bench::table_6_2_6_3(&a, &b);
+    println!("{}", t62.render());
+    println!("{}", t63.render());
+
+    let (reports, eval_dt) = time(|| {
+        smash::kernels::run_all_versions(&a, &b, &smash::config::SimConfig::piuma_block())
+    });
+    println!("three SMASH versions simulated in {eval_dt:.2?}\n");
+    println!("{}", bench::table_6_4(&reports).render());
+    println!("{}", bench::table_6_5(&reports).render());
+    println!("{}", bench::table_6_6(&reports).render());
+    println!("{}", bench::table_6_7(&reports).render());
+}

@@ -1,0 +1,130 @@
+//! Minimal benchmark harness (criterion substitute): warmup + timed
+//! iterations, mean/median/stddev/min/max, criterion-like console output.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} time: [{:>10} {:>10} {:>10}]  ({} iters)",
+            self.name,
+            crate::util::timer::fmt_duration(self.min),
+            crate::util::timer::fmt_duration(self.mean),
+            crate::util::timer::fmt_duration(self.max),
+            self.iters
+        )
+    }
+}
+
+/// Harness configuration.
+pub struct Bench {
+    warmup_iters: usize,
+    measure_iters: usize,
+    /// Upper wall-clock bound; measurement stops early past this.
+    max_total: Duration,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // SMASH_BENCH_FAST=1 shrinks iteration counts for CI-style runs.
+        let fast = std::env::var("SMASH_BENCH_FAST").is_ok();
+        Self {
+            warmup_iters: if fast { 1 } else { 2 },
+            measure_iters: if fast { 3 } else { 10 },
+            max_total: Duration::from_secs(if fast { 10 } else { 60 }),
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_iters(mut self, warmup: usize, measure: usize) -> Self {
+        self.warmup_iters = warmup;
+        self.measure_iters = measure.max(1);
+        self
+    }
+
+    /// Run one benchmark. `f` must consume its output (return it) so the
+    /// optimizer can't elide the work.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.measure_iters);
+        let t_start = Instant::now();
+        for _ in 0..self.measure_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+            if t_start.elapsed() > self.max_total && samples.len() >= 3 {
+                break;
+            }
+        }
+        samples.sort();
+        let n = samples.len();
+        let total: Duration = samples.iter().sum();
+        let mean = total / n as u32;
+        let median = samples[n / 2];
+        let mean_s = mean.as_secs_f64();
+        let var = samples
+            .iter()
+            .map(|s| {
+                let d = s.as_secs_f64() - mean_s;
+                d * d
+            })
+            .sum::<f64>()
+            / n as f64;
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: n,
+            mean,
+            median,
+            stddev: Duration::from_secs_f64(var.sqrt()),
+            min: samples[0],
+            max: samples[n - 1],
+        };
+        println!("{}", result.report_line());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::new().with_iters(1, 3);
+        let r = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.mean.as_nanos() > 0);
+        assert_eq!(r.iters, 3);
+        assert!(r.min <= r.median && r.median <= r.max);
+    }
+}

@@ -1,0 +1,10 @@
+//! Benchmark infrastructure: a small criterion-style harness (criterion is
+//! unavailable offline) plus the experiment drivers that regenerate every
+//! table and figure of the thesis (`experiments`).
+
+pub mod harness;
+
+mod experiments;
+pub use experiments::*;
+
+pub use harness::{Bench, BenchResult};

@@ -1,0 +1,518 @@
+//! Command-line interface for the `smash` binary (clap is unavailable
+//! offline; this is a small hand-rolled parser).
+//!
+//! Subcommands:
+//! * `tables  [--id <n>] [--scale small|full|full-mild] [--seed <s>]` — regenerate
+//!   the paper's tables (1.1, 1.2, 6.1–6.7); `--all` (default) runs all.
+//! * `figures [--id <n>] [--scale small|full|full-mild]` — Figs 1.1, 6.1–6.4.
+//! * `run --version v1|v2|v3 [--scale ...]` — one SMASH run + full report.
+//! * `gcn` — load the AOT artifact and serve a GCN inference.
+//! * `gen --out <path> [--scale <n>] [--edges <n>]` — write an R-MAT .mtx.
+//! * `serve [--jobs <n>]` — demo the coordinator on a batch of requests.
+
+use crate::bench::{self, Scale};
+use crate::config::{KernelConfig, SimConfig};
+use crate::coordinator::{Coordinator, Job, ServerConfig};
+use crate::formats::mm;
+use crate::gen::{rmat, RmatParams};
+use crate::kernels::{run_all_versions, run_smash};
+use crate::report::bar_chart;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+/// Parsed flag map: `--key value` and bare `--flag` both supported.
+pub struct Args {
+    pub flags: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Self {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        Self { flags }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("bad --{key} value `{v}`")),
+        }
+    }
+
+    pub fn scale(&self) -> Result<Scale> {
+        match self.get("scale").unwrap_or("small") {
+            "small" => Ok(Scale::Small),
+            "full" => Ok(Scale::Full),
+            "full-mild" => Ok(Scale::FullMild),
+            other => bail!("unknown --scale `{other}` (small|full|full-mild)"),
+        }
+    }
+}
+
+pub const USAGE: &str = "\
+smash — SMASH SpGEMM reproduction (PIUMA simulator + JAX/Pallas AOT runtime)
+
+USAGE: smash <tables|figures|run|gcn|gen|serve|help> [flags]
+
+  tables  [--id 1.1|1.2|6.1|6.2|6.4|6.5|6.6|6.7] [--scale small|full|full-mild] [--seed N]
+  figures [--id 1.1|6.1|6.3|6.4] [--scale small|full|full-mild]
+  run     [--version v1|v2|v3] [--scale small|full|full-mild]
+  gcn     [--seed N]             (requires `make artifacts`)
+  gen     --out graph.mtx [--log2n 10] [--edges 10000] [--seed N]
+  serve   [--jobs 8] [--workers 4]
+  graph   [--dataset Cora] — BFS / APSP / closure / triangles via semiring SpGEMM
+  die     [--blocks 4] [--policy lpt|rr] — multi-block scale-out run
+  trace   [--out trace.bin] — record a V2 run's instruction trace, replay it,
+          and verify cycle-exact equivalence (execution- vs trace-driven, §4.2)
+";
+
+/// Entry point used by `main.rs`.
+pub fn dispatch(argv: Vec<String>) -> Result<()> {
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let args = Args::parse(&argv[argv.len().min(1)..]);
+    match cmd {
+        "tables" => cmd_tables(&args),
+        "figures" => cmd_figures(&args),
+        "run" => cmd_run(&args),
+        "gcn" => cmd_gcn(&args),
+        "gen" => cmd_gen(&args),
+        "serve" => cmd_serve(&args),
+        "graph" => cmd_graph(&args),
+        "die" => cmd_die(&args),
+        "trace" => cmd_trace(&args),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn want(args: &Args, id: &str) -> bool {
+    match args.get("id") {
+        None => true,
+        Some(v) => v == id,
+    }
+}
+
+/// Print a table; with `--out dir`, also write `<dir>/<slug>.md` + `.csv`.
+fn emit(args: &Args, slug: &str, t: &crate::report::Table) -> Result<()> {
+    println!("{}", t.render());
+    if let Some(dir) = args.get("out") {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(format!("{dir}/{slug}.md"), t.render())?;
+        std::fs::write(format!("{dir}/{slug}.csv"), t.to_csv())?;
+    }
+    Ok(())
+}
+
+fn cmd_tables(args: &Args) -> Result<()> {
+    let scale = args.scale()?;
+    let seed = args.get_u64("seed", 7)?;
+    if want(args, "1.1") {
+        emit(args, "table_1_1", &bench::table_1_1(seed))?;
+    }
+    let need_inputs = ["1.2", "6.1", "6.2"].iter().any(|id| want(args, id));
+    if need_inputs {
+        let (a, b) = bench::paper_inputs(scale);
+        if want(args, "1.2") {
+            emit(args, "table_1_2", &bench::table_1_2(&a, &b))?;
+        }
+        if want(args, "6.1") {
+            let (t, ir) = bench::table_6_1(&a, &b);
+            emit(args, "table_6_1", &t)?;
+            println!(
+                "compression factor cf = {:.2} (paper: 1.23), arithmetic intensity AI = {:.3} (paper: 0.09)\n",
+                ir.cf, ir.ai
+            );
+        }
+        if want(args, "6.2") {
+            let (t2, t3) = bench::table_6_2_6_3(&a, &b);
+            emit(args, "table_6_2", &t2)?;
+            emit(args, "table_6_3", &t3)?;
+        }
+    }
+    let need_eval = ["6.4", "6.5", "6.6", "6.7"].iter().any(|id| want(args, id));
+    if need_eval {
+        eprintln!("[smash] running V1/V2/V3 on the {scale:?} workload...");
+        let (_, _, reports) = bench::run_paper_eval(scale);
+        if want(args, "6.4") {
+            emit(args, "table_6_4", &bench::table_6_4(&reports))?;
+        }
+        if want(args, "6.5") {
+            emit(args, "table_6_5", &bench::table_6_5(&reports))?;
+        }
+        if want(args, "6.6") {
+            emit(args, "table_6_6", &bench::table_6_6(&reports))?;
+        }
+        if want(args, "6.7") {
+            emit(args, "table_6_7", &bench::table_6_7(&reports))?;
+        }
+    }
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let scale = args.scale()?;
+    if want(args, "1.1") {
+        let w = crate::runtime::GcnWorkload::synthetic(crate::runtime::gcn::DIMS, 7);
+        let bd = w.kernel_breakdown();
+        println!(
+            "{}",
+            bar_chart(
+                "Fig 1.1 — GCN kernel execution time breakdown",
+                &bd,
+                50
+            )
+        );
+    }
+    let need_runs = ["6.1", "6.3", "6.4"].iter().any(|id| want(args, id));
+    if need_runs {
+        let (a, b) = bench::paper_inputs(scale);
+        let scfg = SimConfig::piuma_block();
+        let (chart1, r1) = bench::fig_6_1_6_2(&a, &b, false, &scfg);
+        let (chart2, r2) = bench::fig_6_1_6_2(&a, &b, true, &scfg);
+        if want(args, "6.1") {
+            println!("{chart1}");
+            println!("{chart2}");
+            println!(
+                "window time: V1 {:.2} ms vs V2 {:.2} ms (paper: 14.15 -> 4.09 ms)\n",
+                r1.first_window_ms, r2.first_window_ms
+            );
+        }
+        if want(args, "6.3") {
+            let r3 = run_smash(&a, &b, &KernelConfig::v3(), &scfg).report;
+            let reports = vec![r1.clone(), r2.clone(), r3];
+            println!("{}", bench::fig_6_3(&reports));
+        }
+        if want(args, "6.4") {
+            println!("{}", bench::fig_6_4(&r1, &r2));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let scale = args.scale()?;
+    let (a, b) = bench::paper_inputs(scale);
+    let mut scfg = SimConfig::piuma_block();
+    // `--set key=value[,key=value...]` applies raw SimConfig overrides.
+    if let Some(sets) = args.get("set") {
+        for kv in sets.split(',') {
+            let (k, v) = kv.split_once('=').context("--set wants key=value")?;
+            scfg.apply_override(k.trim(), v.trim())?;
+        }
+    }
+    // kernel-knob overrides for ablation runs
+    let tweak = |mut k: KernelConfig| -> Result<KernelConfig> {
+        if let Some(t) = args.get("dense-threshold") {
+            k.dense_row_threshold = if t == "off" { usize::MAX } else { t.parse()? };
+        }
+        if let Some(l) = args.get("load-factor") {
+            k.table_load_factor = l.parse()?;
+        }
+        if let Some(t) = args.get("tokens") {
+            k.tokens_per_row = t.parse()?;
+        }
+        Ok(k)
+    };
+    let reports = match args.get("version") {
+        Some("v1") => vec![run_smash(&a, &b, &tweak(KernelConfig::v1())?, &scfg).report],
+        Some("v2") => vec![run_smash(&a, &b, &tweak(KernelConfig::v2())?, &scfg).report],
+        Some("v3") => vec![run_smash(&a, &b, &tweak(KernelConfig::v3())?, &scfg).report],
+        None if args.get("dense-threshold").is_some()
+            || args.get("load-factor").is_some()
+            || args.get("tokens").is_some() =>
+        {
+            vec![
+                run_smash(&a, &b, &tweak(KernelConfig::v1())?, &scfg).report,
+                run_smash(&a, &b, &tweak(KernelConfig::v2())?, &scfg).report,
+                run_smash(&a, &b, &tweak(KernelConfig::v3())?, &scfg).report,
+            ]
+        }
+        None => run_all_versions(&a, &b, &scfg),
+        Some(other) => bail!("unknown --version `{other}`"),
+    };
+    for r in &reports {
+        println!("== {} ==", r.version);
+        println!("  cycles            {}", crate::util::fmt_count(r.cycles));
+        println!("  sim time          {:.3} ms", r.ms);
+        println!("  instructions      {}", crate::util::fmt_count(r.instructions));
+        println!("  aggregate IPC     {:.2}", r.ipc);
+        println!("  L1 hit rate       {:.1}%", r.l1_hit_pct);
+        println!("  DRAM util         {:.1}% ({:.2} GB/s)", r.dram_util * 100.0, r.dram_gbs);
+        println!("  DRAM bytes        {}", crate::util::fmt_bytes(r.dram_bytes));
+        println!("  windows           {}", r.windows);
+        println!("  avg thread util   {:.1}%", r.avg_utilization * 100.0);
+        println!("  hashtable probes  {:.3}/upsert, collisions {:.2}%",
+            r.table.mean_probes(), r.table.collision_rate() * 100.0);
+        println!("  SPAD conflicts    {:.2}%", r.spad_conflict_rate * 100.0);
+        if r.dma_descriptors > 0 {
+            println!("  DMA               {} descriptors, {}",
+                r.dma_descriptors, crate::util::fmt_bytes(r.dma_bytes));
+        }
+        let tc = |c: u64| c / 64; // per-thread average
+        println!(
+            "  phase cyc/thread  distribute {} | hash {} | writeback {} | barrier-idle {} | dma-idle {}",
+            crate::util::fmt_count(tc(r.cyc_distribute)),
+            crate::util::fmt_count(tc(r.cyc_hash)),
+            crate::util::fmt_count(tc(r.cyc_writeback)),
+            crate::util::fmt_count(tc(r.cyc_barrier_idle)),
+            crate::util::fmt_count(tc(r.cyc_dma_idle)),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_gcn(args: &Args) -> Result<()> {
+    let seed = args.get_u64("seed", 7)?;
+    let w = crate::runtime::GcnWorkload::synthetic(crate::runtime::gcn::DIMS, seed);
+    println!("loading artifact + compiling via PJRT...");
+    let mut model = crate::runtime::GcnModel::load()?;
+    let t0 = std::time::Instant::now();
+    let logits = model.forward(&w)?;
+    let dt = t0.elapsed();
+    let reference = w.reference_forward();
+    let diff = logits
+        .data
+        .iter()
+        .zip(&reference.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!(
+        "GCN forward: {} nodes -> {} classes in {} (max |Δ| vs rust reference = {:.2e})",
+        logits.rows,
+        logits.cols,
+        crate::util::timer::fmt_duration(dt),
+        diff
+    );
+    anyhow::ensure!(diff < 1e-2, "artifact disagrees with reference");
+    Ok(())
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let out = args.get("out").context("--out required")?;
+    let log2n = args.get_u64("log2n", 10)? as u32;
+    let edges = args.get_u64("edges", 10_000)? as usize;
+    let seed = args.get_u64("seed", 7)?;
+    let m = rmat(&RmatParams::new(log2n, edges, seed));
+    mm::write_csr(out, &m)?;
+    println!(
+        "wrote {}x{} R-MAT with {} nnz to {out}",
+        m.rows,
+        m.cols,
+        m.nnz()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let jobs = args.get_u64("jobs", 8)? as usize;
+    let workers = args.get_u64("workers", 4)? as usize;
+    let mut coord = Coordinator::start(ServerConfig {
+        workers,
+        queue_depth: 16,
+    });
+    let t0 = std::time::Instant::now();
+    for i in 0..jobs {
+        let a = rmat(&RmatParams::new(8, 2000, i as u64));
+        let b = rmat(&RmatParams::new(8, 2000, i as u64 + 100));
+        coord.submit(Job::SmashSpgemm {
+            a,
+            b,
+            kernel: KernelConfig::v3(),
+            sim: SimConfig::piuma_block(),
+        });
+    }
+    let responses = coord.collect_all();
+    let wall = t0.elapsed();
+    let total_nnz: usize = responses.values().map(|r| r.c.nnz()).sum();
+    println!(
+        "served {jobs} SpGEMM jobs on {workers} workers in {} ({} output nnz, throughput {:.1} jobs/s)",
+        crate::util::timer::fmt_duration(wall),
+        crate::util::fmt_count(total_nnz as u64),
+        jobs as f64 / wall.as_secs_f64()
+    );
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_graph(args: &Args) -> Result<()> {
+    use crate::spgemm::graph::{apsp_minplus, bfs_levels, transitive_closure, triangles};
+    // `--in file` loads a real graph (.mtx or SNAP edge list); otherwise a
+    // Table 1.1 synthetic analog.
+    let (label, adj) = if let Some(path) = args.get("in") {
+        let adj = if path.ends_with(".mtx") {
+            crate::formats::mm::read_csr(path)?
+        } else {
+            crate::formats::mm::read_edge_list(path)?
+        };
+        (path.to_string(), adj)
+    } else {
+        let name = args.get("dataset").unwrap_or("Cora");
+        let spec = crate::gen::TABLE_1_1
+            .iter()
+            .find(|s| s.name.eq_ignore_ascii_case(name))
+            .with_context(|| format!("unknown dataset `{name}` (see Table 1.1)"))?;
+        (
+            spec.name.to_string(),
+            crate::gen::dataset_analog(spec, args.get_u64("seed", 7)?),
+        )
+    };
+    println!("{label}: {} vertices, {} edges", adj.rows, adj.nnz());
+    let (levels, bfs_dt) = crate::util::timer::time(|| bfs_levels(&adj, &[0]));
+    let reached = levels.iter().filter(|l| **l != usize::MAX).count();
+    println!(
+        "BFS from vertex 0: reached {reached}/{} (max depth {}) in {}",
+        adj.rows,
+        levels.iter().filter(|l| **l != usize::MAX).max().unwrap(),
+        crate::util::timer::fmt_duration(bfs_dt)
+    );
+    // restrict the O(n^3 log n) kernels to a subgraph for interactivity
+    let n = adj.rows.min(512);
+    let sub = crate::formats::Csr::from_triplets(
+        n,
+        n,
+        (0..n).flat_map(|r| {
+            let (cols, vals) = adj.row(r);
+            cols.iter()
+                .zip(vals)
+                .filter(|(c, _)| (**c as usize) < n)
+                .map(move |(c, v)| (r, *c as usize, *v))
+                .collect::<Vec<_>>()
+        }),
+    );
+    let (d, apsp_dt) = crate::util::timer::time(|| apsp_minplus(&sub, 4));
+    println!(
+        "APSP (min-plus squaring) on {n}-vertex subgraph: {} finite pairs in {}",
+        d.nnz(),
+        crate::util::timer::fmt_duration(apsp_dt)
+    );
+    let (tc, tc_dt) = crate::util::timer::time(|| transitive_closure(&sub));
+    println!(
+        "transitive closure: {} reachable pairs in {}",
+        tc.nnz(),
+        crate::util::timer::fmt_duration(tc_dt)
+    );
+    let (tri, tri_dt) = crate::util::timer::time(|| triangles(&sub));
+    println!(
+        "triangles (tr(A³)/6): {tri} in {}",
+        crate::util::timer::fmt_duration(tri_dt)
+    );
+    Ok(())
+}
+
+fn cmd_die(args: &Args) -> Result<()> {
+    use crate::coordinator::{run_die, SchedPolicy};
+    let blocks = args.get_u64("blocks", 4)? as usize;
+    let policy = match args.get("policy").unwrap_or("lpt") {
+        "lpt" => SchedPolicy::Lpt,
+        "rr" => SchedPolicy::RoundRobin,
+        other => bail!("unknown --policy `{other}` (lpt|rr)"),
+    };
+    let scale = args.scale()?;
+    let (a, b) = bench::paper_inputs(scale);
+    let scfg = SimConfig::piuma_block();
+    let kcfg = KernelConfig::v3();
+    println!("running SMASH-V3 across 1 and {blocks} block(s), {policy:?} scheduling...");
+    let (c1, r1) = run_die(&a, &b, &kcfg, &scfg, 1, policy);
+    let (cn, rn) = run_die(&a, &b, &kcfg, &scfg, blocks, policy);
+    anyhow::ensure!(c1.approx_same(&cn), "multi-block product mismatch");
+    println!(
+        "1 block: {:.2} sim-ms | {} blocks: {:.2} sim-ms -> speedup {:.2}x (imbalance {:.3})",
+        r1.ms,
+        blocks,
+        rn.ms,
+        r1.ms / rn.ms.max(1e-12),
+        rn.imbalance
+    );
+    for (i, ms) in rn.block_ms.iter().enumerate() {
+        println!(
+            "  block {i}: {:.2} sim-ms, {} windows",
+            ms, rn.windows_per_block[i]
+        );
+    }
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    use crate::sim::{read_trace, replay, write_trace};
+    let a = rmat(&RmatParams::new(9, 6_000, args.get_u64("seed", 7)?));
+    let b = rmat(&RmatParams::new(9, 6_000, args.get_u64("seed", 7)? + 99));
+    let mut scfg = SimConfig::piuma_block();
+    scfg.trace = true;
+    println!("recording an execution-driven SMASH-V2 run...");
+    let mut run = run_smash(&a, &b, &KernelConfig::v2(), &scfg);
+    let events = run.sim.take_trace().expect("trace enabled");
+    println!(
+        "captured {} events ({} simulated cycles)",
+        crate::util::fmt_count(events.len() as u64),
+        crate::util::fmt_count(run.report.cycles)
+    );
+    let events = if let Some(path) = args.get("out") {
+        let f = std::fs::File::create(path)?;
+        write_trace(std::io::BufWriter::new(f), &events)?;
+        let size = std::fs::metadata(path)?.len();
+        println!("wrote {path} ({})", crate::util::fmt_bytes(size));
+        let f = std::fs::File::open(path)?;
+        read_trace(std::io::BufReader::new(f))?
+    } else {
+        events
+    };
+    println!("replaying trace-driven...");
+    let replayed = replay(SimConfig::piuma_block(), &events);
+    anyhow::ensure!(
+        replayed.elapsed_cycles() == run.report.cycles
+            && replayed.total_instructions() == run.report.instructions,
+        "replay diverged!"
+    );
+    println!(
+        "trace-driven replay matches execution-driven simulation exactly: {} cycles, {} instructions ✓",
+        crate::util::fmt_count(replayed.elapsed_cycles()),
+        crate::util::fmt_count(replayed.total_instructions())
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arg_parsing() {
+        let argv: Vec<String> = ["--id", "6.4", "--all", "--seed", "9"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let a = Args::parse(&argv);
+        assert_eq!(a.get("id"), Some("6.4"));
+        assert_eq!(a.get("all"), Some("true"));
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 9);
+        assert_eq!(a.get_u64("missing", 42).unwrap(), 42);
+    }
+
+    #[test]
+    fn scale_parse() {
+        let a = Args::parse(&["--scale".to_string(), "full".to_string()]);
+        assert_eq!(a.scale().unwrap(), Scale::Full);
+        let bad = Args::parse(&["--scale".to_string(), "medium".to_string()]);
+        assert!(bad.scale().is_err());
+    }
+}

@@ -1,0 +1,360 @@
+//! Configuration system: simulator target configuration (the paper's
+//! Table 4.2), kernel tuning knobs, and a tiny `key = value` config-file
+//! parser (serde is unavailable offline).
+
+mod parse;
+
+pub use parse::{parse_kv, ConfigError};
+
+/// Target-architecture configuration for one simulated PIUMA block,
+/// mirroring Table 4.2 of the thesis plus latency knobs (Table 4.2 lists
+/// structure; latencies are the interval-model parameters).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimConfig {
+    // ---- topology (Table 4.2) ----
+    /// Number of blocks ("cores" in Table 4.2 wording) per die.
+    pub blocks: usize,
+    /// Multi-threaded cores per block.
+    pub mtc_per_block: usize,
+    /// Hardware thread contexts per MTC (register-file depth).
+    pub threads_per_mtc: usize,
+    /// Single-threaded cores per block (memory/thread management).
+    pub stc_per_block: usize,
+
+    // ---- memories ----
+    /// Scratchpad size per block, bytes (Table 4.2: 4096 KB).
+    pub spad_bytes: usize,
+    /// L1 cache size per core, bytes (Table 4.2: 16 KB).
+    pub l1_bytes: usize,
+    /// L1 associativity (Table 4.2: 4).
+    pub l1_assoc: usize,
+    /// L1 line size, bytes (Table 4.2: 64).
+    pub l1_line: usize,
+
+    // ---- interval-model latencies (cycles) ----
+    /// ALU / integer op.
+    pub lat_alu: u64,
+    /// L1 hit.
+    pub lat_l1_hit: u64,
+    /// DRAM access (load miss fill / uncached 8-byte native access).
+    pub lat_dram: u64,
+    /// SPAD access.
+    pub lat_spad: u64,
+    /// Atomic op on SPAD (uncontended).
+    pub lat_atomic_spad: u64,
+    /// Block-wide SPAD atomic-unit throughput: cycles per atomic
+    /// (fractional — the SPAD is banked). The serializing resource the
+    /// V1/V2 hashing phases queue on.
+    pub spad_atomic_service: f64,
+    /// Atomic op on DRAM (uncontended, via memory controller).
+    pub lat_atomic_dram: u64,
+    /// Extra serialization penalty per concurrent contender on the same
+    /// atomic line.
+    pub lat_atomic_contention: u64,
+    /// One-way network hop for a remote instruction packet.
+    pub lat_remote_packet: u64,
+    /// Token-pool poll (producer-consumer dynamic scheduling).
+    pub lat_token_poll: u64,
+    /// Barrier entry overhead per thread.
+    pub lat_barrier: u64,
+
+    // ---- bandwidth model ----
+    /// Core clock in GHz (used to convert cycles <-> seconds).
+    pub clock_ghz: f64,
+    /// Peak DRAM bandwidth per block, GB/s.
+    pub dram_peak_gbs: f64,
+    /// DMA engine sustained share of DRAM bandwidth [0,1].
+    pub dma_bw_share: f64,
+    /// Memory controllers support native 8-byte accesses (PIUMA §4.1.3);
+    /// if false, every DRAM access fetches a full line.
+    pub native_8b_dram: bool,
+
+    /// Utilization-timeline sample period in cycles (metrics granularity).
+    pub timeline_sample_cycles: u64,
+    /// Capture an instruction trace (see `sim::trace`) — memory-heavy;
+    /// meant for window-scoped runs and the replay regression harness.
+    pub trace: bool,
+}
+
+impl SimConfig {
+    /// The paper's simulated target: one PIUMA block (Table 4.2 row
+    /// "Core Count = varying", we default to 1 block of 4 MTC x 16 threads
+    /// = 64 threads, the Table 6.7 configuration).
+    pub fn piuma_block() -> Self {
+        Self {
+            blocks: 1,
+            mtc_per_block: 4,
+            threads_per_mtc: 16,
+            stc_per_block: 2,
+            spad_bytes: 4096 * 1024,
+            l1_bytes: 16 * 1024,
+            l1_assoc: 4,
+            l1_line: 64,
+            lat_alu: 1,
+            lat_l1_hit: 1,
+            lat_dram: 90,
+            lat_spad: 4,
+            lat_atomic_spad: 6,
+            spad_atomic_service: 0.5,
+            lat_atomic_dram: 100,
+            lat_atomic_contention: 8,
+            lat_remote_packet: 40,
+            lat_token_poll: 12,
+            lat_barrier: 16,
+            clock_ghz: 1.0,
+            dram_peak_gbs: 5.486,
+            dma_bw_share: 0.5,
+            native_8b_dram: true,
+            timeline_sample_cycles: 10_000,
+            trace: false,
+        }
+    }
+
+    /// Smaller config for fast unit tests (fewer threads, tiny SPAD).
+    pub fn test_tiny() -> Self {
+        Self {
+            blocks: 1,
+            mtc_per_block: 2,
+            threads_per_mtc: 4,
+            stc_per_block: 1,
+            spad_bytes: 64 * 1024,
+            l1_bytes: 4 * 1024,
+            l1_assoc: 2,
+            l1_line: 64,
+            timeline_sample_cycles: 1_000,
+            ..Self::piuma_block()
+        }
+    }
+
+    /// Multi-block scale-out config (window scheduling across blocks).
+    pub fn piuma_die(blocks: usize) -> Self {
+        Self {
+            blocks,
+            ..Self::piuma_block()
+        }
+    }
+
+    /// Total MTC threads per block (the "64 PIUMA threads" of Table 6.7).
+    pub fn threads_per_block(&self) -> usize {
+        self.mtc_per_block * self.threads_per_mtc
+    }
+
+    /// Cycles per second.
+    pub fn hz(&self) -> f64 {
+        self.clock_ghz * 1e9
+    }
+
+    /// Convert a cycle count to milliseconds.
+    pub fn cycles_to_ms(&self, cycles: u64) -> f64 {
+        cycles as f64 / self.hz() * 1e3
+    }
+
+    /// DRAM peak bytes/cycle.
+    pub fn dram_bytes_per_cycle(&self) -> f64 {
+        self.dram_peak_gbs * 1e9 / self.hz()
+    }
+
+    /// Apply `key = value` overrides (e.g. from a config file or CLI).
+    pub fn apply_override(&mut self, key: &str, value: &str) -> Result<(), ConfigError> {
+        macro_rules! set {
+            ($field:ident) => {
+                self.$field = value.parse().map_err(|_| ConfigError::BadValue {
+                    key: key.into(),
+                    value: value.into(),
+                })?
+            };
+        }
+        match key {
+            "blocks" => set!(blocks),
+            "mtc_per_block" => set!(mtc_per_block),
+            "threads_per_mtc" => set!(threads_per_mtc),
+            "stc_per_block" => set!(stc_per_block),
+            "spad_bytes" => set!(spad_bytes),
+            "l1_bytes" => set!(l1_bytes),
+            "l1_assoc" => set!(l1_assoc),
+            "l1_line" => set!(l1_line),
+            "lat_alu" => set!(lat_alu),
+            "lat_l1_hit" => set!(lat_l1_hit),
+            "lat_dram" => set!(lat_dram),
+            "lat_spad" => set!(lat_spad),
+            "lat_atomic_spad" => set!(lat_atomic_spad),
+            "spad_atomic_service" => set!(spad_atomic_service),
+            "lat_atomic_dram" => set!(lat_atomic_dram),
+            "lat_atomic_contention" => set!(lat_atomic_contention),
+            "lat_remote_packet" => set!(lat_remote_packet),
+            "lat_token_poll" => set!(lat_token_poll),
+            "lat_barrier" => set!(lat_barrier),
+            "clock_ghz" => set!(clock_ghz),
+            "dram_peak_gbs" => set!(dram_peak_gbs),
+            "dma_bw_share" => set!(dma_bw_share),
+            "native_8b_dram" => set!(native_8b_dram),
+            "timeline_sample_cycles" => set!(timeline_sample_cycles),
+            "trace" => set!(trace),
+            _ => {
+                return Err(ConfigError::UnknownKey { key: key.into() });
+            }
+        }
+        Ok(())
+    }
+
+    /// Load a config file of `key = value` lines over a preset base.
+    pub fn from_file(path: &str, base: SimConfig) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path).map_err(|e| ConfigError::Io {
+            path: path.into(),
+            msg: e.to_string(),
+        })?;
+        let mut cfg = base;
+        for (k, v) in parse_kv(&text)? {
+            cfg.apply_override(&k, &v)?;
+        }
+        Ok(cfg)
+    }
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self::piuma_block()
+    }
+}
+
+/// Hashing strategy for the SMASH hashtable (V1 uses high-order bits,
+/// V2/V3 use low-order bits — §5.1.2 / §5.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HashBits {
+    /// Hash on high-order bits (preserves sort order, clusters collide).
+    High,
+    /// Hash on low-order bits (spreads clusters, order not preserved).
+    Low,
+}
+
+/// Work-allocation strategy across MTC threads (§5.1 vs §5.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheduling {
+    /// V1: rows statically assigned round-robin.
+    StaticRoundRobin,
+    /// V2/V3: producer-consumer token pool, two tokens (even/odd half) per row.
+    Tokenized,
+}
+
+/// Where the hashtable lives (§5.1 vs §5.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TablePlacement {
+    /// V1/V2: tag+data hashtable in scratchpad.
+    Spad,
+    /// V3: tag->offset hashtable in DRAM; dense tag/value arrays in SPAD,
+    /// streamed out by the DMA engine.
+    DramFragmented,
+}
+
+/// Tuning knobs of the SMASH kernels (Ch. 5).
+#[derive(Clone, Debug)]
+pub struct KernelConfig {
+    pub hash_bits: HashBits,
+    pub scheduling: Scheduling,
+    pub placement: TablePlacement,
+    /// Rows with more FMAs than this are treated as "dense rows" in window
+    /// planning (§5.1.1 threshold).
+    pub dense_row_threshold: usize,
+    /// Hashtable load-factor target: bins = next_pow2(est_nnz / load).
+    pub table_load_factor: f64,
+    /// Tokens generated per row (2 = paper's even/odd split).
+    pub tokens_per_row: usize,
+    /// Use the DMA engine for SPAD->DRAM writeback (V3).
+    pub use_dma: bool,
+    /// Hash into a *remote* block's SPAD via network instructions
+    /// (§4.1.2.2: "we make use of remote atomics in our algorithm to
+    /// update the partial products in our hash table"). Models the
+    /// distributed-hashtable variant where a fraction
+    /// `(blocks-1)/blocks` of upserts cross the fabric; 0 = all-local
+    /// (the windowed design). Ablation knob.
+    pub remote_table_blocks: usize,
+}
+
+impl KernelConfig {
+    /// SMASH V1 — §5.1: static allocation, high-bit hashing, SPAD table.
+    /// V1 runs at a lower table load factor: high-bit hashing aliases hub
+    /// columns into shared bins (the §7.2 hotspot pathology), so it needs
+    /// spare slots to keep the walk bounded (0.5 load explodes to >500
+    /// probes/upsert on R-MAT inputs; 0.25 keeps it near 10).
+    pub fn v1() -> Self {
+        Self {
+            hash_bits: HashBits::High,
+            scheduling: Scheduling::StaticRoundRobin,
+            placement: TablePlacement::Spad,
+            dense_row_threshold: 1024,
+            table_load_factor: 0.25,
+            tokens_per_row: 1,
+            use_dma: false,
+            remote_table_blocks: 0,
+        }
+    }
+
+    /// SMASH V2 — §5.2: tokenization, low-bit hashing, SPAD table.
+    pub fn v2() -> Self {
+        Self {
+            hash_bits: HashBits::Low,
+            scheduling: Scheduling::Tokenized,
+            tokens_per_row: 2,
+            table_load_factor: 0.9,
+            ..Self::v1()
+        }
+    }
+
+    /// SMASH V3 — §5.3: V2 + DRAM tag-offset table + dense SPAD arrays + DMA.
+    pub fn v3() -> Self {
+        Self {
+            placement: TablePlacement::DramFragmented,
+            use_dma: true,
+            ..Self::v2()
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match (self.placement, self.scheduling) {
+            (TablePlacement::DramFragmented, _) => "SMASH-V3",
+            (TablePlacement::Spad, Scheduling::Tokenized) => "SMASH-V2",
+            (TablePlacement::Spad, Scheduling::StaticRoundRobin) => "SMASH-V1",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn piuma_block_matches_table_4_2() {
+        let c = SimConfig::piuma_block();
+        assert_eq!(c.mtc_per_block, 4);
+        assert_eq!(c.stc_per_block, 2);
+        assert_eq!(c.threads_per_mtc, 16);
+        assert_eq!(c.threads_per_block(), 64); // Table 6.7: 64 PIUMA threads
+        assert_eq!(c.spad_bytes, 4096 * 1024);
+        assert_eq!(c.l1_bytes, 16 * 1024);
+        assert_eq!(c.l1_assoc, 4);
+        assert_eq!(c.l1_line, 64);
+    }
+
+    #[test]
+    fn cycle_conversions() {
+        let c = SimConfig::piuma_block();
+        assert!((c.cycles_to_ms(1_000_000) - 1.0).abs() < 1e-9);
+        assert!(c.dram_bytes_per_cycle() > 5.0);
+    }
+
+    #[test]
+    fn overrides() {
+        let mut c = SimConfig::piuma_block();
+        c.apply_override("lat_dram", "120").unwrap();
+        assert_eq!(c.lat_dram, 120);
+        assert!(c.apply_override("nope", "1").is_err());
+        assert!(c.apply_override("lat_dram", "abc").is_err());
+    }
+
+    #[test]
+    fn version_names() {
+        assert_eq!(KernelConfig::v1().name(), "SMASH-V1");
+        assert_eq!(KernelConfig::v2().name(), "SMASH-V2");
+        assert_eq!(KernelConfig::v3().name(), "SMASH-V3");
+    }
+}

@@ -1,0 +1,70 @@
+//! Minimal `key = value` config parser (comments with `#`, blank lines
+//! ignored, optional `[section]` headers flattened as `section.key`).
+
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum ConfigError {
+    #[error("config line {line}: expected `key = value`, got `{text}`")]
+    Syntax { line: usize, text: String },
+    #[error("unknown config key `{key}`")]
+    UnknownKey { key: String },
+    #[error("bad value `{value}` for key `{key}`")]
+    BadValue { key: String, value: String },
+    #[error("cannot read config `{path}`: {msg}")]
+    Io { path: String, msg: String },
+}
+
+/// Parse `key = value` lines into pairs. Section headers prefix subsequent
+/// keys with `section.`.
+pub fn parse_kv(text: &str) -> Result<Vec<(String, String)>, ConfigError> {
+    let mut out = Vec::new();
+    let mut section = String::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') && line.ends_with(']') {
+            section = line[1..line.len() - 1].trim().to_string();
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            return Err(ConfigError::Syntax {
+                line: i + 1,
+                text: raw.to_string(),
+            });
+        };
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        out.push((key, v.trim().trim_matches('"').to_string()));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_pairs_and_sections() {
+        let text = "\n# comment\na = 1\n[sim]\nlat_dram = 90 # inline\nname = \"x\"\n";
+        let kv = parse_kv(text).unwrap();
+        assert_eq!(
+            kv,
+            vec![
+                ("a".into(), "1".into()),
+                ("sim.lat_dram".into(), "90".into()),
+                ("sim.name".into(), "x".into()),
+            ]
+        );
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_kv("what is this").is_err());
+    }
+}

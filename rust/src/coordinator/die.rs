@@ -1,0 +1,156 @@
+//! Die-level scale-out: run a SMASH SpGEMM across multiple simulated
+//! PIUMA blocks (§4.1.4's "multiple blocks laid out together form a die"),
+//! with windows assigned by the [`super::scheduler`] policy and each block
+//! simulated independently (windows are independent by construction —
+//! §5.1.1: "every PIUMA block processes its own window independently").
+//!
+//! The die makespan is the max block makespan; speedup-vs-one-block is the
+//! scale-out curve the paper's §7.2 future work points at.
+
+use super::scheduler::{schedule_windows, SchedPolicy};
+use crate::config::{KernelConfig, SimConfig};
+use crate::formats::Csr;
+use crate::kernels::{plan_windows, run_smash};
+#[cfg(test)]
+use crate::spgemm::gustavson;
+
+/// Result of a multi-block run.
+#[derive(Clone, Debug)]
+pub struct DieReport {
+    pub blocks: usize,
+    pub policy: SchedPolicy,
+    /// Die makespan = max over blocks (ms).
+    pub ms: f64,
+    /// Per-block simulated time (ms).
+    pub block_ms: Vec<f64>,
+    /// Load imbalance across blocks (max/mean).
+    pub imbalance: f64,
+    /// Scheduled windows per block.
+    pub windows_per_block: Vec<usize>,
+}
+
+/// Simulate `C = A·B` across `blocks` blocks. Returns (C, report).
+///
+/// Each block runs the kernel over the row-ranges of its assigned windows.
+/// Functionally we slice A by rows (row-wise product composes trivially);
+/// the timing of each block comes from an independent [`crate::sim::Sim`].
+pub fn run_die(
+    a: &Csr,
+    b: &Csr,
+    kcfg: &KernelConfig,
+    scfg: &SimConfig,
+    blocks: usize,
+    policy: SchedPolicy,
+) -> (Csr, DieReport) {
+    assert!(blocks >= 1);
+    let plan = plan_windows(a, b, kcfg, scfg);
+    let assignment = schedule_windows(&plan.windows, blocks, policy);
+
+    let mut block_ms = vec![0.0f64; blocks];
+    let mut windows_per_block = vec![0usize; blocks];
+    let mut triplets: Vec<(usize, usize, f64)> = Vec::new();
+
+    for blk in 0..blocks {
+        // Collect this block's row ranges and build a row-sliced A whose
+        // non-assigned rows are empty (dimension-preserving).
+        let mut rows_mask = vec![false; a.rows];
+        for (w, win) in plan.windows.iter().enumerate() {
+            if assignment.window_to_block[w] == blk {
+                windows_per_block[blk] += 1;
+                for r in win.row_begin..win.row_end {
+                    rows_mask[r] = true;
+                }
+            }
+        }
+        if windows_per_block[blk] == 0 {
+            continue;
+        }
+        let mut sub = Vec::new();
+        for r in 0..a.rows {
+            if rows_mask[r] {
+                let (cols, vals) = a.row(r);
+                for (c, v) in cols.iter().zip(vals) {
+                    sub.push((r, *c as usize, *v));
+                }
+            }
+        }
+        let a_sub = Csr::from_triplets(a.rows, a.cols, sub);
+        let run = run_smash(&a_sub, b, kcfg, scfg);
+        block_ms[blk] = run.report.ms;
+        for r in 0..run.c.rows {
+            let (cols, vals) = run.c.row(r);
+            for (c, v) in cols.iter().zip(vals) {
+                triplets.push((r, *c as usize, *v));
+            }
+        }
+    }
+
+    let ms = block_ms.iter().cloned().fold(0.0, f64::max);
+    let mean = block_ms.iter().sum::<f64>() / blocks as f64;
+    let report = DieReport {
+        blocks,
+        policy,
+        ms,
+        imbalance: if mean > 0.0 { ms / mean } else { 1.0 },
+        block_ms,
+        windows_per_block,
+    };
+    (Csr::from_triplets(a.rows, b.cols, triplets), report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{rmat, RmatParams};
+
+    #[test]
+    fn die_result_matches_oracle() {
+        let a = rmat(&RmatParams::new(7, 800, 1));
+        let b = rmat(&RmatParams::new(7, 800, 2));
+        let (oracle, _) = gustavson(&a, &b);
+        for blocks in [1usize, 2, 4] {
+            let (c, rep) = run_die(
+                &a,
+                &b,
+                &KernelConfig::v3(),
+                &SimConfig::test_tiny(),
+                blocks,
+                SchedPolicy::Lpt,
+            );
+            assert!(c.approx_same(&oracle), "{blocks} blocks wrong");
+            assert_eq!(rep.blocks, blocks);
+            assert_eq!(
+                rep.windows_per_block.iter().sum::<usize>(),
+                plan_windows(&a, &b, &KernelConfig::v3(), &SimConfig::test_tiny())
+                    .windows
+                    .len()
+            );
+        }
+    }
+
+    #[test]
+    fn scale_out_speedup() {
+        let a = rmat(&RmatParams::new(9, 5_000, 3));
+        let b = rmat(&RmatParams::new(9, 5_000, 4));
+        // tiny SPAD -> many windows, so blocks have work to share
+        let scfg = SimConfig::test_tiny();
+        let (_, r1) = run_die(&a, &b, &KernelConfig::v3(), &scfg, 1, SchedPolicy::Lpt);
+        let (_, r4) = run_die(&a, &b, &KernelConfig::v3(), &scfg, 4, SchedPolicy::Lpt);
+        assert!(
+            r4.ms < r1.ms * 0.6,
+            "4 blocks ({:.2} ms) should be well under 1 block ({:.2} ms)",
+            r4.ms,
+            r1.ms
+        );
+    }
+
+    #[test]
+    fn lpt_balances_better_than_round_robin() {
+        let a = rmat(&RmatParams::new(9, 5_000, 5));
+        let b = rmat(&RmatParams::new(9, 5_000, 6));
+        let scfg = SimConfig::test_tiny();
+        let (_, rr) = run_die(&a, &b, &KernelConfig::v3(), &scfg, 4, SchedPolicy::RoundRobin);
+        let (_, lpt) = run_die(&a, &b, &KernelConfig::v3(), &scfg, 4, SchedPolicy::Lpt);
+        assert!(lpt.ms <= rr.ms * 1.05, "LPT {:.2} vs RR {:.2}", lpt.ms, rr.ms);
+    }
+}

@@ -1,0 +1,16 @@
+//! L3 coordinator: the serving layer around the SMASH kernels.
+//!
+//! * [`scheduler`] — window→block assignment across a multi-block PIUMA
+//!   die, with the §5.1.1 oversubscription policy ("blocks with windows
+//!   containing largely sparse rows can be oversubscribed").
+//! * [`server`] — a std::thread worker pool with a bounded job queue
+//!   (backpressure), routing SpGEMM / GCN requests to workers and
+//!   collecting responses.
+
+pub mod die;
+pub mod scheduler;
+pub mod server;
+
+pub use die::{run_die, DieReport};
+pub use scheduler::{schedule_windows, Assignment, SchedPolicy};
+pub use server::{Coordinator, Job, JobId, Response, ServerConfig};

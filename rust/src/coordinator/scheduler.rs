@@ -1,0 +1,163 @@
+//! Window scheduling across blocks (§5.1.1): windows are shipped to blocks
+//! over the DGAS and processed independently, "scheduled to blocks in
+//! random order and oversubscribed". We implement and compare:
+//!
+//! * round-robin (the naive baseline),
+//! * LPT (longest-processing-time-first greedy on FMA estimates) — the
+//!   oversubscription policy: light windows pack onto busy blocks.
+
+use crate::kernels::Window;
+
+/// Assignment of window index -> block index.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Assignment {
+    pub window_to_block: Vec<usize>,
+    pub blocks: usize,
+    /// Estimated per-block load (sum of assigned FMA counts).
+    pub block_load: Vec<u64>,
+}
+
+impl Assignment {
+    /// Load imbalance: max/mean block load (1.0 = perfect).
+    pub fn imbalance(&self) -> f64 {
+        let max = *self.block_load.iter().max().unwrap_or(&0) as f64;
+        let sum: u64 = self.block_load.iter().sum();
+        let mean = sum as f64 / self.blocks.max(1) as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+
+    /// Makespan estimate (max block load).
+    pub fn makespan(&self) -> u64 {
+        *self.block_load.iter().max().unwrap_or(&0)
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedPolicy {
+    RoundRobin,
+    /// Longest-processing-time-first greedy (oversubscription).
+    Lpt,
+}
+
+/// Compute the assignment of `windows` onto `blocks` blocks.
+pub fn schedule_windows(windows: &[Window], blocks: usize, policy: SchedPolicy) -> Assignment {
+    assert!(blocks > 0, "need at least one block");
+    let mut window_to_block = vec![0usize; windows.len()];
+    let mut block_load = vec![0u64; blocks];
+    match policy {
+        SchedPolicy::RoundRobin => {
+            for (i, w) in windows.iter().enumerate() {
+                let b = i % blocks;
+                window_to_block[i] = b;
+                block_load[b] += w.flops.max(1);
+            }
+        }
+        SchedPolicy::Lpt => {
+            // sort window indices by descending cost, assign each to the
+            // least-loaded block
+            let mut order: Vec<usize> = (0..windows.len()).collect();
+            order.sort_by_key(|&i| std::cmp::Reverse(windows[i].flops));
+            for i in order {
+                let (b, _) = block_load
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, l)| **l)
+                    .unwrap();
+                window_to_block[i] = b;
+                block_load[b] += windows[i].flops.max(1);
+            }
+        }
+    }
+    Assignment {
+        window_to_block,
+        blocks,
+        block_load,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quick::forall;
+
+    fn mk_windows(costs: &[u64]) -> Vec<Window> {
+        costs
+            .iter()
+            .enumerate()
+            .map(|(i, &f)| Window {
+                row_begin: i * 10,
+                row_end: (i + 1) * 10,
+                flops: f,
+                out_nnz: f as usize,
+                bins: 64,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let ws = mk_windows(&[1, 1, 1, 1, 1, 1]);
+        let a = schedule_windows(&ws, 3, SchedPolicy::RoundRobin);
+        assert_eq!(a.window_to_block, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn lpt_beats_round_robin_on_skew() {
+        // skewed window costs: LPT should balance better
+        let ws = mk_windows(&[100, 1, 1, 1, 90, 1, 1, 1, 80, 1, 1, 1]);
+        let rr = schedule_windows(&ws, 3, SchedPolicy::RoundRobin);
+        let lpt = schedule_windows(&ws, 3, SchedPolicy::Lpt);
+        assert!(lpt.makespan() <= rr.makespan());
+        assert!(lpt.imbalance() <= rr.imbalance() + 1e-9);
+    }
+
+    /// Property: every window is assigned exactly once, to a valid block,
+    /// and block loads account for every window (routing invariant).
+    #[test]
+    fn prop_schedule_conserves_windows() {
+        forall(64, |g| {
+            let n = g.usize_in(0, 40);
+            let costs: Vec<u64> = (0..n).map(|_| g.usize_in(1, 10_000) as u64).collect();
+            let ws = mk_windows(&costs);
+            let blocks = g.usize_in(1, 9);
+            let policy = if g.bool() {
+                SchedPolicy::Lpt
+            } else {
+                SchedPolicy::RoundRobin
+            };
+            let a = schedule_windows(&ws, blocks, policy);
+            assert_eq!(a.window_to_block.len(), n);
+            for &b in &a.window_to_block {
+                assert!(b < blocks);
+            }
+            let total: u64 = a.block_load.iter().sum();
+            let expect: u64 = costs.iter().map(|c| (*c).max(1)).sum();
+            assert_eq!(total, expect);
+        });
+    }
+
+    /// Property: LPT's makespan is within 4/3 of the trivial lower bound
+    /// (classic Graham bound: 4/3 − 1/3m of OPT ≥ max(mean, max_item)).
+    #[test]
+    fn prop_lpt_graham_bound() {
+        forall(64, |g| {
+            let n = g.usize_in(1, 40);
+            let costs: Vec<u64> = (0..n).map(|_| g.usize_in(1, 10_000) as u64).collect();
+            let ws = mk_windows(&costs);
+            let m = g.usize_in(1, 9);
+            let a = schedule_windows(&ws, m, SchedPolicy::Lpt);
+            let total: u64 = costs.iter().sum();
+            let lower = (total as f64 / m as f64).max(*costs.iter().max().unwrap() as f64);
+            assert!(
+                a.makespan() as f64 <= lower * 4.0 / 3.0 + 1.0,
+                "makespan {} vs bound {}",
+                a.makespan(),
+                lower * 4.0 / 3.0
+            );
+        });
+    }
+}

@@ -1,0 +1,247 @@
+//! The request-serving coordinator: a bounded job queue feeding a
+//! std::thread worker pool (tokio is unavailable offline; the event loop
+//! is a classic channel fan-out/fan-in).
+//!
+//! Jobs are SpGEMM requests (optionally simulated on the PIUMA model) or
+//! CPU-native multiplications; responses carry the product plus run
+//! metadata. Submitting past the queue bound blocks the caller —
+//! backpressure, not unbounded buffering.
+
+use crate::config::{KernelConfig, SimConfig};
+use crate::formats::Csr;
+use crate::spgemm::Dataflow;
+use std::collections::HashMap;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Monotonic job identifier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u64);
+
+/// A unit of work routed to the pool.
+pub enum Job {
+    /// Multiply on the simulated PIUMA block with a SMASH version.
+    SmashSpgemm {
+        a: Csr,
+        b: Csr,
+        kernel: KernelConfig,
+        sim: SimConfig,
+    },
+    /// Multiply natively with a reference dataflow.
+    NativeSpgemm { a: Csr, b: Csr, dataflow: Dataflow },
+}
+
+/// Worker answer.
+pub struct Response {
+    pub id: JobId,
+    pub c: Csr,
+    /// Simulated milliseconds (SMASH jobs) or None (native).
+    pub sim_ms: Option<f64>,
+    /// Wall time spent by the worker.
+    pub wall: std::time::Duration,
+    pub worker: usize,
+}
+
+pub struct ServerConfig {
+    pub workers: usize,
+    /// Bounded queue depth (backpressure threshold).
+    pub queue_depth: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            workers: std::thread::available_parallelism()
+                .map(|n| n.get().min(8))
+                .unwrap_or(2),
+            queue_depth: 32,
+        }
+    }
+}
+
+enum Envelope {
+    Work(JobId, Job),
+    Stop,
+}
+
+/// The coordinator: owns the pool; `submit` routes jobs in, `collect`
+/// gathers responses.
+pub struct Coordinator {
+    tx: SyncSender<Envelope>,
+    rx_done: Receiver<Response>,
+    handles: Vec<JoinHandle<()>>,
+    next_id: u64,
+    pending: usize,
+}
+
+impl Coordinator {
+    pub fn start(cfg: ServerConfig) -> Self {
+        let (tx, rx) = sync_channel::<Envelope>(cfg.queue_depth);
+        let rx = Arc::new(Mutex::new(rx));
+        let (tx_done, rx_done) = sync_channel::<Response>(cfg.queue_depth.max(1024));
+        let mut handles = Vec::new();
+        for worker in 0..cfg.workers.max(1) {
+            let rx = Arc::clone(&rx);
+            let tx_done = tx_done.clone();
+            handles.push(std::thread::spawn(move || loop {
+                let msg = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                match msg {
+                    Ok(Envelope::Work(id, job)) => {
+                        let t0 = std::time::Instant::now();
+                        let (c, sim_ms) = match job {
+                            Job::SmashSpgemm { a, b, kernel, sim } => {
+                                let run = crate::kernels::run_smash(&a, &b, &kernel, &sim);
+                                (run.c, Some(run.report.ms))
+                            }
+                            Job::NativeSpgemm { a, b, dataflow } => {
+                                let (c, _) = dataflow.multiply(&a, &b);
+                                (c, None)
+                            }
+                        };
+                        let _ = tx_done.send(Response {
+                            id,
+                            c,
+                            sim_ms,
+                            wall: t0.elapsed(),
+                            worker,
+                        });
+                    }
+                    Ok(Envelope::Stop) | Err(_) => break,
+                }
+            }));
+        }
+        Self {
+            tx,
+            rx_done,
+            handles,
+            next_id: 0,
+            pending: 0,
+        }
+    }
+
+    /// Submit a job (blocks when the queue is full — backpressure).
+    pub fn submit(&mut self, job: Job) -> JobId {
+        let id = JobId(self.next_id);
+        self.next_id += 1;
+        self.pending += 1;
+        self.tx
+            .send(Envelope::Work(id, job))
+            .expect("worker pool hung up");
+        id
+    }
+
+    /// Number of submitted-but-uncollected jobs.
+    pub fn pending(&self) -> usize {
+        self.pending
+    }
+
+    /// Collect one response (blocking).
+    pub fn collect_one(&mut self) -> Response {
+        let r = self.rx_done.recv().expect("worker pool hung up");
+        self.pending -= 1;
+        r
+    }
+
+    /// Collect all outstanding responses, keyed by id.
+    pub fn collect_all(&mut self) -> HashMap<JobId, Response> {
+        let mut out = HashMap::new();
+        while self.pending > 0 {
+            let r = self.collect_one();
+            out.insert(r.id, r);
+        }
+        out
+    }
+
+    /// Stop the pool and join workers.
+    pub fn shutdown(mut self) {
+        for _ in 0..self.handles.len() {
+            let _ = self.tx.send(Envelope::Stop);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{erdos_renyi, rmat, RmatParams};
+    use crate::spgemm::gustavson;
+
+    #[test]
+    fn serves_native_jobs() {
+        let mut coord = Coordinator::start(ServerConfig {
+            workers: 2,
+            queue_depth: 8,
+        });
+        let a = erdos_renyi(40, 200, 1);
+        let b = erdos_renyi(40, 200, 2);
+        let (oracle, _) = gustavson(&a, &b);
+        let mut ids = Vec::new();
+        for df in Dataflow::ALL {
+            ids.push(coord.submit(Job::NativeSpgemm {
+                a: a.clone(),
+                b: b.clone(),
+                dataflow: df,
+            }));
+        }
+        let responses = coord.collect_all();
+        assert_eq!(responses.len(), 4);
+        for id in ids {
+            assert!(responses[&id].c.approx_same(&oracle));
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn serves_smash_jobs_with_sim_ms() {
+        let mut coord = Coordinator::start(ServerConfig {
+            workers: 2,
+            queue_depth: 4,
+        });
+        let a = rmat(&RmatParams::new(6, 300, 3));
+        let b = rmat(&RmatParams::new(6, 300, 4));
+        let (oracle, _) = gustavson(&a, &b);
+        let id = coord.submit(Job::SmashSpgemm {
+            a,
+            b,
+            kernel: KernelConfig::v2(),
+            sim: SimConfig::test_tiny(),
+        });
+        let r = coord.collect_one();
+        assert_eq!(r.id, id);
+        assert!(r.sim_ms.unwrap() > 0.0);
+        assert!(r.c.approx_same(&oracle));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn ids_monotonic_and_unique() {
+        let mut coord = Coordinator::start(ServerConfig {
+            workers: 1,
+            queue_depth: 4,
+        });
+        let a = erdos_renyi(10, 20, 5);
+        let mut ids = Vec::new();
+        for _ in 0..5 {
+            ids.push(coord.submit(Job::NativeSpgemm {
+                a: a.clone(),
+                b: a.clone(),
+                dataflow: Dataflow::RowWiseHash,
+            }));
+        }
+        let mut sorted = ids.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 5);
+        let responses = coord.collect_all();
+        assert_eq!(responses.len(), 5);
+        assert_eq!(coord.pending(), 0);
+        coord.shutdown();
+    }
+}

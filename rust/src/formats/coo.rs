@@ -1,0 +1,93 @@
+//! Coordinate (triplet) format — the natural output of graph generators
+//! and the Matrix-Market interchange representation.
+
+use super::{Csr, Index, Value};
+
+#[derive(Clone, Debug, Default)]
+pub struct Coo {
+    pub rows: usize,
+    pub cols: usize,
+    pub row: Vec<Index>,
+    pub col: Vec<Index>,
+    pub val: Vec<Value>,
+}
+
+impl Coo {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            row: Vec::new(),
+            col: Vec::new(),
+            val: Vec::new(),
+        }
+    }
+
+    pub fn with_capacity(rows: usize, cols: usize, cap: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            row: Vec::with_capacity(cap),
+            col: Vec::with_capacity(cap),
+            val: Vec::with_capacity(cap),
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, r: usize, c: usize, v: Value) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.row.push(r as Index);
+        self.col.push(c as Index);
+        self.val.push(v);
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.row.len()
+    }
+
+    /// Convert to CSR (duplicates summed, columns sorted).
+    pub fn to_csr(&self) -> Csr {
+        Csr::from_triplets(
+            self.rows,
+            self.cols,
+            self.row
+                .iter()
+                .zip(&self.col)
+                .zip(&self.val)
+                .map(|((r, c), v)| (*r as usize, *c as usize, *v)),
+        )
+    }
+
+    /// Iterate triplets.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, usize, Value)> + '_ {
+        self.row
+            .iter()
+            .zip(&self.col)
+            .zip(&self.val)
+            .map(|((r, c), v)| (*r as usize, *c as usize, *v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coo_to_csr_dedups() {
+        let mut coo = Coo::new(2, 2);
+        coo.push(0, 1, 1.0);
+        coo.push(0, 1, 2.0);
+        coo.push(1, 0, 3.0);
+        let csr = coo.to_csr();
+        assert_eq!(csr.nnz(), 2);
+        assert_eq!(csr.row(0).1, &[3.0]);
+    }
+
+    #[test]
+    fn iter_roundtrip() {
+        let mut coo = Coo::new(3, 3);
+        coo.push(2, 1, 4.0);
+        let items: Vec<_> = coo.iter().collect();
+        assert_eq!(items, vec![(2, 1, 4.0)]);
+    }
+}

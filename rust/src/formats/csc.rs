@@ -1,0 +1,101 @@
+//! Compressed Sparse Column storage (thesis §2.6). Algorithm 1 of the
+//! thesis reads matrix A in CSC for the window-distribution bookkeeping
+//! (column-pointer copies used as work cursors), so we keep a real CSC type.
+
+use super::{Csr, Index, Value};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csc {
+    pub rows: usize,
+    pub cols: usize,
+    pub col_ptr: Vec<usize>,
+    pub row_idx: Vec<Index>,
+    pub data: Vec<Value>,
+}
+
+impl Csc {
+    /// Build from CSR (counting sort over columns).
+    pub fn from_csr(a: &Csr) -> Self {
+        let t = a.transpose(); // CSR of Aᵀ: its rows are A's columns
+        Self {
+            rows: a.rows,
+            cols: a.cols,
+            col_ptr: t.row_ptr,
+            row_idx: t.col_idx,
+            data: t.data,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.row_idx.len()
+    }
+
+    /// (row indices, values) of column `c`.
+    #[inline]
+    pub fn col(&self, c: usize) -> (&[Index], &[Value]) {
+        let (s, e) = (self.col_ptr[c], self.col_ptr[c + 1]);
+        (&self.row_idx[s..e], &self.data[s..e])
+    }
+
+    /// Back to CSR.
+    pub fn to_csr(&self) -> Csr {
+        let mut triplets = Vec::with_capacity(self.nnz());
+        for c in 0..self.cols {
+            let (rows, vals) = self.col(c);
+            for (r, v) in rows.iter().zip(vals) {
+                triplets.push((*r as usize, c, *v));
+            }
+        }
+        Csr::from_triplets(self.rows, self.cols, triplets)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.col_ptr.len() != self.cols + 1 {
+            return Err("col_ptr length".into());
+        }
+        if *self.col_ptr.last().unwrap() != self.row_idx.len() {
+            return Err("col_ptr[cols] != nnz".into());
+        }
+        for w in self.col_ptr.windows(2) {
+            if w[1] < w[0] {
+                return Err("col_ptr not monotone".into());
+            }
+        }
+        for &r in &self.row_idx {
+            if r as usize >= self.rows {
+                return Err("row index out of range".into());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csr_csc_roundtrip() {
+        let a = Csr::from_triplets(
+            3,
+            4,
+            vec![(0, 0, 1.0), (0, 3, 2.0), (1, 1, 3.0), (2, 0, 4.0), (2, 3, 5.0)],
+        );
+        let csc = Csc::from_csr(&a);
+        csc.validate().unwrap();
+        assert_eq!(csc.nnz(), a.nnz());
+        let (rows, vals) = csc.col(3);
+        assert_eq!(rows, &[0, 2]);
+        assert_eq!(vals, &[2.0, 5.0]);
+        assert!(csc.to_csr().approx_same(&a));
+    }
+
+    #[test]
+    fn empty_columns_ok() {
+        let a = Csr::from_triplets(2, 5, vec![(1, 4, 1.0)]);
+        let csc = Csc::from_csr(&a);
+        csc.validate().unwrap();
+        assert_eq!(csc.col(0).0.len(), 0);
+        assert_eq!(csc.col(4).0, &[1]);
+    }
+}

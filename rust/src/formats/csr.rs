@@ -1,0 +1,456 @@
+//! Compressed Sparse Row storage (thesis §2.6): `row_ptr` / `col_idx` /
+//! `data` triplet. The central format of SMASH — both inputs and the output
+//! matrix are CSR (§5.1.1).
+
+use super::{approx_eq, Coo, Dense, Index, Value};
+
+/// CSR sparse matrix. Invariants (checked by [`Csr::validate`]):
+/// * `row_ptr.len() == rows + 1`, monotone non-decreasing,
+///   `row_ptr[0] == 0`, `row_ptr[rows] == col_idx.len() == data.len()`;
+/// * all `col_idx < cols`;
+/// * if `sorted`, column indices strictly increase within each row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<Index>,
+    pub data: Vec<Value>,
+}
+
+/// Memory-footprint report for the Table 6.2 / 6.3 reproduction.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CsrFootprint {
+    /// Elements in the row-pointer array (rows + 1).
+    pub row_ptr_elems: usize,
+    /// Bytes of the row-pointer array at 4 B/elem (paper stores INT32).
+    pub row_ptr_bytes: usize,
+    pub col_idx_elems: usize,
+    pub col_idx_bytes: usize,
+    pub data_elems: usize,
+    pub data_bytes: usize,
+}
+
+impl CsrFootprint {
+    pub fn total_elems(&self) -> usize {
+        self.row_ptr_elems + self.col_idx_elems + self.data_elems
+    }
+    pub fn total_bytes(&self) -> usize {
+        self.row_ptr_bytes + self.col_idx_bytes + self.data_bytes
+    }
+}
+
+impl Csr {
+    /// Empty matrix with no non-zeros.
+    pub fn zero(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            row_ptr: vec![0; rows + 1],
+            col_idx: Vec::new(),
+            data: Vec::new(),
+        }
+    }
+
+    /// Identity matrix.
+    pub fn identity(n: usize) -> Self {
+        Self {
+            rows: n,
+            cols: n,
+            row_ptr: (0..=n).collect(),
+            col_idx: (0..n as Index).collect(),
+            data: vec![1.0; n],
+        }
+    }
+
+    /// Build from (row, col, value) triplets; duplicates are summed,
+    /// columns sorted within each row. This is the canonical constructor.
+    pub fn from_triplets(
+        rows: usize,
+        cols: usize,
+        triplets: impl IntoIterator<Item = (usize, usize, Value)>,
+    ) -> Self {
+        let mut by_row: Vec<Vec<(Index, Value)>> = vec![Vec::new(); rows];
+        for (r, c, v) in triplets {
+            assert!(r < rows && c < cols, "triplet ({r},{c}) out of bounds");
+            by_row[r].push((c as Index, v));
+        }
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut col_idx = Vec::new();
+        let mut data = Vec::new();
+        row_ptr.push(0);
+        for row in by_row.iter_mut() {
+            row.sort_unstable_by_key(|(c, _)| *c);
+            let mut i = 0;
+            while i < row.len() {
+                let c = row[i].0;
+                let mut acc = 0.0;
+                while i < row.len() && row[i].0 == c {
+                    acc += row[i].1;
+                    i += 1;
+                }
+                col_idx.push(c);
+                data.push(acc);
+            }
+            row_ptr.push(col_idx.len());
+        }
+        Self {
+            rows,
+            cols,
+            row_ptr,
+            col_idx,
+            data,
+        }
+    }
+
+    /// Number of stored non-zeros (nnz).
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// Non-zeros in row `r`.
+    #[inline]
+    pub fn row_nnz(&self, r: usize) -> usize {
+        self.row_ptr[r + 1] - self.row_ptr[r]
+    }
+
+    /// (col, value) slice pair of row `r`.
+    #[inline]
+    pub fn row(&self, r: usize) -> (&[Index], &[Value]) {
+        let (s, e) = (self.row_ptr[r], self.row_ptr[r + 1]);
+        (&self.col_idx[s..e], &self.data[s..e])
+    }
+
+    /// Degree of sparsity in percent (Table 1.1 metric):
+    /// `100 * (1 - nnz / (rows*cols))`.
+    pub fn sparsity_pct(&self) -> f64 {
+        let total = self.rows as f64 * self.cols as f64;
+        if total == 0.0 {
+            return 100.0;
+        }
+        100.0 * (1.0 - self.nnz() as f64 / total)
+    }
+
+    /// Structural + invariant validation; returns a human-readable error.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.row_ptr.len() != self.rows + 1 {
+            return Err(format!(
+                "row_ptr len {} != rows+1 {}",
+                self.row_ptr.len(),
+                self.rows + 1
+            ));
+        }
+        if self.row_ptr[0] != 0 {
+            return Err("row_ptr[0] != 0".into());
+        }
+        if *self.row_ptr.last().unwrap() != self.col_idx.len() {
+            return Err("row_ptr[rows] != nnz".into());
+        }
+        if self.col_idx.len() != self.data.len() {
+            return Err("col_idx / data length mismatch".into());
+        }
+        for w in self.row_ptr.windows(2) {
+            if w[1] < w[0] {
+                return Err("row_ptr not monotone".into());
+            }
+        }
+        for &c in &self.col_idx {
+            if c as usize >= self.cols {
+                return Err(format!("col index {c} >= cols {}", self.cols));
+            }
+        }
+        Ok(())
+    }
+
+    /// True if every row's columns strictly increase.
+    pub fn is_sorted(&self) -> bool {
+        (0..self.rows).all(|r| {
+            let (cols, _) = self.row(r);
+            cols.windows(2).all(|w| w[0] < w[1])
+        })
+    }
+
+    /// Sort columns within each row and merge duplicates (SMASH V2/V3
+    /// produce unsorted-but-merged rows — §5.2; canonicalize for compare).
+    pub fn canonicalize(&self) -> Csr {
+        let mut triplets = Vec::with_capacity(self.nnz());
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            for (c, v) in cols.iter().zip(vals) {
+                triplets.push((r, *c as usize, *v));
+            }
+        }
+        Csr::from_triplets(self.rows, self.cols, triplets)
+    }
+
+    /// Drop explicit zeros (useful after cancellation in numeric phases).
+    pub fn prune_zeros(&self) -> Csr {
+        let mut triplets = Vec::with_capacity(self.nnz());
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            for (c, v) in cols.iter().zip(vals) {
+                if *v != 0.0 {
+                    triplets.push((r, *c as usize, *v));
+                }
+            }
+        }
+        Csr::from_triplets(self.rows, self.cols, triplets)
+    }
+
+    /// Transpose (CSR of Aᵀ) via counting sort — O(nnz + rows + cols).
+    pub fn transpose(&self) -> Csr {
+        let mut counts = vec![0usize; self.cols + 1];
+        for &c in &self.col_idx {
+            counts[c as usize + 1] += 1;
+        }
+        for i in 0..self.cols {
+            counts[i + 1] += counts[i];
+        }
+        let row_ptr = counts.clone();
+        let mut col_idx = vec![0 as Index; self.nnz()];
+        let mut data = vec![0.0; self.nnz()];
+        let mut cursor = counts;
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            for (c, v) in cols.iter().zip(vals) {
+                let dst = cursor[*c as usize];
+                col_idx[dst] = r as Index;
+                data[dst] = *v;
+                cursor[*c as usize] += 1;
+            }
+        }
+        Csr {
+            rows: self.cols,
+            cols: self.rows,
+            row_ptr,
+            col_idx,
+            data,
+        }
+    }
+
+    /// Numerically-tolerant equality against another CSR (both canonicalized).
+    pub fn approx_same(&self, other: &Csr) -> bool {
+        if self.rows != other.rows || self.cols != other.cols {
+            return false;
+        }
+        let a = self.canonicalize();
+        let b = other.canonicalize();
+        if a.row_ptr != b.row_ptr || a.col_idx != b.col_idx {
+            return false;
+        }
+        a.data
+            .iter()
+            .zip(&b.data)
+            .all(|(x, y)| approx_eq(*x, *y))
+    }
+
+    /// Dense representation (test-scale matrices only).
+    pub fn to_dense(&self) -> Dense {
+        let mut d = Dense::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            for (c, v) in cols.iter().zip(vals) {
+                d[(r, *c as usize)] += *v;
+            }
+        }
+        d
+    }
+
+    /// COO triplets in row-major order.
+    pub fn to_coo(&self) -> Coo {
+        let mut coo = Coo::new(self.rows, self.cols);
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            for (c, v) in cols.iter().zip(vals) {
+                coo.push(r, *c as usize, *v);
+            }
+        }
+        coo
+    }
+
+    /// Sparse matrix-vector product `y = A * x` (used by examples/tests).
+    pub fn spmv(&self, x: &[Value]) -> Vec<Value> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            let mut acc = 0.0;
+            for (c, v) in cols.iter().zip(vals) {
+                acc += v * x[*c as usize];
+            }
+            y[r] = acc;
+        }
+        y
+    }
+
+    /// Sparse × dense: `C = A * B` where B is `cols × k` dense row-major.
+    /// This is the GCN aggregation step (Â·H) the Pallas kernel implements.
+    pub fn spmm_dense(&self, b: &Dense) -> Dense {
+        assert_eq!(self.cols, b.rows);
+        let mut c = Dense::zeros(self.rows, b.cols);
+        for r in 0..self.rows {
+            let (cols, vals) = self.row(r);
+            for (cc, v) in cols.iter().zip(vals) {
+                let brow = b.row(*cc as usize);
+                let crow = c.row_mut(r);
+                for (o, bv) in crow.iter_mut().zip(brow) {
+                    *o += v * bv;
+                }
+            }
+        }
+        c
+    }
+
+    /// Byte footprint following the paper's element sizes
+    /// (row_ptr INT32, col_idx INT32, data FLOAT64 — Tables 6.2/6.3).
+    pub fn footprint(&self) -> CsrFootprint {
+        CsrFootprint {
+            row_ptr_elems: self.row_ptr.len(),
+            row_ptr_bytes: self.row_ptr.len() * 4,
+            col_idx_elems: self.col_idx.len(),
+            col_idx_bytes: self.col_idx.len() * 4,
+            data_elems: self.data.len(),
+            data_bytes: self.data.len() * 8,
+        }
+    }
+
+    /// Per-row nnz histogram (used for workload-distribution analysis).
+    pub fn row_nnz_vec(&self) -> Vec<usize> {
+        (0..self.rows).map(|r| self.row_nnz(r)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Csr {
+        // [[1, 0, 2],
+        //  [0, 0, 0],
+        //  [3, 4, 0]]
+        Csr::from_triplets(3, 3, vec![(0, 0, 1.0), (0, 2, 2.0), (2, 0, 3.0), (2, 1, 4.0)])
+    }
+
+    #[test]
+    fn from_triplets_sorts_and_merges() {
+        let m = Csr::from_triplets(2, 4, vec![(0, 3, 1.0), (0, 1, 2.0), (0, 3, 4.0)]);
+        assert_eq!(m.nnz(), 2);
+        let (cols, vals) = m.row(0);
+        assert_eq!(cols, &[1, 3]);
+        assert_eq!(vals, &[2.0, 5.0]);
+        m.validate().unwrap();
+        assert!(m.is_sorted());
+    }
+
+    #[test]
+    fn identity_and_zero() {
+        let i = Csr::identity(4);
+        i.validate().unwrap();
+        assert_eq!(i.nnz(), 4);
+        let z = Csr::zero(3, 5);
+        z.validate().unwrap();
+        assert_eq!(z.nnz(), 0);
+        assert_eq!(z.sparsity_pct(), 100.0);
+    }
+
+    #[test]
+    fn row_access() {
+        let m = small();
+        assert_eq!(m.row_nnz(0), 2);
+        assert_eq!(m.row_nnz(1), 0);
+        let (c, v) = m.row(2);
+        assert_eq!(c, &[0, 1]);
+        assert_eq!(v, &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = small();
+        let t = m.transpose();
+        t.validate().unwrap();
+        assert_eq!(t.rows, 3);
+        let tt = t.transpose();
+        assert!(m.approx_same(&tt));
+        // check an element: A[0][2]=2 -> T[2][0]=2
+        let (c, v) = t.row(2);
+        assert_eq!(c, &[0]);
+        assert_eq!(v, &[2.0]);
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        let m = small();
+        let x = vec![1.0, 2.0, 3.0];
+        let y = m.spmv(&x);
+        assert_eq!(y, vec![7.0, 0.0, 11.0]);
+    }
+
+    #[test]
+    fn spmm_dense_matches_manual() {
+        let m = small();
+        let b = Dense::from_rows(&[&[1.0, 0.0], &[0.0, 1.0], &[1.0, 1.0]]);
+        let c = m.spmm_dense(&b);
+        assert_eq!(c.row(0), &[3.0, 2.0]);
+        assert_eq!(c.row(1), &[0.0, 0.0]);
+        assert_eq!(c.row(2), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn footprint_paper_sizes() {
+        // Paper Table 6.2: 16384x16384, nnz 254211 =>
+        // row_ptr 16385*4=65540 B, col 254211*4=1016844 B, data 254211*8=2033688 B
+        let rows = 16384;
+        let nnz = 254_211;
+        let m = Csr {
+            rows,
+            cols: rows,
+            row_ptr: {
+                let mut rp = vec![0; rows + 1];
+                for (i, p) in rp.iter_mut().enumerate() {
+                    *p = (i * nnz) / rows;
+                }
+                rp
+            },
+            col_idx: vec![0; nnz],
+            data: vec![1.0; nnz],
+        };
+        let f = m.footprint();
+        assert_eq!(f.row_ptr_bytes, 65_540);
+        assert_eq!(f.col_idx_bytes, 1_016_844);
+        assert_eq!(f.data_bytes, 2_033_688);
+        assert_eq!(f.total_bytes(), 3_116_072); // Table 6.2 total
+    }
+
+    #[test]
+    fn canonicalize_unsorted() {
+        let m = Csr {
+            rows: 1,
+            cols: 4,
+            row_ptr: vec![0, 3],
+            col_idx: vec![2, 0, 2],
+            data: vec![1.0, 5.0, 3.0],
+        };
+        let c = m.canonicalize();
+        assert_eq!(c.nnz(), 2);
+        let (cols, vals) = c.row(0);
+        assert_eq!(cols, &[0, 2]);
+        assert_eq!(vals, &[5.0, 4.0]);
+    }
+
+    #[test]
+    fn prune_zeros_works() {
+        let m = Csr::from_triplets(1, 3, vec![(0, 0, 0.0), (0, 1, 2.0)]);
+        assert_eq!(m.prune_zeros().nnz(), 1);
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let mut m = small();
+        m.col_idx[0] = 99;
+        assert!(m.validate().is_err());
+        let mut m2 = small();
+        m2.row_ptr[1] = 100;
+        assert!(m2.validate().is_err());
+    }
+}

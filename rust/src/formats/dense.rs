@@ -1,0 +1,147 @@
+//! Row-major dense matrix — used as the GCN feature/weight operand and as
+//! the exhaustive oracle for small-matrix tests.
+
+use super::{approx_eq, Value};
+use std::ops::{Index, IndexMut};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dense {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<Value>,
+}
+
+impl Dense {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_rows(rows: &[&[Value]]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Self { rows: r, cols: c, data }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<Value>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[Value] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [Value] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Dense GEMM: `self (m×k) * other (k×n)`. Oracle-grade triple loop.
+    pub fn matmul(&self, other: &Dense) -> Dense {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Dense::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = other.row(k);
+                let orow = out.row_mut(i);
+                for (o, b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn approx_same(&self, other: &Dense) -> bool {
+        self.rows == other.rows
+            && self.cols == other.cols
+            && self
+                .data
+                .iter()
+                .zip(&other.data)
+                .all(|(a, b)| approx_eq(*a, *b))
+    }
+
+    /// Count of non-zeros (for converting back to sparse stats).
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|v| **v != 0.0).count()
+    }
+
+    /// ReLU elementwise (GCN activation).
+    pub fn relu(&self) -> Dense {
+        Dense {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|v| v.max(0.0)).collect(),
+        }
+    }
+
+    /// Frobenius norm (integration-test checksum).
+    pub fn frob(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+}
+
+impl Index<(usize, usize)> for Dense {
+    type Output = Value;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &Value {
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Dense {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut Value {
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Dense::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Dense::from_rows(&[&[1.0, 1.0], &[1.0, 1.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn indexing() {
+        let mut d = Dense::zeros(2, 3);
+        d[(1, 2)] = 5.0;
+        assert_eq!(d[(1, 2)], 5.0);
+        assert_eq!(d.row(1), &[0.0, 0.0, 5.0]);
+        assert_eq!(d.nnz(), 1);
+    }
+
+    #[test]
+    fn relu_and_frob() {
+        let d = Dense::from_rows(&[&[-1.0, 2.0], &[3.0, -4.0]]);
+        assert_eq!(d.relu().data, vec![0.0, 2.0, 3.0, 0.0]);
+        assert!((d.frob() - (30.0f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_rejected() {
+        Dense::from_rows(&[&[1.0], &[1.0, 2.0]]);
+    }
+}

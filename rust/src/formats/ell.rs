@@ -1,0 +1,177 @@
+//! ELLPACK (ELL) storage — the padded fixed-width-per-row format the
+//! thesis lists among standard sparse formats (§3.3) and the layout the
+//! L1 Pallas kernel consumes (`python/compile/kernels/smash_spmm.py`).
+//!
+//! Every row holds exactly `width` (value, column) slots; short rows are
+//! padded with `(0.0, row_index)` so a padded slot gathers the row's own
+//! entry of the dense operand and contributes nothing (value 0) — the
+//! convention the AOT kernel contract expects.
+
+use super::{Csr, Dense, Value};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Ell {
+    pub rows: usize,
+    pub cols: usize,
+    /// Slots per row.
+    pub width: usize,
+    /// Row-major `rows × width` values (zero-padded).
+    pub vals: Vec<f32>,
+    /// Row-major `rows × width` column indices (padding = row index).
+    pub idx: Vec<i32>,
+}
+
+/// Why an ELL conversion can fail.
+#[derive(Debug, PartialEq, Eq)]
+pub enum EllError {
+    /// A row has more non-zeros than the requested width.
+    RowTooWide { row: usize, nnz: usize, width: usize },
+}
+
+impl std::fmt::Display for EllError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EllError::RowTooWide { row, nnz, width } => {
+                write!(f, "row {row} has {nnz} nnz > ELL width {width}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EllError {}
+
+impl Ell {
+    /// Convert CSR to ELL with the given width; errors if any row exceeds
+    /// it (use [`Ell::width_for`] to pick a lossless width).
+    pub fn from_csr(m: &Csr, width: usize) -> Result<Self, EllError> {
+        let mut vals = vec![0.0f32; m.rows * width];
+        let mut idx = vec![0i32; m.rows * width];
+        for r in 0..m.rows {
+            let (cols, row_vals) = m.row(r);
+            if cols.len() > width {
+                return Err(EllError::RowTooWide {
+                    row: r,
+                    nnz: cols.len(),
+                    width,
+                });
+            }
+            for (slot, (c, v)) in cols.iter().zip(row_vals).enumerate() {
+                vals[r * width + slot] = *v as f32;
+                idx[r * width + slot] = *c as i32;
+            }
+            for slot in cols.len()..width {
+                idx[r * width + slot] = r.min(m.cols - 1) as i32;
+            }
+        }
+        Ok(Self {
+            rows: m.rows,
+            cols: m.cols,
+            width,
+            vals,
+            idx,
+        })
+    }
+
+    /// Smallest lossless width for a matrix (max row nnz).
+    pub fn width_for(m: &Csr) -> usize {
+        (0..m.rows).map(|r| m.row_nnz(r)).max().unwrap_or(0).max(1)
+    }
+
+    /// Back to CSR (drops padding).
+    pub fn to_csr(&self) -> Csr {
+        let mut triplets = Vec::new();
+        for r in 0..self.rows {
+            for s in 0..self.width {
+                let v = self.vals[r * self.width + s];
+                if v != 0.0 {
+                    triplets.push((r, self.idx[r * self.width + s] as usize, v as Value));
+                }
+            }
+        }
+        Csr::from_triplets(self.rows, self.cols, triplets)
+    }
+
+    /// ELL SpMM against a dense operand — the rust mirror of the Pallas
+    /// kernel's semantics, used to cross-check artifacts.
+    pub fn spmm(&self, h: &Dense) -> Dense {
+        assert_eq!(self.cols, h.rows);
+        let mut out = Dense::zeros(self.rows, h.cols);
+        for r in 0..self.rows {
+            for s in 0..self.width {
+                let v = self.vals[r * self.width + s] as Value;
+                if v == 0.0 {
+                    continue;
+                }
+                let src = h.row(self.idx[r * self.width + s] as usize);
+                let dst = out.row_mut(r);
+                for (o, x) in dst.iter_mut().zip(src) {
+                    *o += v * x;
+                }
+            }
+        }
+        out
+    }
+
+    /// Padding overhead: padded slots / total slots.
+    pub fn padding_ratio(&self) -> f64 {
+        let total = (self.rows * self.width) as f64;
+        let useful = self.vals.iter().filter(|v| **v != 0.0).count() as f64;
+        if total == 0.0 {
+            0.0
+        } else {
+            1.0 - useful / total
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::erdos_renyi;
+
+    #[test]
+    fn roundtrip() {
+        let m = erdos_renyi(32, 120, 1);
+        let w = Ell::width_for(&m);
+        let e = Ell::from_csr(&m, w).unwrap();
+        assert!(e.to_csr().approx_same(&m.prune_zeros()));
+    }
+
+    #[test]
+    fn too_narrow_errors() {
+        let m = Csr::from_triplets(1, 4, (0..4).map(|c| (0, c, 1.0)));
+        let err = Ell::from_csr(&m, 2).unwrap_err();
+        assert_eq!(
+            err,
+            EllError::RowTooWide {
+                row: 0,
+                nnz: 4,
+                width: 2
+            }
+        );
+    }
+
+    #[test]
+    fn spmm_matches_csr_spmm() {
+        let m = erdos_renyi(24, 80, 3);
+        let e = Ell::from_csr(&m, Ell::width_for(&m)).unwrap();
+        let h = Dense::from_vec(
+            24,
+            5,
+            (0..24 * 5).map(|i| (i % 7) as Value - 3.0).collect(),
+        );
+        let a = e.spmm(&h);
+        let b = m.spmm_dense(&h);
+        // f32 values in ELL vs f64 in CSR: loose tolerance
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn padding_ratio_sane() {
+        let m = Csr::identity(8);
+        let e = Ell::from_csr(&m, 4).unwrap();
+        assert!((e.padding_ratio() - 0.75).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,43 @@
+//! Sparse-matrix storage formats (thesis §2.6): CSR, CSC, COO, dense,
+//! conversions between them, Matrix-Market I/O, and dataset statistics
+//! (degree-of-sparsity, Table 1.1-style characterization).
+
+mod coo;
+mod csc;
+mod csr;
+mod dense;
+mod ell;
+pub mod mm;
+pub mod stats;
+
+pub use coo::Coo;
+pub use csc::Csc;
+pub use csr::{Csr, CsrFootprint};
+pub use dense::Dense;
+pub use ell::{Ell, EllError};
+
+/// Element value type used throughout (the thesis stores doubles —
+/// Table 6.2 "Double 8 Bytes").
+pub type Value = f64;
+
+/// Column/row index type (thesis Table 6.2: "INT 4 Bytes").
+pub type Index = u32;
+
+/// Tolerance-based float comparison for oracle checks.
+#[inline]
+pub fn approx_eq(a: Value, b: Value) -> bool {
+    let diff = (a - b).abs();
+    diff <= 1e-9 + 1e-6 * a.abs().max(b.abs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn approx_eq_behaviour() {
+        assert!(approx_eq(1.0, 1.0 + 1e-12));
+        assert!(approx_eq(1e9, 1e9 * (1.0 + 1e-8)));
+        assert!(!approx_eq(1.0, 1.001));
+    }
+}

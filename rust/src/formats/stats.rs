@@ -1,0 +1,150 @@
+//! Dataset characterization — reproduces the Table 1.1 columns (vertices,
+//! edges, degree of sparsity) and the row-imbalance statistics that motivate
+//! tokenization (§5.2).
+
+use super::Csr;
+
+/// Summary statistics of a sparse matrix / graph adjacency.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatrixStats {
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+    /// Degree of sparsity in percent — Table 1.1's metric.
+    pub sparsity_pct: f64,
+    pub row_nnz_min: usize,
+    pub row_nnz_max: usize,
+    pub row_nnz_mean: f64,
+    /// Standard deviation of per-row nnz.
+    pub row_nnz_std: f64,
+    /// Gini coefficient of per-row nnz — 0 = perfectly balanced rows,
+    /// →1 = extreme skew. Used to quantify load imbalance.
+    pub row_gini: f64,
+    /// Fraction of rows that are empty.
+    pub empty_rows_frac: f64,
+}
+
+impl MatrixStats {
+    pub fn of(m: &Csr) -> Self {
+        let nnzs = m.row_nnz_vec();
+        let n = nnzs.len().max(1);
+        let total: usize = nnzs.iter().sum();
+        let mean = total as f64 / n as f64;
+        let var = nnzs
+            .iter()
+            .map(|&x| {
+                let d = x as f64 - mean;
+                d * d
+            })
+            .sum::<f64>()
+            / n as f64;
+        let empty = nnzs.iter().filter(|&&x| x == 0).count();
+        Self {
+            rows: m.rows,
+            cols: m.cols,
+            nnz: m.nnz(),
+            sparsity_pct: m.sparsity_pct(),
+            row_nnz_min: nnzs.iter().copied().min().unwrap_or(0),
+            row_nnz_max: nnzs.iter().copied().max().unwrap_or(0),
+            row_nnz_mean: mean,
+            row_nnz_std: var.sqrt(),
+            row_gini: gini(&nnzs),
+            empty_rows_frac: empty as f64 / n as f64,
+        }
+    }
+}
+
+/// Gini coefficient of a non-negative integer distribution.
+pub fn gini(xs: &[usize]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut sorted: Vec<f64> = xs.iter().map(|&x| x as f64).collect();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len() as f64;
+    let sum: f64 = sorted.iter().sum();
+    if sum == 0.0 {
+        return 0.0;
+    }
+    let weighted: f64 = sorted
+        .iter()
+        .enumerate()
+        .map(|(i, x)| (i as f64 + 1.0) * x)
+        .sum();
+    (2.0 * weighted) / (n * sum) - (n + 1.0) / n
+}
+
+/// Histogram of per-row nnz with log2 buckets: bucket i covers
+/// [2^i, 2^(i+1)) with bucket 0 covering {0,1}. Returns (bucket_ceiling,
+/// count) pairs — the data behind power-law sparsity plots.
+pub fn row_nnz_histogram(m: &Csr) -> Vec<(usize, usize)> {
+    let mut buckets: Vec<usize> = Vec::new();
+    for r in 0..m.rows {
+        let x = m.row_nnz(r);
+        let b = if x <= 1 { 0 } else { crate::util::ilog2_floor(x as u64) as usize };
+        if b >= buckets.len() {
+            buckets.resize(b + 1, 0);
+        }
+        buckets[b] += 1;
+    }
+    buckets
+        .into_iter()
+        .enumerate()
+        .map(|(i, c)| (1usize << (i + 1), c))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Csr;
+
+    #[test]
+    fn stats_balanced() {
+        let m = Csr::identity(10);
+        let s = MatrixStats::of(&m);
+        assert_eq!(s.nnz, 10);
+        assert_eq!(s.row_nnz_min, 1);
+        assert_eq!(s.row_nnz_max, 1);
+        assert!((s.row_gini).abs() < 1e-9);
+        assert_eq!(s.empty_rows_frac, 0.0);
+        assert!((s.sparsity_pct - 90.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stats_skewed() {
+        // one dense-ish row, many empties -> high gini
+        let mut tr = vec![];
+        for c in 0..50 {
+            tr.push((0usize, c as usize, 1.0));
+        }
+        let m = Csr::from_triplets(50, 50, tr);
+        let s = MatrixStats::of(&m);
+        assert!(s.row_gini > 0.9, "gini={}", s.row_gini);
+        assert!(s.empty_rows_frac > 0.9);
+    }
+
+    #[test]
+    fn gini_edge_cases() {
+        assert_eq!(gini(&[]), 0.0);
+        assert_eq!(gini(&[0, 0, 0]), 0.0);
+        assert!(gini(&[5, 5, 5, 5]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_buckets() {
+        // rows with nnz 0,1,2,3,8
+        let mut tr = vec![];
+        tr.extend((0..1).map(|c| (1usize, c, 1.0)));
+        tr.extend((0..2).map(|c| (2usize, c, 1.0)));
+        tr.extend((0..3).map(|c| (3usize, c, 1.0)));
+        tr.extend((0..8).map(|c| (4usize, c, 1.0)));
+        let m = Csr::from_triplets(5, 16, tr);
+        let h = row_nnz_histogram(&m);
+        // bucket 0 (<2): rows 0,1 => 2; bucket 1 ([2,4)): rows 2,3 => 2;
+        // bucket 3 ([8,16)): row 4 => 1
+        assert_eq!(h[0], (2, 2));
+        assert_eq!(h[1], (4, 2));
+        assert_eq!(h[3], (16, 1));
+    }
+}

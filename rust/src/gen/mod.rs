@@ -1,0 +1,14 @@
+//! Synthetic sparse-matrix / graph generators.
+//!
+//! The thesis evaluates on R-MAT 16K×16K matrices (§6.1, Chakrabarti et
+//! al.); we implement R-MAT plus Erdős–Rényi, banded, and diagonal
+//! generators for baselines, ablations, and edge-case tests, and synthetic
+//! analogs of the Table 1.1 graph datasets.
+
+mod rmat;
+mod synth;
+
+pub use rmat::{rmat, RmatParams};
+pub use synth::{
+    banded, dataset_analog, diagonal_noise, erdos_renyi, uniform_random, DatasetSpec, TABLE_1_1,
+};

@@ -1,0 +1,44 @@
+//! The SMASH kernels (thesis Ch. 5) — the paper's contribution, executed
+//! on the [`crate::sim`] PIUMA model.
+//!
+//! * [`window`] — §5.1.1 window distribution (FMA counting, SPAD sizing).
+//! * [`hashtable`] — the tag/data (V1/V2) and tag/offset (V3) tables.
+//! * [`smash`] — the three-phase driver; [`run_smash`] is the entry point.
+
+pub mod hashtable;
+pub mod smash;
+pub mod spmv;
+pub mod window;
+
+pub use hashtable::{hash_tag, insertion_sort_cost, OffsetTable, TableStats, TagTable, EMPTY};
+pub use smash::{run_smash, RunReport, SmashRun};
+pub use spmv::{pagerank, run_spmv, SpmvReport};
+pub use window::{plan_windows, Window, WindowPlan};
+
+use crate::config::{KernelConfig, SimConfig};
+use crate::formats::Csr;
+
+/// Convenience: run all three SMASH versions on the same inputs, returning
+/// reports in version order (the Table 6.4–6.7 comparison harness).
+pub fn run_all_versions(a: &Csr, b: &Csr, scfg: &SimConfig) -> Vec<RunReport> {
+    [KernelConfig::v1(), KernelConfig::v2(), KernelConfig::v3()]
+        .iter()
+        .map(|k| run_smash(a, b, k, scfg).report)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{rmat, RmatParams};
+
+    #[test]
+    fn run_all_versions_ordering() {
+        let a = rmat(&RmatParams::new(8, 2000, 31));
+        let b = rmat(&RmatParams::new(8, 2000, 32));
+        let reports = run_all_versions(&a, &b, &SimConfig::test_tiny());
+        assert_eq!(reports.len(), 3);
+        assert_eq!(reports[0].version, "SMASH-V1");
+        assert_eq!(reports[2].version, "SMASH-V3");
+    }
+}

@@ -1,0 +1,778 @@
+//! The SMASH kernel driver: window distribution → hashing → write-back
+//! (Ch. 5), executed functionally on the [`crate::sim`] PIUMA model with
+//! full timing/metric capture.
+//!
+//! One driver covers all three versions; [`crate::config::KernelConfig`]
+//! selects the §5.1/§5.2/§5.3 behaviours:
+//!
+//! | knob            | V1              | V2           | V3                 |
+//! |-----------------|-----------------|--------------|--------------------|
+//! | scheduling      | static RR       | tokens (×2)  | tokens (×2)        |
+//! | hash bits       | high (sorted)   | low          | low                |
+//! | table placement | SPAD            | SPAD         | DRAM + dense SPAD  |
+//! | write-back      | scan+sort+store | scan+store   | DMA copy + scatter |
+
+use super::hashtable::{insertion_sort_cost, OffsetTable, TableStats, TagTable};
+use super::window::{plan_windows, WindowPlan, BIN_BYTES, V3_ENTRY_BYTES};
+use crate::config::{HashBits, KernelConfig, Scheduling, SimConfig, TablePlacement};
+use crate::formats::{Csr, Value};
+use crate::sim::{run_dynamic, run_static, DmaTicket, PhaseKind, Region, Sim};
+use crate::util::ilog2_ceil;
+
+/// Everything measured during one SMASH run (feeds Tables 6.4–6.7 and
+/// Figs 6.1–6.4).
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub version: &'static str,
+    /// Makespan in simulated cycles / milliseconds.
+    pub cycles: u64,
+    pub ms: f64,
+    pub instructions: u64,
+    /// Aggregate IPC (Eq. 6.3).
+    pub ipc: f64,
+    /// L1 data-cache hit rate, percent (Table 6.5).
+    pub l1_hit_pct: f64,
+    /// DRAM bandwidth utilization [0,1] and GB/s (Table 6.4).
+    pub dram_util: f64,
+    pub dram_gbs: f64,
+    pub dram_bytes: u64,
+    pub windows: usize,
+    /// Aggregated hashtable statistics.
+    pub table: TableStats,
+    /// SPAD atomic conflict rate.
+    pub spad_conflict_rate: f64,
+    /// Average thread utilization [0,1] (Fig 6.3).
+    pub avg_utilization: f64,
+    /// Utilization histogram, 10 bins over [0,1] (Fig 6.4).
+    pub util_histogram: Vec<usize>,
+    /// Cycle spans of the first window's hashing phase (Figs 6.1/6.2 use
+    /// per-thread timelines over this span; §6.5 quotes its duration).
+    pub first_window_ms: f64,
+    /// DMA descriptor count and bytes (V3).
+    pub dma_descriptors: u64,
+    pub dma_bytes: u64,
+    /// Busy thread-cycles per phase (summed over threads).
+    pub cyc_distribute: u64,
+    pub cyc_hash: u64,
+    pub cyc_writeback: u64,
+    /// Idle thread-cycles by cause.
+    pub cyc_barrier_idle: u64,
+    pub cyc_dma_idle: u64,
+}
+
+/// Result of a run: the product (canonicalized CSR) plus the report and
+/// the simulator (retaining metrics/timelines for figure generation).
+pub struct SmashRun {
+    pub c: Csr,
+    pub report: RunReport,
+    pub sim: Sim,
+}
+
+impl SmashRun {
+    /// Per-thread (busy, idle) cycles — debugging aid for imbalance.
+    pub fn thread_breakdown(&self) -> Vec<(u64, u64)> {
+        (0..self.sim.threads())
+            .map(|t| {
+                (
+                    self.sim.metrics.busy_cycles(t),
+                    self.sim.metrics.idle_cycles(t),
+                )
+            })
+            .collect()
+    }
+}
+
+/// Execute `C = A · B` with the given SMASH version on a simulated block.
+pub fn run_smash(a: &Csr, b: &Csr, kcfg: &KernelConfig, scfg: &SimConfig) -> SmashRun {
+    assert_eq!(a.cols, b.rows, "dimension mismatch");
+    let plan = plan_windows(a, b, kcfg, scfg);
+    let mut sim = Sim::new(scfg.clone());
+    let mut k = KernelState::new(a, b, kcfg, &plan, &mut sim);
+
+    // ---- Phase 0: FMA counting over all of A (Gustavson step 1, §5.1.1).
+    k.simulate_fma_counting(&mut sim);
+    sim.barrier();
+
+    let mut first_window_span = None;
+    let mut pending_dma: Vec<DmaTicket> = Vec::new();
+
+    for w in 0..plan.windows.len() {
+        // V3: the previous window's DMA write-back must finish before the
+        // SPAD dense arrays are reused (§5.3 — the engine ran concurrently
+        // with the *distribution* of this window).
+        k.simulate_distribution(&mut sim, w);
+        for t in pending_dma.drain(..) {
+            sim.dma_fence(0, t);
+        }
+        sim.barrier();
+
+        let hash_start = sim.elapsed_cycles();
+        k.run_hash_phase(&mut sim, w);
+        sim.barrier();
+        if first_window_span.is_none() {
+            first_window_span = Some((hash_start, sim.elapsed_cycles()));
+        }
+
+        pending_dma = k.run_writeback_phase(&mut sim, w);
+        sim.barrier();
+    }
+    for t in pending_dma.drain(..) {
+        sim.dma_fence(0, t);
+    }
+    sim.barrier();
+
+    let c = Csr::from_triplets(a.rows, b.cols, k.triplets);
+    let cycles = sim.elapsed_cycles();
+    let cache = sim.cache_stats();
+    let horizon = cycles;
+    let (fw_start, fw_end) = first_window_span.unwrap_or((0, 0));
+    let report = RunReport {
+        version: kcfg.name(),
+        cycles,
+        ms: scfg.cycles_to_ms(cycles),
+        instructions: sim.total_instructions(),
+        ipc: sim.aggregate_ipc(),
+        l1_hit_pct: cache.hit_rate_pct(),
+        dram_util: sim.dram_utilization(),
+        dram_gbs: sim.dram_gbs(),
+        dram_bytes: sim.dram.total_bytes(),
+        windows: plan.windows.len(),
+        table: k.table_stats,
+        spad_conflict_rate: sim.spad.conflict_rate(),
+        avg_utilization: sim.metrics.average_utilization(horizon),
+        util_histogram: sim.metrics.utilization_histogram(horizon, 10),
+        first_window_ms: scfg.cycles_to_ms(fw_end.saturating_sub(fw_start)),
+        dma_descriptors: sim.dma.descriptors,
+        dma_bytes: sim.dma.bytes_moved,
+        cyc_distribute: sim.metrics.phase_cycles(PhaseKind::Distribute),
+        cyc_hash: sim.metrics.phase_cycles(PhaseKind::Hash),
+        cyc_writeback: sim.metrics.phase_cycles(PhaseKind::WriteBack),
+        cyc_barrier_idle: sim.metrics.phase_cycles(PhaseKind::Barrier),
+        cyc_dma_idle: sim.metrics.phase_cycles(PhaseKind::DmaWait),
+    };
+    SmashRun { c, report, sim }
+}
+
+/// Simulated-address layout + functional state shared across phases.
+struct KernelState<'m> {
+    a: &'m Csr,
+    b: &'m Csr,
+    kcfg: KernelConfig,
+    plan: &'m WindowPlan,
+    // simulated base addresses
+    a_rp: u64,
+    a_ci: u64,
+    a_dat: u64,
+    b_rp: u64,
+    b_ci: u64,
+    b_dat: u64,
+    c_base: u64,
+    ht_dram: u64,
+    // tag layout
+    col_bits: u32,
+    // functional output
+    triplets: Vec<(usize, usize, Value)>,
+    table_stats: TableStats,
+    // dense-row accumulator: (row, col) -> value, drained per window
+    // (functional state only; SPAD costs are charged in the work body)
+    dense_map: crate::util::FastMap<(u32, u32), Value>,
+    // window-scoped scratch moved between hash and write-back phases
+    pending_spad_table: Option<(TagTable, u64)>,
+    pending_v3_entries: usize,
+}
+
+impl<'m> KernelState<'m> {
+    fn new(
+        a: &'m Csr,
+        b: &'m Csr,
+        kcfg: &KernelConfig,
+        plan: &'m WindowPlan,
+        sim: &mut Sim,
+    ) -> Self {
+        let a_rp = sim.alloc_dram((a.rows as u64 + 1) * 4, Region::MatrixA);
+        let a_ci = sim.alloc_dram(a.nnz() as u64 * 4, Region::MatrixA);
+        let a_dat = sim.alloc_dram(a.nnz() as u64 * 8, Region::MatrixA);
+        let b_rp = sim.alloc_dram((b.rows as u64 + 1) * 4, Region::MatrixB);
+        let b_ci = sim.alloc_dram(b.nnz() as u64 * 4, Region::MatrixB);
+        let b_dat = sim.alloc_dram(b.nnz() as u64 * 8, Region::MatrixB);
+        let out_nnz: usize = plan.row_nnz.iter().sum();
+        let c_base = sim.alloc_dram((a.rows as u64 + 1) * 4 + out_nnz as u64 * 12, Region::MatrixC);
+        // V3 DRAM hashtable region: largest window's bins × 16 B (Fig 5.6).
+        let max_bins = plan.windows.iter().map(|w| w.bins).max().unwrap_or(64);
+        let ht_dram = sim.alloc_dram((max_bins * 16) as u64, Region::HashTable);
+        Self {
+            a,
+            b,
+            kcfg: kcfg.clone(),
+            plan,
+            a_rp,
+            a_ci,
+            a_dat,
+            b_rp,
+            b_ci,
+            b_dat,
+            c_base,
+            ht_dram,
+            col_bits: ilog2_ceil(b.cols as u64).max(1),
+            triplets: Vec::with_capacity(out_nnz),
+            table_stats: TableStats::default(),
+            dense_map: crate::util::FastMap::default(),
+            pending_spad_table: None,
+            pending_v3_entries: 0,
+        }
+    }
+
+    /// Gustavson step 1: count FMAs per row — every thread walks a slice
+    /// of A's row pointers and the referenced B row extents.
+    fn simulate_fma_counting(&mut self, sim: &mut Sim) {
+        let a = self.a;
+        let (a_rp, a_ci, b_rp) = (self.a_rp, self.a_ci, self.b_rp);
+        run_static(sim, a.rows, PhaseKind::Distribute, |s, tid, row| {
+            s.load(tid, a_rp + row as u64 * 4, 8); // row_ptr[r], row_ptr[r+1]
+            let (cols, _) = a.row(row);
+            for &k in cols {
+                s.load(tid, a_ci + k as u64 * 4, 4);
+                s.load(tid, b_rp + k as u64 * 4, 8);
+                s.alu(tid, 2); // subtract + accumulate
+            }
+            s.alu(tid, 2); // dense/sparse threshold decision (§5.1.1)
+        });
+    }
+
+    /// Window distribution (§5.1.1): package the window's slice of A and
+    /// ship it to the block's staging DRAM via the global address space.
+    fn simulate_distribution(&mut self, sim: &mut Sim, w: usize) {
+        let win = &self.plan.windows[w];
+        let a = self.a;
+        let (a_rp, a_ci, a_dat) = (self.a_rp, self.a_ci, self.a_dat);
+        let rows = win.rows();
+        let row_begin = win.row_begin;
+        run_static(sim, rows, PhaseKind::Distribute, |s, tid, r| {
+            let row = row_begin + r;
+            s.load(tid, a_rp + row as u64 * 4, 8);
+            let (cols, _) = a.row(row);
+            let start = a.row_ptr[row] as u64;
+            // stream the row's indices + data; staging store is posted
+            s.load(tid, a_ci + start * 4, cols.len() as u64 * 4);
+            s.load(tid, a_dat + start * 8, cols.len() as u64 * 8);
+            s.alu(tid, cols.len() as u64 / 4 + 1); // packet assembly
+        });
+    }
+
+    /// Hashing phase (§5.1.2 / Algorithms 2–4).
+    fn run_hash_phase(&mut self, sim: &mut Sim, w: usize) {
+        let win = self.plan.windows[w].clone();
+        let rows = win.rows();
+        if rows == 0 {
+            return;
+        }
+        sim.reset_spad();
+
+        let tag_bits = ilog2_ceil(rows as u64).max(1) + self.col_bits;
+        match self.kcfg.placement {
+            TablePlacement::Spad => {
+                let spad_table = sim.alloc_spad((win.bins * BIN_BYTES) as u64);
+                let mut table = TagTable::new(win.bins, tag_bits, self.kcfg.hash_bits);
+                let remote = self.kcfg.remote_table_blocks;
+                self.hash_into(sim, w, HashTarget::Spad(&mut table, spad_table, remote));
+                self.drain_tag_table(&table, win.row_begin);
+                self.table_stats_merge(table.stats);
+                // stash the table for the write-back phase
+                self.pending_spad_table = Some((table, spad_table));
+            }
+            TablePlacement::DramFragmented => {
+                // same per-row upper bound the planner used, so the arrays
+                // always fit the budget the plan was built against
+                let entries_cap: usize = (win.row_begin..win.row_end)
+                    .map(|r| (self.plan.row_flops[r] as usize).min(self.b.cols).max(1))
+                    .sum::<usize>()
+                    .max(1);
+                let spad_arrays = sim.alloc_spad((entries_cap * V3_ENTRY_BYTES) as u64);
+                let mut table = OffsetTable::new(win.bins, tag_bits, win.out_nnz);
+                self.hash_into(sim, w, HashTarget::Dram(&mut table, spad_arrays));
+                self.drain_offset_table(&table, win.row_begin);
+                self.table_stats_merge(table.stats());
+                self.pending_v3_entries = table.len();
+            }
+        }
+    }
+
+    /// Shared inner loop of the hashing phase. Dispatch per the version's
+    /// scheduling mode; each work item covers one row (V1) or half a row
+    /// (V2/V3 even/odd tokens, Algorithms 3/4).
+    fn hash_into(&mut self, sim: &mut Sim, w: usize, mut target: HashTarget<'_>) {
+        let win = self.plan.windows[w].clone();
+        let rows = win.rows();
+        let a = self.a;
+        let b = self.b;
+        let (a_ci, a_dat, b_rp, b_ci, b_dat) = (self.a_ci, self.a_dat, self.b_rp, self.b_ci, self.b_dat);
+        let col_bits = self.col_bits;
+        let dense_rows = &self.plan.dense_rows;
+        let dense_map = &mut self.dense_map;
+        let row_begin = win.row_begin;
+
+        // V3's private local array (§5.3 modification 1): partial products
+        // of one work item are merged thread-locally before touching the
+        // DRAM tag-offset table, collapsing the per-product atomics into
+        // one posted op per *distinct* tag.
+        let local_merge = matches!(target, HashTarget::Dram(..));
+        let mut local: Vec<(u64, Value)> = Vec::new();
+
+        // Work body for (row, part, parts): hash the `part`-th slice of the
+        // row's *product space*. Tokens split within B-rows, exactly like
+        // the even/odd sections of Algorithms 3/4 — a single heavy B-row
+        // cannot pin one thread.
+        let row_flops = &self.plan.row_flops;
+        let mut body = |s: &mut Sim, tid: usize, row_local: usize, part: usize, parts: usize| {
+            let row = row_begin + row_local;
+            let (acols, avals) = a.row(row);
+            let a_start = a.row_ptr[row];
+            let is_dense = dense_rows[row];
+            let total = row_flops[row] as usize;
+            let chunk = total.div_ceil(parts.max(1)).max(1);
+            let p_lo = (part * chunk).min(total);
+            let p_hi = ((part + 1) * chunk).min(total);
+            // Token start position comes from the shared column-pointer
+            // copies (Algorithm 1's A_col_ptr_copy cursors): constant-time
+            // setup, no walk charge.
+            s.alu(tid, 2);
+            let mut off = 0usize; // running product offset
+            for (idx, (&kc, &av)) in acols.iter().zip(avals).enumerate() {
+                if off >= p_hi {
+                    break;
+                }
+                let k = kc as usize;
+                let bn = b.row_nnz(k);
+                let (lo, hi) = (p_lo.max(off), p_hi.min(off + bn));
+                if lo >= hi {
+                    off += bn;
+                    continue;
+                }
+                // load A element (col idx + value) + B row extent
+                s.load(tid, a_ci + (a_start + idx) as u64 * 4, 4);
+                s.load(tid, a_dat + (a_start + idx) as u64 * 8, 8);
+                s.load(tid, b_rp + k as u64 * 4, 8);
+                let (bcols, bvals) = b.row(k);
+                let b_start = b.row_ptr[k];
+                for bi in (lo - off)..(hi - off) {
+                    let j = bcols[bi];
+                    let bv = bvals[bi];
+                    s.load(tid, b_ci + (b_start + bi) as u64 * 4, 4);
+                    s.load(tid, b_dat + (b_start + bi) as u64 * 8, 8);
+                    let prod = av * bv;
+                    s.alu(tid, 2); // FMA + tag assembly
+                    if is_dense {
+                        // §5.1.1 dense-row path: plain SPAD accumulate.
+                        *dense_map.entry((row as u32, j)).or_insert(0.0) += prod;
+                        s.spad_access(tid, j as u64 * 8, 8);
+                        continue;
+                    }
+                    let tag = ((row_local as u64) << col_bits) | j as u64;
+                    if local_merge {
+                        // private dense array append (SPAD)
+                        local.push((tag, prod));
+                        s.spad_access(tid, (local.len() as u64 % 4096) * 8, 8);
+                    } else {
+                        target.upsert(s, tid, tag, prod);
+                    }
+                }
+                off += bn;
+            }
+            if local_merge && !local.is_empty() {
+                // merge the private array (sorted run-merge, deterministic),
+                // then one global upsert per distinct tag
+                local.sort_unstable_by_key(|(t, _)| *t);
+                s.alu(tid, local.len() as u64); // local merge pass
+                let mut i = 0;
+                while i < local.len() {
+                    let tag = local[i].0;
+                    let mut acc = 0.0;
+                    while i < local.len() && local[i].0 == tag {
+                        acc += local[i].1;
+                        i += 1;
+                    }
+                    target.upsert(s, tid, tag, acc);
+                }
+                local.clear();
+            }
+            // Dense-row completion cost. Each token flushes its share of
+            // the accumulator's column range, so the drain cost is spread
+            // over the row's tokens, not pinned on one thread. (The
+            // functional drain happens after the dispatch — execution is
+            // time-ordered, not program-ordered.)
+            if is_dense {
+                let width = (row_flops[row] as usize).min(b.cols).max(1);
+                let share = width.div_ceil(parts.max(1)) as u64;
+                s.alu(tid, share + 2);
+                s.spad_access(tid, (part as u64) * 64, share * 8);
+            }
+        };
+
+        match self.kcfg.scheduling {
+            Scheduling::StaticRoundRobin => {
+                // §5.1.2: one row per thread, round-robin. Rows flagged
+                // *dense* in the window-distribution phase (§5.1.1) are the
+                // exception: their FMA count was measured precisely so they
+                // could be striped across all threads of the block — only
+                // sparse rows suffer the static imbalance.
+                let threads = sim.threads();
+                let mut items: Vec<(u32, u16, u16)> = Vec::with_capacity(rows);
+                for r in 0..rows {
+                    if dense_rows[row_begin + r] {
+                        for p in 0..threads as u16 {
+                            items.push((r as u32, p, threads as u16));
+                        }
+                    } else {
+                        items.push((r as u32, 0, 1));
+                    }
+                }
+                run_static(sim, items.len(), PhaseKind::Hash, |s, tid, item| {
+                    let (r, p, parts) = items[item];
+                    body(s, tid, r as usize, p as usize, parts as usize);
+                });
+            }
+            Scheduling::Tokenized => {
+                // §5.2 issues two tokens per row (even/odd halves). Rows
+                // whose FMA count dwarfs the token granule get extra tokens
+                // (k-way interleave), otherwise one power-law row pins two
+                // threads while the rest of the block idles at the barrier
+                // — the near-100% utilization of Fig 6.2 needs this.
+                let base = self.kcfg.tokens_per_row.max(1);
+                // Token granule: a few hundred tokens per thread per window
+                // so the dynamic tail (≈ half a token) is a tiny fraction
+                // of the phase span.
+                let granule = (win.flops / (sim.threads() as u64 * 384)).max(192);
+                let mut tokens: Vec<(u32, u16, u16)> = Vec::with_capacity(rows * base);
+                for r in 0..rows {
+                    let f = self.plan.row_flops[row_begin + r];
+                    let parts = (f / granule)
+                        .clamp(base as u64, 64 * sim.threads() as u64)
+                        as u16;
+                    for p in 0..parts {
+                        tokens.push((r as u32, p, parts));
+                    }
+                }
+                let debug_tokens = std::env::var("SMASH_DEBUG_TOKENS").is_ok();
+                run_dynamic(sim, tokens.len(), PhaseKind::Hash, |s, tid, item| {
+                    let (r, p, parts) = tokens[item];
+                    let t0 = s.now(tid);
+                    body(s, tid, r as usize, p as usize, parts as usize);
+                    if debug_tokens && s.now(tid) - t0 > 1_000_000 {
+                        eprintln!(
+                            "[token] row_local={r} part={p}/{parts} cost={} flops={}",
+                            s.now(tid) - t0,
+                            row_flops[row_begin + r as usize]
+                        );
+                    }
+                });
+            }
+        }
+
+        // Functional drain of the dense-row accumulators of this window
+        // (cost already charged per token part above). No sort needed:
+        // keys are unique and `Csr::from_triplets` canonicalizes; the
+        // hasher is deterministic so iteration order is too.
+        if !self.dense_map.is_empty() {
+            for ((r, j), v) in self.dense_map.drain() {
+                self.triplets.push((r as usize, j as usize, v));
+            }
+        }
+    }
+
+    /// Write-back phase (§5.1.3 / Algorithm 5 / §5.3). Returns pending DMA
+    /// tickets (V3) to fence before the SPAD is reused.
+    fn run_writeback_phase(&mut self, sim: &mut Sim, w: usize) -> Vec<DmaTicket> {
+        let win = self.plan.windows[w].clone();
+        match self.kcfg.placement {
+            TablePlacement::Spad => {
+                let (table, spad_base) = self
+                    .pending_spad_table
+                    .take()
+                    .expect("hash phase must run first");
+                let entries = table.drain();
+                // V1 sorts the semi-sorted table (insertion-sort variant);
+                // V2's low-bit table is written back unsorted (§5.2).
+                let sort_shifts = if self.kcfg.hash_bits == HashBits::High {
+                    let (_, shifts) = insertion_sort_cost(entries.clone());
+                    shifts
+                } else {
+                    0
+                };
+                let threads = sim.threads();
+                let bins = table.bins();
+                let c_base = self.c_base;
+                let per_thread_shift = sort_shifts / threads as u64;
+                // Algorithm 5: SPAD divided into `threads` equal sections.
+                // Each section is scanned bin by bin (empty-test + branch),
+                // occupied entries stream to C, and the section's bins are
+                // re-initialized to EMPTY for the next window — the work V3
+                // hands to the DMA scatter (§5.3).
+                run_static(sim, threads, PhaseKind::WriteBack, |s, tid, sec| {
+                    let lo = sec * bins / threads;
+                    let hi = (sec + 1) * bins / threads;
+                    for slot in lo..hi {
+                        // tag read + empty test
+                        s.spad_access(tid, spad_base + (slot * BIN_BYTES) as u64, 8);
+                        s.alu(tid, 2);
+                        // re-init to EMPTY
+                        s.spad_access(tid, spad_base + (slot * BIN_BYTES) as u64, 8);
+                    }
+                    s.alu(tid, per_thread_shift); // sort shifts (V1 only)
+                    // store occupied entries to C (col idx + value)
+                    let occupied = entries.len() * (hi - lo) / bins.max(1);
+                    for e in 0..occupied {
+                        s.spad_access(tid, spad_base + (e * BIN_BYTES) as u64, 8);
+                        s.alu(tid, 3); // unpack tag -> (row, col), cursor
+                        s.store_native8(tid, c_base + (e * 12) as u64);
+                        s.store_native8(tid, c_base + (e * 12 + 8) as u64);
+                    }
+                });
+                Vec::new()
+            }
+            TablePlacement::DramFragmented => {
+                // §5.3: dense arrays are streamed SPAD→DRAM by the DMA
+                // engine; a scatter re-initializes the DRAM hashtable for
+                // the next window. MTCs only enqueue descriptors.
+                let entries = self.pending_v3_entries as u64;
+                let copy_bytes = entries * 12; // col idx + value
+                // scatter re-initializes only the *touched* table slots —
+                // the SPAD offset array records exactly which (Fig 5.7)
+                let scatter_bytes = entries * 8;
+                let _ = win;
+                let t1 = sim.dma_copy(0, copy_bytes.max(1), true);
+                let t2 = sim.dma_copy(0, scatter_bytes.max(1), true);
+                let _ = self.ht_dram;
+                vec![t1, t2]
+            }
+        }
+    }
+
+    fn drain_tag_table(&mut self, table: &TagTable, row_begin: usize) {
+        let col_mask = (1u64 << self.col_bits) - 1;
+        for (tag, v) in table.drain() {
+            let row = row_begin + (tag >> self.col_bits) as usize;
+            let col = (tag & col_mask) as usize;
+            self.triplets.push((row, col, v));
+        }
+    }
+
+    fn drain_offset_table(&mut self, table: &OffsetTable, row_begin: usize) {
+        let col_mask = (1u64 << self.col_bits) - 1;
+        for (tag, v) in table.drain() {
+            let row = row_begin + (tag >> self.col_bits) as usize;
+            let col = (tag & col_mask) as usize;
+            self.triplets.push((row, col, v));
+        }
+    }
+
+    fn table_stats_merge(&mut self, s: TableStats) {
+        self.table_stats.upserts += s.upserts;
+        self.table_stats.inserts += s.inserts;
+        self.table_stats.merges += s.merges;
+        self.table_stats.probe_total += s.probe_total;
+        self.table_stats.collisions += s.collisions;
+    }
+}
+
+/// Where partial products are merged during hashing.
+enum HashTarget<'t> {
+    /// V1/V2: SPAD tag-data table at a SPAD base address. The third field
+    /// is the distributed-hashtable ablation (`remote_table_blocks`):
+    /// when > 1, slots owned by other blocks are updated via remote
+    /// atomics over the fabric (§4.1.2.2) instead of local SPAD atomics.
+    Spad(&'t mut TagTable, u64, usize),
+    /// V3: DRAM tag-offset table + dense SPAD arrays at a base address.
+    Dram(&'t mut OffsetTable, u64),
+}
+
+impl HashTarget<'_> {
+    fn upsert(&mut self, s: &mut Sim, tid: usize, tag: u64, val: Value) {
+        match self {
+            HashTarget::Spad(table, base, remote_blocks) => {
+                let bins = table.bins();
+                let u = table.upsert(tag, val);
+                // Distributed-hashtable ablation (§4.1.2.2 remote atomics):
+                // a slot owned by another block is updated via a network
+                // instruction instead of a local SPAD atomic.
+                if *remote_blocks > 1 && u.slot % *remote_blocks != 0 {
+                    for _ in 0..u.probes {
+                        s.alu(tid, 2); // descriptor assembly per probe
+                        s.remote_atomic(tid, *base + (u.slot * BIN_BYTES) as u64);
+                    }
+                    s.remote_atomic(tid, *base + (u.slot * BIN_BYTES + 8) as u64);
+                    return;
+                }
+                // Each probed slot runs the full CAS sequence on the core:
+                // hash, load tag, compare-exchange, verify, branch, compute
+                // next slot, retry (Fig 5.2) — the §7.2 collision-resolution
+                // subroutine; then the merge fadd with its own
+                // read-modify-check sequence. This on-core retry loop is
+                // exactly the instruction stream V3's posted near-memory
+                // upserts eliminate (§5.3).
+                for p in 0..u.probes {
+                    let slot = (u.slot + bins - (u.probes - 1 - p) as usize) & (bins - 1);
+                    s.alu(tid, if p == 0 { 10 } else { 8 });
+                    s.atomic_spad(tid, *base + (slot * BIN_BYTES) as u64);
+                }
+                s.alu(tid, 8);
+                s.atomic_spad(tid, *base + (u.slot * BIN_BYTES + 8) as u64);
+            }
+            HashTarget::Dram(table, spad_arrays) => {
+                // One posted near-memory upsert per distinct tag (PIM
+                // modules, Table 3.1): the walk happens inside the memory
+                // module (row-buffer local); the core only assembles and
+                // enqueues the network instruction (§4.1.2.2).
+                let (u, off) = table.upsert(tag, val);
+                s.alu(tid, 2); // descriptor assembly
+                s.atomic_dram_posted(tid, 0x6000_0000 + (u.slot as u64 % 4096) * 16);
+                // dense-array update in SPAD (Fig 5.7): value accumulate,
+                // plus tag + offset stores on first insertion
+                s.spad_access(tid, *spad_arrays + off as u64 * 8, 8);
+                if u.inserted {
+                    s.spad_access(tid, *spad_arrays + off as u64 * 8 + 8, 12);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{erdos_renyi, rmat, RmatParams};
+    use crate::spgemm::gustavson;
+
+    fn check_version(kcfg: KernelConfig, a: &Csr, b: &Csr) -> RunReport {
+        let run = run_smash(a, b, &kcfg, &SimConfig::test_tiny());
+        let (oracle, _) = gustavson(a, b);
+        assert!(
+            run.c.approx_same(&oracle),
+            "{} output mismatch",
+            kcfg.name()
+        );
+        run.report
+    }
+
+    #[test]
+    fn v1_correct_on_rmat() {
+        let a = rmat(&RmatParams::new(7, 700, 1));
+        let b = rmat(&RmatParams::new(7, 700, 2));
+        let r = check_version(KernelConfig::v1(), &a, &b);
+        assert!(r.cycles > 0 && r.ipc > 0.0);
+    }
+
+    #[test]
+    fn v2_correct_on_rmat() {
+        let a = rmat(&RmatParams::new(7, 700, 3));
+        let b = rmat(&RmatParams::new(7, 700, 4));
+        check_version(KernelConfig::v2(), &a, &b);
+    }
+
+    #[test]
+    fn v3_correct_on_rmat() {
+        let a = rmat(&RmatParams::new(7, 700, 5));
+        let b = rmat(&RmatParams::new(7, 700, 6));
+        let r = check_version(KernelConfig::v3(), &a, &b);
+        assert!(r.dma_descriptors > 0, "V3 must use the DMA engine");
+    }
+
+    #[test]
+    fn all_versions_correct_on_er() {
+        let a = erdos_renyi(100, 800, 7);
+        let b = erdos_renyi(100, 800, 8);
+        for k in [KernelConfig::v1(), KernelConfig::v2(), KernelConfig::v3()] {
+            check_version(k, &a, &b);
+        }
+    }
+
+    #[test]
+    fn speedup_ordering_v3_fastest() {
+        // The headline shape of Table 6.7: V3 < V2 < V1 runtime on skewed
+        // R-MAT inputs.
+        let a = rmat(&RmatParams::new(9, 6000, 11));
+        let b = rmat(&RmatParams::new(9, 6000, 12));
+        let scfg = SimConfig::piuma_block();
+        let c1 = run_smash(&a, &b, &KernelConfig::v1(), &scfg).report.cycles;
+        let c2 = run_smash(&a, &b, &KernelConfig::v2(), &scfg).report.cycles;
+        let c3 = run_smash(&a, &b, &KernelConfig::v3(), &scfg).report.cycles;
+        assert!(c2 < c1, "V2 ({c2}) should beat V1 ({c1})");
+        // At this reduced scale V3's DMA overlap has little to hide behind,
+        // so allow a small tolerance; the full-scale Table 6.7 harness
+        // checks the real gap.
+        assert!(
+            (c3 as f64) < c2 as f64 * 1.05,
+            "V3 ({c3}) should not lose to V2 ({c2})"
+        );
+    }
+
+    #[test]
+    fn v2_utilization_beats_v1() {
+        let a = rmat(&RmatParams::new(9, 6000, 13));
+        let b = rmat(&RmatParams::new(9, 6000, 14));
+        let scfg = SimConfig::piuma_block();
+        let u1 = run_smash(&a, &b, &KernelConfig::v1(), &scfg)
+            .report
+            .avg_utilization;
+        let u2 = run_smash(&a, &b, &KernelConfig::v2(), &scfg)
+            .report
+            .avg_utilization;
+        assert!(u2 > u1, "V2 util {u2} should beat V1 {u1}");
+    }
+
+    #[test]
+    fn deterministic_cycles() {
+        let a = rmat(&RmatParams::new(7, 500, 21));
+        let b = rmat(&RmatParams::new(7, 500, 22));
+        let scfg = SimConfig::test_tiny();
+        let r1 = run_smash(&a, &b, &KernelConfig::v2(), &scfg).report.cycles;
+        let r2 = run_smash(&a, &b, &KernelConfig::v2(), &scfg).report.cycles;
+        assert_eq!(r1, r2);
+    }
+
+    #[test]
+    fn empty_and_identity() {
+        let z = Csr::zero(8, 8);
+        for k in [KernelConfig::v1(), KernelConfig::v2(), KernelConfig::v3()] {
+            let run = run_smash(&z, &z, &k, &SimConfig::test_tiny());
+            assert_eq!(run.c.nnz(), 0);
+        }
+        let i = Csr::identity(16);
+        let run = run_smash(&i, &i, &KernelConfig::v2(), &SimConfig::test_tiny());
+        assert!(run.c.approx_same(&i));
+    }
+
+    #[test]
+    fn remote_table_costs_more_but_stays_correct() {
+        let a = rmat(&RmatParams::new(7, 700, 41));
+        let b = rmat(&RmatParams::new(7, 700, 42));
+        let (oracle, _) = gustavson(&a, &b);
+        let local = run_smash(&a, &b, &KernelConfig::v2(), &SimConfig::test_tiny());
+        let mut k = KernelConfig::v2();
+        k.remote_table_blocks = 4;
+        let remote = run_smash(&a, &b, &k, &SimConfig::test_tiny());
+        assert!(remote.c.approx_same(&oracle));
+        // The fabric round-trip is largely hidden by MTC round-robin (the
+        // §4.1.2.2 argument for networked atomics) — require only that the
+        // two stay within 2x of each other and both complete correctly.
+        let (lo, hi) = (
+            local.report.cycles.min(remote.report.cycles),
+            local.report.cycles.max(remote.report.cycles),
+        );
+        assert!(hi < 2 * lo, "remote vs local diverged wildly: {lo} vs {hi}");
+    }
+
+    #[test]
+    fn dense_row_path_exercised() {
+        // A row of A dense enough to cross the threshold.
+        let n = 64;
+        let mut tr: Vec<(usize, usize, f64)> = (0..n).map(|c| (0usize, c, 1.0)).collect();
+        tr.push((1, 1, 2.0));
+        let a = Csr::from_triplets(2, n, tr);
+        let b = erdos_renyi(n, 512, 9);
+        let mut k = KernelConfig::v2();
+        k.dense_row_threshold = 64; // row 0 has ~512 FMAs -> dense
+        let run = run_smash(&a, &b.clone(), &k, &SimConfig::test_tiny());
+        let (oracle, _) = gustavson(&a, &b);
+        assert!(run.c.approx_same(&oracle));
+    }
+}

@@ -1,0 +1,209 @@
+//! Sparse matrix-vector multiply on the PIUMA model — the kernel of the
+//! architecture's own motivating study (thesis ref [2], Aananthakrishnan
+//! et al., "Efficient sparse matrix-vector multiplication on Intel PIUMA",
+//! HPEC 2020), and the building block of the §1.3 path-finding /
+//! ranking applications (see `examples/pagerank.rs`).
+//!
+//! `y = A·x` row-wise, with the same two scheduling modes as SMASH:
+//! static round-robin rows (V1-style) or dynamic tokens (V2-style). The
+//! input vector is SPAD-resident (it fits: 16K×8 B = 128 KB ≪ 4 MB),
+//! which is exactly the locality trick of the PIUMA SpMV paper; matrix
+//! elements stream from DRAM through the L1.
+
+use crate::config::{Scheduling, SimConfig};
+use crate::formats::{Csr, Value};
+use crate::sim::{run_dynamic, run_static, PhaseKind, Region, Sim};
+
+/// Metrics of one simulated SpMV.
+#[derive(Clone, Debug)]
+pub struct SpmvReport {
+    pub cycles: u64,
+    pub ms: f64,
+    pub ipc: f64,
+    pub l1_hit_pct: f64,
+    pub dram_util: f64,
+    pub avg_utilization: f64,
+}
+
+/// Simulate `y = A·x` and return (y, report).
+pub fn run_spmv(a: &Csr, x: &[Value], sched: Scheduling, scfg: &SimConfig) -> (Vec<Value>, SpmvReport) {
+    assert_eq!(x.len(), a.cols, "dimension mismatch");
+    let mut sim = Sim::new(scfg.clone());
+    let a_rp = sim.alloc_dram((a.rows as u64 + 1) * 4, Region::MatrixA);
+    let a_ci = sim.alloc_dram(a.nnz() as u64 * 4, Region::MatrixA);
+    let a_dat = sim.alloc_dram(a.nnz() as u64 * 8, Region::MatrixA);
+    let y_base = sim.alloc_dram(a.rows as u64 * 8, Region::MatrixC);
+    // x broadcast into SPAD once via the DMA engine (the [2] optimization)
+    let x_bytes = (a.cols as u64 * 8).min(scfg.spad_bytes as u64 / 2);
+    let t = sim.dma_copy(0, x_bytes, false);
+    sim.dma_fence(0, t);
+    sim.barrier();
+
+    let mut y = vec![0.0; a.rows];
+    let body = |s: &mut Sim, tid: usize, row: usize, y: &mut Vec<Value>| {
+        s.load(tid, a_rp + row as u64 * 4, 8);
+        let (cols, vals) = a.row(row);
+        let start = a.row_ptr[row];
+        let mut acc = 0.0;
+        for (i, (&c, &v)) in cols.iter().zip(vals).enumerate() {
+            s.load(tid, a_ci + (start + i) as u64 * 4, 4);
+            s.load(tid, a_dat + (start + i) as u64 * 8, 8);
+            s.spad_access(tid, c as u64 * 8, 8); // x[c] from SPAD
+            s.alu(tid, 1); // fma
+            acc += v * x[c as usize];
+        }
+        y[row] = acc;
+        s.store_native8(tid, y_base + row as u64 * 8);
+    };
+
+    match sched {
+        Scheduling::StaticRoundRobin => {
+            run_static(&mut sim, a.rows, PhaseKind::Hash, |s, tid, row| {
+                body(s, tid, row, &mut y)
+            });
+        }
+        Scheduling::Tokenized => {
+            run_dynamic(&mut sim, a.rows, PhaseKind::Hash, |s, tid, row| {
+                body(s, tid, row, &mut y)
+            });
+        }
+    }
+    sim.barrier();
+
+    let cycles = sim.elapsed_cycles();
+    let report = SpmvReport {
+        cycles,
+        ms: scfg.cycles_to_ms(cycles),
+        ipc: sim.aggregate_ipc(),
+        l1_hit_pct: sim.cache_stats().hit_rate_pct(),
+        dram_util: sim.dram_utilization(),
+        avg_utilization: sim.metrics.average_utilization(cycles),
+    };
+    (y, report)
+}
+
+/// PageRank via simulated SpMV iterations: `r ← d·Aᵀ_norm·r + (1−d)/n`.
+/// Returns (ranks, iterations, total simulated ms).
+pub fn pagerank(
+    adj: &Csr,
+    damping: f64,
+    tol: f64,
+    max_iters: usize,
+    sched: Scheduling,
+    scfg: &SimConfig,
+) -> (Vec<Value>, usize, f64) {
+    let n = adj.rows;
+    // column-normalized transition matrix, transposed for row-wise SpMV:
+    // M[i][j] = A[j][i] / outdeg(j)
+    let mut outdeg = vec![0usize; n];
+    for r in 0..n {
+        outdeg[r] = adj.row_nnz(r);
+    }
+    let mut triplets = Vec::with_capacity(adj.nnz());
+    for r in 0..n {
+        let (cols, _) = adj.row(r);
+        for &c in cols {
+            triplets.push((c as usize, r, 1.0 / outdeg[r].max(1) as f64));
+        }
+    }
+    let m = Csr::from_triplets(n, n, triplets);
+
+    let mut rank = vec![1.0 / n as f64; n];
+    let base = (1.0 - damping) / n as f64;
+    let mut total_ms = 0.0;
+    for iter in 0..max_iters {
+        let (mv, report) = run_spmv(&m, &rank, sched, scfg);
+        total_ms += report.ms;
+        let mut delta = 0.0;
+        let mut next = vec![0.0; n];
+        // dangling mass redistributes uniformly
+        let dangling: f64 = (0..n)
+            .filter(|&v| outdeg[v] == 0)
+            .map(|v| rank[v])
+            .sum::<f64>()
+            / n as f64;
+        for v in 0..n {
+            next[v] = base + damping * (mv[v] + dangling);
+            delta += (next[v] - rank[v]).abs();
+        }
+        rank = next;
+        if delta < tol {
+            return (rank, iter + 1, total_ms);
+        }
+    }
+    (rank, max_iters, total_ms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Scheduling, SimConfig};
+    use crate::gen::{erdos_renyi, rmat, RmatParams};
+
+    #[test]
+    fn spmv_matches_reference() {
+        let a = rmat(&RmatParams::new(7, 800, 1));
+        let x: Vec<f64> = (0..a.cols).map(|i| (i % 5) as f64 - 2.0).collect();
+        let expect = a.spmv(&x);
+        for sched in [Scheduling::StaticRoundRobin, Scheduling::Tokenized] {
+            let (y, rep) = run_spmv(&a, &x, sched, &SimConfig::test_tiny());
+            assert_eq!(y, expect);
+            assert!(rep.cycles > 0 && rep.ipc > 0.0);
+        }
+    }
+
+    #[test]
+    fn tokenized_spmv_balances_better() {
+        let a = rmat(&RmatParams::new(9, 6_000, 2));
+        let x = vec![1.0; a.cols];
+        let scfg = SimConfig::piuma_block();
+        let (_, st) = run_spmv(&a, &x, Scheduling::StaticRoundRobin, &scfg);
+        let (_, dy) = run_spmv(&a, &x, Scheduling::Tokenized, &scfg);
+        assert!(dy.cycles <= st.cycles, "dynamic {} vs static {}", dy.cycles, st.cycles);
+        assert!(dy.avg_utilization >= st.avg_utilization);
+    }
+
+    #[test]
+    fn pagerank_converges_and_sums_to_one() {
+        let adj = erdos_renyi(64, 400, 3);
+        let (ranks, iters, ms) = pagerank(
+            &adj,
+            0.85,
+            1e-8,
+            100,
+            Scheduling::Tokenized,
+            &SimConfig::test_tiny(),
+        );
+        assert!(iters < 100, "did not converge");
+        assert!(ms > 0.0);
+        let total: f64 = ranks.iter().sum();
+        assert!((total - 1.0).abs() < 1e-6, "ranks must be a distribution: {total}");
+        assert!(ranks.iter().all(|r| *r > 0.0));
+    }
+
+    #[test]
+    fn pagerank_star_graph_center_wins() {
+        // edges i -> 0 for all i: vertex 0 accumulates rank
+        let n = 16;
+        let adj = crate::formats::Csr::from_triplets(
+            n,
+            n,
+            (1..n).map(|i| (i, 0usize, 1.0)),
+        );
+        let (ranks, _, _) = pagerank(
+            &adj,
+            0.85,
+            1e-10,
+            200,
+            Scheduling::Tokenized,
+            &SimConfig::test_tiny(),
+        );
+        let max = ranks
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(max, 0, "hub must have the highest rank");
+    }
+}

@@ -1,0 +1,216 @@
+//! Window distribution (§5.1.1): Gustavson FMA counting per output row,
+//! dense/sparse row classification, and grouping of rows into windows sized
+//! to the scratchpad.
+
+use crate::config::{KernelConfig, SimConfig, TablePlacement};
+use crate::formats::Csr;
+use crate::spgemm::{flops_per_row, symbolic_row_nnz};
+
+/// One planned window: a contiguous range of output rows whose hashtable
+/// (V1/V2) or dense staging arrays (V3) fit in the SPAD.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Window {
+    /// Output rows `[row_begin, row_end)`.
+    pub row_begin: usize,
+    pub row_end: usize,
+    /// Upper-bound FMA count of the window (drives oversubscription order).
+    pub flops: u64,
+    /// Exact output nnz of the window (symbolic pass).
+    pub out_nnz: usize,
+    /// Hashtable bins allocated for this window (power of two).
+    pub bins: usize,
+}
+
+impl Window {
+    pub fn rows(&self) -> usize {
+        self.row_end - self.row_begin
+    }
+}
+
+/// The full window plan plus per-row metadata.
+#[derive(Clone, Debug)]
+pub struct WindowPlan {
+    pub windows: Vec<Window>,
+    /// FMA upper bound per output row (Gustavson two-step, §5.1.1).
+    pub row_flops: Vec<u64>,
+    /// Exact nnz per output row.
+    pub row_nnz: Vec<usize>,
+    /// Rows flagged dense (FMA count above the §5.1.1 threshold) — these
+    /// use a dense SPAD accumulator instead of the hashtable.
+    pub dense_rows: Vec<bool>,
+    /// SPAD bytes available to one window's table/arrays.
+    pub spad_budget: usize,
+}
+
+/// Bytes of SPAD needed per hash bin: tag (8) + data (8) — Fig 5.3.
+pub const BIN_BYTES: usize = 16;
+/// V3 SPAD bytes per *entry*: dense tag (4ish→8 aligned) + value (8) +
+/// offset (4) — Fig 5.7's three dense arrays. The hashtable itself lives
+/// in DRAM (Fig 5.6).
+pub const V3_ENTRY_BYTES: usize = 20;
+
+/// Plan windows for `C = A·B` under the given configs.
+pub fn plan_windows(a: &Csr, b: &Csr, kcfg: &KernelConfig, scfg: &SimConfig) -> WindowPlan {
+    let row_flops = flops_per_row(a, b);
+    let row_nnz = symbolic_row_nnz(a, b);
+    let dense_rows: Vec<bool> = row_flops
+        .iter()
+        .map(|&f| f as usize > kcfg.dense_row_threshold)
+        .collect();
+
+    // Reserve a slice of SPAD for the dense-row accumulator + runtime.
+    let reserve = (b.cols * 8).min(scfg.spad_bytes / 4) + 4096;
+    let spad_budget = scfg.spad_bytes.saturating_sub(reserve).max(BIN_BYTES * 64);
+
+    let mut windows = Vec::new();
+    let mut begin = 0usize;
+    let mut acc_entries = 0usize; // upper-bound live entries in window
+    let mut acc_flops = 0u64;
+    let capacity = match kcfg.placement {
+        // V1/V2: the table must fit after power-of-two rounding of the bin
+        // count, so cap entries at load_factor × the largest pow2 bin
+        // count that fits the budget.
+        TablePlacement::Spad => {
+            let max_bins = ((spad_budget / BIN_BYTES) + 1).next_power_of_two() / 2;
+            ((max_bins as f64) * kcfg.table_load_factor) as usize
+        }
+        // V3: dense arrays sized to actual entries; the hashtable lives in
+        // DRAM and does not consume SPAD.
+        TablePlacement::DramFragmented => spad_budget / V3_ENTRY_BYTES,
+    };
+    let capacity = capacity.max(1);
+
+    for r in 0..a.rows {
+        // Upper bound on live hashtable entries contributed by row r:
+        // its FMA count (every partial product distinct in the worst case),
+        // but never more than the matrix width.
+        let entries = (row_flops[r] as usize).min(b.cols).max(1);
+        if acc_entries + entries > capacity && r > begin {
+            windows.push(make_window(begin, r, acc_flops, &row_nnz, acc_entries, kcfg));
+            begin = r;
+            acc_entries = 0;
+            acc_flops = 0;
+        }
+        acc_entries += entries;
+        acc_flops += row_flops[r];
+    }
+    if begin < a.rows || windows.is_empty() {
+        windows.push(make_window(
+            begin,
+            a.rows,
+            acc_flops,
+            &row_nnz,
+            acc_entries.max(1),
+            kcfg,
+        ));
+    }
+
+    WindowPlan {
+        windows,
+        row_flops,
+        row_nnz,
+        dense_rows,
+        spad_budget,
+    }
+}
+
+fn make_window(
+    begin: usize,
+    end: usize,
+    flops: u64,
+    row_nnz: &[usize],
+    entries: usize,
+    kcfg: &KernelConfig,
+) -> Window {
+    let out_nnz: usize = row_nnz[begin..end].iter().sum();
+    let bins = ((entries as f64 / kcfg.table_load_factor) as usize)
+        .next_power_of_two()
+        .max(64);
+    Window {
+        row_begin: begin,
+        row_end: end,
+        flops,
+        out_nnz,
+        bins,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{KernelConfig, SimConfig};
+    use crate::gen::{rmat, RmatParams};
+
+    fn plan(kcfg: KernelConfig) -> (Csr, Csr, WindowPlan) {
+        let a = rmat(&RmatParams::new(9, 4000, 1));
+        let b = rmat(&RmatParams::new(9, 4000, 2));
+        let p = plan_windows(&a, &b, &kcfg, &SimConfig::test_tiny());
+        (a, b, p)
+    }
+
+    #[test]
+    fn windows_cover_all_rows_disjointly() {
+        let (a, _, p) = plan(KernelConfig::v1());
+        assert_eq!(p.windows[0].row_begin, 0);
+        assert_eq!(p.windows.last().unwrap().row_end, a.rows);
+        for w in p.windows.windows(2) {
+            assert_eq!(w[0].row_end, w[1].row_begin);
+        }
+    }
+
+    #[test]
+    fn window_tables_fit_spad_budget() {
+        let (_, _, p) = plan(KernelConfig::v1());
+        for w in &p.windows {
+            assert!(
+                w.bins * BIN_BYTES <= 2 * p.spad_budget,
+                "window table {} bins overflows budget {}",
+                w.bins,
+                p.spad_budget
+            );
+        }
+    }
+
+    #[test]
+    fn v3_windows_are_larger() {
+        // V3's dense arrays (20 B/entry) pack tighter than V1's half-loaded
+        // table (32 B/entry) -> fewer windows.
+        let (_, _, p1) = plan(KernelConfig::v1());
+        let (_, _, p3) = plan(KernelConfig::v3());
+        assert!(
+            p3.windows.len() <= p1.windows.len(),
+            "v3 {} windows vs v1 {}",
+            p3.windows.len(),
+            p1.windows.len()
+        );
+    }
+
+    #[test]
+    fn flops_and_nnz_totals_match() {
+        let (a, b, p) = plan(KernelConfig::v2());
+        let total_flops: u64 = p.windows.iter().map(|w| w.flops).sum();
+        assert_eq!(total_flops, crate::spgemm::total_flops(&a, &b));
+        let total_nnz: usize = p.windows.iter().map(|w| w.out_nnz).sum();
+        let (c, _) = crate::spgemm::gustavson(&a, &b);
+        assert_eq!(total_nnz, c.nnz());
+    }
+
+    #[test]
+    fn empty_input_single_window() {
+        let z = Csr::zero(16, 16);
+        let p = plan_windows(&z, &z, &KernelConfig::v1(), &SimConfig::test_tiny());
+        assert_eq!(p.windows.len(), 1);
+        assert_eq!(p.windows[0].out_nnz, 0);
+    }
+
+    #[test]
+    fn dense_row_classification() {
+        let a = Csr::from_triplets(2, 2, vec![(0, 0, 1.0), (0, 1, 1.0)]);
+        let b = Csr::from_triplets(2, 2, (0..2).flat_map(|r| (0..2).map(move |c| (r, c, 1.0))).collect::<Vec<_>>());
+        let mut k = KernelConfig::v1();
+        k.dense_row_threshold = 3;
+        let p = plan_windows(&a, &b, &k, &SimConfig::test_tiny());
+        assert!(p.dense_rows[0]); // 4 FMAs > 3
+        assert!(!p.dense_rows[1]); // 0 FMAs
+    }
+}

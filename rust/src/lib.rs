@@ -1,0 +1,28 @@
+//! # SMASH — Sparse Matrix Atomic Scratchpad Hashing
+//!
+//! A full reproduction of *SMASH: Sparse Matrix Atomic Scratchpad Hashing*
+//! (Shivdikar, Northeastern University, 2021): row-wise-product SpGEMM
+//! kernels (V1 atomic hashing, V2 tokenization, V3 fragmented memory)
+//! running on an in-tree PIUMA-like architecture simulator, plus a serving
+//! coordinator and a PJRT runtime that executes JAX/Pallas AOT artifacts.
+//!
+//! Layers:
+//! * [`sim`] — the PIUMA substrate (cores, caches, SPAD, DRAM, DMA, network).
+//! * [`kernels`] — the paper's contribution: SMASH V1/V2/V3.
+//! * [`spgemm`] — reference dataflows (Gustavson, inner, outer) + oracle.
+//! * [`coordinator`] — L3 request routing / window scheduling / batching.
+//! * [`runtime`] — PJRT client loading `artifacts/*.hlo.txt` (L2/L1 output).
+//! * [`bench`]/[`report`] — regeneration harness for every paper table/figure.
+
+pub mod util;
+pub mod config;
+pub mod formats;
+pub mod gen;
+pub mod spgemm;
+pub mod sim;
+pub mod kernels;
+pub mod coordinator;
+pub mod runtime;
+pub mod bench;
+pub mod report;
+pub mod cli;

@@ -1,0 +1,9 @@
+//! `smash` CLI — see [`smash::cli::USAGE`].
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = smash::cli::dispatch(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

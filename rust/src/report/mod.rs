@@ -1,0 +1,179 @@
+//! Report rendering: markdown/ASCII tables, bar charts, timelines, and
+//! histograms — everything the `smash tables|figures` CLI prints and the
+//! bench harness writes to disk.
+
+/// A simple column-aligned table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push_row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render as aligned plain text (also valid markdown-ish).
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("## {}\n\n", self.title));
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::from("|");
+            for i in 0..ncols {
+                line.push_str(&format!(" {:<w$} |", cells[i], w = widths[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out
+    }
+
+    /// Render as CSV.
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &String| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.clone()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(&self.headers.iter().map(esc).collect::<Vec<_>>().join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(esc).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Horizontal ASCII bar chart (Fig 6.3-style comparison).
+pub fn bar_chart(title: &str, items: &[(String, f64)], max_width: usize) -> String {
+    let max = items.iter().map(|(_, v)| *v).fold(f64::MIN_POSITIVE, f64::max);
+    let label_w = items.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    let mut out = format!("## {title}\n\n");
+    for (label, v) in items {
+        let w = ((v / max) * max_width as f64).round() as usize;
+        out.push_str(&format!(
+            "{:<label_w$} | {:<max_width$} {:.3}\n",
+            label,
+            "█".repeat(w),
+            v,
+        ));
+    }
+    out
+}
+
+/// ASCII utilization timeline: one row per thread, one char per bucket
+/// (' ' = idle, '░▒▓█' quartiles) — the Fig 6.1/6.2 rendering.
+pub fn timeline_chart(title: &str, timelines: &[(usize, Vec<f64>)], max_cols: usize) -> String {
+    let mut out = format!("## {title}\n\n");
+    for (tid, samples) in timelines {
+        // resample to max_cols buckets
+        let n = samples.len().max(1);
+        let cols = n.min(max_cols);
+        let mut line = String::with_capacity(cols);
+        for c in 0..cols {
+            let lo = c * n / cols;
+            let hi = ((c + 1) * n / cols).max(lo + 1);
+            let avg: f64 = samples[lo..hi].iter().sum::<f64>() / (hi - lo) as f64;
+            line.push(match avg {
+                x if x < 0.125 => ' ',
+                x if x < 0.375 => '░',
+                x if x < 0.625 => '▒',
+                x if x < 0.875 => '▓',
+                _ => '█',
+            });
+        }
+        out.push_str(&format!("thread {tid:>3} |{line}|\n"));
+    }
+    out
+}
+
+/// ASCII histogram (Fig 6.4): bins over [0,1] with counts.
+pub fn histogram_chart(title: &str, hist: &[usize], max_width: usize) -> String {
+    let max = *hist.iter().max().unwrap_or(&1) as f64;
+    let bins = hist.len();
+    let mut out = format!("## {title}\n\n");
+    for (i, c) in hist.iter().enumerate() {
+        let lo = i as f64 / bins as f64;
+        let hi = (i + 1) as f64 / bins as f64;
+        let w = ((*c as f64 / max.max(1.0)) * max_width as f64).round() as usize;
+        out.push_str(&format!(
+            "[{:4.0}%,{:4.0}%) | {:<max_width$} {}\n",
+            lo * 100.0,
+            hi * 100.0,
+            "█".repeat(w),
+            c,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_render_aligned() {
+        let mut t = Table::new("Demo", &["name", "value"]);
+        t.push_row(vec!["a".into(), "1".into()]);
+        t.push_row(vec!["longer".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("## Demo"));
+        assert!(s.contains("| longer | 2     |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.push_row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("x", &["a"]);
+        t.push_row(vec!["has,comma".into()]);
+        assert!(t.to_csv().contains("\"has,comma\""));
+    }
+
+    #[test]
+    fn charts_render() {
+        let bars = bar_chart("B", &[("v1".into(), 0.5), ("v2".into(), 1.0)], 20);
+        assert!(bars.contains("v2"));
+        let tl = timeline_chart("T", &[(0, vec![0.0, 0.5, 1.0])], 80);
+        assert!(tl.contains("thread   0"));
+        let h = histogram_chart("H", &[1, 0, 3], 10);
+        assert!(h.contains("3"));
+    }
+}

@@ -1,0 +1,254 @@
+//! GCN inference driver — the paper's motivating workload (Fig 1.1).
+//!
+//! A 2-layer graph convolutional network `logits = Â·relu(Â·H·W₁)·W₂`
+//! where the sparse aggregation `Â·X` is the L1 Pallas kernel (blocked-ELL
+//! row-wise product — the TPU re-think of SMASH) and the dense matmuls run
+//! on the MXU path. The whole forward pass is AOT-lowered to
+//! `artifacts/gcn_layer.hlo.txt` by `python/compile/aot.py` and executed
+//! here via PJRT; Rust also computes a native reference for verification
+//! and the Fig 1.1 per-kernel time breakdown.
+
+use super::{artifacts_dir, Engine, HostTensor};
+use crate::formats::{Csr, Dense};
+use crate::util::prng::Xoshiro256;
+use crate::util::timer::PhaseTimer;
+use anyhow::{ensure, Context, Result};
+
+/// Model dimensions — MUST mirror `python/compile/model.py::DIMS`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GcnDims {
+    /// Graph nodes.
+    pub n: usize,
+    /// Max neighbors per node (ELL width).
+    pub k: usize,
+    /// Input feature width.
+    pub f_in: usize,
+    /// Hidden width.
+    pub hidden: usize,
+    /// Output classes.
+    pub classes: usize,
+}
+
+/// The AOT contract dimensions (keep in sync with model.py).
+pub const DIMS: GcnDims = GcnDims {
+    n: 1024,
+    k: 16,
+    f_in: 64,
+    hidden: 32,
+    classes: 8,
+};
+
+/// A GCN inference workload: normalized adjacency in padded-ELL form plus
+/// features and weights.
+pub struct GcnWorkload {
+    pub dims: GcnDims,
+    /// ELL values, n×k row-major (zero-padded).
+    pub ell_vals: Vec<f32>,
+    /// ELL column indices, n×k (padding points at row's own index).
+    pub ell_cols: Vec<i32>,
+    /// The same adjacency as CSR (reference path + SMASH path).
+    pub adj: Csr,
+    pub features: Dense,
+    pub w1: Dense,
+    pub w2: Dense,
+}
+
+impl GcnWorkload {
+    /// Synthesize a Cora-like workload: a random sparse graph with ≤ k
+    /// neighbors per node, symmetric-normalized (Â = D^-1 A with self
+    /// loops), Xavier-ish random weights.
+    pub fn synthetic(dims: GcnDims, seed: u64) -> Self {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let n = dims.n;
+        let mut triplets: Vec<(usize, usize, f64)> = Vec::new();
+        for r in 0..n {
+            // self loop + up to k-1 random neighbors
+            let mut cols = vec![r];
+            let extra = rng.range(1, dims.k.max(2));
+            for _ in 0..extra {
+                let c = rng.range(0, n);
+                if !cols.contains(&c) {
+                    cols.push(c);
+                }
+            }
+            let w = 1.0 / cols.len() as f64; // row-normalized
+            for c in cols {
+                triplets.push((r, c, w));
+            }
+        }
+        let adj = Csr::from_triplets(n, n, triplets);
+
+        // padded-ELL encoding
+        let mut ell_vals = vec![0.0f32; n * dims.k];
+        let mut ell_cols = vec![0i32; n * dims.k];
+        for r in 0..n {
+            let (cols, vals) = adj.row(r);
+            assert!(cols.len() <= dims.k, "row {r} exceeds ELL width");
+            for (slot, (c, v)) in cols.iter().zip(vals).enumerate() {
+                ell_vals[r * dims.k + slot] = *v as f32;
+                ell_cols[r * dims.k + slot] = *c as i32;
+            }
+            // pad with (row, 0.0): gathers row r, contributes nothing
+            for slot in cols.len()..dims.k {
+                ell_cols[r * dims.k + slot] = r as i32;
+            }
+        }
+
+        let mut dense = |rows: usize, cols: usize, scale: f64| {
+            let data: Vec<f64> = (0..rows * cols)
+                .map(|_| (rng.next_f64() * 2.0 - 1.0) * scale)
+                .collect();
+            Dense::from_vec(rows, cols, data)
+        };
+        let features = dense(n, dims.f_in, 1.0);
+        let w1 = dense(dims.f_in, dims.hidden, (1.0 / dims.f_in as f64).sqrt());
+        let w2 = dense(dims.hidden, dims.classes, (1.0 / dims.hidden as f64).sqrt());
+        Self {
+            dims,
+            ell_vals,
+            ell_cols,
+            adj,
+            features,
+            w1,
+            w2,
+        }
+    }
+
+    /// Native Rust reference forward pass (oracle for the artifact).
+    pub fn reference_forward(&self) -> Dense {
+        let h1 = self
+            .adj
+            .spmm_dense(&self.features)
+            .matmul(&self.w1)
+            .relu();
+        self.adj.spmm_dense(&h1).matmul(&self.w2)
+    }
+
+    /// Fig 1.1 — per-kernel execution-time breakdown of the GCN forward
+    /// pass using the decomposed native pipeline (SpGEMM via row-wise hash,
+    /// dense GEMM, elementwise, reduction).
+    pub fn kernel_breakdown(&self) -> Vec<(String, f64)> {
+        let mut pt = PhaseTimer::new();
+        let ax = pt.run("SpGEMM (A·H)", || self.adj.spmm_dense(&self.features));
+        let h1 = pt.run("Dense GEMM (·W1)", || ax.matmul(&self.w1));
+        let h1 = pt.run("Elementwise (relu)", || h1.relu());
+        let ax2 = pt.run("SpGEMM (A·H1)", || self.adj.spmm_dense(&h1));
+        let logits = pt.run("Dense GEMM (·W2)", || ax2.matmul(&self.w2));
+        let _norm = pt.run("Reduction (row max)", || {
+            (0..logits.rows)
+                .map(|r| logits.row(r).iter().cloned().fold(f64::MIN, f64::max))
+                .sum::<f64>()
+        });
+        pt.breakdown()
+            .into_iter()
+            .map(|(n, _, share)| (n, share))
+            .collect()
+    }
+}
+
+/// The PJRT-backed GCN model (the serving path).
+pub struct GcnModel {
+    engine: Engine,
+    path: std::path::PathBuf,
+}
+
+impl GcnModel {
+    /// Load `artifacts/gcn_layer.hlo.txt`.
+    pub fn load() -> Result<Self> {
+        let path = artifacts_dir().join("gcn_layer.hlo.txt");
+        ensure!(
+            path.exists(),
+            "artifact {} missing — run `make artifacts`",
+            path.display()
+        );
+        let mut engine = Engine::cpu()?;
+        engine.load(&path)?; // compile eagerly
+        Ok(Self { engine, path })
+    }
+
+    /// Run the full AOT forward pass; returns n×classes logits.
+    pub fn forward(&mut self, w: &GcnWorkload) -> Result<Dense> {
+        let d = w.dims;
+        let inputs = [
+            HostTensor::f32(w.ell_vals.clone(), &[d.n, d.k]),
+            HostTensor::i32(w.ell_cols.clone(), &[d.n, d.k]),
+            HostTensor::f32(
+                w.features.data.iter().map(|x| *x as f32).collect(),
+                &[d.n, d.f_in],
+            ),
+            HostTensor::f32(
+                w.w1.data.iter().map(|x| *x as f32).collect(),
+                &[d.f_in, d.hidden],
+            ),
+            HostTensor::f32(
+                w.w2.data.iter().map(|x| *x as f32).collect(),
+                &[d.hidden, d.classes],
+            ),
+        ];
+        let exe = self.engine.load(&self.path)?;
+        let outs = exe.run(&inputs).context("executing gcn_layer")?;
+        ensure!(outs.len() == 1, "expected 1 output, got {}", outs.len());
+        let logits = Dense::from_vec(
+            d.n,
+            d.classes,
+            outs[0].iter().map(|x| *x as f64).collect(),
+        );
+        Ok(logits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_workload_valid() {
+        let d = GcnDims {
+            n: 64,
+            k: 8,
+            f_in: 16,
+            hidden: 8,
+            classes: 4,
+        };
+        let w = GcnWorkload::synthetic(d, 1);
+        w.adj.validate().unwrap();
+        assert_eq!(w.ell_vals.len(), 64 * 8);
+        // ELL row sums must equal CSR row sums
+        for r in 0..d.n {
+            let csr_sum: f64 = w.adj.row(r).1.iter().sum();
+            let ell_sum: f32 = w.ell_vals[r * d.k..(r + 1) * d.k].iter().sum();
+            assert!((csr_sum as f32 - ell_sum).abs() < 1e-5, "row {r}");
+        }
+    }
+
+    #[test]
+    fn reference_forward_shapes() {
+        let d = GcnDims {
+            n: 32,
+            k: 4,
+            f_in: 8,
+            hidden: 6,
+            classes: 3,
+        };
+        let w = GcnWorkload::synthetic(d, 2);
+        let out = w.reference_forward();
+        assert_eq!((out.rows, out.cols), (32, 3));
+        assert!(out.frob() > 0.0);
+    }
+
+    #[test]
+    fn breakdown_shares_sum_to_one() {
+        let d = GcnDims {
+            n: 64,
+            k: 8,
+            f_in: 16,
+            hidden: 8,
+            classes: 4,
+        };
+        let w = GcnWorkload::synthetic(d, 3);
+        let bd = w.kernel_breakdown();
+        assert_eq!(bd.len(), 6);
+        let total: f64 = bd.iter().map(|(_, s)| s).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+}

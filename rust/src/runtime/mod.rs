@@ -1,0 +1,163 @@
+//! PJRT runtime — loads the AOT artifacts produced by `python/compile/`
+//! (`make artifacts`) and executes them from Rust. Python is never on this
+//! path: the HLO **text** files are compiled once per process by the
+//! in-memory PJRT CPU client and cached.
+//!
+//! Interchange is HLO text, not serialized protos: jax ≥ 0.5 emits protos
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod gcn;
+
+pub use gcn::{GcnDims, GcnModel, GcnWorkload};
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A loaded, compiled HLO module ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// Typed host tensor handed to / returned from [`Executable::run`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32 { data: Vec<f32>, dims: Vec<usize> },
+    I32 { data: Vec<i32>, dims: Vec<usize> },
+}
+
+impl HostTensor {
+    pub fn f32(data: Vec<f32>, dims: &[usize]) -> Self {
+        assert_eq!(data.len(), dims.iter().product::<usize>());
+        Self::F32 {
+            data,
+            dims: dims.to_vec(),
+        }
+    }
+
+    pub fn i32(data: Vec<i32>, dims: &[usize]) -> Self {
+        assert_eq!(data.len(), dims.iter().product::<usize>());
+        Self::I32 {
+            data,
+            dims: dims.to_vec(),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            HostTensor::F32 { data, dims } => {
+                let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+                xla::Literal::vec1(data).reshape(&d)?
+            }
+            HostTensor::I32 { data, dims } => {
+                let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+                xla::Literal::vec1(data).reshape(&d)?
+            }
+        };
+        Ok(lit)
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            HostTensor::F32 { data, .. } => data,
+            _ => panic!("not an f32 tensor"),
+        }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { dims, .. } | HostTensor::I32 { dims, .. } => dims,
+        }
+    }
+}
+
+/// The runtime engine: one PJRT CPU client + an executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: HashMap<PathBuf, Executable>,
+}
+
+impl Engine {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact (cached per path).
+    pub fn load(&mut self, path: impl AsRef<Path>) -> Result<&Executable> {
+        let path = path.as_ref().to_path_buf();
+        if !self.cache.contains_key(&path) {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            let name = path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default();
+            self.cache.insert(path.clone(), Executable { exe, name });
+        }
+        Ok(&self.cache[&path])
+    }
+}
+
+impl Executable {
+    /// Execute with host inputs; returns the flattened f32 outputs of the
+    /// result tuple (artifacts are lowered with `return_tuple=True`).
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        let tuple = result.to_tuple()?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            out.push(lit.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}
+
+/// Default artifacts directory: `$SMASH_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("SMASH_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shape_checks() {
+        let t = HostTensor::f32(vec![1.0; 6], &[2, 3]);
+        assert_eq!(t.dims(), &[2, 3]);
+        assert_eq!(t.as_f32().len(), 6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn host_tensor_bad_shape() {
+        HostTensor::f32(vec![1.0; 5], &[2, 3]);
+    }
+
+    // Engine tests that need artifacts live in rust/tests/runtime_integration.rs
+}

@@ -1,0 +1,203 @@
+//! Set-associative L1 data-cache model: write-back, write-allocate, LRU,
+//! non-coherent — the PIUMA cache configuration of Table 4.2.
+
+/// Aggregate hit/miss statistics (Table 6.5's source).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub writebacks: u64,
+}
+
+impl CacheStats {
+    pub fn accesses(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Hit rate in percent.
+    pub fn hit_rate_pct(&self) -> f64 {
+        let total = self.accesses();
+        if total == 0 {
+            return 0.0;
+        }
+        100.0 * self.hits as f64 / total as f64
+    }
+
+    pub fn merge(&mut self, other: CacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.writebacks += other.writebacks;
+    }
+}
+
+#[derive(Clone, Copy, Default)]
+struct Way {
+    tag: u64,
+    valid: bool,
+    dirty: bool,
+    /// LRU stamp — larger = more recently used.
+    lru: u64,
+}
+
+/// The cache. Indexed by line number (address / line_size, computed by the
+/// caller so the model never needs the raw address).
+pub struct Cache {
+    sets: usize,
+    assoc: usize,
+    ways: Vec<Way>,
+    tick: u64,
+    stats: CacheStats,
+}
+
+impl Cache {
+    pub fn new(bytes: usize, assoc: usize, line: usize) -> Self {
+        let lines = (bytes / line).max(1);
+        let sets = (lines / assoc).max(1);
+        assert!(
+            sets.is_power_of_two(),
+            "cache sets must be a power of two (got {sets})"
+        );
+        Self {
+            sets,
+            assoc,
+            ways: vec![Way::default(); sets * assoc],
+            tick: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Access line number `lineno`. Returns `(hit, evicted_dirty_line)`.
+    /// Hand-rolled hit/victim scan — this sits on the simulator's
+    /// per-instruction hot path (EXPERIMENTS.md §Perf #5).
+    pub fn access(&mut self, lineno: u64, write: bool) -> (bool, Option<u64>) {
+        self.tick += 1;
+        let set = (lineno as usize) & (self.sets - 1);
+        let base = set * self.assoc;
+        let ways = &mut self.ways[base..base + self.assoc];
+
+        let mut victim_idx = 0usize;
+        let mut victim_lru = u64::MAX;
+        for (i, w) in ways.iter_mut().enumerate() {
+            if w.valid {
+                if w.tag == lineno {
+                    w.lru = self.tick;
+                    w.dirty |= write;
+                    self.stats.hits += 1;
+                    return (true, None);
+                }
+                if w.lru < victim_lru {
+                    victim_lru = w.lru;
+                    victim_idx = i;
+                }
+            } else if victim_lru > 0 {
+                // empty way wins over any valid way
+                victim_lru = 0;
+                victim_idx = i;
+            }
+        }
+        // miss: fill into the chosen way (write-allocate)
+        self.stats.misses += 1;
+        let victim = &mut ways[victim_idx];
+        let mut evicted = None;
+        if victim.valid && victim.dirty {
+            evicted = Some(victim.tag);
+            self.stats.writebacks += 1;
+        }
+        victim.tag = lineno;
+        victim.valid = true;
+        victim.dirty = write;
+        victim.lru = self.tick;
+        (false, evicted)
+    }
+
+    /// Invalidate everything without writeback (non-coherent caches must be
+    /// flushed explicitly by the programmer — §4.1.1.2).
+    pub fn invalidate_all(&mut self) {
+        for w in self.ways.iter_mut() {
+            *w = Way::default();
+        }
+    }
+
+    /// Write back and invalidate all dirty lines; returns how many lines
+    /// were written back (the caller meters the DRAM traffic).
+    pub fn flush_all(&mut self) -> u64 {
+        let mut wb = 0;
+        for w in self.ways.iter_mut() {
+            if w.valid && w.dirty {
+                wb += 1;
+                self.stats.writebacks += 1;
+            }
+            *w = Way::default();
+        }
+        wb
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn c() -> Cache {
+        Cache::new(1024, 2, 64) // 16 lines, 8 sets, 2-way
+    }
+
+    #[test]
+    fn hit_after_fill() {
+        let mut cache = c();
+        let (hit, _) = cache.access(5, false);
+        assert!(!hit);
+        let (hit, _) = cache.access(5, false);
+        assert!(hit);
+        assert_eq!(cache.stats().hits, 1);
+        assert_eq!(cache.stats().misses, 1);
+    }
+
+    #[test]
+    fn conflict_eviction_lru() {
+        let mut cache = c();
+        // lines 0, 8, 16 map to set 0 (8 sets) in a 2-way cache
+        cache.access(0, false);
+        cache.access(8, false);
+        cache.access(0, false); // refresh 0
+        cache.access(16, false); // evicts 8 (LRU)
+        let (hit0, _) = cache.access(0, false);
+        assert!(hit0);
+        let (hit8, _) = cache.access(8, false);
+        assert!(!hit8, "8 should have been evicted");
+    }
+
+    #[test]
+    fn dirty_eviction_reports_victim() {
+        let mut cache = c();
+        cache.access(0, true); // dirty
+        cache.access(8, false);
+        let (_, evicted) = cache.access(16, false); // evicts 0 (dirty, LRU)
+        assert_eq!(evicted, Some(0));
+        assert_eq!(cache.stats().writebacks, 1);
+    }
+
+    #[test]
+    fn flush_counts_dirty_lines() {
+        let mut cache = c();
+        cache.access(1, true);
+        cache.access(2, true);
+        cache.access(3, false);
+        assert_eq!(cache.flush_all(), 2);
+        let (hit, _) = cache.access(1, false);
+        assert!(!hit, "flush must invalidate");
+    }
+
+    #[test]
+    fn hit_rate_pct() {
+        let mut cache = c();
+        cache.access(0, false);
+        for _ in 0..9 {
+            cache.access(0, false);
+        }
+        assert!((cache.stats().hit_rate_pct() - 90.0).abs() < 1e-9);
+    }
+}

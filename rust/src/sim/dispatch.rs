@@ -1,0 +1,167 @@
+//! Work dispatch over simulated MTC threads.
+//!
+//! * [`run_static`] — V1's allocation (§5.1.2): work item *i* is bound to
+//!   thread `i % threads`, regardless of progress. Skewed items leave
+//!   threads idle at the closing barrier.
+//! * [`run_dynamic`] — V2/V3's tokenization (§5.2): a producer-consumer
+//!   token pool; the next token always goes to the thread with the
+//!   earliest local clock (deterministic list scheduling, which is exactly
+//!   what time-ordered polling converges to).
+//!
+//! Both record per-item busy spans for the utilization timelines and
+//! retire threads that run out of work so survivors speed up (round-robin
+//! issue slots are freed — §4.1.1.1).
+
+use super::{PhaseKind, Sim};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Execute `items` with V1 static round-robin binding. `f(sim, tid, idx)`
+/// performs item `idx` on thread `tid`, issuing simulated ops.
+pub fn run_static<F>(sim: &mut Sim, n_items: usize, kind: PhaseKind, mut f: F)
+where
+    F: FnMut(&mut Sim, usize, usize),
+{
+    let threads = sim.threads();
+    // Per-thread ordered work lists.
+    let mut queues: Vec<std::collections::VecDeque<usize>> =
+        vec![std::collections::VecDeque::new(); threads];
+    for i in 0..n_items {
+        queues[i % threads].push_back(i);
+    }
+    // Time-ordered execution so shared cache/DRAM state sees a realistic
+    // interleaving: always step the thread with the earliest clock.
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> = (0..threads)
+        .map(|t| Reverse((sim.now(t), t)))
+        .collect();
+    while let Some(Reverse((_, tid))) = heap.pop() {
+        let Some(item) = queues[tid].pop_front() else {
+            sim.retire(tid);
+            continue;
+        };
+        let start = sim.now(tid);
+        f(sim, tid, item);
+        sim.record_busy(tid, start, kind);
+        heap.push(Reverse((sim.now(tid), tid)));
+    }
+}
+
+/// Execute `items` with V2/V3 dynamic tokenization. Each poll costs
+/// `lat_token_poll`; the earliest-clock thread wins the next token.
+pub fn run_dynamic<F>(sim: &mut Sim, n_items: usize, kind: PhaseKind, mut f: F)
+where
+    F: FnMut(&mut Sim, usize, usize),
+{
+    let threads = sim.threads();
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> = (0..threads)
+        .map(|t| Reverse((sim.now(t), t)))
+        .collect();
+    let mut next_item = 0usize;
+    while let Some(Reverse((_, tid))) = heap.pop() {
+        if next_item >= n_items {
+            // one final failed poll tells the thread the pool is dry
+            sim.token_poll(tid);
+            sim.retire(tid);
+            continue;
+        }
+        let item = next_item;
+        next_item += 1;
+        sim.token_poll(tid);
+        let start = sim.now(tid);
+        f(sim, tid, item);
+        sim.record_busy(tid, start, kind);
+        heap.push(Reverse((sim.now(tid), tid)));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    /// Skewed work: item 0 is 100x heavier than the rest.
+    fn skewed_cost(item: usize) -> u64 {
+        if item == 0 {
+            10_000
+        } else {
+            100
+        }
+    }
+
+    fn run(dynamic: bool, n: usize) -> (u64, f64) {
+        let mut sim = Sim::new(SimConfig::test_tiny());
+        let body = |s: &mut Sim, tid: usize, item: usize| {
+            s.alu(tid, skewed_cost(item));
+        };
+        if dynamic {
+            run_dynamic(&mut sim, n, PhaseKind::Hash, body);
+        } else {
+            run_static(&mut sim, n, PhaseKind::Hash, body);
+        }
+        sim.barrier();
+        let horizon = sim.elapsed_cycles();
+        (horizon, sim.metrics.average_utilization(horizon))
+    }
+
+    #[test]
+    fn all_items_execute_exactly_once() {
+        let mut sim = Sim::new(SimConfig::test_tiny());
+        let mut seen = vec![0usize; 37];
+        run_dynamic(&mut sim, 37, PhaseKind::Hash, |s, tid, item| {
+            seen[item] += 1;
+            s.alu(tid, 1);
+        });
+        assert!(seen.iter().all(|c| *c == 1));
+        let mut sim2 = Sim::new(SimConfig::test_tiny());
+        let mut seen2 = vec![0usize; 37];
+        run_static(&mut sim2, 37, PhaseKind::Hash, |s, tid, item| {
+            seen2[item] += 1;
+            s.alu(tid, 1);
+        });
+        assert!(seen2.iter().all(|c| *c == 1));
+    }
+
+    #[test]
+    fn dynamic_beats_static_on_skew() {
+        let (t_static, u_static) = run(false, 64);
+        let (t_dyn, u_dyn) = run(true, 64);
+        assert!(
+            t_dyn < t_static,
+            "dynamic {t_dyn} should beat static {t_static}"
+        );
+        assert!(
+            u_dyn > u_static,
+            "dynamic util {u_dyn} should beat static {u_static}"
+        );
+    }
+
+    #[test]
+    fn static_binding_is_round_robin() {
+        let mut sim = Sim::new(SimConfig::test_tiny());
+        let threads = sim.threads();
+        let mut owner = vec![usize::MAX; 2 * threads];
+        run_static(&mut sim, 2 * threads, PhaseKind::Hash, |s, tid, item| {
+            owner[item] = tid;
+            s.alu(tid, 1);
+        });
+        for (i, &o) in owner.iter().enumerate() {
+            assert_eq!(o, i % threads);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let (a1, b1) = run(true, 64);
+        let (a2, b2) = run(true, 64);
+        assert_eq!(a1, a2);
+        assert_eq!(b1, b2);
+    }
+
+    #[test]
+    fn empty_work_is_fine() {
+        let mut sim = Sim::new(SimConfig::test_tiny());
+        run_dynamic(&mut sim, 0, PhaseKind::Hash, |_, _, _| panic!("no items"));
+        run_static(&mut sim, 0, PhaseKind::Hash, |_, _, _| panic!("no items"));
+        sim.barrier();
+    }
+}

@@ -1,0 +1,221 @@
+//! DRAM model: per-region byte metering + bandwidth backpressure.
+//!
+//! The thesis reports aggregated DRAM bandwidth demand (Table 6.4) and
+//! identifies DRAM bandwidth as *the* SpGEMM bottleneck (§6.3). We meter
+//! every transfer (line fills, writebacks, native 8-byte accesses, DMA) per
+//! logical region, and at each barrier check whether the demand since the
+//! previous barrier exceeded what the channel could deliver — if so, time
+//! stretches to the feasible minimum (the memory-bound regime).
+
+use crate::config::SimConfig;
+
+/// Logical traffic regions for attribution (Table 6.4 discussion: input
+/// reads vs hashtable traffic vs output writes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Region {
+    MatrixA,
+    MatrixB,
+    MatrixC,
+    /// V3's DRAM-resident tag-offset hashtable (§5.3).
+    HashTable,
+    /// Window staging buffers / token pool / misc runtime state.
+    Runtime,
+}
+
+impl Region {
+    pub const ALL: [Region; 5] = [
+        Region::MatrixA,
+        Region::MatrixB,
+        Region::MatrixC,
+        Region::HashTable,
+        Region::Runtime,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Region::MatrixA => "matrix A",
+            Region::MatrixB => "matrix B",
+            Region::MatrixC => "matrix C",
+            Region::HashTable => "hashtable",
+            Region::Runtime => "runtime",
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Range {
+    base: u64,
+    len: u64,
+    region: Region,
+}
+
+/// Byte counters per direction.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RegionTraffic {
+    pub read_bytes: u64,
+    pub write_bytes: u64,
+}
+
+pub struct DramModel {
+    ranges: Vec<Range>,
+    traffic: Vec<RegionTraffic>, // indexed by Region::ALL position
+    unattributed: RegionTraffic,
+    /// Bytes moved since the last backpressure checkpoint.
+    epoch_bytes: u64,
+    /// Cycle of the last checkpoint.
+    epoch_start: u64,
+    peak_bytes_per_cycle: f64,
+    total_bytes: u64,
+}
+
+impl DramModel {
+    pub fn new(cfg: &SimConfig) -> Self {
+        Self {
+            ranges: Vec::new(),
+            traffic: vec![RegionTraffic::default(); Region::ALL.len()],
+            unattributed: RegionTraffic::default(),
+            epoch_bytes: 0,
+            epoch_start: 0,
+            peak_bytes_per_cycle: cfg.dram_bytes_per_cycle(),
+            total_bytes: 0,
+        }
+    }
+
+    pub fn register(&mut self, base: u64, len: u64, region: Region) {
+        self.ranges.push(Range { base, len, region });
+    }
+
+    fn region_slot(&self, addr: u64) -> Option<usize> {
+        // linear scan is fine: few, large ranges
+        for r in &self.ranges {
+            if addr >= r.base && addr < r.base + r.len.max(1) {
+                return Region::ALL.iter().position(|x| *x == r.region);
+            }
+        }
+        None
+    }
+
+    /// Meter a foreground transfer.
+    pub fn transfer(&mut self, addr: u64, bytes: u64, write: bool) {
+        self.total_bytes += bytes;
+        self.epoch_bytes += bytes;
+        let slot = self.region_slot(addr);
+        let t = match slot {
+            Some(i) => &mut self.traffic[i],
+            None => &mut self.unattributed,
+        };
+        if write {
+            t.write_bytes += bytes;
+        } else {
+            t.read_bytes += bytes;
+        }
+    }
+
+    /// Meter a DMA/background transfer (no address — attributed to Runtime).
+    pub fn transfer_background(&mut self, bytes: u64, write: bool) {
+        self.total_bytes += bytes;
+        self.epoch_bytes += bytes;
+        let slot = Region::ALL.iter().position(|x| *x == Region::Runtime).unwrap();
+        if write {
+            self.traffic[slot].write_bytes += bytes;
+        } else {
+            self.traffic[slot].read_bytes += bytes;
+        }
+    }
+
+    /// At a barrier with release time `release`: if the epoch demand
+    /// exceeded channel capacity, return the stretched feasible release
+    /// time; otherwise `None`. Resets the epoch either way.
+    pub fn backpressure_release(&mut self, release: u64) -> Option<u64> {
+        let span = release.saturating_sub(self.epoch_start).max(1);
+        let feasible = (self.epoch_bytes as f64 / self.peak_bytes_per_cycle).ceil() as u64;
+        let out = if feasible > span {
+            Some(self.epoch_start + feasible)
+        } else {
+            None
+        };
+        self.epoch_start = out.unwrap_or(release);
+        self.epoch_bytes = 0;
+        out
+    }
+
+    /// Whole-run bandwidth utilization in [0,1].
+    pub fn utilization(&self, elapsed_cycles: u64, peak_bytes_per_cycle: f64) -> f64 {
+        if elapsed_cycles == 0 {
+            return 0.0;
+        }
+        (self.total_bytes as f64 / (elapsed_cycles as f64 * peak_bytes_per_cycle)).min(1.0)
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.total_bytes
+    }
+
+    /// Traffic per region (read, write) in bytes.
+    pub fn region_traffic(&self, region: Region) -> RegionTraffic {
+        let slot = Region::ALL.iter().position(|x| *x == region).unwrap();
+        self.traffic[slot]
+    }
+
+    pub fn unattributed(&self) -> RegionTraffic {
+        self.unattributed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    fn model() -> DramModel {
+        DramModel::new(&SimConfig::piuma_block())
+    }
+
+    #[test]
+    fn attribution() {
+        let mut d = model();
+        d.register(0x1000, 0x100, Region::MatrixA);
+        d.register(0x2000, 0x100, Region::MatrixC);
+        d.transfer(0x1010, 64, false);
+        d.transfer(0x2000, 8, true);
+        d.transfer(0x9999, 8, false); // unattributed
+        assert_eq!(d.region_traffic(Region::MatrixA).read_bytes, 64);
+        assert_eq!(d.region_traffic(Region::MatrixC).write_bytes, 8);
+        assert_eq!(d.unattributed().read_bytes, 8);
+        assert_eq!(d.total_bytes(), 80);
+    }
+
+    #[test]
+    fn backpressure_stretches_when_saturated() {
+        let mut d = model();
+        // demand far above what fits in 10 cycles
+        d.transfer_background(1_000_000, true);
+        let out = d.backpressure_release(10);
+        assert!(out.is_some());
+        assert!(out.unwrap() > 10);
+    }
+
+    #[test]
+    fn no_backpressure_when_light() {
+        let mut d = model();
+        d.transfer_background(8, true);
+        assert_eq!(d.backpressure_release(1_000_000), None);
+    }
+
+    #[test]
+    fn utilization_clamped() {
+        let mut d = model();
+        d.transfer_background(1 << 30, false);
+        assert_eq!(d.utilization(1, 1.0), 1.0);
+        assert_eq!(model().utilization(0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn epoch_resets() {
+        let mut d = model();
+        d.transfer_background(1_000_000, true);
+        let first = d.backpressure_release(10).unwrap();
+        // second epoch with no traffic: no stretch
+        assert_eq!(d.backpressure_release(first + 5), None);
+    }
+}

@@ -1,0 +1,226 @@
+//! Per-thread activity metrics: busy/idle spans, utilization timelines
+//! (Figs 6.1/6.2), average utilization (Fig 6.3), and utilization
+//! histograms (Fig 6.4).
+
+/// What a span of thread time was spent on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PhaseKind {
+    /// Executing window-distribution work.
+    Distribute,
+    /// Hashing partial products.
+    Hash,
+    /// Writing back to CSR.
+    WriteBack,
+    /// Waiting at a barrier.
+    Barrier,
+    /// Waiting on a DMA fence.
+    DmaWait,
+    /// Polling for tokens.
+    TokenWait,
+}
+
+impl PhaseKind {
+    pub fn is_idle(&self) -> bool {
+        matches!(
+            self,
+            PhaseKind::Barrier | PhaseKind::DmaWait | PhaseKind::TokenWait
+        )
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Span {
+    start: u64,
+    end: u64,
+    kind: PhaseKind,
+}
+
+/// Busy/idle spans for every thread of a block.
+pub struct BlockMetrics {
+    spans: Vec<Vec<Span>>,
+    sample_cycles: u64,
+}
+
+/// A sampled utilization timeline for one thread: `samples[i]` is the busy
+/// fraction of bucket i (each bucket covers `sample_cycles` cycles).
+#[derive(Clone, Debug)]
+pub struct ThreadTimeline {
+    pub tid: usize,
+    pub samples: Vec<f64>,
+    pub bucket_cycles: u64,
+}
+
+impl BlockMetrics {
+    pub fn new(threads: usize, sample_cycles: u64) -> Self {
+        Self {
+            spans: vec![Vec::new(); threads],
+            sample_cycles: sample_cycles.max(1),
+        }
+    }
+
+    pub fn record_busy(&mut self, tid: usize, start: u64, end: u64, kind: PhaseKind) {
+        debug_assert!(!kind.is_idle());
+        if end > start {
+            self.spans[tid].push(Span { start, end, kind });
+        }
+    }
+
+    pub fn record_idle(&mut self, tid: usize, start: u64, end: u64, kind: PhaseKind) {
+        debug_assert!(kind.is_idle());
+        if end > start {
+            self.spans[tid].push(Span { start, end, kind });
+        }
+    }
+
+    /// Total busy cycles of a thread.
+    pub fn busy_cycles(&self, tid: usize) -> u64 {
+        self.spans[tid]
+            .iter()
+            .filter(|s| !s.kind.is_idle())
+            .map(|s| s.end - s.start)
+            .sum()
+    }
+
+    /// Total recorded idle cycles of a thread.
+    pub fn idle_cycles(&self, tid: usize) -> u64 {
+        self.spans[tid]
+            .iter()
+            .filter(|s| s.kind.is_idle())
+            .map(|s| s.end - s.start)
+            .sum()
+    }
+
+    /// Busy cycles spent in a particular phase kind, summed over threads.
+    pub fn phase_cycles(&self, kind: PhaseKind) -> u64 {
+        self.spans
+            .iter()
+            .flatten()
+            .filter(|s| s.kind == kind)
+            .map(|s| s.end - s.start)
+            .sum()
+    }
+
+    /// Thread utilization over `[0, horizon)`: busy / horizon.
+    pub fn utilization(&self, tid: usize, horizon: u64) -> f64 {
+        if horizon == 0 {
+            return 0.0;
+        }
+        (self.busy_cycles(tid) as f64 / horizon as f64).min(1.0)
+    }
+
+    /// Average utilization across all threads (Fig 6.3).
+    pub fn average_utilization(&self, horizon: u64) -> f64 {
+        let n = self.spans.len().max(1);
+        (0..n).map(|t| self.utilization(t, horizon)).sum::<f64>() / n as f64
+    }
+
+    /// Per-thread sampled timeline (Figs 6.1 / 6.2). Buckets cover
+    /// `[0, horizon)` in `sample_cycles` steps.
+    pub fn timeline(&self, tid: usize, horizon: u64) -> ThreadTimeline {
+        let bucket = self.sample_cycles;
+        let nbuckets = horizon.div_ceil(bucket).max(1) as usize;
+        let mut samples = vec![0.0f64; nbuckets];
+        for s in self.spans[tid].iter().filter(|s| !s.kind.is_idle()) {
+            let (mut a, b) = (s.start, s.end.min(horizon));
+            while a < b {
+                let idx = (a / bucket) as usize;
+                let bucket_end = (idx as u64 + 1) * bucket;
+                let chunk = b.min(bucket_end) - a;
+                samples[idx] += chunk as f64 / bucket as f64;
+                a += chunk;
+            }
+        }
+        for v in samples.iter_mut() {
+            *v = v.min(1.0);
+        }
+        ThreadTimeline {
+            tid,
+            samples,
+            bucket_cycles: bucket,
+        }
+    }
+
+    /// Histogram of per-thread utilization (Fig 6.4): `bins` equal-width
+    /// buckets over [0,1]; returns counts.
+    pub fn utilization_histogram(&self, horizon: u64, bins: usize) -> Vec<usize> {
+        let mut hist = vec![0usize; bins];
+        for t in 0..self.spans.len() {
+            let u = self.utilization(t, horizon);
+            let b = ((u * bins as f64) as usize).min(bins - 1);
+            hist[b] += 1;
+        }
+        hist
+    }
+
+    pub fn threads(&self) -> usize {
+        self.spans.len()
+    }
+
+    /// Raw (start, end, kind) spans of one thread — debugging/figures.
+    pub fn spans_of(&self, tid: usize) -> Vec<(u64, u64, PhaseKind)> {
+        self.spans[tid]
+            .iter()
+            .map(|s| (s.start, s.end, s.kind))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn busy_idle_accounting() {
+        let mut m = BlockMetrics::new(2, 10);
+        m.record_busy(0, 0, 50, PhaseKind::Hash);
+        m.record_idle(0, 50, 100, PhaseKind::Barrier);
+        m.record_busy(1, 0, 100, PhaseKind::Hash);
+        assert_eq!(m.busy_cycles(0), 50);
+        assert_eq!(m.idle_cycles(0), 50);
+        assert_eq!(m.utilization(0, 100), 0.5);
+        assert_eq!(m.utilization(1, 100), 1.0);
+        assert_eq!(m.average_utilization(100), 0.75);
+    }
+
+    #[test]
+    fn timeline_buckets() {
+        let mut m = BlockMetrics::new(1, 10);
+        m.record_busy(0, 0, 15, PhaseKind::Hash); // bucket0 full, bucket1 half
+        let tl = m.timeline(0, 30);
+        assert_eq!(tl.samples.len(), 3);
+        assert!((tl.samples[0] - 1.0).abs() < 1e-9);
+        assert!((tl.samples[1] - 0.5).abs() < 1e-9);
+        assert_eq!(tl.samples[2], 0.0);
+    }
+
+    #[test]
+    fn histogram() {
+        let mut m = BlockMetrics::new(4, 10);
+        m.record_busy(0, 0, 100, PhaseKind::Hash); // 1.0
+        m.record_busy(1, 0, 10, PhaseKind::Hash); // 0.1
+        // threads 2,3 idle -> 0.0
+        let h = m.utilization_histogram(100, 10);
+        assert_eq!(h.iter().sum::<usize>(), 4);
+        assert_eq!(h[9], 1); // the fully-busy thread
+        assert_eq!(h[1], 1); // the 10% thread
+        assert_eq!(h[0], 2); // both idle threads
+    }
+
+    #[test]
+    fn phase_cycles_filter() {
+        let mut m = BlockMetrics::new(1, 10);
+        m.record_busy(0, 0, 30, PhaseKind::Hash);
+        m.record_busy(0, 30, 40, PhaseKind::WriteBack);
+        assert_eq!(m.phase_cycles(PhaseKind::Hash), 30);
+        assert_eq!(m.phase_cycles(PhaseKind::WriteBack), 10);
+    }
+
+    #[test]
+    fn overlapping_horizon_clamps() {
+        let mut m = BlockMetrics::new(1, 10);
+        m.record_busy(0, 0, 1000, PhaseKind::Hash);
+        let tl = m.timeline(0, 100);
+        assert_eq!(tl.samples.len(), 10);
+        assert!(tl.samples.iter().all(|v| (*v - 1.0).abs() < 1e-9));
+    }
+}

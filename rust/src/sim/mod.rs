@@ -1,0 +1,568 @@
+//! PIUMA-like architecture simulator (thesis Ch. 4).
+//!
+//! Execution-driven, functional-first, **interval-style timing** — the same
+//! fidelity class as the modified Sniper simulator the thesis uses (§4.2).
+//! Kernels execute natively in Rust for functional correctness; every
+//! simulated instruction is issued through the [`Sim`] API, which advances
+//! the issuing thread's local cycle clock through the timing model:
+//!
+//! * **MTC issue sharing** — 16 threads round-robin on a single-issue
+//!   pipeline: each instruction charges `active-threads-on-MTC` cycles of
+//!   thread-local time (the round-robin period). Memory latency beyond the
+//!   issue slot is charged to the thread but overlaps with other threads'
+//!   issue, exactly the §4.1.1 latency-hiding argument.
+//! * **Caches** — per-MTC L1 (16 KB, 4-way, 64 B lines, write-back
+//!   write-allocate, non-coherent). SPAD and explicitly-uncached DRAM
+//!   accesses bypass the L1 (PIUMA's native 8-byte accesses, §4.1.3).
+//! * **DRAM** — bytes metered per logical region; bandwidth backpressure
+//!   applied at barrier points; utilization reported per Table 6.4.
+//! * **DMA engine** — background descriptors progressing at a configured
+//!   share of DRAM bandwidth (§4.1.2.1); fences advance thread clocks.
+//! * **Collective engine** — barriers advance all threads to the max and
+//!   record per-thread idle gaps, which produce the Fig 6.1–6.4
+//!   utilization timelines.
+//!
+//! Determinism: no wall clock, no host threads. The kernels' dynamic token
+//! dispatch is simulated by always giving the next token to the thread with
+//! the earliest local clock (see [`dispatch`]), so the same inputs always
+//! produce the same cycle counts — golden tests rely on this.
+
+pub mod cache;
+pub mod dispatch;
+pub mod dma;
+pub mod dram;
+pub mod metrics;
+pub mod spad;
+pub mod trace;
+
+pub use cache::{Cache, CacheStats};
+pub use dispatch::{run_dynamic, run_static};
+pub use dma::{DmaEngine, DmaTicket};
+pub use dram::{DramModel, Region};
+pub use metrics::{BlockMetrics, PhaseKind, ThreadTimeline};
+pub use spad::SpadModel;
+pub use trace::{replay, read_trace, write_trace, TraceEvent, TraceKind};
+
+use crate::config::SimConfig;
+
+/// Simulated address — indexes the timing model only; functional data
+/// lives in ordinary Rust containers.
+pub type Addr = u64;
+
+/// One simulated block: MTC threads + STCs + SPAD + L1s + DRAM port +
+/// DMA engine + collective engine.
+pub struct Sim {
+    pub cfg: SimConfig,
+    /// Per-thread local clocks (cycles).
+    clock: Vec<u64>,
+    /// Per-thread issued-instruction counters.
+    instr: Vec<u64>,
+    /// Per-thread "active" flags (finished threads stop consuming issue slots).
+    active: Vec<bool>,
+    /// Cached round-robin period per MTC (= its active-thread count),
+    /// updated on retire/rearm — `issue_period` is on the per-instruction
+    /// hot path and must not rescan the flags.
+    period: Vec<u64>,
+    /// Per-MTC L1 data caches (shared by that MTC's threads).
+    caches: Vec<Cache>,
+    pub dram: DramModel,
+    pub spad: SpadModel,
+    pub dma: DmaEngine,
+    pub metrics: BlockMetrics,
+    /// Bump allocators.
+    next_dram: Addr,
+    next_spad: Addr,
+    /// Optional instruction trace (cfg.trace; see [`trace`]).
+    trace_buf: Option<Vec<TraceEvent>>,
+}
+
+impl Sim {
+    pub fn new(cfg: SimConfig) -> Self {
+        let threads = cfg.threads_per_block();
+        let caches = (0..cfg.mtc_per_block)
+            .map(|_| Cache::new(cfg.l1_bytes, cfg.l1_assoc, cfg.l1_line))
+            .collect();
+        Self {
+            clock: vec![0; threads],
+            instr: vec![0; threads],
+            active: vec![true; threads],
+            period: vec![cfg.threads_per_mtc as u64; cfg.mtc_per_block],
+            caches,
+            dram: DramModel::new(&cfg),
+            spad: SpadModel::new(&cfg),
+            dma: DmaEngine::new(&cfg),
+            metrics: BlockMetrics::new(threads, cfg.timeline_sample_cycles),
+            next_dram: 0x1000_0000,
+            next_spad: 0,
+            trace_buf: if cfg.trace { Some(Vec::new()) } else { None },
+            cfg,
+        }
+    }
+
+    /// Total MTC threads.
+    #[inline]
+    pub fn threads(&self) -> usize {
+        self.clock.len()
+    }
+
+    /// MTC index owning thread `tid`.
+    #[inline]
+    pub fn mtc_of(&self, tid: usize) -> usize {
+        tid / self.cfg.threads_per_mtc
+    }
+
+    /// Runnable threads currently sharing `tid`'s MTC pipeline — the
+    /// round-robin issue period charged per instruction (cached; see
+    /// [`Self::retire`] / [`Self::rearm`]).
+    #[inline]
+    fn issue_period(&self, tid: usize) -> u64 {
+        self.period[tid / self.cfg.threads_per_mtc].max(1)
+    }
+
+    #[inline]
+    pub fn now(&self, tid: usize) -> u64 {
+        self.clock[tid]
+    }
+
+    #[inline]
+    fn tr(&mut self, tid: usize, kind: TraceKind, arg: u64, aux: u32) {
+        if let Some(buf) = self.trace_buf.as_mut() {
+            buf.push(TraceEvent {
+                tid: tid as u32,
+                kind,
+                arg,
+                aux,
+            });
+        }
+    }
+
+    /// Take the captured trace (None when tracing was disabled).
+    pub fn take_trace(&mut self) -> Option<Vec<TraceEvent>> {
+        self.trace_buf.take()
+    }
+
+    /// Charge `n` single-cycle ALU/control instructions to `tid`.
+    #[inline]
+    pub fn alu(&mut self, tid: usize, n: u64) {
+        self.tr(tid, TraceKind::Alu, n, 0);
+        let period = self.issue_period(tid);
+        self.clock[tid] += n * period * self.cfg.lat_alu;
+        self.instr[tid] += n;
+    }
+
+    // ---- bump allocation of the simulated address space ----
+
+    /// Allocate `bytes` of DRAM tagged with a traffic `region`.
+    pub fn alloc_dram(&mut self, bytes: u64, region: Region) -> Addr {
+        let base = self.next_dram;
+        self.next_dram += crate::util::round_up(bytes.max(8) as usize, 64) as u64;
+        self.dram.register(base, bytes, region);
+        base
+    }
+
+    /// Allocate SPAD memory (panics when over capacity — the kernels size
+    /// windows so this never happens, mirroring the real constraint).
+    pub fn alloc_spad(&mut self, bytes: u64) -> Addr {
+        let base = self.next_spad;
+        self.next_spad += crate::util::round_up(bytes.max(8) as usize, 8) as u64;
+        assert!(
+            self.next_spad <= self.cfg.spad_bytes as u64,
+            "SPAD overflow: {} > {}",
+            self.next_spad,
+            self.cfg.spad_bytes
+        );
+        base
+    }
+
+    /// Release all SPAD allocations (between windows).
+    pub fn reset_spad(&mut self) {
+        self.next_spad = 0;
+    }
+
+    /// SPAD bytes currently allocated.
+    pub fn spad_used(&self) -> u64 {
+        self.next_spad
+    }
+
+    // ---- memory operations ----
+
+    /// Cached load of `bytes` starting at `addr` (DRAM via L1).
+    pub fn load(&mut self, tid: usize, addr: Addr, bytes: u64) {
+        self.tr(tid, TraceKind::Load, addr, bytes as u32);
+        self.mem_access(tid, addr, bytes, false);
+    }
+
+    /// Cached store (write-allocate).
+    pub fn store(&mut self, tid: usize, addr: Addr, bytes: u64) {
+        self.tr(tid, TraceKind::Store, addr, bytes as u32);
+        self.mem_access(tid, addr, bytes, true);
+    }
+
+    fn mem_access(&mut self, tid: usize, addr: Addr, bytes: u64, write: bool) {
+        let period = self.issue_period(tid);
+        let mtc = self.mtc_of(tid);
+        let line = self.cfg.l1_line as u64;
+        let first = addr / line;
+        let last = (addr + bytes.max(1) - 1) / line;
+        // fast path: the overwhelmingly common single-line access
+        if first == last {
+            self.line_access(tid, mtc, first, line, write, period);
+            return;
+        }
+        for l in first..=last {
+            self.line_access(tid, mtc, l, line, write, period);
+        }
+    }
+
+    #[inline]
+    fn line_access(&mut self, tid: usize, mtc: usize, l: u64, line: u64, write: bool, period: u64) {
+        self.instr[tid] += 1;
+        let (hit, writeback) = self.caches[mtc].access(l, write);
+        if hit {
+            self.clock[tid] += period.max(self.cfg.lat_l1_hit);
+        } else {
+            // line fill from DRAM
+            self.dram.transfer(l * line, line, false);
+            self.clock[tid] += period + self.cfg.lat_dram;
+        }
+        if let Some(victim) = writeback {
+            // dirty eviction: write the victim line back
+            self.dram.transfer(victim * line, line, true);
+        }
+    }
+
+    /// Uncached native 8-byte DRAM load (PIUMA §4.1.3) — no line fill.
+    pub fn load_native8(&mut self, tid: usize, addr: Addr) {
+        self.tr(tid, TraceKind::LoadNative8, addr, 8);
+        let period = self.issue_period(tid);
+        self.instr[tid] += 1;
+        self.dram.transfer(addr, 8, false);
+        self.clock[tid] += period + self.cfg.lat_dram;
+    }
+
+    /// Uncached native 8-byte DRAM store (posted write: bandwidth is
+    /// accounted, latency absorbed by the write buffer).
+    pub fn store_native8(&mut self, tid: usize, addr: Addr) {
+        self.tr(tid, TraceKind::StoreNative8, addr, 8);
+        let period = self.issue_period(tid);
+        self.instr[tid] += 1;
+        self.dram.transfer(addr, 8, true);
+        self.clock[tid] += period;
+    }
+
+    /// SPAD load/store (explicitly managed, bypasses L1).
+    pub fn spad_access(&mut self, tid: usize, _addr: Addr, bytes: u64) {
+        self.tr(tid, TraceKind::SpadAccess, _addr, bytes as u32);
+        let period = self.issue_period(tid);
+        let words = bytes.div_ceil(8).max(1);
+        self.instr[tid] += words;
+        self.clock[tid] += words * (period.max(self.cfg.lat_spad));
+        self.spad.note_access(bytes);
+    }
+
+    /// Atomic compare-exchange or fetch-add on a SPAD word. Two costs:
+    /// queueing at the block's serializing atomic unit, and per-line
+    /// conflict penalties from the recency table in [`SpadModel`].
+    pub fn atomic_spad(&mut self, tid: usize, addr: Addr) {
+        self.tr(tid, TraceKind::AtomicSpad, addr, 0);
+        let period = self.issue_period(tid);
+        self.instr[tid] += 1;
+        let now = self.clock[tid];
+        let extra = self
+            .spad
+            .atomic_conflict_penalty(addr, now, self.cfg.lat_atomic_contention);
+        self.clock[tid] += period + self.cfg.lat_atomic_spad + extra;
+    }
+
+    /// Blocking atomic op on DRAM (result needed by the issuing thread).
+    pub fn atomic_dram(&mut self, tid: usize, addr: Addr) {
+        self.tr(tid, TraceKind::AtomicDram, addr, 0);
+        let period = self.issue_period(tid);
+        self.instr[tid] += 1;
+        let now = self.clock[tid];
+        let extra = self.spad.atomic_conflict_penalty(
+            addr ^ 0x8000_0000_0000_0000,
+            now,
+            self.cfg.lat_atomic_contention,
+        );
+        self.dram.transfer(addr, 8, true);
+        self.clock[tid] += period + self.cfg.lat_atomic_dram + extra;
+    }
+
+    /// Posted near-memory atomic on DRAM — executed by the PIM modules
+    /// (Table 3.1: "In-memory computation using PIM modules"); the thread
+    /// only enqueues the network instruction (§4.1.2.2) and continues. The
+    /// read-modify-write costs DRAM bandwidth (16 B), which the barrier
+    /// backpressure converts into time when the channel saturates.
+    pub fn atomic_dram_posted(&mut self, tid: usize, addr: Addr) {
+        self.tr(tid, TraceKind::AtomicDramPosted, addr, 0);
+        let period = self.issue_period(tid);
+        self.instr[tid] += 1;
+        self.dram.transfer(addr, 8, true);
+        self.clock[tid] += period + self.cfg.lat_atomic_spad;
+    }
+
+    /// Remote atomic via network instruction (§4.1.2.2): used when the
+    /// target SPAD belongs to another block.
+    pub fn remote_atomic(&mut self, tid: usize, addr: Addr) {
+        self.tr(tid, TraceKind::RemoteAtomic, addr, 0);
+        let period = self.issue_period(tid);
+        self.instr[tid] += 1;
+        let now = self.clock[tid];
+        let extra = self
+            .spad
+            .atomic_conflict_penalty(addr, now, self.cfg.lat_atomic_contention);
+        self.clock[tid] +=
+            period + 2 * self.cfg.lat_remote_packet + self.cfg.lat_atomic_spad + extra;
+    }
+
+    /// Poll the token pool (producer-consumer scheduling, §5.2).
+    pub fn token_poll(&mut self, tid: usize) {
+        self.tr(tid, TraceKind::TokenPoll, 0, 0);
+        let period = self.issue_period(tid);
+        self.instr[tid] += 1;
+        self.clock[tid] += period + self.cfg.lat_token_poll;
+    }
+
+    // ---- DMA ----
+
+    /// Enqueue an asynchronous DMA copy of `bytes` (SPAD→DRAM or DRAM→SPAD
+    /// — both traverse the DRAM port). Returns a ticket for fencing.
+    pub fn dma_copy(&mut self, tid: usize, bytes: u64, write: bool) -> DmaTicket {
+        self.tr(tid, TraceKind::DmaCopy, bytes, write as u32);
+        let period = self.issue_period(tid);
+        self.instr[tid] += 1;
+        self.clock[tid] += period; // descriptor enqueue cost only
+        let bpc = self.cfg.dram_bytes_per_cycle() * self.cfg.dma_bw_share;
+        let ticket = self.dma.enqueue(self.clock[tid], bytes, bpc);
+        self.dram.transfer_background(bytes, write);
+        ticket
+    }
+
+    /// Block until a DMA ticket completes (advance thread clock if needed).
+    pub fn dma_fence(&mut self, tid: usize, ticket: DmaTicket) {
+        self.tr(tid, TraceKind::DmaFence, ticket.index() as u64, 0);
+        let done = self.dma.completion(ticket);
+        if done > self.clock[tid] {
+            let now = self.clock[tid];
+            self.metrics.record_idle(tid, now, done, PhaseKind::DmaWait);
+            self.clock[tid] = done;
+        }
+    }
+
+    // ---- synchronization / phases ----
+
+    /// System-wide barrier over all MTC threads (collective engine §4.1.2):
+    /// every thread advances to `max(clock) + lat_barrier`; idle gaps are
+    /// recorded for the utilization timelines.
+    pub fn barrier(&mut self) {
+        self.tr(0, TraceKind::Barrier, 0, 0);
+        let max = *self.clock.iter().max().unwrap();
+        let release = max + self.cfg.lat_barrier;
+        for tid in 0..self.threads() {
+            let now = self.clock[tid];
+            if release > now + self.cfg.lat_barrier {
+                self.metrics
+                    .record_idle(tid, now, release, PhaseKind::Barrier);
+            }
+            self.clock[tid] = release;
+        }
+        // Apply resource backpressure accumulated during the phase: if
+        // DRAM-bandwidth or SPAD-atomic-unit demand exceeded throughput,
+        // stretch all clocks to the feasible time (memory-/atomic-bound
+        // regime).
+        let s1 = self.dram.backpressure_release(release);
+        let s2 = self.spad.backpressure_release(release);
+        let stretched = s1.max(s2);
+        if let Some(stretched) = stretched {
+            if stretched > release {
+                for tid in 0..self.threads() {
+                    self.clock[tid] = stretched;
+                }
+            }
+        }
+        self.rearm();
+    }
+
+    /// Mark a thread finished for the remainder of the phase (stops
+    /// consuming issue slots; remaining co-resident threads speed up).
+    pub fn retire(&mut self, tid: usize) {
+        self.tr(tid, TraceKind::Retire, 0, 0);
+        if self.active[tid] {
+            self.active[tid] = false;
+            self.period[tid / self.cfg.threads_per_mtc] -= 1;
+        }
+    }
+
+    /// Re-arm all threads (start of a new phase).
+    pub fn rearm(&mut self) {
+        for a in self.active.iter_mut() {
+            *a = true;
+        }
+        self.period.fill(self.cfg.threads_per_mtc as u64);
+    }
+
+    /// Record a busy span for `tid` that started at `start` and ends at its
+    /// current clock.
+    pub fn record_busy(&mut self, tid: usize, start: u64, kind: PhaseKind) {
+        let end = self.clock[tid];
+        self.metrics.record_busy(tid, start, end, kind);
+    }
+
+    // ---- results ----
+
+    /// Makespan: max thread clock (cycles).
+    pub fn elapsed_cycles(&self) -> u64 {
+        *self.clock.iter().max().unwrap()
+    }
+
+    /// Aggregate IPC over the whole run (Eq. 6.3).
+    pub fn aggregate_ipc(&self) -> f64 {
+        let total: u64 = self.instr.iter().sum();
+        let cycles = self.elapsed_cycles().max(1);
+        total as f64 / cycles as f64
+    }
+
+    /// Total instructions issued.
+    pub fn total_instructions(&self) -> u64 {
+        self.instr.iter().sum()
+    }
+
+    /// Combined L1 statistics over all MTC caches.
+    pub fn cache_stats(&self) -> CacheStats {
+        let mut s = CacheStats::default();
+        for c in &self.caches {
+            s.merge(c.stats());
+        }
+        s
+    }
+
+    /// DRAM bandwidth utilization in [0,1]: bytes moved / (peak × time).
+    pub fn dram_utilization(&self) -> f64 {
+        self.dram
+            .utilization(self.elapsed_cycles(), self.cfg.dram_bytes_per_cycle())
+    }
+
+    /// Achieved DRAM bandwidth in GB/s.
+    pub fn dram_gbs(&self) -> f64 {
+        self.dram_utilization() * self.cfg.dram_peak_gbs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim() -> Sim {
+        Sim::new(SimConfig::test_tiny())
+    }
+
+    #[test]
+    fn alu_advances_clock_and_instr() {
+        let mut s = sim();
+        s.alu(0, 10);
+        // period = 4 active threads on MTC0 in test_tiny
+        assert_eq!(s.now(0), 40);
+        assert_eq!(s.total_instructions(), 10);
+        assert_eq!(s.now(1), 0);
+    }
+
+    #[test]
+    fn retire_speeds_up_survivors() {
+        let mut s = sim();
+        for t in 1..4 {
+            s.retire(t);
+        }
+        s.alu(0, 10);
+        assert_eq!(s.now(0), 10); // alone on the pipeline
+    }
+
+    #[test]
+    fn cached_load_hits_after_fill() {
+        let mut s = sim();
+        s.load(0, 0x1000, 8);
+        let miss_time = s.now(0);
+        assert!(miss_time > s.cfg.lat_dram);
+        s.load(0, 0x1008, 8); // same 64B line
+        let hit_delta = s.now(0) - miss_time;
+        assert!(hit_delta < s.cfg.lat_dram / 2, "expected hit, {hit_delta}");
+        let cs = s.cache_stats();
+        assert_eq!(cs.hits + cs.misses, 2);
+        assert_eq!(cs.hits, 1);
+    }
+
+    #[test]
+    fn barrier_aligns_clocks_and_records_idle() {
+        let mut s = sim();
+        s.alu(0, 100);
+        s.barrier();
+        let t = s.now(0);
+        assert!(s.now(1) == t && s.now(7) == t);
+        let idle: u64 = s.metrics.idle_cycles(1);
+        assert!(idle > 0, "laggard threads must log barrier idle time");
+        assert_eq!(s.metrics.idle_cycles(0), 0);
+    }
+
+    #[test]
+    fn spad_alloc_and_overflow() {
+        let mut s = sim();
+        let a = s.alloc_spad(1024);
+        let b = s.alloc_spad(1024);
+        assert!(b >= a + 1024);
+        s.reset_spad();
+        assert_eq!(s.alloc_spad(8), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "SPAD overflow")]
+    fn spad_overflow_panics() {
+        let mut s = sim();
+        s.alloc_spad(s.cfg.spad_bytes as u64 + 1);
+    }
+
+    #[test]
+    fn dma_fence_waits() {
+        let mut s = sim();
+        let t = s.dma_copy(0, 1_000_000, true);
+        let before = s.now(0);
+        s.dma_fence(0, t);
+        assert!(s.now(0) > before, "fence should advance the clock");
+    }
+
+    #[test]
+    fn dram_utilization_bounded() {
+        let mut s = sim();
+        for i in 0..200 {
+            s.load_native8(0, 0x2000 + i * 8);
+        }
+        s.barrier();
+        let u = s.dram_utilization();
+        assert!((0.0..=1.0).contains(&u), "u={u}");
+        assert!(u > 0.0);
+    }
+
+    #[test]
+    fn ipc_sane() {
+        let mut s = sim();
+        for tid in 0..s.threads() {
+            s.alu(tid, 1000);
+        }
+        s.barrier();
+        let ipc = s.aggregate_ipc();
+        // 8 threads on 2 MTCs, pure ALU: ideal aggregate IPC ≈ 2
+        assert!(ipc > 1.5 && ipc <= 2.0, "ipc={ipc}");
+    }
+
+    #[test]
+    fn atomic_contention_costs_more() {
+        let mut s = sim();
+        // two threads hammer the same SPAD word at the same sim time
+        s.atomic_spad(0, 0x100);
+        s.atomic_spad(1, 0x100);
+        let contended = s.now(1);
+        let mut s2 = sim();
+        s2.atomic_spad(0, 0x100);
+        s2.atomic_spad(1, 0x900); // different line
+        assert!(contended > s2.now(1));
+    }
+}

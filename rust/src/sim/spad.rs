@@ -1,0 +1,152 @@
+//! Scratchpad model: byte metering plus a per-line recency table used to
+//! estimate atomic contention (hashtable hotspots — §7.2 notes hotspots as
+//! a known SMASH failure mode, so the model must charge for them).
+
+use crate::config::SimConfig;
+
+pub struct SpadModel {
+    bytes_accessed: u64,
+    atomics: u64,
+    conflicts: u64,
+    /// Open-addressed recency table: (line, last_cycle). Two atomics on the
+    /// same line within `window` cycles count as a conflict (serialized).
+    recency: Vec<(u64, u64)>,
+    mask: usize,
+    /// Conflict window in cycles.
+    window: u64,
+    /// The scratchpad's atomic unit is a shared serializing resource: it
+    /// retires one atomic every `service` cycles block-wide (fractional —
+    /// the SPAD is banked). All-thread hammering (the V1/V2 hashing phase)
+    /// is throughput-limited here — the ceiling that motivates V3's
+    /// plain-store dense arrays (§5.3). Accounted per barrier epoch, like
+    /// DRAM bandwidth.
+    service: f64,
+    epoch_atomics: u64,
+    epoch_start: u64,
+    /// Total cycles added by atomic-unit backpressure (reporting).
+    queued_cycles: u64,
+}
+
+impl SpadModel {
+    pub fn new(cfg: &SimConfig) -> Self {
+        let slots = 1usize << 14;
+        Self {
+            bytes_accessed: 0,
+            atomics: 0,
+            conflicts: 0,
+            recency: vec![(u64::MAX, 0); slots],
+            mask: slots - 1,
+            window: cfg.lat_atomic_spad * 4,
+            service: cfg.spad_atomic_service,
+            epoch_atomics: 0,
+            epoch_start: 0,
+            queued_cycles: 0,
+        }
+    }
+
+    /// Epoch backpressure: at a barrier releasing at `release`, if the
+    /// epoch's atomic demand exceeded the unit's throughput, return the
+    /// stretched feasible release. Resets the epoch either way.
+    pub fn backpressure_release(&mut self, release: u64) -> Option<u64> {
+        let span = release.saturating_sub(self.epoch_start).max(1);
+        let feasible = (self.epoch_atomics as f64 * self.service).ceil() as u64;
+        let out = if feasible > span {
+            self.queued_cycles += feasible - span;
+            Some(self.epoch_start + feasible)
+        } else {
+            None
+        };
+        self.epoch_start = out.unwrap_or(release);
+        self.epoch_atomics = 0;
+        out
+    }
+
+    /// Total cycles added by atomic-unit backpressure.
+    pub fn queued_cycles(&self) -> u64 {
+        self.queued_cycles
+    }
+
+    pub fn note_access(&mut self, bytes: u64) {
+        self.bytes_accessed += bytes;
+    }
+
+    /// Record an atomic on `addr` at time `now`; returns the extra
+    /// serialization penalty (0 when uncontended).
+    pub fn atomic_conflict_penalty(&mut self, addr: u64, now: u64, penalty: u64) -> u64 {
+        self.atomics += 1;
+        self.epoch_atomics += 1;
+        let line = addr / 8;
+        let slot = (crate::util::prng::mix64(line) as usize) & self.mask;
+        let (prev_line, prev_time) = self.recency[slot];
+        self.recency[slot] = (line, now);
+        if prev_line == line && now.saturating_sub(prev_time) < self.window {
+            self.conflicts += 1;
+            penalty
+        } else {
+            0
+        }
+    }
+
+    pub fn atomics(&self) -> u64 {
+        self.atomics
+    }
+
+    pub fn conflicts(&self) -> u64 {
+        self.conflicts
+    }
+
+    /// Fraction of atomics that serialized against a recent op on the same
+    /// word.
+    pub fn conflict_rate(&self) -> f64 {
+        if self.atomics == 0 {
+            return 0.0;
+        }
+        self.conflicts as f64 / self.atomics as f64
+    }
+
+    pub fn bytes_accessed(&self) -> u64 {
+        self.bytes_accessed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    fn spad() -> SpadModel {
+        SpadModel::new(&SimConfig::piuma_block())
+    }
+
+    #[test]
+    fn conflict_same_word_close_in_time() {
+        let mut s = spad();
+        assert_eq!(s.atomic_conflict_penalty(0x40, 100, 8), 0);
+        assert_eq!(s.atomic_conflict_penalty(0x40, 102, 8), 8);
+        assert_eq!(s.conflicts(), 1);
+    }
+
+    #[test]
+    fn no_conflict_when_far_apart() {
+        let mut s = spad();
+        assert_eq!(s.atomic_conflict_penalty(0x40, 0, 8), 0);
+        assert_eq!(s.atomic_conflict_penalty(0x40, 10_000, 8), 0);
+    }
+
+    #[test]
+    fn no_conflict_different_words() {
+        let mut s = spad();
+        assert_eq!(s.atomic_conflict_penalty(0x40, 100, 8), 0);
+        assert_eq!(s.atomic_conflict_penalty(0x48, 101, 8), 0);
+        assert_eq!(s.conflict_rate(), 0.0);
+    }
+
+    #[test]
+    fn counters() {
+        let mut s = spad();
+        s.note_access(64);
+        s.atomic_conflict_penalty(0, 0, 8);
+        assert_eq!(s.bytes_accessed(), 64);
+        assert_eq!(s.atomics(), 1);
+    }
+}

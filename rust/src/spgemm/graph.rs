@@ -1,0 +1,174 @@
+//! Graph algorithms built on semiring SpGEMM — the applications of
+//! §1.3/§1.4 (path-finding, BFS, graph analysis) expressed as the linear
+//! algebra the thesis targets.
+
+use super::semiring::{ewise_add, spgemm_semiring, Boolean, MinPlus};
+use crate::formats::{Csr, Value};
+
+/// Multi-source BFS levels via repeated boolean SpMV (frontier × Aᵀ).
+/// Returns `levels[v] = hops from the nearest source` (usize::MAX if
+/// unreachable).
+pub fn bfs_levels(adj: &Csr, sources: &[usize]) -> Vec<usize> {
+    let n = adj.rows;
+    let mut levels = vec![usize::MAX; n];
+    let mut frontier: Vec<usize> = Vec::new();
+    for &s in sources {
+        assert!(s < n);
+        levels[s] = 0;
+        frontier.push(s);
+    }
+    let mut depth = 0usize;
+    while !frontier.is_empty() {
+        depth += 1;
+        let mut next = Vec::new();
+        for &u in &frontier {
+            let (cols, _) = adj.row(u);
+            for &v in cols {
+                let v = v as usize;
+                if levels[v] == usize::MAX {
+                    levels[v] = depth;
+                    next.push(v);
+                }
+            }
+        }
+        frontier = next;
+    }
+    levels
+}
+
+/// All-pairs shortest paths by tropical matrix squaring:
+/// `D_{2k} = D_k ⊗ D_k (min,+)`, log₂(n) rounds. O(n³ log n) worst case —
+/// for the small graphs of the examples/tests.
+pub fn apsp_minplus(adj: &Csr, rounds: u32) -> Csr {
+    // D₁ = A ⊕ I(0 diagonal) under min-plus
+    let mut with_diag: Vec<(usize, usize, Value)> = (0..adj.rows).map(|i| (i, i, 0.0)).collect();
+    for r in 0..adj.rows {
+        let (cols, vals) = adj.row(r);
+        for (c, v) in cols.iter().zip(vals) {
+            if r != *c as usize {
+                with_diag.push((r, *c as usize, *v));
+            }
+        }
+    }
+    // min-merge duplicates by construction: from_triplets sums, so build
+    // manually via semiring ewise instead
+    let mut d = Csr::from_triplets(adj.rows, adj.cols, vec![]);
+    for (r, c, v) in with_diag {
+        let single = Csr::from_triplets(adj.rows, adj.cols, vec![(r, c, v)]);
+        d = ewise_add(&d, &single, MinPlus);
+    }
+    for _ in 0..rounds {
+        let sq = spgemm_semiring(&d, &d, MinPlus);
+        d = ewise_add(&d, &sq, MinPlus);
+    }
+    d
+}
+
+/// Transitive closure via boolean squaring (reachability matrix).
+pub fn transitive_closure(adj: &Csr) -> Csr {
+    let mut reach = Csr {
+        data: adj.data.iter().map(|_| 1.0).collect(),
+        ..adj.clone()
+    };
+    let rounds = crate::util::ilog2_ceil(adj.rows as u64) + 1;
+    for _ in 0..rounds {
+        let sq = spgemm_semiring(&reach, &reach, Boolean);
+        let next = ewise_add(&reach, &sq, Boolean);
+        if next.approx_same(&reach) {
+            break;
+        }
+        reach = next;
+    }
+    reach
+}
+
+/// Triangle count of a simple undirected graph: tr(A³)/6 via one SpGEMM
+/// plus a masked dot with A.
+pub fn triangles(adj: &Csr) -> u64 {
+    let a2 = spgemm_semiring(adj, adj, super::semiring::Arithmetic);
+    let mut trace = 0.0;
+    for i in 0..a2.rows {
+        let (cols, vals) = a2.row(i);
+        for (j, v) in cols.iter().zip(vals) {
+            let (bc, bv) = adj.row(*j as usize);
+            if let Ok(pos) = bc.binary_search(&(i as u32)) {
+                trace += v * bv[pos];
+            }
+        }
+    }
+    (trace / 6.0).round() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Undirected path graph 0-1-2-3.
+    fn path4() -> Csr {
+        Csr::from_triplets(
+            4,
+            4,
+            vec![
+                (0, 1, 1.0),
+                (1, 0, 1.0),
+                (1, 2, 1.0),
+                (2, 1, 1.0),
+                (2, 3, 1.0),
+                (3, 2, 1.0),
+            ],
+        )
+    }
+
+    #[test]
+    fn bfs_on_path() {
+        let levels = bfs_levels(&path4(), &[0]);
+        assert_eq!(levels, vec![0, 1, 2, 3]);
+        let multi = bfs_levels(&path4(), &[0, 3]);
+        assert_eq!(multi, vec![0, 1, 1, 0]);
+    }
+
+    #[test]
+    fn bfs_unreachable() {
+        let a = Csr::from_triplets(3, 3, vec![(0, 1, 1.0)]);
+        let levels = bfs_levels(&a, &[0]);
+        assert_eq!(levels[2], usize::MAX);
+    }
+
+    #[test]
+    fn apsp_on_weighted_path() {
+        // 0 -2-> 1 -3-> 2
+        let a = Csr::from_triplets(3, 3, vec![(0, 1, 2.0), (1, 2, 3.0)]);
+        let d = apsp_minplus(&a, 2);
+        let (cols, vals) = d.row(0);
+        let pos = cols.iter().position(|&c| c == 2).unwrap();
+        assert_eq!(vals[pos], 5.0);
+        // diagonal is 0
+        let dpos = cols.iter().position(|&c| c == 0).unwrap();
+        assert_eq!(vals[dpos], 0.0);
+    }
+
+    #[test]
+    fn closure_of_cycle_is_complete() {
+        // directed 3-cycle: closure reaches everything
+        let a = Csr::from_triplets(3, 3, vec![(0, 1, 1.0), (1, 2, 1.0), (2, 0, 1.0)]);
+        let c = transitive_closure(&a);
+        assert_eq!(c.nnz(), 9);
+    }
+
+    #[test]
+    fn triangle_of_k3() {
+        // complete graph on 3 vertices has exactly one triangle
+        let mut tr = vec![];
+        for i in 0..3usize {
+            for j in 0..3usize {
+                if i != j {
+                    tr.push((i, j, 1.0));
+                }
+            }
+        }
+        let k3 = Csr::from_triplets(3, 3, tr);
+        assert_eq!(triangles(&k3), 1);
+        // path graph has none
+        assert_eq!(triangles(&path4()), 0);
+    }
+}

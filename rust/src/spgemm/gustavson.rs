@@ -1,0 +1,179 @@
+//! Gustavson's row-wise SpGEMM (1978) with a dense accumulator — the
+//! correctness oracle — plus the two-step symbolic pass the thesis uses for
+//! output-size estimation and window planning (§5.1.1, "Gustafson's
+//! algorithm", i.e. Gustavson's two fast algorithms paper).
+
+use super::Traffic;
+use crate::formats::{Csr, Index, Value};
+
+/// FMA count per row of C = A·B: `flops[i] = Σ_{k ∈ A[i,:]} nnz(B[k,:])`.
+/// This is the §5.1.1 window-planning pass — O(nnz(A)).
+pub fn flops_per_row(a: &Csr, b: &Csr) -> Vec<u64> {
+    assert_eq!(a.cols, b.rows, "dimension mismatch");
+    (0..a.rows)
+        .map(|i| {
+            let (cols, _) = a.row(i);
+            cols.iter().map(|&k| b.row_nnz(k as usize) as u64).sum()
+        })
+        .collect()
+}
+
+/// Total FMAs of the multiplication (the `flop` of Eq. 6.2).
+pub fn total_flops(a: &Csr, b: &Csr) -> u64 {
+    flops_per_row(a, b).iter().sum()
+}
+
+/// Exact nnz of each output row (symbolic phase) — O(flops) with a
+/// visited-stamp array, no allocation per row.
+pub fn symbolic_row_nnz(a: &Csr, b: &Csr) -> Vec<usize> {
+    assert_eq!(a.cols, b.rows, "dimension mismatch");
+    let mut stamp = vec![u32::MAX; b.cols];
+    let mut out = vec![0usize; a.rows];
+    for i in 0..a.rows {
+        let tag = i as u32;
+        let (acols, _) = a.row(i);
+        let mut count = 0usize;
+        for &k in acols {
+            let (bcols, _) = b.row(k as usize);
+            for &j in bcols {
+                if stamp[j as usize] != tag {
+                    stamp[j as usize] = tag;
+                    count += 1;
+                }
+            }
+        }
+        out[i] = count;
+    }
+    out
+}
+
+/// Gustavson numeric SpGEMM with a dense accumulator per row. Returns the
+/// canonical (sorted, merged) CSR product and its traffic profile.
+pub fn gustavson(a: &Csr, b: &Csr) -> (Csr, Traffic) {
+    assert_eq!(a.cols, b.rows, "dimension mismatch");
+    let mut t = Traffic::default();
+
+    // Symbolic: exact row sizes -> exact allocation (thesis §5.1.1 step 1).
+    let row_nnz = symbolic_row_nnz(a, b);
+    let nnz_total: usize = row_nnz.iter().sum();
+    let mut row_ptr = Vec::with_capacity(a.rows + 1);
+    row_ptr.push(0usize);
+    for &n in &row_nnz {
+        row_ptr.push(row_ptr.last().unwrap() + n);
+    }
+
+    let mut col_idx = vec![0 as Index; nnz_total];
+    let mut data = vec![0.0 as Value; nnz_total];
+
+    // Numeric with dense accumulator + touched-list.
+    let mut acc = vec![0.0 as Value; b.cols];
+    let mut touched: Vec<Index> = Vec::with_capacity(256);
+    let mut present = vec![false; b.cols];
+    for i in 0..a.rows {
+        let (acols, avals) = a.row(i);
+        for (&k, &av) in acols.iter().zip(avals) {
+            t.a_reads += 1;
+            let (bcols, bvals) = b.row(k as usize);
+            t.b_reads += bcols.len() as u64;
+            for (&j, &bv) in bcols.iter().zip(bvals) {
+                let ju = j as usize;
+                if !present[ju] {
+                    present[ju] = true;
+                    touched.push(j);
+                }
+                acc[ju] += av * bv;
+                t.flops += 1;
+            }
+        }
+        touched.sort_unstable();
+        let base = row_ptr[i];
+        for (slot, &j) in touched.iter().enumerate() {
+            col_idx[base + slot] = j;
+            data[base + slot] = acc[j as usize];
+            acc[j as usize] = 0.0;
+            present[j as usize] = false;
+            t.c_writes += 1;
+        }
+        touched.clear();
+    }
+
+    let c = Csr {
+        rows: a.rows,
+        cols: b.cols,
+        row_ptr,
+        col_idx,
+        data,
+    };
+    debug_assert!(c.validate().is_ok());
+    (c, t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Dense;
+    use crate::gen::{erdos_renyi, rmat, RmatParams};
+
+    fn dense_oracle(a: &Csr, b: &Csr) -> Dense {
+        a.to_dense().matmul(&b.to_dense())
+    }
+
+    #[test]
+    fn matches_dense_small() {
+        let a = Csr::from_triplets(3, 3, vec![(0, 0, 2.0), (0, 2, 1.0), (2, 1, 3.0)]);
+        let b = Csr::from_triplets(3, 2, vec![(0, 1, 4.0), (1, 0, 5.0), (2, 1, 6.0)]);
+        let (c, t) = gustavson(&a, &b);
+        assert!(c.to_dense().approx_same(&dense_oracle(&a, &b)));
+        assert_eq!(t.flops, 3); // 2 from row0 (b rows 0 and 2), 1 from row2
+        assert_eq!(t.c_writes, c.nnz() as u64);
+    }
+
+    #[test]
+    fn matches_dense_random() {
+        for seed in 0..5 {
+            let a = erdos_renyi(40, 200, seed);
+            let b = erdos_renyi(40, 200, seed + 100);
+            let (c, _) = gustavson(&a, &b);
+            assert!(
+                c.to_dense().approx_same(&dense_oracle(&a, &b)),
+                "seed {seed}"
+            );
+        }
+    }
+
+    #[test]
+    fn symbolic_matches_numeric() {
+        let a = rmat(&RmatParams::new(7, 600, 5));
+        let b = rmat(&RmatParams::new(7, 600, 6));
+        let sym = symbolic_row_nnz(&a, &b);
+        let (c, _) = gustavson(&a, &b);
+        for i in 0..a.rows {
+            assert_eq!(sym[i], c.row_nnz(i), "row {i}");
+        }
+    }
+
+    #[test]
+    fn flops_counts() {
+        let a = Csr::from_triplets(2, 2, vec![(0, 0, 1.0), (0, 1, 1.0), (1, 1, 1.0)]);
+        let b = Csr::from_triplets(2, 2, vec![(0, 0, 1.0), (1, 0, 1.0), (1, 1, 1.0)]);
+        // row0 of A hits B rows 0 (1 nnz) and 1 (2 nnz) => 3; row1 hits B row 1 => 2
+        assert_eq!(flops_per_row(&a, &b), vec![3, 2]);
+        assert_eq!(total_flops(&a, &b), 5);
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let a = rmat(&RmatParams::new(6, 200, 9));
+        let i = Csr::identity(a.cols);
+        let (c, _) = gustavson(&a, &i);
+        assert!(c.approx_same(&a));
+    }
+
+    #[test]
+    fn empty_matrices() {
+        let z = Csr::zero(4, 4);
+        let (c, t) = gustavson(&z, &z);
+        assert_eq!(c.nnz(), 0);
+        assert_eq!(t.flops, 0);
+    }
+}

@@ -1,0 +1,96 @@
+//! Inner-product dataflow (Eq. 1.1): `C[i][j] = Σ_k A[i][k] · B[k][j]`.
+//!
+//! Requires B column-access → we pre-build CSC (counted as one full read of
+//! B for the format conversion, matching the thesis' point that inner/outer
+//! need opposite storage formats). Exhibits poor input reuse: row i of A is
+//! re-walked for every column j with any structural overlap.
+
+use super::Traffic;
+use crate::formats::{Csc, Csr};
+
+/// Multiply via sorted-merge dot products of A-rows with B-columns.
+pub fn inner_product(a: &Csr, b: &Csr) -> (Csr, Traffic) {
+    assert_eq!(a.cols, b.rows, "dimension mismatch");
+    let mut t = Traffic::default();
+
+    // Format conversion: one full pass over B.
+    let bc = Csc::from_csr(b);
+    t.b_reads += b.nnz() as u64;
+
+    let mut triplets = Vec::new();
+    for i in 0..a.rows {
+        let (acols, avals) = a.row(i);
+        if acols.is_empty() {
+            continue;
+        }
+        for j in 0..bc.cols {
+            let (brows, bvals) = bc.col(j);
+            if brows.is_empty() {
+                continue;
+            }
+            // Sorted-merge dot product; count every element touched.
+            let (mut x, mut y) = (0usize, 0usize);
+            let mut acc = 0.0;
+            let mut any = false;
+            while x < acols.len() && y < brows.len() {
+                t.a_reads += 1;
+                t.b_reads += 1;
+                match acols[x].cmp(&brows[y]) {
+                    std::cmp::Ordering::Less => x += 1,
+                    std::cmp::Ordering::Greater => y += 1,
+                    std::cmp::Ordering::Equal => {
+                        acc += avals[x] * bvals[y];
+                        t.flops += 1;
+                        any = true;
+                        x += 1;
+                        y += 1;
+                    }
+                }
+            }
+            if any {
+                triplets.push((i, j, acc));
+                t.c_writes += 1;
+            }
+        }
+    }
+    // Inner product has no intermediate partial-product storage.
+    t.intermediate_peak = 0;
+    (Csr::from_triplets(a.rows, b.cols, triplets), t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::erdos_renyi;
+    use crate::spgemm::gustavson;
+
+    #[test]
+    fn matches_oracle() {
+        let a = erdos_renyi(30, 120, 1);
+        let b = erdos_renyi(30, 120, 2);
+        let (c, _) = inner_product(&a, &b);
+        let (o, _) = gustavson(&a, &b);
+        assert!(c.approx_same(&o));
+    }
+
+    #[test]
+    fn redundant_reads_dominate() {
+        let a = erdos_renyi(64, 512, 3);
+        let b = erdos_renyi(64, 512, 4);
+        let (_, t) = inner_product(&a, &b);
+        // Poor input reuse: many more reads than nnz
+        assert!(t.a_reads > 4 * a.nnz() as u64);
+        assert_eq!(t.intermediate_writes, 0);
+    }
+
+    /// Structural overlap that cancels numerically must still emit an
+    /// explicit entry (matches Gustavson's behaviour).
+    #[test]
+    fn keeps_numeric_zeros() {
+        let a = Csr::from_triplets(1, 2, vec![(0, 0, 1.0), (0, 1, -1.0)]);
+        let b = Csr::from_triplets(2, 1, vec![(0, 0, 1.0), (1, 0, 1.0)]);
+        let (c, _) = inner_product(&a, &b);
+        let (o, _) = gustavson(&a, &b);
+        assert_eq!(c.nnz(), o.nnz());
+    }
+}

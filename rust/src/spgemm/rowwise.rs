@@ -1,0 +1,207 @@
+//! Row-wise product dataflow (Eq. 1.3) — SMASH's dataflow, in two CPU
+//! baseline flavours: heap-merge (Nagasaka-style) and hashtable-merge
+//! (the algorithmic core of SMASH, minus the architecture).
+
+use super::Traffic;
+use crate::formats::{Csr, Index, Value};
+use std::collections::BinaryHeap;
+
+/// Row-wise with a k-way heap merge over the scaled B-rows of one A-row.
+pub fn rowwise_heap(a: &Csr, b: &Csr) -> (Csr, Traffic) {
+    assert_eq!(a.cols, b.rows, "dimension mismatch");
+    let mut t = Traffic::default();
+    let mut triplets: Vec<(usize, usize, Value)> = Vec::new();
+
+    // (Reverse ordering wrapper for a min-heap over (col, stream) pairs.)
+    #[derive(PartialEq, Eq)]
+    struct Item {
+        col: Index,
+        stream: usize,
+    }
+    impl Ord for Item {
+        fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+            o.col.cmp(&self.col).then(o.stream.cmp(&self.stream))
+        }
+    }
+    impl PartialOrd for Item {
+        fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(o))
+        }
+    }
+
+    for i in 0..a.rows {
+        let (acols, avals) = a.row(i);
+        if acols.is_empty() {
+            continue;
+        }
+        t.a_reads += acols.len() as u64;
+        // One cursor per contributing B-row stream.
+        let streams: Vec<(&[Index], &[Value], Value)> = acols
+            .iter()
+            .zip(avals)
+            .map(|(&k, &av)| {
+                let (bc, bv) = b.row(k as usize);
+                t.b_reads += bc.len() as u64;
+                (bc, bv, av)
+            })
+            .collect();
+        let mut cursors = vec![0usize; streams.len()];
+        let mut heap = BinaryHeap::new();
+        let mut live = 0u64;
+        for (s, (bc, _, _)) in streams.iter().enumerate() {
+            if !bc.is_empty() {
+                heap.push(Item { col: bc[0], stream: s });
+                live += 1;
+            }
+        }
+        t.intermediate_peak = t.intermediate_peak.max(live);
+        let mut cur_col: Option<Index> = None;
+        let mut acc = 0.0;
+        while let Some(Item { col, stream }) = heap.pop() {
+            let (bc, bv, av) = streams[stream];
+            if Some(col) != cur_col {
+                if let Some(c) = cur_col {
+                    triplets.push((i, c as usize, acc));
+                    t.c_writes += 1;
+                }
+                cur_col = Some(col);
+                acc = 0.0;
+            }
+            acc += av * bv[cursors[stream]];
+            t.flops += 1;
+            cursors[stream] += 1;
+            if cursors[stream] < bc.len() {
+                heap.push(Item {
+                    col: bc[cursors[stream]],
+                    stream,
+                });
+            }
+        }
+        if let Some(c) = cur_col {
+            triplets.push((i, c as usize, acc));
+            t.c_writes += 1;
+        }
+    }
+    (Csr::from_triplets(a.rows, b.cols, triplets), t)
+}
+
+/// Row-wise with a per-row hashtable accumulator (open addressing, linear
+/// probing) — the software analogue of the SMASH SPAD hashtable.
+pub fn rowwise_hash(a: &Csr, b: &Csr) -> (Csr, Traffic) {
+    assert_eq!(a.cols, b.rows, "dimension mismatch");
+    let mut t = Traffic::default();
+    let mut triplets: Vec<(usize, usize, Value)> = Vec::new();
+
+    const EMPTY: Index = Index::MAX;
+    // Table reused across rows; sized to the max row FLOPs upper bound.
+    let mut cap = 16usize;
+    let mut tags: Vec<Index> = vec![EMPTY; cap];
+    let mut vals: Vec<Value> = vec![0.0; cap];
+
+    for i in 0..a.rows {
+        let (acols, avals) = a.row(i);
+        if acols.is_empty() {
+            continue;
+        }
+        t.a_reads += acols.len() as u64;
+        let upper: usize = acols
+            .iter()
+            .map(|&k| b.row_nnz(k as usize))
+            .sum::<usize>()
+            .max(1);
+        let want = (upper * 2).next_power_of_two();
+        if want > cap {
+            cap = want;
+            tags = vec![EMPTY; cap];
+            vals = vec![0.0; cap];
+        }
+        let mask = cap - 1;
+        let mut used: Vec<usize> = Vec::with_capacity(upper.min(cap));
+        for (&k, &av) in acols.iter().zip(avals) {
+            let (bc, bv) = b.row(k as usize);
+            t.b_reads += bc.len() as u64;
+            for (&j, &bvv) in bc.iter().zip(bv) {
+                // low-order-bit hash (SMASH V2 choice, §5.2)
+                let mut slot = (j as usize) & mask;
+                loop {
+                    if tags[slot] == EMPTY {
+                        tags[slot] = j;
+                        vals[slot] = av * bvv;
+                        used.push(slot);
+                        break;
+                    } else if tags[slot] == j {
+                        vals[slot] += av * bvv;
+                        break;
+                    }
+                    slot = (slot + 1) & mask; // hashtable walk (Fig 5.2)
+                }
+                t.flops += 1;
+            }
+        }
+        t.intermediate_peak = t.intermediate_peak.max(used.len() as u64);
+        for &slot in &used {
+            triplets.push((i, tags[slot] as usize, vals[slot]));
+            t.c_writes += 1;
+            tags[slot] = EMPTY;
+            vals[slot] = 0.0;
+        }
+    }
+    (Csr::from_triplets(a.rows, b.cols, triplets), t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{banded, erdos_renyi, rmat, RmatParams};
+    use crate::spgemm::gustavson;
+
+    #[test]
+    fn heap_matches_oracle() {
+        for seed in 0..4 {
+            let a = rmat(&RmatParams::new(6, 250, seed));
+            let b = rmat(&RmatParams::new(6, 250, seed + 10));
+            let (c, _) = rowwise_heap(&a, &b);
+            let (o, _) = gustavson(&a, &b);
+            assert!(c.approx_same(&o), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn hash_matches_oracle() {
+        for seed in 0..4 {
+            let a = erdos_renyi(48, 300, seed);
+            let b = erdos_renyi(48, 300, seed + 10);
+            let (c, _) = rowwise_hash(&a, &b);
+            let (o, _) = gustavson(&a, &b);
+            assert!(c.approx_same(&o), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn hash_handles_banded() {
+        let a = banded(32, 2, 1);
+        let (c, _) = rowwise_hash(&a, &a);
+        let (o, _) = gustavson(&a, &a);
+        assert!(c.approx_same(&o));
+    }
+
+    #[test]
+    fn small_intermediates() {
+        let a = erdos_renyi(64, 600, 3);
+        let b = erdos_renyi(64, 600, 4);
+        let (_, th) = rowwise_hash(&a, &b);
+        let (_, to) = crate::spgemm::outer_product(&a, &b);
+        // row-wise peak intermediate is one row's worth; outer's is global
+        assert!(th.intermediate_peak < to.intermediate_peak / 4);
+    }
+
+    #[test]
+    fn single_element() {
+        let a = Csr::from_triplets(1, 1, vec![(0, 0, 3.0)]);
+        let (c, t) = rowwise_hash(&a, &a);
+        assert_eq!(c.row(0).1, &[9.0]);
+        assert_eq!(t.flops, 1);
+        let (c2, _) = rowwise_heap(&a, &a);
+        assert_eq!(c2.row(0).1, &[9.0]);
+    }
+}

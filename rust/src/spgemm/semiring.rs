@@ -1,0 +1,293 @@
+//! Semiring-generic SpGEMM — the GraphBLAS direction the thesis names as
+//! future work (§7.2: "explore other linear algebra subroutines
+//! (GraphBLAS)"). A semiring ⟨⊕, ⊗, 0̄, 1̄⟩ swaps the (+,×) of numeric
+//! SpGEMM for algebraic structures that turn matrix products into graph
+//! algorithms:
+//!
+//! * arithmetic (+,×)      — numeric SpGEMM (the SMASH kernels);
+//! * boolean (∨,∧)         — reachability / transitive closure steps;
+//! * tropical (min,+)      — single-source/all-pairs shortest-path steps;
+//! * max-times (max,×)     — most-reliable-path steps.
+//!
+//! The row-wise product dataflow is unchanged — only the merge operator
+//! differs — which is exactly why SMASH generalizes to GraphBLAS.
+
+use crate::formats::{Csr, Index, Value};
+
+/// A semiring over `Value` (f64). `add` must be commutative+associative
+/// with identity `zero`; `mul` distributes over `add` with identity `one`
+/// and annihilator `zero`.
+pub trait Semiring: Copy {
+    const NAME: &'static str;
+    fn zero(&self) -> Value;
+    fn one(&self) -> Value;
+    fn add(&self, a: Value, b: Value) -> Value;
+    fn mul(&self, a: Value, b: Value) -> Value;
+}
+
+/// Standard arithmetic (+,×,0,1).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Arithmetic;
+
+impl Semiring for Arithmetic {
+    const NAME: &'static str = "arithmetic(+,*)";
+    fn zero(&self) -> Value {
+        0.0
+    }
+    fn one(&self) -> Value {
+        1.0
+    }
+    fn add(&self, a: Value, b: Value) -> Value {
+        a + b
+    }
+    fn mul(&self, a: Value, b: Value) -> Value {
+        a * b
+    }
+}
+
+/// Boolean (∨,∧) over {0,1}.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Boolean;
+
+impl Semiring for Boolean {
+    const NAME: &'static str = "boolean(or,and)";
+    fn zero(&self) -> Value {
+        0.0
+    }
+    fn one(&self) -> Value {
+        1.0
+    }
+    fn add(&self, a: Value, b: Value) -> Value {
+        if a != 0.0 || b != 0.0 {
+            1.0
+        } else {
+            0.0
+        }
+    }
+    fn mul(&self, a: Value, b: Value) -> Value {
+        if a != 0.0 && b != 0.0 {
+            1.0
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Tropical / min-plus (min,+,∞,0) — shortest paths.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MinPlus;
+
+impl Semiring for MinPlus {
+    const NAME: &'static str = "tropical(min,+)";
+    fn zero(&self) -> Value {
+        f64::INFINITY
+    }
+    fn one(&self) -> Value {
+        0.0
+    }
+    fn add(&self, a: Value, b: Value) -> Value {
+        a.min(b)
+    }
+    fn mul(&self, a: Value, b: Value) -> Value {
+        a + b
+    }
+}
+
+/// Max-times (max,×,0,1) — most-reliable path (probabilities).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MaxTimes;
+
+impl Semiring for MaxTimes {
+    const NAME: &'static str = "max-times";
+    fn zero(&self) -> Value {
+        0.0
+    }
+    fn one(&self) -> Value {
+        1.0
+    }
+    fn add(&self, a: Value, b: Value) -> Value {
+        a.max(b)
+    }
+    fn mul(&self, a: Value, b: Value) -> Value {
+        a * b
+    }
+}
+
+/// Gustavson row-wise SpGEMM over an arbitrary semiring. Entries equal to
+/// the semiring zero are dropped from the output (they are structurally
+/// absent by definition).
+pub fn spgemm_semiring<S: Semiring>(a: &Csr, b: &Csr, s: S) -> Csr {
+    assert_eq!(a.cols, b.rows, "dimension mismatch");
+    let zero = s.zero();
+    let mut acc: Vec<Value> = vec![zero; b.cols];
+    let mut present = vec![false; b.cols];
+    let mut touched: Vec<Index> = Vec::new();
+
+    let mut row_ptr = Vec::with_capacity(a.rows + 1);
+    let mut col_idx: Vec<Index> = Vec::new();
+    let mut data: Vec<Value> = Vec::new();
+    row_ptr.push(0usize);
+
+    for i in 0..a.rows {
+        let (acols, avals) = a.row(i);
+        for (&k, &av) in acols.iter().zip(avals) {
+            let (bcols, bvals) = b.row(k as usize);
+            for (&j, &bv) in bcols.iter().zip(bvals) {
+                let ju = j as usize;
+                let prod = s.mul(av, bv);
+                if !present[ju] {
+                    present[ju] = true;
+                    touched.push(j);
+                    acc[ju] = prod;
+                } else {
+                    acc[ju] = s.add(acc[ju], prod);
+                }
+            }
+        }
+        touched.sort_unstable();
+        for &j in &touched {
+            let v = acc[j as usize];
+            if v != zero {
+                col_idx.push(j);
+                data.push(v);
+            }
+            acc[j as usize] = zero;
+            present[j as usize] = false;
+        }
+        touched.clear();
+        row_ptr.push(col_idx.len());
+    }
+    Csr {
+        rows: a.rows,
+        cols: b.cols,
+        row_ptr,
+        col_idx,
+        data,
+    }
+}
+
+/// Element-wise ⊕ of two sparse matrices under a semiring (GraphBLAS
+/// `eWiseAdd`).
+pub fn ewise_add<S: Semiring>(a: &Csr, b: &Csr, s: S) -> Csr {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    let mut triplets: Vec<(usize, usize, Value)> = Vec::new();
+    for r in 0..a.rows {
+        let (ac, av) = a.row(r);
+        let (bc, bv) = b.row(r);
+        let (mut x, mut y) = (0usize, 0usize);
+        while x < ac.len() || y < bc.len() {
+            let take_a = y >= bc.len() || (x < ac.len() && ac[x] <= bc[y]);
+            let take_b = x >= ac.len() || (y < bc.len() && bc[y] <= ac[x]);
+            if take_a && take_b && ac[x] == bc[y] {
+                let v = s.add(av[x], bv[y]);
+                if v != s.zero() {
+                    triplets.push((r, ac[x] as usize, v));
+                }
+                x += 1;
+                y += 1;
+            } else if take_a {
+                triplets.push((r, ac[x] as usize, av[x]));
+                x += 1;
+            } else {
+                triplets.push((r, bc[y] as usize, bv[y]));
+                y += 1;
+            }
+        }
+    }
+    Csr::from_triplets(a.rows, a.cols, triplets)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::erdos_renyi;
+    use crate::spgemm::gustavson;
+    use crate::util::quick::forall;
+
+    #[test]
+    fn arithmetic_matches_gustavson() {
+        let a = erdos_renyi(40, 200, 1);
+        let b = erdos_renyi(40, 200, 2);
+        let c = spgemm_semiring(&a, &b, Arithmetic);
+        let (oracle, _) = gustavson(&a, &b);
+        // semiring version drops exact zeros; prune oracle the same way
+        assert!(c.approx_same(&oracle.prune_zeros()));
+    }
+
+    #[test]
+    fn boolean_is_reachability() {
+        // path graph 0->1->2: A² (boolean) must contain exactly 0->2
+        let a = Csr::from_triplets(3, 3, vec![(0, 1, 1.0), (1, 2, 1.0)]);
+        let c = spgemm_semiring(&a, &a, Boolean);
+        assert_eq!(c.nnz(), 1);
+        assert_eq!(c.row(0).0, &[2]);
+        assert_eq!(c.row(0).1, &[1.0]);
+    }
+
+    #[test]
+    fn minplus_is_shortest_path_step() {
+        // 0->1 (w=2), 1->2 (w=3), 0->2 (w=10): (A⊗A)[0][2] = 5
+        let inf = f64::INFINITY;
+        let a = Csr::from_triplets(
+            3,
+            3,
+            vec![(0, 1, 2.0), (1, 2, 3.0), (0, 2, 10.0)],
+        );
+        let c = spgemm_semiring(&a, &a, MinPlus);
+        let (cols, vals) = c.row(0);
+        let pos = cols.iter().position(|&c| c == 2).unwrap();
+        assert_eq!(vals[pos], 5.0);
+        assert!(vals.iter().all(|v| *v < inf));
+    }
+
+    #[test]
+    fn maxtimes_most_reliable() {
+        // two paths 0->2: direct p=0.3, via 1 p=0.8*0.9=0.72 -> max 0.72
+        let a = Csr::from_triplets(
+            3,
+            3,
+            vec![(0, 1, 0.8), (1, 2, 0.9), (0, 2, 0.3)],
+        );
+        let c = spgemm_semiring(&a, &a, MaxTimes);
+        let (cols, vals) = c.row(0);
+        let pos = cols.iter().position(|&c| c == 2).unwrap();
+        assert!((vals[pos] - 0.72).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ewise_add_union() {
+        let a = Csr::from_triplets(2, 2, vec![(0, 0, 1.0), (0, 1, 2.0)]);
+        let b = Csr::from_triplets(2, 2, vec![(0, 1, 3.0), (1, 0, 4.0)]);
+        let c = ewise_add(&a, &b, Arithmetic);
+        assert_eq!(c.nnz(), 3);
+        assert_eq!(c.row(0).1, &[1.0, 5.0]);
+        assert_eq!(c.row(1).1, &[4.0]);
+    }
+
+    #[test]
+    fn prop_boolean_closure_idempotent() {
+        forall(12, |g| {
+            let n = g.usize_in(2, 24);
+            let mut a = erdos_renyi(n, g.usize_in(1, n * 2), g.u64());
+            // booleanize
+            a = Csr {
+                data: a.data.iter().map(|_| 1.0).collect(),
+                ..a
+            };
+            // closure: keep squaring+unioning until fixpoint; must converge
+            // within ceil(log2(n)) + 1 steps
+            let mut reach = a.clone();
+            for _ in 0..(crate::util::ilog2_ceil(n as u64) + 2) {
+                let sq = spgemm_semiring(&reach, &reach, Boolean);
+                let next = ewise_add(&reach, &sq, Boolean);
+                if next.approx_same(&reach) {
+                    break;
+                }
+                reach = next;
+            }
+            let sq = spgemm_semiring(&reach, &reach, Boolean);
+            let next = ewise_add(&reach, &sq, Boolean);
+            assert!(next.approx_same(&reach), "closure must be a fixpoint");
+        });
+    }
+}

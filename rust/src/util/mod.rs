@@ -1,0 +1,140 @@
+//! Small in-tree utilities that substitute for crates unavailable in the
+//! offline build environment (`rand`, `proptest`, `criterion`).
+
+pub mod prng;
+pub mod quick;
+pub mod timer;
+
+/// A fast, deterministic `BuildHasher` (SplitMix64 finalizer) — SipHash
+/// showed up at ~9% of the whole-stack profile on the dense-row
+/// accumulator map (EXPERIMENTS.md §Perf #3).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FastHash;
+
+pub struct FastHasher(u64);
+
+impl std::hash::Hasher for FastHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.0
+    }
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 = prng::mix64(self.0 ^ b as u64);
+        }
+    }
+    #[inline]
+    fn write_u32(&mut self, v: u32) {
+        self.0 = prng::mix64(self.0 ^ v as u64);
+    }
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.0 = prng::mix64(self.0 ^ v);
+    }
+    #[inline]
+    fn write_usize(&mut self, v: usize) {
+        self.0 = prng::mix64(self.0 ^ v as u64);
+    }
+}
+
+impl std::hash::BuildHasher for FastHash {
+    type Hasher = FastHasher;
+    #[inline]
+    fn build_hasher(&self) -> FastHasher {
+        FastHasher(0x51_7c_c1_b7_27_22_0a_95)
+    }
+}
+
+/// HashMap with the fast deterministic hasher.
+pub type FastMap<K, V> = std::collections::HashMap<K, V, FastHash>;
+
+/// Round `x` up to the next multiple of `m` (m > 0).
+#[inline]
+pub fn round_up(x: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    x.div_ceil(m) * m
+}
+
+/// Integer log2 (floor). `ilog2_floor(0)` is defined as 0 for convenience.
+#[inline]
+pub fn ilog2_floor(x: u64) -> u32 {
+    if x == 0 {
+        0
+    } else {
+        63 - x.leading_zeros()
+    }
+}
+
+/// Integer log2 (ceil). `ilog2_ceil(0) == 0`, `ilog2_ceil(1) == 0`.
+#[inline]
+pub fn ilog2_ceil(x: u64) -> u32 {
+    if x <= 1 {
+        0
+    } else {
+        64 - (x - 1).leading_zeros()
+    }
+}
+
+/// Format a byte count with binary units, e.g. `3043.0 KiB`.
+pub fn fmt_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} {}", bytes, UNITS[0])
+    } else {
+        format!("{:.1} {}", v, UNITS[u])
+    }
+}
+
+/// Format a count with thousands separators, e.g. `5,174,841`.
+pub fn fmt_count(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    let bytes = s.as_bytes();
+    for (i, b) in bytes.iter().enumerate() {
+        if i > 0 && (bytes.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(*b as char);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basic() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+
+    #[test]
+    fn ilog2_values() {
+        assert_eq!(ilog2_floor(1), 0);
+        assert_eq!(ilog2_floor(2), 1);
+        assert_eq!(ilog2_floor(3), 1);
+        assert_eq!(ilog2_floor(1024), 10);
+        assert_eq!(ilog2_ceil(1), 0);
+        assert_eq!(ilog2_ceil(2), 1);
+        assert_eq!(ilog2_ceil(3), 2);
+        assert_eq!(ilog2_ceil(1025), 11);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_count(5174841), "5,174,841");
+        assert_eq!(fmt_count(42), "42");
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert!(fmt_bytes(3_116_072).starts_with("3.0 MiB"));
+    }
+}

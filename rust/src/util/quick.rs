@@ -1,0 +1,141 @@
+//! A tiny property-based testing helper — in-tree substitute for `proptest`
+//! (unavailable offline).
+//!
+//! Usage (doctests can't load the xla shared library, so `text` fence):
+//! ```text
+//! use smash::util::quick::{forall, Gen};
+//! forall(64, |g: &mut Gen| {
+//!     let n = g.usize_in(1, 100);
+//!     assert!(n >= 1 && n < 100);
+//! });
+//! ```
+//!
+//! On failure the panic message includes the case seed so the exact input
+//! can be replayed with [`replay`].
+
+use super::prng::Xoshiro256;
+
+/// Per-case random source handed to property bodies.
+pub struct Gen {
+    rng: Xoshiro256,
+    /// Seed of this particular case (for replay diagnostics).
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn new(case_seed: u64) -> Self {
+        Self {
+            rng: Xoshiro256::seed_from_u64(case_seed),
+            case_seed,
+        }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    /// usize in [lo, hi).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    /// Pick a random element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.range(0, xs.len())]
+    }
+
+    /// Vector of length in [0, max_len) with elements from `f`.
+    pub fn vec_of<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Self) -> T) -> Vec<T> {
+        let n = self.usize_in(0, max_len.max(1));
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    pub fn rng(&mut self) -> &mut Xoshiro256 {
+        &mut self.rng
+    }
+}
+
+/// Base seed: fixed for reproducibility; override with env `SMASH_QUICK_SEED`.
+fn base_seed() -> u64 {
+    std::env::var("SMASH_QUICK_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5AA5_5EED)
+}
+
+/// Run `prop` on `cases` random cases. Panics (with the case seed) on the
+/// first failing case.
+pub fn forall(cases: u64, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    let base = base_seed();
+    for i in 0..cases {
+        let case_seed = super::prng::mix64(base ^ i);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(case_seed);
+            prop(&mut g);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed on case {i} (replay seed {case_seed:#x}): {msg}\n\
+                 replay with smash::util::quick::replay({case_seed:#x}, prop)"
+            );
+        }
+    }
+}
+
+/// Re-run a property on one specific case seed (from a failure message).
+pub fn replay(case_seed: u64, prop: impl Fn(&mut Gen)) {
+    let mut g = Gen::new(case_seed);
+    prop(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial() {
+        forall(32, |g| {
+            let a = g.usize_in(0, 10);
+            let b = g.usize_in(0, 10);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(32, |g| {
+            let v = g.usize_in(0, 100);
+            assert!(v < 90, "got {v}");
+        });
+    }
+
+    #[test]
+    fn replay_reproduces() {
+        use std::sync::Mutex;
+        let seen = Mutex::new(None);
+        forall(1, |g| {
+            *seen.lock().unwrap() = Some((g.case_seed, g.usize_in(0, 1000)));
+        });
+        let (seed, val) = seen.into_inner().unwrap().unwrap();
+        replay(seed, |g| assert_eq!(g.usize_in(0, 1000), val));
+    }
+}

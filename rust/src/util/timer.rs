@@ -1,0 +1,88 @@
+//! Wall-clock timing helpers shared by the CLI and the bench harness.
+
+use std::time::{Duration, Instant};
+
+/// Time a closure, returning (result, elapsed).
+pub fn time<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Human-readable duration, adaptive unit.
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Simple stopwatch accumulating named phases (used for Fig 1.1-style
+/// execution-time breakdowns).
+#[derive(Default)]
+pub struct PhaseTimer {
+    phases: Vec<(String, Duration)>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run `f`, attributing its wall time to `name` (accumulating across
+    /// repeat calls with the same name).
+    pub fn run<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let (out, dt) = time(f);
+        if let Some((_, acc)) = self.phases.iter_mut().find(|(n, _)| n == name) {
+            *acc += dt;
+        } else {
+            self.phases.push((name.to_string(), dt));
+        }
+        out
+    }
+
+    pub fn total(&self) -> Duration {
+        self.phases.iter().map(|(_, d)| *d).sum()
+    }
+
+    /// (name, duration, share-of-total) rows, in insertion order.
+    pub fn breakdown(&self) -> Vec<(String, Duration, f64)> {
+        let total = self.total().as_secs_f64().max(f64::MIN_POSITIVE);
+        self.phases
+            .iter()
+            .map(|(n, d)| (n.clone(), *d, d.as_secs_f64() / total))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_duration(Duration::from_nanos(10)).ends_with("ns"));
+        assert!(fmt_duration(Duration::from_micros(10)).ends_with("µs"));
+        assert!(fmt_duration(Duration::from_millis(10)).ends_with("ms"));
+        assert!(fmt_duration(Duration::from_secs(10)).ends_with("s"));
+    }
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut pt = PhaseTimer::new();
+        pt.run("a", || std::thread::sleep(Duration::from_millis(1)));
+        pt.run("b", || ());
+        pt.run("a", || ());
+        let bd = pt.breakdown();
+        assert_eq!(bd.len(), 2);
+        assert_eq!(bd[0].0, "a");
+        let share_sum: f64 = bd.iter().map(|(_, _, s)| s).sum();
+        assert!((share_sum - 1.0).abs() < 1e-9);
+    }
+}

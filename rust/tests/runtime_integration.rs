@@ -1,0 +1,168 @@
+//! Integration over the PJRT runtime: load the AOT artifacts, execute
+//! them, and cross-check numerics against the native Rust references.
+//!
+//! These tests are skipped (with a message) when `artifacts/` has not been
+//! built — run `make artifacts` first; `make test` orders this correctly.
+
+use smash::formats::Dense;
+use smash::runtime::{artifacts_dir, gcn::DIMS, Engine, GcnModel, GcnWorkload, HostTensor};
+
+fn artifacts_ready() -> bool {
+    artifacts_dir().join("gcn_layer.hlo.txt").exists()
+}
+
+#[test]
+fn dense_mm_artifact_matches_reference() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut engine = Engine::cpu().expect("PJRT CPU client");
+    let exe = engine
+        .load(artifacts_dir().join("dense_mm.hlo.txt"))
+        .expect("compile dense_mm");
+
+    let n = 256;
+    let mut a = vec![0f32; n * n];
+    let mut b = vec![0f32; n * n];
+    for i in 0..n * n {
+        a[i] = ((i * 37 % 101) as f32 - 50.0) / 25.0;
+        b[i] = ((i * 53 % 97) as f32 - 48.0) / 24.0;
+    }
+    let outs = exe
+        .run(&[
+            HostTensor::f32(a.clone(), &[n, n]),
+            HostTensor::f32(b.clone(), &[n, n]),
+        ])
+        .expect("execute");
+    assert_eq!(outs.len(), 1);
+
+    let ad = Dense::from_vec(n, n, a.iter().map(|x| *x as f64).collect());
+    let bd = Dense::from_vec(n, n, b.iter().map(|x| *x as f64).collect());
+    let reference = ad.matmul(&bd);
+    let max_err = outs[0]
+        .iter()
+        .zip(&reference.data)
+        .map(|(x, y)| (*x as f64 - y).abs())
+        .fold(0.0f64, f64::max);
+    assert!(max_err < 1e-2, "dense_mm diverged: {max_err}");
+}
+
+#[test]
+fn spmm_artifact_matches_rust_spmm() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut engine = Engine::cpu().expect("PJRT CPU client");
+    let exe = engine
+        .load(artifacts_dir().join("spmm_block.hlo.txt"))
+        .expect("compile spmm_block");
+
+    let w = GcnWorkload::synthetic(DIMS, 11);
+    let feats_f32: Vec<f32> = w.features.data.iter().map(|x| *x as f32).collect();
+    let outs = exe
+        .run(&[
+            HostTensor::f32(w.ell_vals.clone(), &[DIMS.n, DIMS.k]),
+            HostTensor::i32(w.ell_cols.clone(), &[DIMS.n, DIMS.k]),
+            HostTensor::f32(feats_f32, &[DIMS.n, DIMS.f_in]),
+        ])
+        .expect("execute");
+    let reference = w.adj.spmm_dense(&w.features);
+    let max_err = outs[0]
+        .iter()
+        .zip(&reference.data)
+        .map(|(x, y)| (*x as f64 - y).abs())
+        .fold(0.0f64, f64::max);
+    assert!(max_err < 1e-3, "spmm_block diverged: {max_err}");
+}
+
+#[test]
+fn gcn_model_end_to_end() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut model = GcnModel::load().expect("load gcn model");
+    for seed in [3u64, 7] {
+        let w = GcnWorkload::synthetic(DIMS, seed);
+        let logits = model.forward(&w).expect("forward");
+        let reference = w.reference_forward();
+        let max_err = logits
+            .data
+            .iter()
+            .zip(&reference.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        assert!(max_err < 1e-3, "seed {seed}: GCN diverged {max_err}");
+        assert_eq!((logits.rows, logits.cols), (DIMS.n, DIMS.classes));
+    }
+}
+
+#[test]
+fn gcn_grad_artifact_loss_matches_forward() {
+    // the gcn_grad artifact returns (loss = mean(logits²), dW1, dW2);
+    // its loss must equal the loss computed from the forward artifact.
+    if !artifacts_ready() || !artifacts_dir().join("gcn_grad.hlo.txt").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let w = GcnWorkload::synthetic(DIMS, 5);
+    let mut model = GcnModel::load().expect("forward model");
+    let logits = model.forward(&w).expect("forward");
+    let expect_loss =
+        logits.data.iter().map(|x| x * x).sum::<f64>() / logits.data.len() as f64;
+
+    let mut engine = Engine::cpu().expect("client");
+    let exe = engine
+        .load(artifacts_dir().join("gcn_grad.hlo.txt"))
+        .expect("compile gcn_grad");
+    let inputs = [
+        HostTensor::f32(w.ell_vals.clone(), &[DIMS.n, DIMS.k]),
+        HostTensor::i32(w.ell_cols.clone(), &[DIMS.n, DIMS.k]),
+        HostTensor::f32(
+            w.features.data.iter().map(|x| *x as f32).collect(),
+            &[DIMS.n, DIMS.f_in],
+        ),
+        HostTensor::f32(
+            w.w1.data.iter().map(|x| *x as f32).collect(),
+            &[DIMS.f_in, DIMS.hidden],
+        ),
+        HostTensor::f32(
+            w.w2.data.iter().map(|x| *x as f32).collect(),
+            &[DIMS.hidden, DIMS.classes],
+        ),
+    ];
+    let outs = exe.run(&inputs).expect("execute grad");
+    assert_eq!(outs.len(), 3, "(loss, dW1, dW2)");
+    let loss = outs[0][0] as f64;
+    assert!(
+        (loss - expect_loss).abs() < 1e-4 * expect_loss.max(1.0),
+        "loss {loss} vs forward-computed {expect_loss}"
+    );
+    assert_eq!(outs[1].len(), DIMS.f_in * DIMS.hidden);
+    assert_eq!(outs[2].len(), DIMS.hidden * DIMS.classes);
+    // gradients are finite and not identically zero
+    assert!(outs[1].iter().all(|v| v.is_finite()));
+    assert!(outs[2].iter().any(|v| *v != 0.0));
+}
+
+#[test]
+fn executable_cache_reuses_compilation() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut engine = Engine::cpu().expect("client");
+    let path = artifacts_dir().join("dense_mm.hlo.txt");
+    let t0 = std::time::Instant::now();
+    engine.load(&path).expect("first load");
+    let first = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    engine.load(&path).expect("cached load");
+    let second = t1.elapsed();
+    assert!(
+        second < first / 5,
+        "cache ineffective: {first:?} then {second:?}"
+    );
+}

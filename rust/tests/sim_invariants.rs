@@ -1,0 +1,167 @@
+//! Property tests on simulator invariants: metric conservation, monotone
+//! clocks, bounded utilizations, DMA/DRAM accounting, and the coordinator's
+//! routing/batching/state invariants.
+
+use smash::config::{KernelConfig, SimConfig};
+use smash::coordinator::{Coordinator, Job, ServerConfig};
+use smash::gen::{erdos_renyi, rmat, RmatParams};
+use smash::kernels::{plan_windows, run_smash};
+use smash::sim::{run_dynamic, run_static, PhaseKind, Sim};
+use smash::spgemm::Dataflow;
+use smash::util::quick::forall;
+
+#[test]
+fn prop_cache_accounting_conserves() {
+    forall(24, |g| {
+        let mut sim = Sim::new(SimConfig::test_tiny());
+        let ops = g.usize_in(1, 500);
+        let mut issued = 0u64;
+        for _ in 0..ops {
+            let tid = g.usize_in(0, sim.threads());
+            let addr = (g.usize_in(0, 1 << 14) as u64) & !7;
+            if g.bool() {
+                sim.load(tid, addr, 8);
+            } else {
+                sim.store(tid, addr, 8);
+            }
+            issued += 1;
+        }
+        let cs = sim.cache_stats();
+        assert_eq!(cs.hits + cs.misses, issued, "cache ops must be conserved");
+        assert!(cs.writebacks <= cs.misses);
+    });
+}
+
+#[test]
+fn prop_clocks_monotone_and_bounded_util() {
+    forall(16, |g| {
+        let mut sim = Sim::new(SimConfig::test_tiny());
+        let mut last = vec![0u64; sim.threads()];
+        for _ in 0..g.usize_in(1, 200) {
+            let tid = g.usize_in(0, sim.threads());
+            match g.usize_in(0, 4) {
+                0 => sim.alu(tid, g.usize_in(1, 10) as u64),
+                1 => sim.load(tid, g.u64() % (1 << 16), 8),
+                2 => sim.atomic_spad(tid, g.u64() % (1 << 12)),
+                _ => sim.spad_access(tid, g.u64() % (1 << 12), 8),
+            }
+            assert!(sim.now(tid) >= last[tid], "clock went backwards");
+            last[tid] = sim.now(tid);
+        }
+        sim.barrier();
+        let horizon = sim.elapsed_cycles();
+        for t in 0..sim.threads() {
+            let u = sim.metrics.utilization(t, horizon);
+            assert!((0.0..=1.0).contains(&u));
+        }
+        let ipc = sim.aggregate_ipc();
+        assert!(ipc >= 0.0 && ipc <= sim.cfg.mtc_per_block as f64 + 1e-9);
+    });
+}
+
+#[test]
+fn prop_dispatch_executes_each_item_once() {
+    forall(24, |g| {
+        let n = g.usize_in(0, 300);
+        let dynamic = g.bool();
+        let mut sim = Sim::new(SimConfig::test_tiny());
+        let mut count = vec![0u32; n];
+        let body = |s: &mut Sim, tid: usize, item: usize| {
+            count[item] += 1;
+            s.alu(tid, 1 + (item % 7) as u64);
+        };
+        if dynamic {
+            run_dynamic(&mut sim, n, PhaseKind::Hash, body);
+        } else {
+            run_static(&mut sim, n, PhaseKind::Hash, body);
+        }
+        assert!(count.iter().all(|c| *c == 1), "items must run exactly once");
+    });
+}
+
+#[test]
+fn prop_window_plan_partitions_rows() {
+    forall(16, |g| {
+        let n = g.usize_in(4, 200);
+        let a = erdos_renyi(n, g.usize_in(1, n * 4), g.u64());
+        let b = erdos_renyi(n, g.usize_in(1, n * 4), g.u64());
+        let kcfg = if g.bool() {
+            KernelConfig::v2()
+        } else {
+            KernelConfig::v3()
+        };
+        let plan = plan_windows(&a, &b, &kcfg, &SimConfig::test_tiny());
+        assert_eq!(plan.windows.first().unwrap().row_begin, 0);
+        assert_eq!(plan.windows.last().unwrap().row_end, n);
+        for w in plan.windows.windows(2) {
+            assert_eq!(w[0].row_end, w[1].row_begin, "windows must tile rows");
+        }
+        let flops_sum: u64 = plan.windows.iter().map(|w| w.flops).sum();
+        assert_eq!(flops_sum, plan.row_flops.iter().sum::<u64>());
+    });
+}
+
+#[test]
+fn dram_bytes_scale_with_work() {
+    let small = rmat(&RmatParams::new(6, 300, 1));
+    let big = rmat(&RmatParams::new(8, 2000, 1));
+    let scfg = SimConfig::test_tiny();
+    let r_small = run_smash(&small, &small, &KernelConfig::v2(), &scfg).report;
+    let r_big = run_smash(&big, &big, &KernelConfig::v2(), &scfg).report;
+    assert!(r_big.dram_bytes > r_small.dram_bytes);
+    assert!(r_big.cycles > r_small.cycles);
+}
+
+#[test]
+fn coordinator_never_drops_or_duplicates() {
+    // routing/state invariant: N submissions -> N distinct responses
+    let mut coord = Coordinator::start(ServerConfig {
+        workers: 3,
+        queue_depth: 4,
+    });
+    let mut expected = std::collections::HashSet::new();
+    for seed in 0..10 {
+        let a = erdos_renyi(24, 60, seed);
+        let id = coord.submit(Job::NativeSpgemm {
+            a: a.clone(),
+            b: a,
+            dataflow: Dataflow::RowWiseHash,
+        });
+        expected.insert(id);
+    }
+    let responses = coord.collect_all();
+    let got: std::collections::HashSet<_> = responses.keys().copied().collect();
+    assert_eq!(expected, got);
+    coord.shutdown();
+}
+
+#[test]
+fn coordinator_mixed_jobs_correct() {
+    let mut coord = Coordinator::start(ServerConfig {
+        workers: 2,
+        queue_depth: 2, // force backpressure with 6 jobs
+    });
+    let a = rmat(&RmatParams::new(6, 250, 9));
+    let b = rmat(&RmatParams::new(6, 250, 10));
+    let (oracle, _) = smash::spgemm::gustavson(&a, &b);
+    for i in 0..6 {
+        if i % 2 == 0 {
+            coord.submit(Job::SmashSpgemm {
+                a: a.clone(),
+                b: b.clone(),
+                kernel: KernelConfig::v3(),
+                sim: SimConfig::test_tiny(),
+            });
+        } else {
+            coord.submit(Job::NativeSpgemm {
+                a: a.clone(),
+                b: b.clone(),
+                dataflow: Dataflow::Outer,
+            });
+        }
+    }
+    for r in coord.collect_all().values() {
+        assert!(r.c.approx_same(&oracle));
+    }
+    coord.shutdown();
+}

@@ -1,0 +1,125 @@
+//! Integration: every SMASH version against the Gustavson oracle across
+//! matrix families, plus property-based sweeps with the in-tree
+//! quick-check harness.
+
+use smash::config::{KernelConfig, SimConfig};
+use smash::formats::Csr;
+use smash::gen::{banded, diagonal_noise, erdos_renyi, rmat, RmatParams};
+use smash::kernels::run_smash;
+use smash::spgemm::{gustavson, Dataflow};
+use smash::util::quick::forall;
+
+fn versions() -> [KernelConfig; 3] {
+    [KernelConfig::v1(), KernelConfig::v2(), KernelConfig::v3()]
+}
+
+fn check_all(a: &Csr, b: &Csr, ctx: &str) {
+    let (oracle, _) = gustavson(a, b);
+    for k in versions() {
+        let run = run_smash(a, b, &k, &SimConfig::test_tiny());
+        assert!(
+            run.c.approx_same(&oracle),
+            "{} wrong on {ctx}",
+            k.name()
+        );
+    }
+}
+
+#[test]
+fn families_rmat() {
+    for seed in 0..3 {
+        let a = rmat(&RmatParams::new(7, 900, seed));
+        let b = rmat(&RmatParams::new(7, 900, seed + 10));
+        check_all(&a, &b, &format!("rmat seed {seed}"));
+    }
+}
+
+#[test]
+fn families_erdos_renyi() {
+    let a = erdos_renyi(120, 1000, 5);
+    let b = erdos_renyi(120, 1000, 6);
+    check_all(&a, &b, "erdos-renyi");
+}
+
+#[test]
+fn families_banded_and_diagonal() {
+    let a = banded(96, 3, 1);
+    check_all(&a, &a, "banded^2");
+    let d = diagonal_noise(96, 200, 2);
+    check_all(&d, &a, "diag*banded");
+}
+
+#[test]
+fn rectangular_matrices() {
+    // A: 60x100, B: 100x40
+    let a = Csr::from_triplets(
+        60,
+        100,
+        (0..300).map(|i| (i % 60, (i * 7) % 100, (i as f64).sin())),
+    );
+    let b = Csr::from_triplets(
+        100,
+        40,
+        (0..300).map(|i| (i % 100, (i * 11) % 40, (i as f64).cos())),
+    );
+    check_all(&a, &b, "rectangular");
+}
+
+#[test]
+fn degenerate_shapes() {
+    check_all(&Csr::zero(16, 16), &Csr::zero(16, 16), "zero");
+    check_all(&Csr::identity(32), &Csr::identity(32), "identity");
+    // single row x single column
+    let row = Csr::from_triplets(1, 8, (0..8).map(|c| (0, c, 1.0)));
+    let col = Csr::from_triplets(8, 1, (0..8).map(|r| (r, 0, 2.0)));
+    check_all(&row, &col, "outer-degenerate");
+}
+
+#[test]
+fn negative_and_cancelling_values() {
+    // structural overlap that cancels numerically must match the oracle
+    let a = Csr::from_triplets(2, 2, vec![(0, 0, 1.0), (0, 1, -1.0), (1, 0, 2.0)]);
+    let b = Csr::from_triplets(2, 2, vec![(0, 0, 3.0), (1, 0, 3.0), (1, 1, 1.0)]);
+    check_all(&a, &b, "cancellation");
+}
+
+#[test]
+fn prop_smash_matches_oracle_random() {
+    forall(12, |g| {
+        let n = g.usize_in(8, 80);
+        let edges = g.usize_in(1, n * 4);
+        let a = erdos_renyi(n, edges, g.u64());
+        let b = erdos_renyi(n, g.usize_in(1, n * 4), g.u64());
+        let (oracle, _) = gustavson(&a, &b);
+        let k = g.choose(&versions()).clone();
+        let run = run_smash(&a, &b, &k, &SimConfig::test_tiny());
+        assert!(run.c.approx_same(&oracle), "{} failed", k.name());
+    });
+}
+
+#[test]
+fn prop_dataflows_match_oracle_random() {
+    forall(16, |g| {
+        let n = g.usize_in(4, 60);
+        let a = erdos_renyi(n, g.usize_in(1, n * 3), g.u64());
+        let b = erdos_renyi(n, g.usize_in(1, n * 3), g.u64());
+        let (oracle, _) = gustavson(&a, &b);
+        let df = *g.choose(&Dataflow::ALL);
+        let (c, traffic) = df.multiply(&a, &b);
+        assert!(c.approx_same(&oracle), "{} failed", df.name());
+        assert_eq!(traffic.c_writes, oracle.nnz() as u64);
+    });
+}
+
+#[test]
+fn determinism_across_runs() {
+    let a = rmat(&RmatParams::new(7, 700, 42));
+    let b = rmat(&RmatParams::new(7, 700, 43));
+    for k in versions() {
+        let r1 = run_smash(&a, &b, &k, &SimConfig::test_tiny()).report;
+        let r2 = run_smash(&a, &b, &k, &SimConfig::test_tiny()).report;
+        assert_eq!(r1.cycles, r2.cycles, "{} nondeterministic", k.name());
+        assert_eq!(r1.instructions, r2.instructions);
+        assert_eq!(r1.dram_bytes, r2.dram_bytes);
+    }
+}
