@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Minimal CI for the SMASH reproduction: format check + build + tier-1 tests.
+# Usage: ./ci.sh        (from anywhere inside the repo)
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== fmt check (advisory, matches .github/workflows/ci.yml) =="
+if command -v rustfmt >/dev/null 2>&1; then
+    cargo fmt --all -- --check || echo "fmt drift detected (advisory only)"
+else
+    echo "rustfmt not installed; skipping format check"
+fi
+
+echo "== build (release) =="
+cargo build --release
+
+echo "== tests (incl. vendored shim) =="
+cargo test --workspace -q
+
+echo "CI green ✓"

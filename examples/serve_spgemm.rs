@@ -1,7 +1,8 @@
 //! The L3 coordinator as a service: a bounded-queue worker pool serving a
-//! mixed stream of SpGEMM requests (simulated SMASH jobs + native baseline
-//! jobs), demonstrating routing, batching, backpressure, and the window
-//! scheduler's LPT oversubscription policy across a multi-block die.
+//! mixed stream of SpGEMM requests (simulated SMASH jobs + native parallel
+//! Gustavson jobs), demonstrating the zero-copy matrix registry, routing,
+//! batching, backpressure, and the window scheduler's LPT oversubscription
+//! policy across a multi-block die.
 //!
 //! Run: `cargo run --release --example serve_spgemm`
 
@@ -33,37 +34,45 @@ fn main() {
         );
     }
 
-    // ---- Part 2: the serving loop ----
+    // ---- Part 2: the serving loop over one shared resident dataset ----
     let mut coord = Coordinator::start(ServerConfig {
         workers: 4,
         queue_depth: 8,
     });
+    // Register the pair once: every request below resolves to a pointer
+    // clone of this single Arc<Csr> copy — a burst of N requests against
+    // the same operands ships N pointers, not N deep-copied matrices.
+    let id_a = coord.register("A", a);
+    let id_b = coord.register("B", b);
+    let shared_a = coord.matrix(id_a).unwrap();
+    println!(
+        "\nregistered resident pair: A {} nnz, B {} nnz (one copy each)",
+        shared_a.nnz(),
+        coord.matrix(id_b).unwrap().nnz()
+    );
+
     let t0 = Instant::now();
     let mut submitted = 0usize;
-    // SMASH jobs on the simulator
-    for seed in 0..6 {
-        let a = rmat(&RmatParams::new(9, 6_000, seed));
-        let b = rmat(&RmatParams::new(9, 6_000, seed + 50));
+    // SMASH jobs on the simulator — same shared operands
+    for _ in 0..4 {
         coord.submit(Job::SmashSpgemm {
-            a,
-            b,
+            a: id_a.into(),
+            b: id_b.into(),
             kernel: KernelConfig::v3(),
             sim: SimConfig::piuma_block(),
         });
         submitted += 1;
     }
-    // native baseline jobs (routing heterogeneity)
-    for seed in 0..6 {
-        let a = rmat(&RmatParams::new(9, 6_000, 100 + seed));
-        let b = rmat(&RmatParams::new(9, 6_000, 150 + seed));
+    // native parallel-Gustavson baseline jobs (routing heterogeneity)
+    for _ in 0..8 {
         coord.submit(Job::NativeSpgemm {
-            a,
-            b,
-            dataflow: Dataflow::RowWiseHash,
+            a: id_a.into(),
+            b: id_b.into(),
+            dataflow: Dataflow::ParGustavson { threads: 4 },
         });
         submitted += 1;
     }
-    println!("\nsubmitted {submitted} jobs (queue bound 8 exerts backpressure)");
+    println!("submitted {submitted} jobs (queue bound 8 exerts backpressure)");
 
     let responses = coord.collect_all();
     let wall = t0.elapsed();
@@ -79,6 +88,11 @@ fn main() {
         wall,
         responses.len() as f64 / wall.as_secs_f64(),
         sim_ms_total
+    );
+    // registry + our handle: the whole burst never deep-copied A
+    println!(
+        "A allocations alive after burst: {} (registry + this handle)",
+        std::sync::Arc::strong_count(&shared_a)
     );
     let mut workers: Vec<_> = by_worker.into_iter().collect();
     workers.sort();

@@ -7,8 +7,10 @@ use smash::bench::Bench;
 use smash::config::{HashBits, KernelConfig, SimConfig};
 use smash::formats::Csr;
 use smash::gen::{rmat, RmatParams};
-use smash::kernels::{run_smash, TagTable};
-use smash::spgemm::{gustavson, rowwise_hash};
+use smash::kernels::{
+    insertion_sort_cost, insertion_sort_cost_quadratic, run_smash, TagTable,
+};
+use smash::spgemm::{gustavson, par_gustavson, rowwise_hash};
 use smash::util::prng::Xoshiro256;
 
 fn main() {
@@ -35,7 +37,43 @@ fn main() {
 
     h.run("gustavson_oracle_2^11", || gustavson(&a, &b));
 
+    h.run("par_gustavson_t4_2^11", || par_gustavson(&a, &b, 4));
+
+    h.run("par_gustavson_t8_2^11", || par_gustavson(&a, &b, 8));
+
     h.run("rowwise_hash_native_2^11", || rowwise_hash(&a, &b));
+
+    // V1 write-back sort cost: the semi-sorted drain of a high-bit table,
+    // old quadratic shift counter vs. the merge-sort inversion counter
+    // (identical shift totals, very different wall-clock).
+    let drained = {
+        let mut t = TagTable::new(1 << 16, 20, HashBits::High);
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        for _ in 0..40_000 {
+            t.upsert(rng.next_below(1 << 20), 1.0);
+        }
+        t.drain()
+    };
+    h.run("v1_writeback_sort_quadratic_40k", || {
+        insertion_sort_cost_quadratic(drained.clone()).1
+    });
+    h.run("v1_writeback_sort_merge_40k", || {
+        insertion_sort_cost(drained.clone()).1
+    });
+
+    // Worst case (the §7.2 pathology: collision walks scramble the drain
+    // order): inversions ~ n²/4, where the quadratic counter's wall-clock
+    // tracks the shift count and the merge counter stays n log n.
+    let scrambled: Vec<(u64, f64)> = {
+        let mut rng = Xoshiro256::seed_from_u64(10);
+        (0..20_000).map(|_| (rng.next_below(1 << 20), 1.0)).collect()
+    };
+    h.run("writeback_sort_quadratic_scrambled_20k", || {
+        insertion_sort_cost_quadratic(scrambled.clone()).1
+    });
+    h.run("writeback_sort_merge_scrambled_20k", || {
+        insertion_sort_cost(scrambled.clone()).1
+    });
 
     h.run("tagtable_1M_upserts", || {
         let mut t = TagTable::new(1 << 21, 22, HashBits::Low);

@@ -20,4 +20,11 @@ fn main() {
     for df in Dataflow::ALL {
         bench_h.run(df.name(), || df.multiply(&a, &b));
     }
+    // the multicore serving backend against the serial baselines
+    for threads in [2, 4, 8] {
+        let df = Dataflow::ParGustavson { threads };
+        bench_h.run(&format!("{} (t={threads})", df.name()), || {
+            df.multiply(&a, &b)
+        });
+    }
 }

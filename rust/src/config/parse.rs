@@ -1,19 +1,32 @@
 //! Minimal `key = value` config parser (comments with `#`, blank lines
 //! ignored, optional `[section]` headers flattened as `section.key`).
 
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("config line {line}: expected `key = value`, got `{text}`")]
     Syntax { line: usize, text: String },
-    #[error("unknown config key `{key}`")]
     UnknownKey { key: String },
-    #[error("bad value `{value}` for key `{key}`")]
     BadValue { key: String, value: String },
-    #[error("cannot read config `{path}`: {msg}")]
     Io { path: String, msg: String },
 }
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::Syntax { line, text } => {
+                write!(f, "config line {line}: expected `key = value`, got `{text}`")
+            }
+            ConfigError::UnknownKey { key } => write!(f, "unknown config key `{key}`"),
+            ConfigError::BadValue { key, value } => {
+                write!(f, "bad value `{value}` for key `{key}`")
+            }
+            ConfigError::Io { path, msg } => write!(f, "cannot read config `{path}`: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 /// Parse `key = value` lines into pairs. Section headers prefix subsequent
 /// keys with `section.`.

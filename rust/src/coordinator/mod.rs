@@ -13,4 +13,4 @@ pub mod server;
 
 pub use die::{run_die, DieReport};
 pub use scheduler::{schedule_windows, Assignment, SchedPolicy};
-pub use server::{Coordinator, Job, JobId, Response, ServerConfig};
+pub use server::{Coordinator, Job, JobId, MatrixId, MatrixRef, Response, ServerConfig};

@@ -6,6 +6,15 @@
 //! CPU-native multiplications; responses carry the product plus run
 //! metadata. Submitting past the queue bound blocks the caller —
 //! backpressure, not unbounded buffering.
+//!
+//! ## Zero-copy shared matrices
+//!
+//! Operands are [`MatrixRef`]s: either a one-shot inline matrix or an id
+//! returned by [`Coordinator::register`]. Registered matrices are stored
+//! once as `Arc<Csr>`; `submit` resolves references to pointer clones, so
+//! a burst of N requests against the same resident dataset ships N
+//! reference-counted pointers to the pool — never N deep copies of the
+//! CSR arrays.
 
 use crate::config::{KernelConfig, SimConfig};
 use crate::formats::Csr;
@@ -19,17 +28,68 @@ use std::thread::JoinHandle;
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct JobId(pub u64);
 
+/// Handle to a matrix registered with the coordinator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct MatrixId(pub u64);
+
+/// An operand of a job: a registered resident matrix or an inline one-shot.
+pub enum MatrixRef {
+    /// A matrix registered via [`Coordinator::register`] — resolved to a
+    /// pointer clone of the single resident copy at submit time.
+    Registered(MatrixId),
+    /// An inline matrix owned by this request alone.
+    Inline(Arc<Csr>),
+}
+
+impl From<MatrixId> for MatrixRef {
+    fn from(id: MatrixId) -> Self {
+        MatrixRef::Registered(id)
+    }
+}
+
+impl From<Arc<Csr>> for MatrixRef {
+    fn from(m: Arc<Csr>) -> Self {
+        MatrixRef::Inline(m)
+    }
+}
+
+impl From<Csr> for MatrixRef {
+    fn from(m: Csr) -> Self {
+        MatrixRef::Inline(Arc::new(m))
+    }
+}
+
 /// A unit of work routed to the pool.
 pub enum Job {
     /// Multiply on the simulated PIUMA block with a SMASH version.
     SmashSpgemm {
-        a: Csr,
-        b: Csr,
+        a: MatrixRef,
+        b: MatrixRef,
         kernel: KernelConfig,
         sim: SimConfig,
     },
     /// Multiply natively with a reference dataflow.
-    NativeSpgemm { a: Csr, b: Csr, dataflow: Dataflow },
+    NativeSpgemm {
+        a: MatrixRef,
+        b: MatrixRef,
+        dataflow: Dataflow,
+    },
+}
+
+/// A resolved job as shipped to workers: operands are always `Arc` pointer
+/// clones, whatever the caller handed in.
+enum Work {
+    Smash {
+        a: Arc<Csr>,
+        b: Arc<Csr>,
+        kernel: KernelConfig,
+        sim: SimConfig,
+    },
+    Native {
+        a: Arc<Csr>,
+        b: Arc<Csr>,
+        dataflow: Dataflow,
+    },
 }
 
 /// Worker answer.
@@ -61,18 +121,21 @@ impl Default for ServerConfig {
 }
 
 enum Envelope {
-    Work(JobId, Job),
+    Work(JobId, Work),
     Stop,
 }
 
-/// The coordinator: owns the pool; `submit` routes jobs in, `collect`
-/// gathers responses.
+/// The coordinator: owns the pool and the matrix registry; `submit` routes
+/// jobs in, `collect` gathers responses.
 pub struct Coordinator {
     tx: SyncSender<Envelope>,
     rx_done: Receiver<Response>,
     handles: Vec<JoinHandle<()>>,
     next_id: u64,
     pending: usize,
+    registry: HashMap<u64, Arc<Csr>>,
+    names: HashMap<String, MatrixId>,
+    next_matrix: u64,
 }
 
 impl Coordinator {
@@ -90,14 +153,14 @@ impl Coordinator {
                     guard.recv()
                 };
                 match msg {
-                    Ok(Envelope::Work(id, job)) => {
+                    Ok(Envelope::Work(id, work)) => {
                         let t0 = std::time::Instant::now();
-                        let (c, sim_ms) = match job {
-                            Job::SmashSpgemm { a, b, kernel, sim } => {
+                        let (c, sim_ms) = match work {
+                            Work::Smash { a, b, kernel, sim } => {
                                 let run = crate::kernels::run_smash(&a, &b, &kernel, &sim);
                                 (run.c, Some(run.report.ms))
                             }
-                            Job::NativeSpgemm { a, b, dataflow } => {
+                            Work::Native { a, b, dataflow } => {
                                 let (c, _) = dataflow.multiply(&a, &b);
                                 (c, None)
                             }
@@ -120,16 +183,80 @@ impl Coordinator {
             handles,
             next_id: 0,
             pending: 0,
+            registry: HashMap::new(),
+            names: HashMap::new(),
+            next_matrix: 0,
+        }
+    }
+
+    /// Register a matrix as a shared resident dataset. The matrix is
+    /// stored once; every job referencing the returned id gets a pointer
+    /// clone. Re-registering a name points it at the new matrix and
+    /// evicts the old one from the registry (it stays alive only until
+    /// its in-flight jobs finish).
+    pub fn register(&mut self, name: impl Into<String>, m: Csr) -> MatrixId {
+        self.register_arc(name, Arc::new(m))
+    }
+
+    /// Register an already-shared matrix without copying it. Re-using a
+    /// name drops the superseded id from the registry — jobs already
+    /// submitted keep their resolved `Arc` clones, so the old matrix
+    /// frees once they drain; submitting with the stale id afterwards
+    /// panics like any unregistered id.
+    pub fn register_arc(&mut self, name: impl Into<String>, m: Arc<Csr>) -> MatrixId {
+        let id = MatrixId(self.next_matrix);
+        self.next_matrix += 1;
+        self.registry.insert(id.0, m);
+        if let Some(old) = self.names.insert(name.into(), id) {
+            self.registry.remove(&old.0);
+        }
+        id
+    }
+
+    /// Look up a registered matrix id by name.
+    pub fn lookup(&self, name: &str) -> Option<MatrixId> {
+        self.names.get(name).copied()
+    }
+
+    /// Pointer clone of a registered matrix.
+    pub fn matrix(&self, id: MatrixId) -> Option<Arc<Csr>> {
+        self.registry.get(&id.0).cloned()
+    }
+
+    /// Resolve an operand to the shared pointer it stands for.
+    /// Panics on an unregistered id — that is a caller bug, not a
+    /// recoverable serving condition.
+    fn resolve(&self, r: MatrixRef) -> Arc<Csr> {
+        match r {
+            MatrixRef::Inline(m) => m,
+            MatrixRef::Registered(id) => self
+                .registry
+                .get(&id.0)
+                .cloned()
+                .unwrap_or_else(|| panic!("matrix {:?} is not registered", id)),
         }
     }
 
     /// Submit a job (blocks when the queue is full — backpressure).
     pub fn submit(&mut self, job: Job) -> JobId {
+        let work = match job {
+            Job::SmashSpgemm { a, b, kernel, sim } => Work::Smash {
+                a: self.resolve(a),
+                b: self.resolve(b),
+                kernel,
+                sim,
+            },
+            Job::NativeSpgemm { a, b, dataflow } => Work::Native {
+                a: self.resolve(a),
+                b: self.resolve(b),
+                dataflow,
+            },
+        };
         let id = JobId(self.next_id);
         self.next_id += 1;
         self.pending += 1;
         self.tx
-            .send(Envelope::Work(id, job))
+            .send(Envelope::Work(id, work))
             .expect("worker pool hung up");
         id
     }
@@ -139,18 +266,22 @@ impl Coordinator {
         self.pending
     }
 
-    /// Collect one response (blocking).
-    pub fn collect_one(&mut self) -> Response {
+    /// Collect one response, blocking while a job is outstanding. Returns
+    /// `None` when nothing is outstanding — the old version blocked forever
+    /// on `recv()` and could underflow `pending`.
+    pub fn collect_one(&mut self) -> Option<Response> {
+        if self.pending == 0 {
+            return None;
+        }
         let r = self.rx_done.recv().expect("worker pool hung up");
         self.pending -= 1;
-        r
+        Some(r)
     }
 
     /// Collect all outstanding responses, keyed by id.
     pub fn collect_all(&mut self) -> HashMap<JobId, Response> {
         let mut out = HashMap::new();
-        while self.pending > 0 {
-            let r = self.collect_one();
+        while let Some(r) = self.collect_one() {
             out.insert(r.id, r);
         }
         out
@@ -185,8 +316,8 @@ mod tests {
         let mut ids = Vec::new();
         for df in Dataflow::ALL {
             ids.push(coord.submit(Job::NativeSpgemm {
-                a: a.clone(),
-                b: b.clone(),
+                a: a.clone().into(),
+                b: b.clone().into(),
                 dataflow: df,
             }));
         }
@@ -208,12 +339,12 @@ mod tests {
         let b = rmat(&RmatParams::new(6, 300, 4));
         let (oracle, _) = gustavson(&a, &b);
         let id = coord.submit(Job::SmashSpgemm {
-            a,
-            b,
+            a: a.into(),
+            b: b.into(),
             kernel: KernelConfig::v2(),
             sim: SimConfig::test_tiny(),
         });
-        let r = coord.collect_one();
+        let r = coord.collect_one().expect("one job outstanding");
         assert_eq!(r.id, id);
         assert!(r.sim_ms.unwrap() > 0.0);
         assert!(r.c.approx_same(&oracle));
@@ -230,8 +361,8 @@ mod tests {
         let mut ids = Vec::new();
         for _ in 0..5 {
             ids.push(coord.submit(Job::NativeSpgemm {
-                a: a.clone(),
-                b: a.clone(),
+                a: a.clone().into(),
+                b: a.clone().into(),
                 dataflow: Dataflow::RowWiseHash,
             }));
         }
@@ -243,5 +374,92 @@ mod tests {
         assert_eq!(responses.len(), 5);
         assert_eq!(coord.pending(), 0);
         coord.shutdown();
+    }
+
+    /// Regression: `collect_one` with nothing outstanding used to block
+    /// forever on `recv()` (and a spurious extra collect could underflow
+    /// `pending`). It must return `None` and leave the state untouched.
+    #[test]
+    fn collect_on_empty_returns_none() {
+        let mut coord = Coordinator::start(ServerConfig {
+            workers: 1,
+            queue_depth: 2,
+        });
+        assert!(coord.collect_one().is_none());
+        assert_eq!(coord.pending(), 0);
+        assert!(coord.collect_all().is_empty());
+
+        // drain a real job, then over-collect again
+        let a = erdos_renyi(12, 30, 8);
+        coord.submit(Job::NativeSpgemm {
+            a: a.clone().into(),
+            b: a.into(),
+            dataflow: Dataflow::RowWiseHash,
+        });
+        assert!(coord.collect_one().is_some());
+        assert!(coord.collect_one().is_none());
+        assert_eq!(coord.pending(), 0);
+        coord.shutdown();
+    }
+
+    /// The zero-copy contract: a burst of jobs against one registered pair
+    /// shares a single CSR allocation per operand. After the burst drains,
+    /// only the registry and our local handle hold the matrix.
+    #[test]
+    fn registered_burst_shares_one_allocation() {
+        let mut coord = Coordinator::start(ServerConfig {
+            workers: 2,
+            queue_depth: 16,
+        });
+        let a = erdos_renyi(48, 300, 21);
+        let b = erdos_renyi(48, 300, 22);
+        let (oracle, _) = gustavson(&a, &b);
+        let id_a = coord.register("A", a);
+        let id_b = coord.register("B", b);
+        assert_eq!(coord.lookup("A"), Some(id_a));
+        assert_eq!(coord.lookup("missing"), None);
+
+        let a_shared = coord.matrix(id_a).expect("registered");
+        assert!(Arc::ptr_eq(&a_shared, &coord.matrix(id_a).unwrap()));
+
+        for _ in 0..8 {
+            coord.submit(Job::NativeSpgemm {
+                a: id_a.into(),
+                b: id_b.into(),
+                dataflow: Dataflow::RowWiseHash,
+            });
+        }
+        let responses = coord.collect_all();
+        assert_eq!(responses.len(), 8);
+        for r in responses.values() {
+            assert!(r.c.approx_same(&oracle));
+        }
+        // Every worker dropped its pointer clone before sending its
+        // response: the whole 8-job burst used ONE resident copy of A.
+        assert_eq!(Arc::strong_count(&a_shared), 2);
+
+        // Re-registering the name swaps the resident matrix and evicts
+        // the superseded id; our local Arc is now the last non-registry
+        // holder of the old copy.
+        let id_a2 = coord.register("A", erdos_renyi(48, 300, 23));
+        assert_ne!(id_a2, id_a);
+        assert_eq!(coord.lookup("A"), Some(id_a2));
+        assert!(coord.matrix(id_a).is_none(), "old id must be evicted");
+        assert_eq!(Arc::strong_count(&a_shared), 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    #[should_panic(expected = "not registered")]
+    fn unregistered_id_panics_at_submit() {
+        let mut coord = Coordinator::start(ServerConfig {
+            workers: 1,
+            queue_depth: 2,
+        });
+        coord.submit(Job::NativeSpgemm {
+            a: MatrixId(999).into(),
+            b: MatrixId(999).into(),
+            dataflow: Dataflow::RowWiseHash,
+        });
     }
 }

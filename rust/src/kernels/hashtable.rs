@@ -103,6 +103,9 @@ pub struct TagTable {
     bins: usize,
     tag_bits: u32,
     mode: HashBits,
+    /// Entries currently occupied (reset by [`TagTable::clear`], unlike the
+    /// cumulative `stats`).
+    live: usize,
     pub stats: TableStats,
 }
 
@@ -115,6 +118,7 @@ impl TagTable {
             bins,
             tag_bits,
             mode,
+            live: 0,
             stats: TableStats::default(),
         }
     }
@@ -133,6 +137,7 @@ impl TagTable {
             if self.tags[slot] == EMPTY {
                 self.tags[slot] = tag;
                 self.vals[slot] = val;
+                self.live += 1;
                 let u = Upsert {
                     probes,
                     inserted: true,
@@ -171,8 +176,10 @@ impl TagTable {
             .collect()
     }
 
+    /// Live occupancy. Unlike `stats.inserts` (cumulative over the table's
+    /// lifetime) this drops back to zero after [`TagTable::clear`].
     pub fn len(&self) -> usize {
-        self.stats.inserts as usize
+        self.live
     }
 
     pub fn is_empty(&self) -> bool {
@@ -180,10 +187,12 @@ impl TagTable {
     }
 
     /// Reset for the next window (the real kernel re-initializes the SPAD;
-    /// V3 offloads this to the DMA scatter — §5.3).
+    /// V3 offloads this to the DMA scatter — §5.3). Probe statistics are
+    /// cumulative and survive; occupancy does not.
     pub fn clear(&mut self) {
         self.tags.fill(EMPTY);
         self.vals.fill(0.0);
+        self.live = 0;
     }
 }
 
@@ -247,10 +256,70 @@ impl OffsetTable {
     }
 }
 
-/// Count inversions of a semi-sorted sequence via insertion-sort, returning
-/// (sorted, shifts) — `shifts` is the simulated cost of the V1 write-back
-/// sort (§5.1.3 "variation of insertion sort").
-pub fn insertion_sort_cost(mut items: Vec<(u64, Value)>) -> (Vec<(u64, Value)>, u64) {
+/// Count inversions of a semi-sorted sequence, returning (sorted, shifts) —
+/// `shifts` is the simulated cost of the V1 write-back sort (§5.1.3
+/// "variation of insertion sort": each shift moves one entry one slot).
+///
+/// The shift count of an insertion sort equals the sequence's inversion
+/// count, so we compute it with a stable bottom-up merge sort in
+/// O(n log n) — the write-back models a whole window's entries and the
+/// quadratic walk dominated wall-clock on large windows. The quadratic
+/// original survives as [`insertion_sort_cost_quadratic`] (test oracle and
+/// before/after benchmark).
+pub fn insertion_sort_cost(items: Vec<(u64, Value)>) -> (Vec<(u64, Value)>, u64) {
+    let mut a = items;
+    let n = a.len();
+    if n < 2 {
+        return (a, 0);
+    }
+    let mut buf = a.clone();
+    let mut shifts = 0u64;
+    let mut width = 1usize;
+    while width < n {
+        let mut lo = 0usize;
+        while lo < n {
+            let mid = (lo + width).min(n);
+            let hi = (lo + 2 * width).min(n);
+            if mid < hi {
+                let (mut i, mut j, mut k) = (lo, mid, lo);
+                while i < mid && j < hi {
+                    if a[i].0 <= a[j].0 {
+                        buf[k] = a[i];
+                        i += 1;
+                    } else {
+                        // a[j] jumps over every element left in the left
+                        // run: one inversion (= one shift) per element.
+                        buf[k] = a[j];
+                        j += 1;
+                        shifts += (mid - i) as u64;
+                    }
+                    k += 1;
+                }
+                while i < mid {
+                    buf[k] = a[i];
+                    i += 1;
+                    k += 1;
+                }
+                while j < hi {
+                    buf[k] = a[j];
+                    j += 1;
+                    k += 1;
+                }
+            } else {
+                buf[lo..hi].copy_from_slice(&a[lo..hi]);
+            }
+            lo = hi;
+        }
+        std::mem::swap(&mut a, &mut buf);
+        width *= 2;
+    }
+    (a, shifts)
+}
+
+/// The original O(n²) insertion-sort shift counter — kept as the oracle for
+/// [`insertion_sort_cost`] (the two must agree exactly) and for the
+/// before/after write-back benchmark in `benches/hot_paths.rs`.
+pub fn insertion_sort_cost_quadratic(mut items: Vec<(u64, Value)>) -> (Vec<(u64, Value)>, u64) {
     let mut shifts = 0u64;
     for i in 1..items.len() {
         let key = items[i];
@@ -467,5 +536,48 @@ mod tests {
         assert_eq!(shifts, 2);
         let (_, zero) = insertion_sort_cost(vec![(1, 0.0), (2, 0.0)]);
         assert_eq!(zero, 0);
+        // reverse order: maximal inversions n(n-1)/2
+        let rev: Vec<(u64, Value)> = (0..20u64).rev().map(|t| (t, 0.0)).collect();
+        let (s, max_shifts) = insertion_sort_cost(rev);
+        assert_eq!(max_shifts, 20 * 19 / 2);
+        assert!(s.windows(2).all(|w| w[0].0 <= w[1].0));
+    }
+
+    /// The merge-sort inversion counter must agree with the quadratic
+    /// insertion-sort reference exactly — same sorted order, same shifts —
+    /// including on duplicate keys (stability: equal keys never shift).
+    #[test]
+    fn prop_merge_shifts_match_quadratic_reference() {
+        use crate::util::quick::forall;
+        forall(64, |g| {
+            let n = g.usize_in(0, 300);
+            let items: Vec<(u64, Value)> = (0..n)
+                .map(|i| (g.u64() % 64, i as Value)) // dense keys -> many dups
+                .collect();
+            let (fast_sorted, fast_shifts) = insertion_sort_cost(items.clone());
+            let (ref_sorted, ref_shifts) = insertion_sort_cost_quadratic(items);
+            assert_eq!(fast_shifts, ref_shifts);
+            assert_eq!(fast_sorted, ref_sorted, "stable order must match");
+        });
+    }
+
+    #[test]
+    fn len_reflects_live_occupancy_after_clear() {
+        let mut t = TagTable::new(16, 10, HashBits::Low);
+        assert!(t.is_empty());
+        t.upsert(1, 1.0);
+        t.upsert(2, 1.0);
+        t.upsert(1, 1.0); // merge, not a new entry
+        assert_eq!(t.len(), 2);
+        t.clear();
+        // regression: len() used to report cumulative stats.inserts (2)
+        // on a freshly cleared (empty) table
+        assert_eq!(t.len(), 0);
+        assert!(t.is_empty());
+        assert!(t.drain().is_empty());
+        assert_eq!(t.stats.inserts, 2, "probe stats stay cumulative");
+        // refill after clear counts from zero again
+        t.upsert(7, 1.0);
+        assert_eq!(t.len(), 1);
     }
 }

@@ -10,7 +10,10 @@ pub mod smash;
 pub mod spmv;
 pub mod window;
 
-pub use hashtable::{hash_tag, insertion_sort_cost, OffsetTable, TableStats, TagTable, EMPTY};
+pub use hashtable::{
+    hash_tag, insertion_sort_cost, insertion_sort_cost_quadratic, OffsetTable, TableStats,
+    TagTable, EMPTY,
+};
 pub use smash::{run_smash, RunReport, SmashRun};
 pub use spmv::{pagerank, run_spmv, SpmvReport};
 pub use window::{plan_windows, Window, WindowPlan};

@@ -153,6 +153,17 @@ pub fn run_smash(a: &Csr, b: &Csr, kcfg: &KernelConfig, scfg: &SimConfig) -> Sma
     SmashRun { c, report, sim }
 }
 
+/// `section`'s share when `total` units of write-back work are split across
+/// `sections` equal parts: consecutive shares differ by at most one and the
+/// shares always sum to exactly `total` (the difference of a telescoping
+/// prefix), unlike the former `total / sections` which silently dropped the
+/// remainder on every window.
+pub(crate) fn section_share(total: u64, section: usize, sections: usize) -> u64 {
+    debug_assert!(section < sections);
+    let s = sections as u64;
+    total * (section as u64 + 1) / s - total * section as u64 / s
+}
+
 /// Simulated-address layout + functional state shared across phases.
 struct KernelState<'m> {
     a: &'m Csr,
@@ -501,12 +512,14 @@ impl<'m> KernelState<'m> {
                 let threads = sim.threads();
                 let bins = table.bins();
                 let c_base = self.c_base;
-                let per_thread_shift = sort_shifts / threads as u64;
                 // Algorithm 5: SPAD divided into `threads` equal sections.
                 // Each section is scanned bin by bin (empty-test + branch),
                 // occupied entries stream to C, and the section's bins are
                 // re-initialized to EMPTY for the next window — the work V3
-                // hands to the DMA scatter (§5.3).
+                // hands to the DMA scatter (§5.3). Per-section charges use
+                // [`section_share`] so the totals are conserved exactly
+                // (truncating division used to drop up to threads-1 shifts
+                // and several occupied entries per window).
                 run_static(sim, threads, PhaseKind::WriteBack, |s, tid, sec| {
                     let lo = sec * bins / threads;
                     let hi = (sec + 1) * bins / threads;
@@ -517,9 +530,10 @@ impl<'m> KernelState<'m> {
                         // re-init to EMPTY
                         s.spad_access(tid, spad_base + (slot * BIN_BYTES) as u64, 8);
                     }
-                    s.alu(tid, per_thread_shift); // sort shifts (V1 only)
+                    // sort shifts (V1 only), remainder-conserving
+                    s.alu(tid, section_share(sort_shifts, sec, threads));
                     // store occupied entries to C (col idx + value)
-                    let occupied = entries.len() * (hi - lo) / bins.max(1);
+                    let occupied = section_share(entries.len() as u64, sec, threads) as usize;
                     for e in 0..occupied {
                         s.spad_access(tid, spad_base + (e * BIN_BYTES) as u64, 8);
                         s.alu(tid, 3); // unpack tag -> (row, col), cursor
@@ -759,6 +773,27 @@ mod tests {
             local.report.cycles.max(remote.report.cycles),
         );
         assert!(hi < 2 * lo, "remote vs local diverged wildly: {lo} vs {hi}");
+    }
+
+    /// Conservation of the write-back accounting: the per-section charges
+    /// (sort shifts, occupied entries) must sum to the window totals, and
+    /// stay balanced (shares differ by at most one unit).
+    #[test]
+    fn prop_section_shares_conserve_totals() {
+        use crate::util::quick::forall;
+        forall(64, |g| {
+            let sections = g.usize_in(1, 130);
+            let total = g.u64() % 1_000_000;
+            let shares: Vec<u64> = (0..sections)
+                .map(|s| section_share(total, s, sections))
+                .collect();
+            assert_eq!(shares.iter().sum::<u64>(), total, "{total} over {sections}");
+            let (min, max) = (
+                *shares.iter().min().unwrap(),
+                *shares.iter().max().unwrap(),
+            );
+            assert!(max - min <= 1, "unbalanced shares: {min}..{max}");
+        });
     }
 
     #[test]

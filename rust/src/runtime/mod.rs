@@ -6,17 +6,27 @@
 //! Interchange is HLO text, not serialized protos: jax ≥ 0.5 emits protos
 //! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The PJRT client requires the `xla` bindings crate, which is not
+//! available in the offline build environment — that path is gated behind
+//! the `xla` cargo feature. Without it, [`Engine`] and [`Executable`]
+//! compile as stubs that return a clear error at call time, so the rest of
+//! the stack (workload synthesis, native references, kernel breakdowns)
+//! stays fully usable.
 
 pub mod gcn;
 
 pub use gcn::{GcnDims, GcnModel, GcnWorkload};
 
-use anyhow::{Context, Result};
+use anyhow::Result;
+#[cfg(feature = "xla")]
+use anyhow::Context;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 /// A loaded, compiled HLO module ready to execute.
 pub struct Executable {
+    #[cfg(feature = "xla")]
     exe: xla::PjRtLoadedExecutable,
     pub name: String,
 }
@@ -45,6 +55,7 @@ impl HostTensor {
         }
     }
 
+    #[cfg(feature = "xla")]
     fn to_literal(&self) -> Result<xla::Literal> {
         let lit = match self {
             HostTensor::F32 { data, dims } => {
@@ -75,10 +86,12 @@ impl HostTensor {
 
 /// The runtime engine: one PJRT CPU client + an executable cache.
 pub struct Engine {
+    #[cfg(feature = "xla")]
     client: xla::PjRtClient,
     cache: HashMap<PathBuf, Executable>,
 }
 
+#[cfg(feature = "xla")]
 impl Engine {
     /// Create the CPU PJRT client.
     pub fn cpu() -> Result<Self> {
@@ -116,6 +129,28 @@ impl Engine {
     }
 }
 
+#[cfg(not(feature = "xla"))]
+impl Engine {
+    /// Stub: the PJRT client needs the `xla` feature.
+    pub fn cpu() -> Result<Self> {
+        anyhow::bail!("PJRT runtime unavailable: built without the `xla` feature")
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (no `xla` feature)".to_string()
+    }
+
+    /// Stub: loading always fails; `cpu()` cannot even construct an Engine.
+    pub fn load(&mut self, path: impl AsRef<Path>) -> Result<&Executable> {
+        let _ = &self.cache;
+        anyhow::bail!(
+            "cannot load {}: built without the `xla` feature",
+            path.as_ref().display()
+        )
+    }
+}
+
+#[cfg(feature = "xla")]
 impl Executable {
     /// Execute with host inputs; returns the flattened f32 outputs of the
     /// result tuple (artifacts are lowered with `return_tuple=True`).
@@ -132,6 +167,14 @@ impl Executable {
             out.push(lit.to_vec::<f32>()?);
         }
         Ok(out)
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+impl Executable {
+    /// Stub: execution needs the `xla` feature.
+    pub fn run(&self, _inputs: &[HostTensor]) -> Result<Vec<Vec<f32>>> {
+        anyhow::bail!("cannot execute {}: built without the `xla` feature", self.name)
     }
 }
 
@@ -157,6 +200,13 @@ mod tests {
     #[should_panic]
     fn host_tensor_bad_shape() {
         HostTensor::f32(vec![1.0; 5], &[2, 3]);
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_engine_reports_missing_feature() {
+        let err = Engine::cpu().unwrap_err();
+        assert!(format!("{err:#}").contains("xla"));
     }
 
     // Engine tests that need artifacts live in rust/tests/runtime_integration.rs

@@ -12,6 +12,7 @@ mod gustavson;
 mod inner;
 mod intensity;
 mod outer;
+mod par;
 mod rowwise;
 pub mod semiring;
 
@@ -19,6 +20,7 @@ pub use gustavson::{flops_per_row, gustavson, symbolic_row_nnz, total_flops};
 pub use inner::inner_product;
 pub use intensity::{arithmetic_intensity, compression_factor, IntensityReport};
 pub use outer::outer_product;
+pub use par::par_gustavson;
 pub use rowwise::{rowwise_hash, rowwise_heap};
 pub use semiring::{ewise_add, spgemm_semiring, Arithmetic, Boolean, MaxTimes, MinPlus, Semiring};
 
@@ -66,16 +68,22 @@ impl Traffic {
     }
 }
 
-/// The four dataflows of Figure 1.2.
+/// The four dataflows of Figure 1.2, plus the multicore serving backend
+/// ([`par_gustavson`] — row-partitioned Gustavson over OS threads).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Dataflow {
     Inner,
     Outer,
     RowWiseHeap,
     RowWiseHash,
+    /// Row-partitioned parallel Gustavson with this many threads.
+    ParGustavson { threads: usize },
 }
 
 impl Dataflow {
+    /// The serial reference dataflows of Figure 1.2 (the Table 1.2 set —
+    /// excludes the parallel backend, which shares row-wise traffic
+    /// characteristics by construction).
     pub const ALL: [Dataflow; 4] = [
         Dataflow::Inner,
         Dataflow::Outer,
@@ -89,6 +97,7 @@ impl Dataflow {
             Dataflow::Outer => "Outer Product",
             Dataflow::RowWiseHeap => "Row-wise (heap)",
             Dataflow::RowWiseHash => "Row-wise (hash)",
+            Dataflow::ParGustavson { .. } => "Parallel Gustavson",
         }
     }
 
@@ -99,6 +108,7 @@ impl Dataflow {
             Dataflow::Outer => outer_product(a, b),
             Dataflow::RowWiseHeap => rowwise_heap(a, b),
             Dataflow::RowWiseHash => rowwise_hash(a, b),
+            Dataflow::ParGustavson { threads } => par_gustavson(a, b, *threads),
         }
     }
 }
@@ -124,6 +134,22 @@ mod tests {
             assert!(t.flops > 0);
             assert_eq!(t.c_writes, oracle.nnz() as u64, "{}", df.name());
         }
+    }
+
+    /// The parallel backend plugs into the same `Dataflow::multiply`
+    /// surface with its traffic counters intact.
+    #[test]
+    fn par_dataflow_matches_oracle_with_traffic() {
+        let a = rmat(&RmatParams::new(7, 800, 3));
+        let b = rmat(&RmatParams::new(7, 800, 4));
+        let (oracle, serial_t) = gustavson(&a, &b);
+        let df = Dataflow::ParGustavson { threads: 4 };
+        let (c, t) = df.multiply(&a, &b);
+        assert!(c.approx_same(&oracle), "{} disagrees with oracle", df.name());
+        assert_eq!(t.flops, serial_t.flops);
+        assert_eq!(t.c_writes, oracle.nnz() as u64);
+        assert_eq!(t.a_reads, serial_t.a_reads);
+        assert_eq!(t.b_reads, serial_t.b_reads);
     }
 
     /// Table 1.2 qualitative shape: outer product reads inputs once but has

@@ -123,8 +123,8 @@ fn coordinator_never_drops_or_duplicates() {
     for seed in 0..10 {
         let a = erdos_renyi(24, 60, seed);
         let id = coord.submit(Job::NativeSpgemm {
-            a: a.clone(),
-            b: a,
+            a: a.clone().into(),
+            b: a.into(),
             dataflow: Dataflow::RowWiseHash,
         });
         expected.insert(id);
@@ -147,15 +147,15 @@ fn coordinator_mixed_jobs_correct() {
     for i in 0..6 {
         if i % 2 == 0 {
             coord.submit(Job::SmashSpgemm {
-                a: a.clone(),
-                b: b.clone(),
+                a: a.clone().into(),
+                b: b.clone().into(),
                 kernel: KernelConfig::v3(),
                 sim: SimConfig::test_tiny(),
             });
         } else {
             coord.submit(Job::NativeSpgemm {
-                a: a.clone(),
-                b: b.clone(),
+                a: a.clone().into(),
+                b: b.clone().into(),
                 dataflow: Dataflow::Outer,
             });
         }

@@ -1,0 +1,247 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network access, so instead of the real
+//! crates-io `anyhow` we vendor the small subset this repository uses:
+//!
+//! * [`Error`] — a context-carrying boxed error;
+//! * [`Result`] — `Result<T, Error>` alias with a defaultable error type;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`;
+//! * [`anyhow!`], [`bail!`], [`ensure!`] macros.
+//!
+//! Display follows the real crate's conventions: `{}` shows the outermost
+//! context, `{:#}` shows the whole cause chain separated by `: `.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+enum Repr {
+    Msg(String),
+    Boxed(Box<dyn StdError + Send + Sync + 'static>),
+}
+
+/// A context-carrying error (stand-in for `anyhow::Error`).
+pub struct Error {
+    repr: Repr,
+    /// Context frames, innermost first (pushed in `.context()` order).
+    context: Vec<String>,
+}
+
+/// `anyhow::Result` alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self {
+            repr: Repr::Msg(message.to_string()),
+            context: Vec::new(),
+        }
+    }
+
+    /// Attach an outer context frame.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.context.push(context.to_string());
+        self
+    }
+
+    fn root_message(&self) -> String {
+        match &self.repr {
+            Repr::Msg(m) => m.clone(),
+            Repr::Boxed(e) => e.to_string(),
+        }
+    }
+
+    /// The full cause chain, outermost first.
+    fn chain_strings(&self) -> Vec<String> {
+        let mut out: Vec<String> = self.context.iter().rev().cloned().collect();
+        out.push(self.root_message());
+        if let Repr::Boxed(e) = &self.repr {
+            let mut src = e.source();
+            while let Some(s) = src {
+                out.push(s.to_string());
+                src = s.source();
+            }
+        }
+        out
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain_strings().join(": "))
+        } else {
+            match self.context.last() {
+                Some(outer) => write!(f, "{outer}"),
+                None => write!(f, "{}", self.root_message()),
+            }
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let chain = self.chain_strings();
+        write!(f, "{}", chain[0])?;
+        if chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NB: like the real crate, `Error` deliberately does NOT implement
+// `std::error::Error`, so this blanket conversion cannot overlap with the
+// reflexive `From<Error> for Error`.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Self {
+            repr: Repr::Boxed(Box::new(e)),
+            context: Vec::new(),
+        }
+    }
+}
+
+/// `.context(..)` / `.with_context(..)` extension for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(context)
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(f())
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: `",
+                stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn display_shows_outermost_context() {
+        let e: Error = Error::from(io_err()).context("reading config");
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: no such file");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: no such file");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing key");
+    }
+
+    #[test]
+    fn question_mark_converts_and_rewraps() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        fn outer() -> Result<()> {
+            inner().context("outer layer")?;
+            Ok(())
+        }
+        let e = outer().unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer layer: no such file");
+    }
+
+    #[test]
+    fn macros_compile_and_fire() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(5).unwrap_err()), "five is right out");
+        assert_eq!(format!("{}", f(12).unwrap_err()), "x too big: 12");
+        let e = anyhow!("plain");
+        assert_eq!(format!("{e}"), "plain");
+    }
+
+    #[test]
+    fn ensure_without_message() {
+        fn f(ok: bool) -> Result<()> {
+            ensure!(ok);
+            Ok(())
+        }
+        assert!(f(true).is_ok());
+        assert!(format!("{}", f(false).unwrap_err()).contains("condition failed"));
+    }
+}
