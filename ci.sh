@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# Minimal CI for the SMASH reproduction: format check + build + tier-1 tests.
+# Minimal CI for the SMASH reproduction: format check + build + tier-1
+# tests + warning-clean rustdoc + example smoke test.
 # Usage: ./ci.sh        (from anywhere inside the repo)
 set -euo pipefail
 cd "$(dirname "$0")"
@@ -16,5 +17,11 @@ cargo build --release
 
 echo "== tests (incl. vendored shim) =="
 cargo test --workspace -q
+
+echo "== rustdoc (deny warnings) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+echo "== example smoke test: serve_spgemm =="
+cargo run --release --example serve_spgemm >/dev/null
 
 echo "CI green ✓"

@@ -1,18 +1,18 @@
 //! The L3 coordinator as a service: a bounded-queue worker pool serving a
 //! mixed stream of SpGEMM requests (simulated SMASH jobs + native parallel
-//! Gustavson jobs), demonstrating the zero-copy matrix registry, routing,
-//! batching, backpressure, and the window scheduler's LPT oversubscription
-//! policy across a multi-block die.
+//! Gustavson jobs), demonstrating the zero-copy matrix registry, batched
+//! symbolic reuse across requests that share a registered operand pair,
+//! LRU registry eviction under a byte budget, routing, backpressure, and
+//! the window scheduler's LPT oversubscription policy across a
+//! multi-block die.
 //!
 //! Run: `cargo run --release --example serve_spgemm`
 
 use smash::config::{KernelConfig, SimConfig};
-use smash::coordinator::{
-    schedule_windows, Coordinator, Job, SchedPolicy, ServerConfig,
-};
+use smash::coordinator::{schedule_windows, Coordinator, Job, SchedPolicy, ServerConfig};
 use smash::gen::{rmat, RmatParams};
 use smash::kernels::plan_windows;
-use smash::spgemm::Dataflow;
+use smash::spgemm::{Dataflow, WorkerPool};
 use std::time::Instant;
 
 fn main() {
@@ -38,6 +38,7 @@ fn main() {
     let mut coord = Coordinator::start(ServerConfig {
         workers: 4,
         queue_depth: 8,
+        ..ServerConfig::default()
     });
     // Register the pair once: every request below resolves to a pointer
     // clone of this single Arc<Csr> copy — a burst of N requests against
@@ -46,9 +47,10 @@ fn main() {
     let id_b = coord.register("B", b);
     let shared_a = coord.matrix(id_a).unwrap();
     println!(
-        "\nregistered resident pair: A {} nnz, B {} nnz (one copy each)",
+        "\nregistered resident pair: A {} nnz, B {} nnz (one copy each, {} B resident)",
         shared_a.nnz(),
-        coord.matrix(id_b).unwrap().nnz()
+        coord.matrix(id_b).unwrap().nnz(),
+        coord.resident_bytes(),
     );
 
     let t0 = Instant::now();
@@ -63,7 +65,10 @@ fn main() {
         });
         submitted += 1;
     }
-    // native parallel-Gustavson baseline jobs (routing heterogeneity)
+    // native parallel-Gustavson jobs on the persistent worker pool: all
+    // eight share the registered (A, B) pair, so the coordinator batches
+    // them onto ONE symbolic pass — the first worker computes and
+    // publishes the plan, the other seven reuse it and run only numeric.
     for _ in 0..8 {
         coord.submit(Job::NativeSpgemm {
             a: id_a.into(),
@@ -77,10 +82,22 @@ fn main() {
     let responses = coord.collect_all();
     let wall = t0.elapsed();
     let mut sim_ms_total = 0.0;
+    let mut plans_computed = 0usize;
+    let mut plans_reused = 0usize;
     let mut by_worker = std::collections::HashMap::new();
     for r in responses.values() {
         *by_worker.entry(r.worker).or_insert(0usize) += 1;
         sim_ms_total += r.sim_ms.unwrap_or(0.0);
+        match r.symbolic_reused {
+            Some(false) => plans_computed += 1,
+            Some(true) => plans_reused += 1,
+            None => {}
+        }
+        assert_eq!(
+            r.registered,
+            vec![id_a, id_b],
+            "every job resolved the registered pair"
+        );
     }
     println!(
         "served {} jobs in {:.2?} ({:.1} jobs/s); {:.1} simulated ms of PIUMA time",
@@ -88,6 +105,15 @@ fn main() {
         wall,
         responses.len() as f64 / wall.as_secs_f64(),
         sim_ms_total
+    );
+    let (passes, hits) = coord.symbolic_stats();
+    println!(
+        "batched symbolic reuse: {passes} pass(es) computed, {hits} cache hits \
+         ({plans_computed} job(s) computed a plan, {plans_reused} reused one)"
+    );
+    println!(
+        "persistent pool: {} worker threads served every parallel phase (no spawn-per-call)",
+        WorkerPool::global().workers()
     );
     // registry + our handle: the whole burst never deep-copied A
     println!(
@@ -99,5 +125,50 @@ fn main() {
     for (w, n) in workers {
         println!("  worker {w}: {n} jobs");
     }
+    coord.shutdown();
+
+    // ---- Part 3: registry lifecycle under a byte budget ----
+    // A long-lived serving process cannot grow its registry forever: with
+    // `max_resident_bytes` set, the least-recently-used resident is
+    // evicted at register time. In-flight jobs are safe — they hold Arc
+    // clones resolved at submit — but stale ids stop resolving.
+    let m0 = rmat(&RmatParams::new(9, 5_000, 7));
+    let budget = 2 * m0.resident_bytes() + m0.resident_bytes() / 2; // fits ~2 of these
+    let mut coord = Coordinator::start(ServerConfig {
+        workers: 2,
+        queue_depth: 8,
+        max_resident_bytes: budget,
+        ..ServerConfig::default()
+    });
+    println!("\nregistry budget: {budget} B (~2 matrices of this size)");
+    let id0 = coord.register("G0", m0);
+    let id1 = coord.register("G1", rmat(&RmatParams::new(9, 5_000, 8)));
+    // A job against G0 resolves its Arc now...
+    coord.submit(Job::NativeSpgemm {
+        a: id0.into(),
+        b: id0.into(),
+        dataflow: Dataflow::ParGustavson { threads: 2 },
+    });
+    // ...then a third registration pushes past the budget. G0 was touched
+    // by that submit, so G1 is now the least-recently-used victim.
+    let id2 = coord.register("G2", rmat(&RmatParams::new(9, 5_000, 9)));
+    println!(
+        "registered G0, G1, G2; after eviction the registry holds {} matrices, {} B ({} eviction(s))",
+        coord.resident_count(),
+        coord.resident_bytes(),
+        coord.evictions()
+    );
+    println!(
+        "  G0 resolvable: {} | G1 resolvable: {} | G2 resolvable: {}",
+        coord.matrix(id0).is_some(),
+        coord.matrix(id1).is_some(),
+        coord.matrix(id2).is_some()
+    );
+    let served = coord.collect_all();
+    println!(
+        "in-flight job against a resident matrix completed: {} response(s), {} output nnz",
+        served.len(),
+        served.values().map(|r| r.c.nnz()).sum::<usize>()
+    );
     coord.shutdown();
 }

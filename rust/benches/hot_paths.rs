@@ -1,17 +1,24 @@
 //! Microbenchmarks of the hot paths that dominate the end-to-end harness
 //! (the §Perf working set): R-MAT generation, CSR construction, the
-//! Gustavson oracle, the SMASH hashtable, and one simulated kernel run.
-//! Before/after numbers for the optimization log live in EXPERIMENTS.md.
+//! Gustavson oracle (serial, pooled-parallel, spawn-parallel, and
+//! plan-reusing), the serving coordinator's batched-vs-independent burst,
+//! the SMASH hashtable, and one simulated kernel run. Before/after
+//! numbers for the optimization log live in EXPERIMENTS.md.
 
 use smash::bench::Bench;
 use smash::config::{HashBits, KernelConfig, SimConfig};
+use smash::coordinator::{Coordinator, Job, ServerConfig};
 use smash::formats::Csr;
 use smash::gen::{rmat, RmatParams};
 use smash::kernels::{
     insertion_sort_cost, insertion_sort_cost_quadratic, run_smash, TagTable,
 };
-use smash::spgemm::{gustavson, par_gustavson, rowwise_hash};
+use smash::spgemm::{
+    gustavson, par_gustavson, par_gustavson_spawning, par_gustavson_with_plan, rowwise_hash,
+    symbolic_plan, Dataflow,
+};
 use smash::util::prng::Xoshiro256;
+use std::sync::Arc;
 
 fn main() {
     let mut h = Bench::new();
@@ -37,11 +44,70 @@ fn main() {
 
     h.run("gustavson_oracle_2^11", || gustavson(&a, &b));
 
-    h.run("par_gustavson_t4_2^11", || par_gustavson(&a, &b, 4));
+    // Pooled vs spawn-per-call: the persistent WorkerPool must serve the
+    // same product at least as fast as PR 1's thread::scope spawning —
+    // and bitwise identical to the serial oracle either way.
+    let (oracle, _) = gustavson(&a, &b);
+    {
+        let (cp, _) = par_gustavson(&a, &b, 4);
+        let (cs, _) = par_gustavson_spawning(&a, &b, 4);
+        assert_eq!(oracle.row_ptr, cp.row_ptr);
+        assert_eq!(oracle.col_idx, cp.col_idx);
+        assert_eq!(oracle.data, cp.data, "pooled backend must match the oracle bitwise");
+        assert_eq!(oracle.data, cs.data, "spawn backend must match the oracle bitwise");
+    }
+    h.run("par_gustavson_t4_pooled_2^11", || par_gustavson(&a, &b, 4));
 
-    h.run("par_gustavson_t8_2^11", || par_gustavson(&a, &b, 8));
+    h.run("par_gustavson_t4_spawn_2^11", || {
+        par_gustavson_spawning(&a, &b, 4)
+    });
+
+    h.run("par_gustavson_t8_pooled_2^11", || par_gustavson(&a, &b, 8));
+
+    // Symbolic amortization: the plan alone, then numeric-only execution
+    // against a cached plan (what every post-first job in a batched
+    // serving burst pays).
+    h.run("symbolic_plan_t4_2^11", || symbolic_plan(&a, &b, 4));
+
+    let shared_plan = symbolic_plan(&a, &b, 4);
+    {
+        let (cw, _) = par_gustavson_with_plan(&a, &b, 4, &shared_plan);
+        assert_eq!(oracle.data, cw.data, "plan-reusing backend must match the oracle bitwise");
+    }
+    h.run("par_gustavson_t4_cached_plan_2^11", || {
+        par_gustavson_with_plan(&a, &b, 4, &shared_plan)
+    });
 
     h.run("rowwise_hash_native_2^11", || rowwise_hash(&a, &b));
+
+    // Batched vs independent serving: a 16-job burst against one
+    // registered operand pair, with the coordinator's symbolic cache on
+    // (one symbolic pass, 15 reuses) vs off (16 independent passes).
+    let a_shared = Arc::new(a.clone());
+    let b_shared = Arc::new(b.clone());
+    let serve_burst = |symbolic_cache: bool| {
+        let mut coord = Coordinator::start(ServerConfig {
+            workers: 2,
+            queue_depth: 32,
+            symbolic_cache,
+            ..ServerConfig::default()
+        });
+        let id_a = coord.register_arc("A", Arc::clone(&a_shared));
+        let id_b = coord.register_arc("B", Arc::clone(&b_shared));
+        for _ in 0..16 {
+            coord.submit(Job::NativeSpgemm {
+                a: id_a.into(),
+                b: id_b.into(),
+                dataflow: Dataflow::ParGustavson { threads: 2 },
+            });
+        }
+        let responses = coord.collect_all();
+        let nnz: usize = responses.values().map(|r| r.c.nnz()).sum();
+        coord.shutdown();
+        nnz
+    };
+    h.run("serve_burst16_batched_2^11", || serve_burst(true));
+    h.run("serve_burst16_independent_2^11", || serve_burst(false));
 
     // V1 write-back sort cost: the semi-sorted drain of a high-bit table,
     // old quadratic shift counter vs. the merge-sort inversion counter

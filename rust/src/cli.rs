@@ -79,8 +79,13 @@ USAGE: smash <tables|figures|run|gcn|gen|serve|help> [flags]
   gcn     [--seed N]             (requires `make artifacts`)
   gen     --out graph.mtx [--log2n 10] [--edges 10000] [--seed N]
   serve   [--jobs 8] [--workers 4] [--threads 4] [--log2n 10] [--edges 20000] [--smash]
+          [--no-batch] [--spawn] [--max-resident-mb N]
           — register one resident matrix pair, serve a burst of zero-copy
-          requests against it (native parallel Gustavson, or --smash sim)
+          requests against it (native parallel Gustavson on the persistent
+          worker pool, or --smash sim). Jobs sharing the registered pair
+          batch onto ONE symbolic pass unless --no-batch; --spawn uses the
+          spawn-per-call backend (the pre-pool baseline); --max-resident-mb
+          bounds the registry (LRU eviction past it, 0 = unlimited)
   graph   [--dataset Cora] — BFS / APSP / closure / triangles via semiring SpGEMM
   die     [--blocks 4] [--policy lpt|rr] — multi-block scale-out run
   trace   [--out trace.bin] — record a V2 run's instruction trace, replay it,
@@ -333,9 +338,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let log2n = args.get_u64("log2n", 10)? as u32;
     let edges = args.get_u64("edges", 20_000)? as usize;
     let smash = args.get("smash").is_some();
+    let spawn = args.get("spawn").is_some();
+    let batch = args.get("no-batch").is_none();
+    // 0 (the default) = unlimited; N bounds the registry to N MiB with
+    // LRU eviction past it.
+    let max_resident_bytes = match args.get_u64("max-resident-mb", 0)? as usize {
+        0 => usize::MAX,
+        mb => mb << 20,
+    };
     let mut coord = Coordinator::start(ServerConfig {
         workers,
         queue_depth: 16,
+        max_resident_bytes,
+        symbolic_cache: batch,
     });
     // One resident dataset serves the whole burst: the registry stores the
     // pair once as Arc<Csr>; every job below clones pointers, not CSR
@@ -344,20 +359,33 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let id_b = coord.register("B", rmat(&RmatParams::new(log2n, edges, 0xB)));
     let nnz_in = coord.matrix(id_a).unwrap().nnz() + coord.matrix(id_b).unwrap().nnz();
     println!(
-        "registered resident pair A·B ({} input nnz, shared zero-copy across {jobs} jobs)",
-        crate::util::fmt_count(nnz_in as u64)
+        "registered resident pair A·B ({} input nnz, {}, shared zero-copy across {jobs} jobs)",
+        crate::util::fmt_count(nnz_in as u64),
+        crate::util::fmt_bytes(coord.resident_bytes() as u64),
     );
+    let dataflow = if spawn {
+        Dataflow::ParGustavsonSpawn { threads }
+    } else {
+        Dataflow::ParGustavson { threads }
+    };
     let t0 = std::time::Instant::now();
     let mut served = 0usize;
     let mut total_nnz = 0usize;
+    let mut reused = 0usize;
+    let mut drain = |r: crate::coordinator::Response| {
+        total_nnz += r.c.nnz();
+        served += 1;
+        if r.symbolic_reused == Some(true) {
+            reused += 1;
+        }
+    };
     for _ in 0..jobs {
         // Drain ahead of the done-channel capacity (1024): submitting an
         // unbounded --jobs burst without collecting would deadlock once
         // workers block on the full response channel.
         while coord.pending() >= 512 {
             let r = coord.collect_one().expect("pending jobs outstanding");
-            total_nnz += r.c.nnz();
-            served += 1;
+            drain(r);
         }
         if smash {
             coord.submit(Job::SmashSpgemm {
@@ -370,26 +398,42 @@ fn cmd_serve(args: &Args) -> Result<()> {
             coord.submit(Job::NativeSpgemm {
                 a: id_a.into(),
                 b: id_b.into(),
-                dataflow: Dataflow::ParGustavson { threads },
+                dataflow,
             });
         }
     }
     while let Some(r) = coord.collect_one() {
-        total_nnz += r.c.nnz();
-        served += 1;
+        drain(r);
     }
     let wall = t0.elapsed();
     println!(
         "served {served} {} jobs on {workers} workers in {} ({} output nnz, throughput {:.1} jobs/s)",
         if smash {
             "simulated SMASH".to_string()
+        } else if spawn {
+            format!("native par-Gustavson({threads}, spawn-per-call)")
         } else {
-            format!("native par-Gustavson({threads})")
+            format!("native par-Gustavson({threads}, pooled)")
         },
         crate::util::timer::fmt_duration(wall),
         crate::util::fmt_count(total_nnz as u64),
         served as f64 / wall.as_secs_f64()
     );
+    let (passes, hits) = coord.symbolic_stats();
+    if !smash {
+        // The symbolic cache applies to the pooled dataflow only, so
+        // --spawn bypasses it — say so instead of printing 0/0 silently.
+        let mode = if spawn {
+            " bypassed (--spawn serves every job independently)"
+        } else if batch {
+            ""
+        } else {
+            " disabled (--no-batch)"
+        };
+        println!(
+            "symbolic batching{mode}: {passes} pass(es) computed, {hits} cache hits ({reused} responses reused a plan)"
+        );
+    }
     coord.shutdown();
     Ok(())
 }

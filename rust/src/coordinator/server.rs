@@ -15,11 +15,32 @@
 //! a burst of N requests against the same resident dataset ships N
 //! reference-counted pointers to the pool — never N deep copies of the
 //! CSR arrays.
+//!
+//! ## Batched symbolic reuse
+//!
+//! SMASH's kernel amortizes work across rows; the coordinator amortizes
+//! the same way across *requests*. Jobs whose registered operand pair
+//! matches share one [`SymbolicPlan`] (per-row FLOPs, exact output row
+//! sizes, row pointers): the first worker to reach the pair computes and
+//! publishes the plan, every later job in the burst reuses it and runs
+//! only the numeric pass ([`crate::spgemm::par_gustavson_with_plan`]).
+//! Each [`Response`] records which registered operands it used and
+//! whether its symbolic pass was computed or reused.
+//!
+//! ## Registry lifecycle
+//!
+//! Registered matrices are accounted against
+//! [`ServerConfig::max_resident_bytes`]; past the budget the
+//! least-recently-used resident is evicted (its name and id stop
+//! resolving). Eviction is safe mid-flight: jobs hold `Arc` clones
+//! resolved at submit time, so an evicted matrix stays alive exactly
+//! until its last in-flight job drains.
 
 use crate::config::{KernelConfig, SimConfig};
 use crate::formats::Csr;
-use crate::spgemm::Dataflow;
+use crate::spgemm::{par_gustavson_with_plan, symbolic_plan, Dataflow, SymbolicPlan};
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -63,17 +84,40 @@ impl From<Csr> for MatrixRef {
 pub enum Job {
     /// Multiply on the simulated PIUMA block with a SMASH version.
     SmashSpgemm {
+        /// Left operand.
         a: MatrixRef,
+        /// Right operand.
         b: MatrixRef,
+        /// SMASH kernel version/knobs to simulate.
         kernel: KernelConfig,
+        /// Simulated-architecture parameters.
         sim: SimConfig,
     },
     /// Multiply natively with a reference dataflow.
     NativeSpgemm {
+        /// Left operand.
         a: MatrixRef,
+        /// Right operand.
         b: MatrixRef,
+        /// Which native dataflow executes the product.
         dataflow: Dataflow,
     },
+}
+
+/// One symbolic-plan cache slot: the once-computed plan for a registered
+/// (A, B) pair. Workers lock the slot; the first computes and publishes,
+/// later jobs reuse — the inner mutex is what guarantees *exactly one*
+/// symbolic pass per pair even when a burst lands on many workers at once.
+type PlanSlot = Arc<Mutex<Option<Arc<SymbolicPlan>>>>;
+
+/// Shared counters for the symbolic-plan cache, observable via
+/// [`Coordinator::symbolic_stats`].
+#[derive(Default)]
+struct SymbolicStats {
+    /// Symbolic passes actually computed by workers.
+    passes: AtomicU64,
+    /// Jobs that reused an already-published plan.
+    hits: AtomicU64,
 }
 
 /// A resolved job as shipped to workers: operands are always `Arc` pointer
@@ -84,29 +128,56 @@ enum Work {
         b: Arc<Csr>,
         kernel: KernelConfig,
         sim: SimConfig,
+        registered: Vec<MatrixId>,
     },
     Native {
         a: Arc<Csr>,
         b: Arc<Csr>,
         dataflow: Dataflow,
+        registered: Vec<MatrixId>,
+        /// Shared symbolic-plan slot when batching applies to this job.
+        plan: Option<PlanSlot>,
     },
 }
 
 /// Worker answer.
 pub struct Response {
+    /// The id [`Coordinator::submit`] returned for this job.
     pub id: JobId,
+    /// The product matrix.
     pub c: Csr,
     /// Simulated milliseconds (SMASH jobs) or None (native).
     pub sim_ms: Option<f64>,
     /// Wall time spent by the worker.
     pub wall: std::time::Duration,
+    /// Index of the worker thread that served the job.
     pub worker: usize,
+    /// Registered operands this job resolved at submit time, in (a, b)
+    /// order; inline operands contribute nothing.
+    pub registered: Vec<MatrixId>,
+    /// Symbolic-plan provenance: `None` — the symbolic cache was not
+    /// involved (inline operands, non-batchable dataflow, or cache
+    /// disabled); `Some(false)` — this job computed and published the
+    /// pair's plan; `Some(true)` — this job reused a cached plan.
+    pub symbolic_reused: Option<bool>,
 }
 
+/// Knobs for [`Coordinator::start`].
 pub struct ServerConfig {
+    /// Worker threads serving the job queue.
     pub workers: usize,
     /// Bounded queue depth (backpressure threshold).
     pub queue_depth: usize,
+    /// Byte budget for registered resident matrices: past it, the
+    /// least-recently-used resident is evicted at register time (the
+    /// matrix being registered is itself never evicted). `usize::MAX`
+    /// (the default) never evicts.
+    pub max_resident_bytes: usize,
+    /// Share symbolic plans across jobs whose registered operand pair
+    /// matches — exactly one symbolic pass per pair per burst. Disable to
+    /// serve every job independently (the PR-1 behaviour, kept for the
+    /// batched-vs-independent benchmark).
+    pub symbolic_cache: bool,
 }
 
 impl Default for ServerConfig {
@@ -116,8 +187,19 @@ impl Default for ServerConfig {
                 .map(|n| n.get().min(8))
                 .unwrap_or(2),
             queue_depth: 32,
+            max_resident_bytes: usize::MAX,
+            symbolic_cache: true,
         }
     }
+}
+
+/// A registered matrix plus its eviction accounting.
+struct Resident {
+    m: Arc<Csr>,
+    name: String,
+    bytes: usize,
+    /// Logical timestamp of the last register/submit touch (LRU order).
+    last_use: u64,
 }
 
 enum Envelope {
@@ -133,20 +215,32 @@ pub struct Coordinator {
     handles: Vec<JoinHandle<()>>,
     next_id: u64,
     pending: usize,
-    registry: HashMap<u64, Arc<Csr>>,
+    registry: HashMap<u64, Resident>,
     names: HashMap<String, MatrixId>,
     next_matrix: u64,
+    /// Logical clock driving LRU order (bumped on register + resolve).
+    clock: u64,
+    resident_bytes: usize,
+    max_resident_bytes: usize,
+    symbolic_cache_enabled: bool,
+    /// Symbolic-plan slots keyed by registered (a, b) id pair.
+    plans: HashMap<(u64, u64), PlanSlot>,
+    stats: Arc<SymbolicStats>,
+    evictions: u64,
 }
 
 impl Coordinator {
+    /// Spawn the worker pool and return the coordinator handle.
     pub fn start(cfg: ServerConfig) -> Self {
         let (tx, rx) = sync_channel::<Envelope>(cfg.queue_depth);
         let rx = Arc::new(Mutex::new(rx));
         let (tx_done, rx_done) = sync_channel::<Response>(cfg.queue_depth.max(1024));
+        let stats = Arc::new(SymbolicStats::default());
         let mut handles = Vec::new();
         for worker in 0..cfg.workers.max(1) {
             let rx = Arc::clone(&rx);
             let tx_done = tx_done.clone();
+            let stats = Arc::clone(&stats);
             handles.push(std::thread::spawn(move || loop {
                 let msg = {
                     let guard = rx.lock().unwrap();
@@ -155,22 +249,16 @@ impl Coordinator {
                 match msg {
                     Ok(Envelope::Work(id, work)) => {
                         let t0 = std::time::Instant::now();
-                        let (c, sim_ms) = match work {
-                            Work::Smash { a, b, kernel, sim } => {
-                                let run = crate::kernels::run_smash(&a, &b, &kernel, &sim);
-                                (run.c, Some(run.report.ms))
-                            }
-                            Work::Native { a, b, dataflow } => {
-                                let (c, _) = dataflow.multiply(&a, &b);
-                                (c, None)
-                            }
-                        };
+                        let (c, sim_ms, registered, symbolic_reused) =
+                            serve_work(work, &stats);
                         let _ = tx_done.send(Response {
                             id,
                             c,
                             sim_ms,
                             wall: t0.elapsed(),
                             worker,
+                            registered,
+                            symbolic_reused,
                         });
                     }
                     Ok(Envelope::Stop) | Err(_) => break,
@@ -186,6 +274,13 @@ impl Coordinator {
             registry: HashMap::new(),
             names: HashMap::new(),
             next_matrix: 0,
+            clock: 0,
+            resident_bytes: 0,
+            max_resident_bytes: cfg.max_resident_bytes,
+            symbolic_cache_enabled: cfg.symbolic_cache,
+            plans: HashMap::new(),
+            stats,
+            evictions: 0,
         }
     }
 
@@ -193,7 +288,8 @@ impl Coordinator {
     /// stored once; every job referencing the returned id gets a pointer
     /// clone. Re-registering a name points it at the new matrix and
     /// evicts the old one from the registry (it stays alive only until
-    /// its in-flight jobs finish).
+    /// its in-flight jobs finish). Registering past
+    /// `max_resident_bytes` evicts least-recently-used residents.
     pub fn register(&mut self, name: impl Into<String>, m: Csr) -> MatrixId {
         self.register_arc(name, Arc::new(m))
     }
@@ -204,12 +300,25 @@ impl Coordinator {
     /// frees once they drain; submitting with the stale id afterwards
     /// panics like any unregistered id.
     pub fn register_arc(&mut self, name: impl Into<String>, m: Arc<Csr>) -> MatrixId {
+        let name = name.into();
         let id = MatrixId(self.next_matrix);
         self.next_matrix += 1;
-        self.registry.insert(id.0, m);
-        if let Some(old) = self.names.insert(name.into(), id) {
-            self.registry.remove(&old.0);
+        let bytes = m.resident_bytes();
+        self.clock += 1;
+        self.resident_bytes += bytes;
+        self.registry.insert(
+            id.0,
+            Resident {
+                m,
+                name: name.clone(),
+                bytes,
+                last_use: self.clock,
+            },
+        );
+        if let Some(old) = self.names.insert(name, id) {
+            self.evict_id(old);
         }
+        self.enforce_budget(id);
         id
     }
 
@@ -220,37 +329,151 @@ impl Coordinator {
 
     /// Pointer clone of a registered matrix.
     pub fn matrix(&self, id: MatrixId) -> Option<Arc<Csr>> {
-        self.registry.get(&id.0).cloned()
+        self.registry.get(&id.0).map(|r| Arc::clone(&r.m))
     }
 
-    /// Resolve an operand to the shared pointer it stands for.
+    /// Bytes of registered CSR data currently resident.
+    pub fn resident_bytes(&self) -> usize {
+        self.resident_bytes
+    }
+
+    /// Number of registered resident matrices.
+    pub fn resident_count(&self) -> usize {
+        self.registry.len()
+    }
+
+    /// Matrices dropped from the registry so far (LRU budget evictions
+    /// plus re-register supersessions).
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Symbolic-plan cache counters: `(passes computed, cache hits)`.
+    /// A burst of N batchable jobs sharing one registered operand pair
+    /// reports `(1, N - 1)`.
+    pub fn symbolic_stats(&self) -> (u64, u64) {
+        (
+            self.stats.passes.load(Ordering::Relaxed),
+            self.stats.hits.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Manually evict a named matrix; returns `false` for unknown names.
+    /// In-flight jobs holding the resolved `Arc` complete unaffected;
+    /// later lookups and submits with the stale id fail.
+    pub fn evict(&mut self, name: &str) -> bool {
+        match self.names.get(name).copied() {
+            Some(id) => self.evict_id(id),
+            None => false,
+        }
+    }
+
+    /// Drop one matrix from the registry, its (possibly re-pointed) name
+    /// mapping, and every symbolic-plan cache entry involving it.
+    fn evict_id(&mut self, id: MatrixId) -> bool {
+        match self.registry.remove(&id.0) {
+            Some(r) => {
+                self.resident_bytes -= r.bytes;
+                self.plans.retain(|&(pa, pb), _| pa != id.0 && pb != id.0);
+                if self.names.get(&r.name) == Some(&id) {
+                    self.names.remove(&r.name);
+                }
+                self.evictions += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Evict least-recently-used residents until the registry fits the
+    /// byte budget. The matrix registered most recently (`keep`) is never
+    /// evicted, so one oversized matrix still registers successfully.
+    fn enforce_budget(&mut self, keep: MatrixId) {
+        while self.resident_bytes > self.max_resident_bytes {
+            let victim = self
+                .registry
+                .iter()
+                .filter(|(&id, _)| id != keep.0)
+                .min_by_key(|(_, r)| r.last_use)
+                .map(|(&id, _)| MatrixId(id));
+            match victim {
+                Some(id) => {
+                    self.evict_id(id);
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Resolve an operand to the shared pointer it stands for, recording
+    /// registered ids in `used` and touching their LRU timestamps.
     /// Panics on an unregistered id — that is a caller bug, not a
     /// recoverable serving condition.
-    fn resolve(&self, r: MatrixRef) -> Arc<Csr> {
+    fn resolve(&mut self, r: MatrixRef, used: &mut Vec<MatrixId>) -> Arc<Csr> {
         match r {
             MatrixRef::Inline(m) => m,
-            MatrixRef::Registered(id) => self
-                .registry
-                .get(&id.0)
-                .cloned()
-                .unwrap_or_else(|| panic!("matrix {:?} is not registered", id)),
+            MatrixRef::Registered(id) => {
+                self.clock += 1;
+                let clock = self.clock;
+                let res = self
+                    .registry
+                    .get_mut(&id.0)
+                    .unwrap_or_else(|| panic!("matrix {:?} is not registered", id));
+                res.last_use = clock;
+                used.push(id);
+                Arc::clone(&res.m)
+            }
+        }
+    }
+
+    /// The shared symbolic-plan slot for a job, when batching applies:
+    /// cache enabled, pool-backed parallel dataflow, and both operands
+    /// registered.
+    fn plan_slot(&mut self, used: &[MatrixId], dataflow: Dataflow) -> Option<PlanSlot> {
+        if !self.symbolic_cache_enabled {
+            return None;
+        }
+        if !matches!(dataflow, Dataflow::ParGustavson { .. }) {
+            return None;
+        }
+        match used {
+            [a, b] => Some(Arc::clone(
+                self.plans
+                    .entry((a.0, b.0))
+                    .or_insert_with(|| Arc::new(Mutex::new(None))),
+            )),
+            _ => None,
         }
     }
 
     /// Submit a job (blocks when the queue is full — backpressure).
     pub fn submit(&mut self, job: Job) -> JobId {
         let work = match job {
-            Job::SmashSpgemm { a, b, kernel, sim } => Work::Smash {
-                a: self.resolve(a),
-                b: self.resolve(b),
-                kernel,
-                sim,
-            },
-            Job::NativeSpgemm { a, b, dataflow } => Work::Native {
-                a: self.resolve(a),
-                b: self.resolve(b),
-                dataflow,
-            },
+            Job::SmashSpgemm { a, b, kernel, sim } => {
+                let mut used = Vec::new();
+                let a = self.resolve(a, &mut used);
+                let b = self.resolve(b, &mut used);
+                Work::Smash {
+                    a,
+                    b,
+                    kernel,
+                    sim,
+                    registered: used,
+                }
+            }
+            Job::NativeSpgemm { a, b, dataflow } => {
+                let mut used = Vec::new();
+                let a = self.resolve(a, &mut used);
+                let b = self.resolve(b, &mut used);
+                let plan = self.plan_slot(&used, dataflow);
+                Work::Native {
+                    a,
+                    b,
+                    dataflow,
+                    registered: used,
+                    plan,
+                }
+            }
         };
         let id = JobId(self.next_id);
         self.next_id += 1;
@@ -298,6 +521,57 @@ impl Coordinator {
     }
 }
 
+/// Execute one resolved work item on the calling worker thread, returning
+/// `(product, sim_ms, registered operands, symbolic provenance)`.
+fn serve_work(
+    work: Work,
+    stats: &SymbolicStats,
+) -> (Csr, Option<f64>, Vec<MatrixId>, Option<bool>) {
+    match work {
+        Work::Smash {
+            a,
+            b,
+            kernel,
+            sim,
+            registered,
+        } => {
+            let run = crate::kernels::run_smash(&a, &b, &kernel, &sim);
+            (run.c, Some(run.report.ms), registered, None)
+        }
+        Work::Native {
+            a,
+            b,
+            dataflow,
+            registered,
+            plan,
+        } => match (dataflow, plan) {
+            (Dataflow::ParGustavson { threads }, Some(slot)) => {
+                let (plan, reused) = {
+                    let mut guard = slot.lock().unwrap();
+                    if let Some(p) = (*guard).clone() {
+                        stats.hits.fetch_add(1, Ordering::Relaxed);
+                        (p, true)
+                    } else {
+                        // First job of the pair: compute under the slot
+                        // lock so the rest of the burst blocks here and
+                        // reuses, rather than racing a duplicate pass.
+                        let p = Arc::new(symbolic_plan(&a, &b, threads));
+                        stats.passes.fetch_add(1, Ordering::Relaxed);
+                        *guard = Some(Arc::clone(&p));
+                        (p, false)
+                    }
+                };
+                let (c, _) = par_gustavson_with_plan(&a, &b, threads, &plan);
+                (c, None, registered, Some(reused))
+            }
+            (df, _) => {
+                let (c, _) = df.multiply(&a, &b);
+                (c, None, registered, None)
+            }
+        },
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -309,6 +583,7 @@ mod tests {
         let mut coord = Coordinator::start(ServerConfig {
             workers: 2,
             queue_depth: 8,
+            ..ServerConfig::default()
         });
         let a = erdos_renyi(40, 200, 1);
         let b = erdos_renyi(40, 200, 2);
@@ -325,6 +600,9 @@ mod tests {
         assert_eq!(responses.len(), 4);
         for id in ids {
             assert!(responses[&id].c.approx_same(&oracle));
+            // inline operands: nothing registered, no symbolic batching
+            assert!(responses[&id].registered.is_empty());
+            assert_eq!(responses[&id].symbolic_reused, None);
         }
         coord.shutdown();
     }
@@ -334,6 +612,7 @@ mod tests {
         let mut coord = Coordinator::start(ServerConfig {
             workers: 2,
             queue_depth: 4,
+            ..ServerConfig::default()
         });
         let a = rmat(&RmatParams::new(6, 300, 3));
         let b = rmat(&RmatParams::new(6, 300, 4));
@@ -356,6 +635,7 @@ mod tests {
         let mut coord = Coordinator::start(ServerConfig {
             workers: 1,
             queue_depth: 4,
+            ..ServerConfig::default()
         });
         let a = erdos_renyi(10, 20, 5);
         let mut ids = Vec::new();
@@ -384,6 +664,7 @@ mod tests {
         let mut coord = Coordinator::start(ServerConfig {
             workers: 1,
             queue_depth: 2,
+            ..ServerConfig::default()
         });
         assert!(coord.collect_one().is_none());
         assert_eq!(coord.pending(), 0);
@@ -410,6 +691,7 @@ mod tests {
         let mut coord = Coordinator::start(ServerConfig {
             workers: 2,
             queue_depth: 16,
+            ..ServerConfig::default()
         });
         let a = erdos_renyi(48, 300, 21);
         let b = erdos_renyi(48, 300, 22);
@@ -433,6 +715,7 @@ mod tests {
         assert_eq!(responses.len(), 8);
         for r in responses.values() {
             assert!(r.c.approx_same(&oracle));
+            assert_eq!(r.registered, vec![id_a, id_b]);
         }
         // Every worker dropped its pointer clone before sending its
         // response: the whole 8-job burst used ONE resident copy of A.
@@ -449,12 +732,162 @@ mod tests {
         coord.shutdown();
     }
 
+    /// The batching contract: a burst of jobs sharing one registered
+    /// operand pair performs exactly ONE symbolic pass; every other job
+    /// reuses the published plan, and every response reports which side
+    /// of that split it was on. Outputs stay bitwise equal to the serial
+    /// oracle.
+    #[test]
+    fn shared_operand_burst_single_symbolic_pass() {
+        let mut coord = Coordinator::start(ServerConfig {
+            workers: 4,
+            queue_depth: 32,
+            ..ServerConfig::default()
+        });
+        let a = rmat(&RmatParams::new(7, 900, 51));
+        let b = rmat(&RmatParams::new(7, 900, 52));
+        let (oracle, _) = gustavson(&a, &b);
+        let id_a = coord.register("A", a);
+        let id_b = coord.register("B", b);
+        for _ in 0..12 {
+            coord.submit(Job::NativeSpgemm {
+                a: id_a.into(),
+                b: id_b.into(),
+                dataflow: Dataflow::ParGustavson { threads: 2 },
+            });
+        }
+        let responses = coord.collect_all();
+        assert_eq!(responses.len(), 12);
+        let (passes, hits) = coord.symbolic_stats();
+        assert_eq!(passes, 1, "burst must share exactly one symbolic pass");
+        assert_eq!(hits, 11);
+        let mut computed = 0;
+        for r in responses.values() {
+            assert_eq!(r.registered, vec![id_a, id_b]);
+            match r.symbolic_reused {
+                Some(false) => computed += 1,
+                Some(true) => {}
+                None => panic!("batched job must report symbolic provenance"),
+            }
+            assert_eq!(r.c.row_ptr, oracle.row_ptr);
+            assert_eq!(r.c.col_idx, oracle.col_idx);
+            assert_eq!(r.c.data, oracle.data);
+        }
+        assert_eq!(computed, 1);
+        coord.shutdown();
+    }
+
+    /// With the symbolic cache disabled every job recomputes its own
+    /// symbolic pass (the PR-1 independent-serving behaviour) and reports
+    /// no cache provenance.
+    #[test]
+    fn symbolic_cache_disabled_serves_independently() {
+        let mut coord = Coordinator::start(ServerConfig {
+            workers: 2,
+            queue_depth: 8,
+            symbolic_cache: false,
+            ..ServerConfig::default()
+        });
+        let a = erdos_renyi(40, 250, 55);
+        let b = erdos_renyi(40, 250, 56);
+        let (oracle, _) = gustavson(&a, &b);
+        let id_a = coord.register("A", a);
+        let id_b = coord.register("B", b);
+        for _ in 0..4 {
+            coord.submit(Job::NativeSpgemm {
+                a: id_a.into(),
+                b: id_b.into(),
+                dataflow: Dataflow::ParGustavson { threads: 2 },
+            });
+        }
+        for r in coord.collect_all().values() {
+            assert_eq!(r.symbolic_reused, None);
+            assert!(r.c.approx_same(&oracle));
+        }
+        assert_eq!(coord.symbolic_stats(), (0, 0));
+        coord.shutdown();
+    }
+
+    /// LRU eviction: pushing the registry past `max_resident_bytes`
+    /// evicts the least-recently-used resident (name and id both stop
+    /// resolving), while a job submitted against it beforehand still
+    /// completes — its `Arc` was resolved at submit time.
+    #[test]
+    fn lru_eviction_under_budget_keeps_inflight_jobs_alive() {
+        let m0 = erdos_renyi(48, 300, 61);
+        let m1 = erdos_renyi(48, 300, 62);
+        let m2 = erdos_renyi(48, 300, 63);
+        let (oracle0, _) = gustavson(&m0, &m0);
+        let budget = m0.resident_bytes() + m1.resident_bytes() + m2.resident_bytes() - 1;
+        let mut coord = Coordinator::start(ServerConfig {
+            workers: 1,
+            queue_depth: 8,
+            max_resident_bytes: budget,
+            ..ServerConfig::default()
+        });
+        let id0 = coord.register("M0", m0);
+        let id1 = coord.register("M1", m1);
+        assert_eq!(coord.resident_count(), 2);
+        // A job against M0 resolves its Arc now, before any eviction.
+        let job0 = coord.submit(Job::NativeSpgemm {
+            a: id0.into(),
+            b: id0.into(),
+            dataflow: Dataflow::RowWiseHash,
+        });
+        // Touch M1 so M0 becomes the least-recently-used resident...
+        coord.submit(Job::NativeSpgemm {
+            a: id1.into(),
+            b: id1.into(),
+            dataflow: Dataflow::RowWiseHash,
+        });
+        // ...then push the registry one byte past its budget.
+        let id2 = coord.register("M2", m2);
+        assert!(coord.lookup("M0").is_none(), "LRU resident must be evicted");
+        assert!(coord.matrix(id0).is_none());
+        assert!(coord.lookup("M1").is_some());
+        assert!(coord.matrix(id1).is_some());
+        assert!(coord.matrix(id2).is_some());
+        assert_eq!(coord.evictions(), 1);
+        assert!(coord.resident_bytes() <= budget);
+        let responses = coord.collect_all();
+        assert!(
+            responses[&job0].c.approx_same(&oracle0),
+            "in-flight job against the evicted matrix must still complete"
+        );
+        coord.shutdown();
+    }
+
+    /// An impossible budget never evicts the most recent registration —
+    /// it only falls to the next register call.
+    #[test]
+    fn newest_resident_survives_an_impossible_budget() {
+        let mut coord = Coordinator::start(ServerConfig {
+            workers: 1,
+            queue_depth: 2,
+            max_resident_bytes: 1,
+            ..ServerConfig::default()
+        });
+        let id = coord.register("A", erdos_renyi(32, 100, 9));
+        assert!(
+            coord.matrix(id).is_some(),
+            "most recent registration is never evicted"
+        );
+        let id2 = coord.register("B", erdos_renyi(32, 100, 10));
+        assert!(
+            coord.matrix(id).is_none(),
+            "older resident evicted once a newer one arrives"
+        );
+        assert!(coord.matrix(id2).is_some());
+        coord.shutdown();
+    }
+
     #[test]
     #[should_panic(expected = "not registered")]
     fn unregistered_id_panics_at_submit() {
         let mut coord = Coordinator::start(ServerConfig {
             workers: 1,
             queue_depth: 2,
+            ..ServerConfig::default()
         });
         coord.submit(Job::NativeSpgemm {
             a: MatrixId(999).into(),

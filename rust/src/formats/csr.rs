@@ -319,6 +319,17 @@ impl Csr {
     pub fn row_nnz_vec(&self) -> Vec<usize> {
         (0..self.rows).map(|r| self.row_nnz(r)).collect()
     }
+
+    /// Actual heap bytes held by this matrix's arrays in this process
+    /// (`usize` row_ptr, [`Index`] col_idx, [`Value`] data) — the
+    /// accounting unit for the coordinator's `max_resident_bytes`
+    /// eviction budget. Distinct from [`Csr::footprint`], which reports
+    /// the paper's serialized element sizes.
+    pub fn resident_bytes(&self) -> usize {
+        self.row_ptr.len() * std::mem::size_of::<usize>()
+            + self.col_idx.len() * std::mem::size_of::<Index>()
+            + self.data.len() * std::mem::size_of::<Value>()
+    }
 }
 
 #[cfg(test)]

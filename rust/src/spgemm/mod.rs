@@ -2,7 +2,7 @@
 //! accounting, plus the Gustavson oracle used to verify every SMASH kernel.
 //!
 //! These run natively (no simulator) and serve three purposes:
-//! 1. correctness oracle ([`gustavson`]);
+//! 1. correctness oracle ([`gustavson()`]);
 //! 2. the Table 1.2 dataflow comparison (input/output reuse, intermediate
 //!    size) regenerated from measured counters;
 //! 3. fast CPU baselines for the benchmark harness.
@@ -20,7 +20,10 @@ pub use gustavson::{flops_per_row, gustavson, symbolic_row_nnz, total_flops};
 pub use inner::inner_product;
 pub use intensity::{arithmetic_intensity, compression_factor, IntensityReport};
 pub use outer::outer_product;
-pub use par::par_gustavson;
+pub use par::{
+    par_gustavson, par_gustavson_spawning, par_gustavson_with_plan, symbolic_plan, SymbolicPlan,
+    WorkerPool,
+};
 pub use rowwise::{rowwise_hash, rowwise_heap};
 pub use semiring::{ewise_add, spgemm_semiring, Arithmetic, Boolean, MaxTimes, MinPlus, Semiring};
 
@@ -76,8 +79,13 @@ pub enum Dataflow {
     Outer,
     RowWiseHeap,
     RowWiseHash,
-    /// Row-partitioned parallel Gustavson with this many threads.
+    /// Row-partitioned parallel Gustavson with this many threads, executed
+    /// on the persistent [`WorkerPool`].
     ParGustavson { threads: usize },
+    /// [`ParGustavson`](Dataflow::ParGustavson) with spawn-per-call
+    /// execution instead of the pool — the benchmark baseline for the
+    /// pooled-vs-spawn serving comparison.
+    ParGustavsonSpawn { threads: usize },
 }
 
 impl Dataflow {
@@ -98,6 +106,7 @@ impl Dataflow {
             Dataflow::RowWiseHeap => "Row-wise (heap)",
             Dataflow::RowWiseHash => "Row-wise (hash)",
             Dataflow::ParGustavson { .. } => "Parallel Gustavson",
+            Dataflow::ParGustavsonSpawn { .. } => "Parallel Gustavson (spawn)",
         }
     }
 
@@ -109,6 +118,7 @@ impl Dataflow {
             Dataflow::RowWiseHeap => rowwise_heap(a, b),
             Dataflow::RowWiseHash => rowwise_hash(a, b),
             Dataflow::ParGustavson { threads } => par_gustavson(a, b, *threads),
+            Dataflow::ParGustavsonSpawn { threads } => par_gustavson_spawning(a, b, *threads),
         }
     }
 }

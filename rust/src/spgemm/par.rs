@@ -5,24 +5,202 @@
 //! SpGEMM with per-thread accumulators is the winning multicore layout;
 //! this module applies it to the Gustavson oracle:
 //!
-//! 1. **Symbolic pass** (§5.1.1 two-step): per-row FMA estimates drive the
-//!    partition; exact per-row output sizes give every row a disjoint,
-//!    pre-allocated slice of the output CSR — threads never contend.
-//! 2. **LPT partition**: rows are grouped into ~4× threads contiguous
+//! 1. **FLOP pass** (parallel): per-row FMA estimates
+//!    (`flops_of_row`, chunked over the pool) drive the partition.
+//! 2. **Symbolic pass** (§5.1.1 two-step, parallel): exact per-row output
+//!    sizes give every row a disjoint, pre-allocated slice of the output
+//!    CSR — threads never contend. The per-row stamp loop is the shared
+//!    `symbolic_row` used by the serial oracle too.
+//! 3. **Prefix sum** (parallel two-pass scan): per-chunk sums, a serial
+//!    scan over the handful of chunk offsets, then parallel local scans —
+//!    exact, so the result is identical to the serial scan.
+//! 4. **LPT partition**: rows are grouped into ~4× threads contiguous
 //!    windows of roughly equal FMA volume and packed onto threads with the
 //!    coordinator's longest-processing-time scheduler
 //!    ([`crate::coordinator::schedule_windows`]) — equal-row splits
 //!    collapse on power-law inputs where a few hub rows carry most FLOPs.
-//! 3. **Numeric pass**: `std::thread::scope` workers with per-thread dense
-//!    accumulators write their windows' slices; output is bitwise
-//!    identical to the serial [`gustavson`] oracle (same per-row
-//!    accumulation order).
+//! 5. **Numeric pass** (parallel): per-thread dense accumulators write
+//!    their windows' slices via the shared `numeric_row` loop; output is
+//!    bitwise identical to the serial [`gustavson`] oracle (same code,
+//!    same per-row accumulation order).
+//!
+//! Steps 1–3 are captured in a reusable [`SymbolicPlan`] so the serving
+//! coordinator can amortize one symbolic pass across a batch of jobs that
+//! share operands ([`par_gustavson_with_plan`]).
+//!
+//! ## The persistent worker pool
+//!
+//! All parallel phases execute on a process-wide [`WorkerPool`] of
+//! long-lived `std::thread` workers fed over channels — a serving burst of
+//! small products no longer pays thread spawn/join per call.
+//! [`par_gustavson_spawning`] keeps the old spawn-per-call execution as a
+//! benchmark baseline.
 
-use super::gustavson::{flops_per_row, gustavson};
+use super::gustavson::{flops_of_row, gustavson, numeric_row, symbolic_row};
 use super::Traffic;
 use crate::coordinator::{schedule_windows, SchedPolicy};
 use crate::formats::{Csr, Index, Value};
 use crate::kernels::Window;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// A scoped task with its lifetime erased, plus the completion channel of
+/// the scope that submitted it.
+struct PoolJob {
+    task: Box<dyn FnOnce() + Send + 'static>,
+    done: Sender<std::thread::Result<()>>,
+}
+
+/// A persistent pool of worker threads fed over an MPSC channel.
+///
+/// Workers are long-lived: they are spawned once (lazily, growing on
+/// demand) and then sit in `recv()` between bursts, so a stream of small
+/// parallel products pays channel sends instead of thread spawn/join per
+/// call. [`WorkerPool::scope`] provides scoped execution — borrowed data
+/// is safe because the call blocks until every submitted task has
+/// signalled completion (workers signal even when a task panics).
+///
+/// The process-wide instance behind [`par_gustavson`] is
+/// [`WorkerPool::global`].
+pub struct WorkerPool {
+    /// Submission side. Wrapped in a `Mutex` so `&self` sends are possible
+    /// on toolchains where `mpsc::Sender` is not `Sync`.
+    tx: Mutex<Sender<PoolJob>>,
+    /// Shared receive side all workers pull from.
+    queue: Arc<Mutex<Receiver<PoolJob>>>,
+    /// Number of worker threads spawned so far.
+    spawned: Mutex<usize>,
+}
+
+impl WorkerPool {
+    /// Create a pool and spawn `workers.max(1)` worker threads.
+    pub fn new(workers: usize) -> Self {
+        let (tx, rx) = channel();
+        let pool = Self {
+            tx: Mutex::new(tx),
+            queue: Arc::new(Mutex::new(rx)),
+            spawned: Mutex::new(0),
+        };
+        pool.ensure_workers(workers.max(1));
+        pool
+    }
+
+    /// The process-wide pool used by [`par_gustavson`], created on first
+    /// use with one worker per available core and grown on demand.
+    pub fn global() -> &'static WorkerPool {
+        static POOL: OnceLock<WorkerPool> = OnceLock::new();
+        POOL.get_or_init(|| {
+            let cores = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(2);
+            WorkerPool::new(cores)
+        })
+    }
+
+    /// Number of live worker threads.
+    pub fn workers(&self) -> usize {
+        *self.spawned.lock().unwrap()
+    }
+
+    /// Grow the pool to at least `n` workers (never shrinks).
+    pub fn ensure_workers(&self, n: usize) {
+        let mut spawned = self.spawned.lock().unwrap();
+        while *spawned < n {
+            let queue = Arc::clone(&self.queue);
+            std::thread::Builder::new()
+                .name(format!("smash-pool-{}", *spawned))
+                .spawn(move || worker_loop(queue))
+                .expect("failed to spawn pool worker");
+            *spawned += 1;
+        }
+    }
+
+    /// Run every task to completion on the pool, blocking the caller until
+    /// all have finished. If any task panicked, the first captured payload
+    /// is re-raised here (after all tasks finished — workers survive task
+    /// panics). Tasks may borrow caller data: the blocking wait is what
+    /// makes the lifetime erasure below sound.
+    ///
+    /// Tasks must not themselves call `scope` on the same pool — with all
+    /// workers busy, nested waits could deadlock.
+    pub fn scope<'env>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        let n = tasks.len();
+        if n == 0 {
+            return;
+        }
+        self.ensure_workers(n.min(64));
+        let (done_tx, done_rx) = channel();
+        {
+            let tx = self.tx.lock().unwrap();
+            for task in tasks {
+                // SAFETY: the loop below blocks until every task has sent
+                // its completion message (sent even on panic, via
+                // catch_unwind in the worker), so all borrows inside
+                // `task` strictly outlive its execution.
+                let task: Box<dyn FnOnce() + Send + 'static> =
+                    unsafe { std::mem::transmute(task) };
+                tx.send(PoolJob {
+                    task,
+                    done: done_tx.clone(),
+                })
+                .expect("worker pool queue closed");
+            }
+        }
+        drop(done_tx);
+        let mut panic = None;
+        for _ in 0..n {
+            match done_rx.recv().expect("worker pool hung up mid-scope") {
+                Ok(()) => {}
+                Err(payload) => panic = Some(payload),
+            }
+        }
+        if let Some(payload) = panic {
+            resume_unwind(payload);
+        }
+    }
+}
+
+fn worker_loop(queue: Arc<Mutex<Receiver<PoolJob>>>) {
+    loop {
+        let job = {
+            let guard = queue.lock().unwrap();
+            guard.recv()
+        };
+        match job {
+            Ok(PoolJob { task, done }) => {
+                let result = catch_unwind(AssertUnwindSafe(move || task()));
+                let _ = done.send(result);
+            }
+            // Channel closed: the owning pool was dropped.
+            Err(_) => break,
+        }
+    }
+}
+
+/// How a parallel phase executes its task set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Exec {
+    /// On the persistent [`WorkerPool::global`] (the default).
+    Pool,
+    /// Spawn-per-call via `std::thread::scope` (PR-1 behaviour, kept as
+    /// the benchmark baseline).
+    Spawn,
+}
+
+/// Run a set of scoped tasks under the chosen execution mode.
+fn run_scoped<'env>(tasks: Vec<Box<dyn FnOnce() + Send + 'env>>, exec: Exec) {
+    match exec {
+        Exec::Pool => WorkerPool::global().scope(tasks),
+        Exec::Spawn => {
+            std::thread::scope(|s| {
+                for task in tasks {
+                    s.spawn(task);
+                }
+            });
+        }
+    }
+}
 
 /// Split `rest` into consecutive disjoint mutable slices of the given
 /// lengths (which must sum to at most `rest.len()`).
@@ -35,6 +213,23 @@ fn split_disjoint<'s, T>(
         let (head, tail) = std::mem::take(&mut rest).split_at_mut(len);
         out.push(head);
         rest = tail;
+    }
+    out
+}
+
+/// Split `n` items into at most `parts` contiguous `(begin, end)` chunks
+/// of near-equal length (the first `n % parts` chunks get one extra).
+/// Always returns at least one (possibly empty) chunk.
+fn even_chunks(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.clamp(1, n.max(1));
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut begin = 0usize;
+    for c in 0..parts {
+        let len = base + usize::from(c < extra);
+        out.push((begin, begin + len));
+        begin += len;
     }
     out
 }
@@ -69,133 +264,257 @@ fn partition_rows(row_flops: &[u64], threads: usize) -> Vec<Window> {
     windows
 }
 
-/// Parallel Gustavson SpGEMM over `threads` OS threads. Returns the
-/// canonical (sorted, merged) CSR product — bitwise identical to
-/// [`gustavson`] — and the summed traffic profile.
-pub fn par_gustavson(a: &Csr, b: &Csr, threads: usize) -> (Csr, Traffic) {
-    assert_eq!(a.cols, b.rows, "dimension mismatch");
-    let threads = threads.max(1);
-    if threads == 1 || a.rows == 0 || b.cols == 0 {
-        return gustavson(a, b);
+/// Below this row count the parallel FLOP pass is not worth the task
+/// plumbing; the serial loop runs instead (results are identical).
+const PAR_FLOPS_MIN_ROWS: usize = 1 << 10;
+/// Below this row count the prefix sum stays serial: it is O(rows)
+/// integer adds, so the two pool dispatches of the parallel scan only
+/// pay for themselves on large row counts.
+const PAR_SCAN_MIN_ROWS: usize = 1 << 16;
+
+/// The reusable symbolic result of one A·B product: per-row FMA counts
+/// (window planning), exact per-row output nnz, and the exclusive prefix
+/// sum (`row_ptr`) of the output CSR.
+///
+/// Computing this once and amortizing it across a batch of jobs that
+/// share operands is the serving analogue of the paper's two-step
+/// symbolic/numeric split — the coordinator caches plans per registered
+/// operand pair and hands them to [`par_gustavson_with_plan`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SymbolicPlan {
+    /// FMA count per output row (window planning input).
+    pub row_flops: Vec<u64>,
+    /// Exact nnz per output row.
+    pub row_nnz: Vec<usize>,
+    /// Exclusive prefix sum of `row_nnz` (`rows + 1` entries) — the
+    /// output's CSR row-pointer array.
+    pub row_ptr: Vec<usize>,
+}
+
+impl SymbolicPlan {
+    /// Exact nnz of the product this plan describes.
+    pub fn nnz(&self) -> usize {
+        *self.row_ptr.last().unwrap_or(&0)
     }
 
-    let row_flops = flops_per_row(a, b);
+    /// Approximate heap bytes held by the plan arrays (for cache
+    /// accounting in the serving layer).
+    pub fn resident_bytes(&self) -> usize {
+        self.row_flops.len() * std::mem::size_of::<u64>()
+            + self.row_nnz.len() * std::mem::size_of::<usize>()
+            + self.row_ptr.len() * std::mem::size_of::<usize>()
+    }
+}
+
+/// Compute the full symbolic plan of C = A·B (FLOP counts, exact per-row
+/// output sizes, row pointers) with up to `threads`-way parallelism on
+/// the persistent pool. The result is independent of `threads` — only
+/// the chunking varies — so plans are safely shareable across jobs that
+/// request different thread counts.
+pub fn symbolic_plan(a: &Csr, b: &Csr, threads: usize) -> SymbolicPlan {
+    symbolic_plan_exec(a, b, threads.max(1), Exec::Pool)
+}
+
+fn symbolic_plan_exec(a: &Csr, b: &Csr, threads: usize, exec: Exec) -> SymbolicPlan {
+    assert_eq!(a.cols, b.rows, "dimension mismatch");
+    let rows = a.rows;
+
+    // ---- FLOP pass: per-row FMA counts, chunked evenly by row count.
+    let mut row_flops = vec![0u64; rows];
+    if threads == 1 || rows < PAR_FLOPS_MIN_ROWS {
+        for (i, f) in row_flops.iter_mut().enumerate() {
+            *f = flops_of_row(a, b, i);
+        }
+    } else {
+        let chunks = even_chunks(rows, threads);
+        let slices = split_disjoint(row_flops.as_mut_slice(), chunks.iter().map(|&(s, e)| e - s));
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = chunks
+            .iter()
+            .zip(slices)
+            .map(|(&(begin, _), out)| {
+                Box::new(move || {
+                    for (off, f) in out.iter_mut().enumerate() {
+                        *f = flops_of_row(a, b, begin + off);
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        run_scoped(tasks, exec);
+    }
+
+    // ---- Symbolic pass: exact nnz of every output row. Chunked by FMA
+    // volume (the same windows the numeric pass will use) so a hub row
+    // does not serialize one stamp array.
     let windows = partition_rows(&row_flops, threads);
     let assignment = schedule_windows(&windows, threads, SchedPolicy::Lpt);
-    let owner = |wi: usize| assignment.window_to_block[wi];
-
-    // ---- Symbolic phase (parallel): exact nnz of every output row.
-    let mut row_nnz = vec![0usize; a.rows];
+    let mut row_nnz = vec![0usize; rows];
     {
         let slices = split_disjoint(row_nnz.as_mut_slice(), windows.iter().map(|w| w.rows()));
         let mut work: Vec<Vec<(usize, &mut [usize])>> = (0..threads).map(|_| Vec::new()).collect();
         for (wi, sl) in slices.into_iter().enumerate() {
-            work[owner(wi)].push((wi, sl));
+            work[assignment.window_to_block[wi]].push((wi, sl));
         }
         let windows = &windows;
-        std::thread::scope(|scope| {
-            for chunk in work {
-                if chunk.is_empty() {
-                    continue;
-                }
-                scope.spawn(move || {
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = work
+            .into_iter()
+            .filter(|chunk| !chunk.is_empty())
+            .map(|chunk| {
+                Box::new(move || {
                     // visited-stamp array, tagged by (globally unique) row
                     let mut stamp = vec![u32::MAX; b.cols];
                     for (wi, out) in chunk {
                         let w = &windows[wi];
                         for (off, i) in (w.row_begin..w.row_end).enumerate() {
-                            let tag = i as u32;
-                            let (acols, _) = a.row(i);
-                            let mut count = 0usize;
-                            for &k in acols {
-                                let (bcols, _) = b.row(k as usize);
-                                for &j in bcols {
-                                    if stamp[j as usize] != tag {
-                                        stamp[j as usize] = tag;
-                                        count += 1;
-                                    }
-                                }
-                            }
-                            out[off] = count;
+                            out[off] = symbolic_row(a, b, i, i as u32, &mut stamp);
                         }
                     }
-                });
-            }
-        });
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        run_scoped(tasks, exec);
     }
 
-    let mut row_ptr = Vec::with_capacity(a.rows + 1);
-    row_ptr.push(0usize);
-    for &n in &row_nnz {
-        row_ptr.push(row_ptr.last().unwrap() + n);
+    // ---- Prefix sum -> row pointers. Parallel two-pass scan past the
+    // serial-grain threshold: per-chunk sums, serial scan over the few
+    // chunk offsets, parallel local scans. Integer addition is exact, so
+    // this is identical to the serial scan.
+    let mut row_ptr = vec![0usize; rows + 1];
+    if threads == 1 || rows < PAR_SCAN_MIN_ROWS {
+        let mut acc = 0usize;
+        for (i, &n) in row_nnz.iter().enumerate() {
+            acc += n;
+            row_ptr[i + 1] = acc;
+        }
+    } else {
+        let chunks = even_chunks(rows, threads);
+        let mut sums = vec![0usize; chunks.len()];
+        {
+            let row_nnz = &row_nnz;
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = chunks
+                .iter()
+                .zip(sums.iter_mut())
+                .map(|(&(s, e), slot)| {
+                    Box::new(move || {
+                        *slot = row_nnz[s..e].iter().sum();
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            run_scoped(tasks, exec);
+        }
+        let mut offsets = Vec::with_capacity(chunks.len());
+        let mut acc = 0usize;
+        for &s in &sums {
+            offsets.push(acc);
+            acc += s;
+        }
+        {
+            let slices = split_disjoint(&mut row_ptr[1..], chunks.iter().map(|&(s, e)| e - s));
+            let row_nnz = &row_nnz;
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = chunks
+                .iter()
+                .zip(slices)
+                .zip(offsets)
+                .map(|((&(s, _), out), offset)| {
+                    Box::new(move || {
+                        let mut run = offset;
+                        for (off, slot) in out.iter_mut().enumerate() {
+                            run += row_nnz[s + off];
+                            *slot = run;
+                        }
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            run_scoped(tasks, exec);
+        }
     }
-    let nnz_total = row_ptr[a.rows];
+
+    SymbolicPlan {
+        row_flops,
+        row_nnz,
+        row_ptr,
+    }
+}
+
+/// Numeric phase against a precomputed [`SymbolicPlan`] (which must come
+/// from the same A·B pair — checked by shape assertions and a debug
+/// validation of the result). Used by the coordinator to amortize one
+/// symbolic pass across a batch of jobs sharing registered operands;
+/// output is bitwise identical to [`gustavson`].
+pub fn par_gustavson_with_plan(
+    a: &Csr,
+    b: &Csr,
+    threads: usize,
+    plan: &SymbolicPlan,
+) -> (Csr, Traffic) {
+    assert_eq!(a.cols, b.rows, "dimension mismatch");
+    assert_eq!(plan.row_ptr.len(), a.rows + 1, "plan is for a different A");
+    numeric_with_plan(a, b, threads.max(1), plan, Exec::Pool)
+}
+
+fn numeric_with_plan(
+    a: &Csr,
+    b: &Csr,
+    threads: usize,
+    plan: &SymbolicPlan,
+    exec: Exec,
+) -> (Csr, Traffic) {
+    // Recomputed per call even with a cached plan: the partition is
+    // O(rows) and LPT packs ~4×threads windows — noise next to the
+    // O(flops) numeric pass, and it keeps plans thread-count independent.
+    let windows = partition_rows(&plan.row_flops, threads);
+    let assignment = schedule_windows(&windows, threads, SchedPolicy::Lpt);
+    let row_ptr = plan.row_ptr.clone();
+    let nnz_total = *row_ptr.last().unwrap();
     let mut col_idx = vec![0 as Index; nnz_total];
     let mut data = vec![0.0 as Value; nnz_total];
 
-    // ---- Numeric phase (parallel): disjoint output slices per window.
-    let traffics: Vec<Traffic> = {
+    let mut traffics = vec![Traffic::default(); threads];
+    {
         let window_len = |w: &Window| row_ptr[w.row_end] - row_ptr[w.row_begin];
         let col_slices = split_disjoint(col_idx.as_mut_slice(), windows.iter().map(window_len));
         let data_slices = split_disjoint(data.as_mut_slice(), windows.iter().map(window_len));
         let mut work: Vec<Vec<(usize, &mut [Index], &mut [Value])>> =
             (0..threads).map(|_| Vec::new()).collect();
         for (wi, (cs, ds)) in col_slices.into_iter().zip(data_slices).enumerate() {
-            work[owner(wi)].push((wi, cs, ds));
+            work[assignment.window_to_block[wi]].push((wi, cs, ds));
         }
         let windows = &windows;
         let row_ptr = &row_ptr;
-        std::thread::scope(|scope| {
-            let handles: Vec<_> = work
-                .into_iter()
-                .filter(|chunk| !chunk.is_empty())
-                .map(|chunk| {
-                    scope.spawn(move || {
-                        let mut t = Traffic::default();
-                        let mut acc = vec![0.0 as Value; b.cols];
-                        let mut present = vec![false; b.cols];
-                        let mut touched: Vec<Index> = Vec::with_capacity(256);
-                        for (wi, cols_out, data_out) in chunk {
-                            let w = &windows[wi];
-                            let base = row_ptr[w.row_begin];
-                            for i in w.row_begin..w.row_end {
-                                let (acols, avals) = a.row(i);
-                                for (&k, &av) in acols.iter().zip(avals) {
-                                    t.a_reads += 1;
-                                    let (bcols, bvals) = b.row(k as usize);
-                                    t.b_reads += bcols.len() as u64;
-                                    for (&j, &bv) in bcols.iter().zip(bvals) {
-                                        let ju = j as usize;
-                                        if !present[ju] {
-                                            present[ju] = true;
-                                            touched.push(j);
-                                        }
-                                        acc[ju] += av * bv;
-                                        t.flops += 1;
-                                    }
-                                }
-                                touched.sort_unstable();
-                                let lo = row_ptr[i] - base;
-                                for (slot, &j) in touched.iter().enumerate() {
-                                    cols_out[lo + slot] = j;
-                                    data_out[lo + slot] = acc[j as usize];
-                                    acc[j as usize] = 0.0;
-                                    present[j as usize] = false;
-                                    t.c_writes += 1;
-                                }
-                                touched.clear();
-                            }
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = work
+            .into_iter()
+            .zip(traffics.iter_mut())
+            .filter(|(chunk, _)| !chunk.is_empty())
+            .map(|(chunk, traffic)| {
+                Box::new(move || {
+                    let mut t = Traffic::default();
+                    let mut acc = vec![0.0 as Value; b.cols];
+                    let mut present = vec![false; b.cols];
+                    let mut touched: Vec<Index> = Vec::with_capacity(256);
+                    for (wi, cols_out, data_out) in chunk {
+                        let w = &windows[wi];
+                        let base = row_ptr[w.row_begin];
+                        for i in w.row_begin..w.row_end {
+                            let lo = row_ptr[i] - base;
+                            let hi = row_ptr[i + 1] - base;
+                            numeric_row(
+                                a,
+                                b,
+                                i,
+                                &mut acc,
+                                &mut present,
+                                &mut touched,
+                                &mut cols_out[lo..hi],
+                                &mut data_out[lo..hi],
+                                &mut t,
+                            );
                         }
-                        t
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("par_gustavson worker panicked"))
-                .collect()
-        })
-    };
+                    }
+                    *traffic = t;
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        run_scoped(tasks, exec);
+    }
 
     let mut t = Traffic::default();
     for p in traffics {
@@ -216,10 +535,37 @@ pub fn par_gustavson(a: &Csr, b: &Csr, threads: usize) -> (Csr, Traffic) {
     (c, t)
 }
 
+fn par_gustavson_exec(a: &Csr, b: &Csr, threads: usize, exec: Exec) -> (Csr, Traffic) {
+    assert_eq!(a.cols, b.rows, "dimension mismatch");
+    let threads = threads.max(1);
+    if threads == 1 || a.rows == 0 || b.cols == 0 {
+        return gustavson(a, b);
+    }
+    let plan = symbolic_plan_exec(a, b, threads, exec);
+    numeric_with_plan(a, b, threads, &plan, exec)
+}
+
+/// Parallel Gustavson SpGEMM over `threads` workers of the persistent
+/// process-wide [`WorkerPool`]. Returns the canonical (sorted, merged)
+/// CSR product — bitwise identical to [`gustavson`] — and the summed
+/// traffic profile.
+pub fn par_gustavson(a: &Csr, b: &Csr, threads: usize) -> (Csr, Traffic) {
+    par_gustavson_exec(a, b, threads, Exec::Pool)
+}
+
+/// [`par_gustavson`] with spawn-per-call execution (`std::thread::scope`)
+/// instead of the persistent pool — the PR-1 behaviour, kept as the
+/// benchmark baseline for the pooled-vs-spawn comparison in
+/// `benches/hot_paths.rs`.
+pub fn par_gustavson_spawning(a: &Csr, b: &Csr, threads: usize) -> (Csr, Traffic) {
+    par_gustavson_exec(a, b, threads, Exec::Spawn)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::gen::{erdos_renyi, rmat, RmatParams};
+    use crate::spgemm::{flops_per_row, symbolic_row_nnz};
 
     #[test]
     fn partition_covers_rows_and_conserves_flops() {
@@ -233,6 +579,22 @@ mod tests {
         assert!(ws.iter().all(|w| w.rows() >= 1));
         let total: u64 = ws.iter().map(|w| w.flops).sum();
         assert_eq!(total, flops.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn even_chunks_tile() {
+        for (n, parts) in [(0usize, 3usize), (1, 4), (10, 3), (16, 4), (7, 16)] {
+            let cs = even_chunks(n, parts);
+            assert!(!cs.is_empty());
+            assert_eq!(cs.first().unwrap().0, 0);
+            assert_eq!(cs.last().unwrap().1, n);
+            for pair in cs.windows(2) {
+                assert_eq!(pair[0].1, pair[1].0);
+            }
+            let max = cs.iter().map(|&(s, e)| e - s).max().unwrap();
+            let min = cs.iter().map(|&(s, e)| e - s).min().unwrap();
+            assert!(max - min <= 1, "chunks must be near-equal");
+        }
     }
 
     #[test]
@@ -255,6 +617,51 @@ mod tests {
     }
 
     #[test]
+    fn spawning_variant_matches_pooled() {
+        let a = rmat(&RmatParams::new(8, 2500, 11));
+        let b = rmat(&RmatParams::new(8, 2500, 12));
+        let (cp, tp) = par_gustavson(&a, &b, 4);
+        let (cs, ts) = par_gustavson_spawning(&a, &b, 4);
+        assert_eq!(cp.row_ptr, cs.row_ptr);
+        assert_eq!(cp.col_idx, cs.col_idx);
+        assert_eq!(cp.data, cs.data);
+        assert_eq!(tp.flops, ts.flops);
+    }
+
+    #[test]
+    fn plan_matches_serial_symbolic() {
+        let a = rmat(&RmatParams::new(8, 3000, 21));
+        let b = rmat(&RmatParams::new(8, 3000, 22));
+        let plan = symbolic_plan(&a, &b, 4);
+        assert_eq!(plan.row_flops, flops_per_row(&a, &b));
+        assert_eq!(plan.row_nnz, symbolic_row_nnz(&a, &b));
+        let mut acc = 0usize;
+        for (i, &n) in plan.row_nnz.iter().enumerate() {
+            assert_eq!(plan.row_ptr[i], acc);
+            acc += n;
+        }
+        assert_eq!(plan.nnz(), acc);
+        assert!(plan.resident_bytes() > 0);
+        // Plans are thread-count independent (shareable across jobs).
+        assert_eq!(plan, symbolic_plan(&a, &b, 7));
+    }
+
+    #[test]
+    fn with_plan_matches_oracle_bitwise() {
+        let a = rmat(&RmatParams::new(8, 3000, 31));
+        let b = rmat(&RmatParams::new(8, 3000, 32));
+        let (c1, t1) = gustavson(&a, &b);
+        let plan = symbolic_plan(&a, &b, 4);
+        for threads in [1, 3, 4] {
+            let (cp, tp) = par_gustavson_with_plan(&a, &b, threads, &plan);
+            assert_eq!(c1.row_ptr, cp.row_ptr, "threads={threads}");
+            assert_eq!(c1.col_idx, cp.col_idx, "threads={threads}");
+            assert_eq!(c1.data, cp.data, "threads={threads}");
+            assert_eq!(t1.flops, tp.flops, "threads={threads}");
+        }
+    }
+
+    #[test]
     fn degenerate_shapes() {
         let z = Csr::zero(6, 6);
         let (c, t) = par_gustavson(&z, &z, 4);
@@ -269,6 +676,64 @@ mod tests {
         let (c, _) = par_gustavson(&tiny, &tiny, 16);
         let (oracle, _) = gustavson(&tiny, &tiny);
         assert!(c.approx_same(&oracle));
+    }
+
+    /// The pool is persistent: repeated scopes reuse the same workers;
+    /// growth happens only on demand (a larger task set), never per
+    /// scope. (Uses a private pool — the global one is shared with
+    /// concurrently running tests.)
+    #[test]
+    fn pool_workers_are_reused_across_scopes() {
+        let pool = WorkerPool::new(3);
+        assert_eq!(pool.workers(), 3);
+        let run_scope = |tasks: usize| {
+            let counter = std::sync::atomic::AtomicUsize::new(0);
+            let boxed: Vec<Box<dyn FnOnce() + Send + '_>> = (0..tasks)
+                .map(|_| {
+                    Box::new(|| {
+                        counter.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.scope(boxed);
+            assert_eq!(counter.load(std::sync::atomic::Ordering::SeqCst), tasks);
+        };
+        run_scope(2);
+        assert_eq!(pool.workers(), 3, "small scopes never grow the pool");
+        run_scope(5);
+        assert_eq!(pool.workers(), 5, "pool grows on demand");
+        for _ in 0..4 {
+            run_scope(5);
+        }
+        assert_eq!(pool.workers(), 5, "repeat scopes reuse workers");
+        // The global pool is one process-wide instance.
+        assert!(std::ptr::eq(WorkerPool::global(), WorkerPool::global()));
+        assert!(WorkerPool::global().workers() >= 1);
+    }
+
+    /// A panicking task does not kill its worker or wedge the pool: the
+    /// panic propagates to the scope caller and the pool stays usable.
+    #[test]
+    fn pool_survives_task_panic() {
+        let pool = WorkerPool::new(2);
+        let tasks: Vec<Box<dyn FnOnce() + Send>> = vec![
+            Box::new(|| {}),
+            Box::new(|| panic!("deliberate test panic")),
+            Box::new(|| {}),
+        ];
+        let caught = catch_unwind(AssertUnwindSafe(|| pool.scope(tasks)));
+        assert!(caught.is_err(), "scope must re-raise the task panic");
+        // Still serviceable afterwards.
+        let counter = std::sync::atomic::AtomicUsize::new(0);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+            .map(|_| {
+                Box::new(|| {
+                    counter.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.scope(tasks);
+        assert_eq!(counter.load(std::sync::atomic::Ordering::SeqCst), 4);
     }
 
     /// The acceptance bar: on an R-MAT scale-13 input, 4 threads must (a)

@@ -53,27 +53,43 @@ fn pinned_cycle_counts() {
     let r2 = run_smash(&a, &b, &KernelConfig::v2(), &SimConfig::piuma_block()).report;
     let r3 = run_smash(&a, &b, &KernelConfig::v3(), &SimConfig::piuma_block()).report;
     let got = [r1.cycles, r2.cycles, r3.cycles];
-    // The write-back conservation fix (remainder entries/shifts that the
-    // old accounting silently dropped are now charged) moves V1/V2 counts
-    // by well under 0.1% of a run; the goldens below predate it, so the
-    // pin is a ±0.25% band until they are re-captured on a local run (see
-    // ROADMAP open items — restore exact equality then). Determinism
-    // itself is asserted exactly by `determinism_across_runs` in
-    // smash_correctness.rs.
+    // Re-pin helper: `SMASH_REPIN=1 cargo test pinned_cycle_counts` fails
+    // deliberately with the exact measured values formatted as the
+    // `golden()` body — paste them in and delete the band (set
+    // `REPIN_BAND` to 0.0) to restore exact equality.
+    if std::env::var("SMASH_REPIN").is_ok() {
+        panic!(
+            "SMASH_REPIN: measured cycles — update golden() to:\n    \
+             [{}, {}, {}]\nand tighten REPIN_BAND to 0.0.",
+            got[0], got[1], got[2]
+        );
+    }
+    // The write-back conservation fix (PR 1: remainder entries/shifts that
+    // the old accounting silently dropped are now charged) moved V1/V2
+    // counts slightly; the goldens below predate it. The pin stays a
+    // ±0.25% band until the exact values are re-captured via SMASH_REPIN
+    // above on a machine with a Rust toolchain — restore exact equality
+    // then (ROADMAP open item; PR 2's environment had no toolchain, so
+    // tightening the band here would be a guess, not a measurement).
+    // Determinism itself is asserted exactly by `determinism_across_runs`
+    // in smash_correctness.rs; this band only exists because the goldens
+    // were pinned before the accounting fix.
+    const REPIN_BAND: f64 = 0.0025;
     let want = golden();
     for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
         let dev = (g as f64 - w as f64).abs() / w as f64;
         assert!(
-            dev < 0.0025,
-            "V{} cycles {g} drifted {:.2}% from golden {w} — if intentional, \
-             update golden() to {got:?}",
+            dev <= REPIN_BAND,
+            "V{} cycles {g} drifted {:.3}% from golden {w} — if intentional, \
+             update golden() to {got:?} (or run with SMASH_REPIN=1)",
             i + 1,
             dev * 100.0
         );
     }
 }
 
-/// One place to update when the timing model changes.
+/// One place to update when the timing model changes (see the SMASH_REPIN
+/// helper in `pinned_cycle_counts`).
 fn golden() -> [u64; 3] {
     [2_171_570, 1_057_936, 832_320]
 }

@@ -118,6 +118,7 @@ fn coordinator_never_drops_or_duplicates() {
     let mut coord = Coordinator::start(ServerConfig {
         workers: 3,
         queue_depth: 4,
+        ..ServerConfig::default()
     });
     let mut expected = std::collections::HashSet::new();
     for seed in 0..10 {
@@ -140,6 +141,7 @@ fn coordinator_mixed_jobs_correct() {
     let mut coord = Coordinator::start(ServerConfig {
         workers: 2,
         queue_depth: 2, // force backpressure with 6 jobs
+        ..ServerConfig::default()
     });
     let a = rmat(&RmatParams::new(6, 250, 9));
     let b = rmat(&RmatParams::new(6, 250, 10));
