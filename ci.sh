@@ -18,6 +18,16 @@ cargo build --release
 echo "== tests (incl. vendored shim) =="
 cargo test --workspace -q
 
+echo "== benches compile (no run) =="
+cargo bench --no-run
+
+echo "== clippy (advisory, matches .github/workflows/ci.yml) =="
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --workspace --all-targets || echo "clippy findings (advisory only)"
+else
+    echo "clippy not installed; skipping lint"
+fi
+
 echo "== rustdoc (deny warnings) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 

@@ -12,7 +12,7 @@ use smash::config::{KernelConfig, SimConfig};
 use smash::coordinator::{schedule_windows, Coordinator, Job, SchedPolicy, ServerConfig};
 use smash::gen::{rmat, RmatParams};
 use smash::kernels::plan_windows;
-use smash::spgemm::{Dataflow, WorkerPool};
+use smash::spgemm::{AccumMode, AccumStats, Dataflow, WorkerPool};
 use std::time::Instant;
 
 fn main() {
@@ -69,11 +69,16 @@ fn main() {
     // eight share the registered (A, B) pair, so the coordinator batches
     // them onto ONE symbolic pass — the first worker computes and
     // publishes the plan, the other seven reuse it and run only numeric.
+    // The adaptive accumulator hashes light rows and goes dense on heavy
+    // ones, keyed off the (cached) symbolic FLOPs bound.
     for _ in 0..8 {
         coord.submit(Job::NativeSpgemm {
             a: id_a.into(),
             b: id_b.into(),
-            dataflow: Dataflow::ParGustavson { threads: 4 },
+            dataflow: Dataflow::ParGustavson {
+                threads: 4,
+                accum: AccumMode::Adaptive,
+            },
         });
         submitted += 1;
     }
@@ -84,6 +89,7 @@ fn main() {
     let mut sim_ms_total = 0.0;
     let mut plans_computed = 0usize;
     let mut plans_reused = 0usize;
+    let mut accum_stats = AccumStats::default();
     let mut by_worker = std::collections::HashMap::new();
     for r in responses.values() {
         *by_worker.entry(r.worker).or_insert(0usize) += 1;
@@ -92,6 +98,9 @@ fn main() {
             Some(false) => plans_computed += 1,
             Some(true) => plans_reused += 1,
             None => {}
+        }
+        if let Some(t) = &r.traffic {
+            accum_stats.merge(&t.accum);
         }
         assert_eq!(
             r.registered,
@@ -107,9 +116,17 @@ fn main() {
         sim_ms_total
     );
     let (passes, hits) = coord.symbolic_stats();
+    let (wpasses, whits) = coord.window_plan_stats();
     println!(
-        "batched symbolic reuse: {passes} pass(es) computed, {hits} cache hits \
-         ({plans_computed} job(s) computed a plan, {plans_reused} reused one)"
+        "batched plan reuse: {passes} symbolic pass(es) + {wpasses} window plan(s) computed, \
+         {} cache hits ({plans_computed} job(s) computed a plan, {plans_reused} reused one)",
+        hits + whits
+    );
+    println!(
+        "adaptive accumulator across the native burst: {} dense rows, {} hash rows, \
+         {:.2} probes/upsert, peak worker accumulator {} B",
+        accum_stats.dense_rows, accum_stats.hash_rows, accum_stats.table.mean_probes(),
+        accum_stats.peak_bytes
     );
     println!(
         "persistent pool: {} worker threads served every parallel phase (no spawn-per-call)",
@@ -147,7 +164,10 @@ fn main() {
     coord.submit(Job::NativeSpgemm {
         a: id0.into(),
         b: id0.into(),
-        dataflow: Dataflow::ParGustavson { threads: 2 },
+        dataflow: Dataflow::ParGustavson {
+            threads: 2,
+            accum: AccumMode::Adaptive,
+        },
     });
     // ...then a third registration pushes past the budget. G0 was touched
     // by that submit, so G1 is now the least-recently-used victim.

@@ -9,13 +9,13 @@ use smash::bench::Bench;
 use smash::config::{HashBits, KernelConfig, SimConfig};
 use smash::coordinator::{Coordinator, Job, ServerConfig};
 use smash::formats::Csr;
-use smash::gen::{rmat, RmatParams};
+use smash::gen::{banded, erdos_renyi, rmat, RmatParams};
 use smash::kernels::{
     insertion_sort_cost, insertion_sort_cost_quadratic, run_smash, TagTable,
 };
 use smash::spgemm::{
-    gustavson, par_gustavson, par_gustavson_spawning, par_gustavson_with_plan, rowwise_hash,
-    symbolic_plan, Dataflow,
+    gustavson, par_gustavson, par_gustavson_accum, par_gustavson_spawning,
+    par_gustavson_with_plan, rowwise_hash, symbolic_plan, AccumMode, Dataflow,
 };
 use smash::util::prng::Xoshiro256;
 use std::sync::Arc;
@@ -80,6 +80,64 @@ fn main() {
 
     h.run("rowwise_hash_native_2^11", || rowwise_hash(&a, &b));
 
+    // ---- Adaptive hybrid accumulator sweeps (the tentpole): adaptive vs
+    // forced-dense vs forced-hash on four input shapes, every variant
+    // asserted bitwise against the serial oracle before timing.
+    let accum_inputs: Vec<(&str, Csr, Csr)> = vec![
+        ("rmat_2^11", a.clone(), b.clone()),
+        (
+            "erdos_2^11",
+            erdos_renyi(1 << 11, 34_000, 0xC),
+            erdos_renyi(1 << 11, 34_000, 0xD),
+        ),
+        ("banded_2^11", banded(1 << 11, 8, 0xE), banded(1 << 11, 8, 0xF)),
+        (
+            // Hypersparse wide: 2^18 columns, ~0.15 nnz/row, no hub rows
+            // — the shape that makes O(b.cols)-per-worker dense scratch
+            // unservable, and where every row's FLOPs bound sits far
+            // under the cols/16 threshold.
+            "hypersparse_2^18",
+            erdos_renyi(1 << 18, 40_000, 0x10),
+            erdos_renyi(1 << 18, 40_000, 0x11),
+        ),
+    ];
+    for (name, ai, bi) in &accum_inputs {
+        let (oracle, _) = gustavson(ai, bi);
+        for mode in [AccumMode::Adaptive, AccumMode::Dense, AccumMode::Hash] {
+            let (c, t) = par_gustavson_accum(ai, bi, 4, mode);
+            assert_eq!(oracle.row_ptr, c.row_ptr, "{name}/{}", mode.name());
+            assert_eq!(oracle.col_idx, c.col_idx, "{name}/{}", mode.name());
+            assert_eq!(
+                oracle.data,
+                c.data,
+                "{name}/{}: accumulator must match the oracle bitwise",
+                mode.name()
+            );
+            if *name == "hypersparse_2^18" {
+                println!(
+                    "  [{name}/{}] peak worker accumulator bytes: {} (dense lane floor: {})",
+                    mode.name(),
+                    t.accum.peak_bytes,
+                    bi.cols * 9,
+                );
+                if mode == AccumMode::Adaptive {
+                    // The acceptance bar: per-worker accumulator memory is
+                    // O(live row nnz), not O(b.cols).
+                    assert!(
+                        t.accum.peak_bytes * 2 < (bi.cols * 9) as u64,
+                        "adaptive accumulator must stay far under the dense floor: \
+                         {} vs {}",
+                        t.accum.peak_bytes,
+                        bi.cols * 9
+                    );
+                }
+            }
+            h.run(&format!("par_gustavson_t4_{}_{name}", mode.name()), || {
+                par_gustavson_accum(ai, bi, 4, mode)
+            });
+        }
+    }
+
     // Batched vs independent serving: a 16-job burst against one
     // registered operand pair, with the coordinator's symbolic cache on
     // (one symbolic pass, 15 reuses) vs off (16 independent passes).
@@ -98,7 +156,10 @@ fn main() {
             coord.submit(Job::NativeSpgemm {
                 a: id_a.into(),
                 b: id_b.into(),
-                dataflow: Dataflow::ParGustavson { threads: 2 },
+                dataflow: Dataflow::ParGustavson {
+                    threads: 2,
+                    accum: AccumMode::Adaptive,
+                },
             });
         }
         let responses = coord.collect_all();

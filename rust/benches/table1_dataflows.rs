@@ -5,7 +5,7 @@
 
 use smash::bench::{self, Bench};
 use smash::gen::{rmat, RmatParams};
-use smash::spgemm::Dataflow;
+use smash::spgemm::{AccumMode, Dataflow};
 
 fn main() {
     println!("# Table 1.1 / Table 1.2\n");
@@ -22,7 +22,10 @@ fn main() {
     }
     // the multicore serving backend against the serial baselines
     for threads in [2, 4, 8] {
-        let df = Dataflow::ParGustavson { threads };
+        let df = Dataflow::ParGustavson {
+            threads,
+            accum: AccumMode::Adaptive,
+        };
         bench_h.run(&format!("{} (t={threads})", df.name()), || {
             df.multiply(&a, &b)
         });

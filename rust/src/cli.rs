@@ -17,7 +17,7 @@ use crate::formats::mm;
 use crate::gen::{rmat, RmatParams};
 use crate::kernels::{run_all_versions, run_smash};
 use crate::report::bar_chart;
-use crate::spgemm::Dataflow;
+use crate::spgemm::{AccumMode, Dataflow};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 
@@ -79,13 +79,16 @@ USAGE: smash <tables|figures|run|gcn|gen|serve|help> [flags]
   gcn     [--seed N]             (requires `make artifacts`)
   gen     --out graph.mtx [--log2n 10] [--edges 10000] [--seed N]
   serve   [--jobs 8] [--workers 4] [--threads 4] [--log2n 10] [--edges 20000] [--smash]
-          [--no-batch] [--spawn] [--max-resident-mb N]
+          [--no-batch] [--spawn] [--max-resident-mb N] [--accum adaptive|dense|hash]
           — register one resident matrix pair, serve a burst of zero-copy
           requests against it (native parallel Gustavson on the persistent
           worker pool, or --smash sim). Jobs sharing the registered pair
           batch onto ONE symbolic pass unless --no-batch; --spawn uses the
           spawn-per-call backend (the pre-pool baseline); --max-resident-mb
-          bounds the registry (LRU eviction past it, 0 = unlimited)
+          bounds the registry + plan caches (LRU eviction past it, 0 =
+          unlimited); --accum picks the per-row accumulator policy
+          (adaptive = hash light rows / dense heavy rows, keyed off the
+          symbolic FLOPs bound)
   graph   [--dataset Cora] — BFS / APSP / closure / triangles via semiring SpGEMM
   die     [--blocks 4] [--policy lpt|rr] — multi-block scale-out run
   trace   [--out trace.bin] — record a V2 run's instruction trace, replay it,
@@ -340,6 +343,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let smash = args.get("smash").is_some();
     let spawn = args.get("spawn").is_some();
     let batch = args.get("no-batch").is_none();
+    let accum = match args.get("accum") {
+        None => AccumMode::Adaptive,
+        Some(s) => AccumMode::parse(s)
+            .with_context(|| format!("unknown --accum `{s}` (adaptive|dense|hash)"))?,
+    };
+    // --accum only steers the pooled native backend; reject combinations
+    // where the requested policy would be silently ignored. (`--spawn
+    // --accum adaptive` is allowed — adaptive is what the spawn baseline
+    // runs anyway.)
+    if spawn && accum != AccumMode::Adaptive {
+        bail!("--accum has no effect with --spawn (the spawn baseline is always adaptive)");
+    }
+    if args.get("accum").is_some() && smash {
+        bail!("--accum applies to native jobs; --smash runs the simulated SPAD hashtable");
+    }
     // 0 (the default) = unlimited; N bounds the registry to N MiB with
     // LRU eviction past it.
     let max_resident_bytes = match args.get_u64("max-resident-mb", 0)? as usize {
@@ -366,17 +384,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let dataflow = if spawn {
         Dataflow::ParGustavsonSpawn { threads }
     } else {
-        Dataflow::ParGustavson { threads }
+        Dataflow::ParGustavson { threads, accum }
     };
     let t0 = std::time::Instant::now();
     let mut served = 0usize;
     let mut total_nnz = 0usize;
     let mut reused = 0usize;
+    let mut accum_stats = crate::spgemm::AccumStats::default();
     let mut drain = |r: crate::coordinator::Response| {
         total_nnz += r.c.nnz();
         served += 1;
         if r.symbolic_reused == Some(true) {
             reused += 1;
+        }
+        if let Some(t) = &r.traffic {
+            accum_stats.merge(&t.accum);
         }
     };
     for _ in 0..jobs {
@@ -413,12 +435,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
         } else if spawn {
             format!("native par-Gustavson({threads}, spawn-per-call)")
         } else {
-            format!("native par-Gustavson({threads}, pooled)")
+            format!("native par-Gustavson({threads}, pooled, {} accumulator)", accum.name())
         },
         crate::util::timer::fmt_duration(wall),
         crate::util::fmt_count(total_nnz as u64),
         served as f64 / wall.as_secs_f64()
     );
+    if !smash && accum_stats.dense_rows + accum_stats.hash_rows > 0 {
+        println!(
+            "accumulator policy: {} dense rows, {} hash rows per burst; {:.2} probes/upsert, \
+             {:.2}% collisions, peak worker accumulator {} (dense lane would pin {})",
+            crate::util::fmt_count(accum_stats.dense_rows),
+            crate::util::fmt_count(accum_stats.hash_rows),
+            accum_stats.table.mean_probes(),
+            accum_stats.table.collision_rate() * 100.0,
+            crate::util::fmt_bytes(accum_stats.peak_bytes),
+            crate::util::fmt_bytes(9 * (1u64 << log2n)),
+        );
+    }
     let (passes, hits) = coord.symbolic_stats();
     if !smash {
         // The symbolic cache applies to the pooled dataflow only, so
@@ -432,6 +466,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         };
         println!(
             "symbolic batching{mode}: {passes} pass(es) computed, {hits} cache hits ({reused} responses reused a plan)"
+        );
+    } else {
+        let (wpasses, whits) = coord.window_plan_stats();
+        let mode = if batch { "" } else { " disabled (--no-batch)" };
+        println!(
+            "window-plan batching{mode}: {wpasses} plan(s) computed, {whits} cache hits \
+             ({reused} responses reused a plan)"
         );
     }
     coord.shutdown();

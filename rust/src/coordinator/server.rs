@@ -24,21 +24,30 @@
 //! sizes, row pointers): the first worker to reach the pair computes and
 //! publishes the plan, every later job in the burst reuses it and runs
 //! only the numeric pass ([`crate::spgemm::par_gustavson_with_plan`]).
-//! Each [`Response`] records which registered operands it used and
-//! whether its symbolic pass was computed or reused.
+//! SMASH-sim jobs get the same treatment: their window plans
+//! ([`crate::kernels::plan_windows`] — the §5.1.1 FMA-counting pass) are
+//! cached per registered pair + planning config and replayed via
+//! [`crate::kernels::run_smash_with_plan`]. Each [`Response`] records
+//! which registered operands it used and whether its plan was computed
+//! or reused.
 //!
 //! ## Registry lifecycle
 //!
-//! Registered matrices are accounted against
+//! Registered matrices — and the published plan-cache entries, both
+//! symbolic and window plans — are accounted against
 //! [`ServerConfig::max_resident_bytes`]; past the budget the
 //! least-recently-used resident is evicted (its name and id stop
-//! resolving). Eviction is safe mid-flight: jobs hold `Arc` clones
-//! resolved at submit time, so an evicted matrix stays alive exactly
-//! until its last in-flight job drains.
+//! resolving, and its cached plans are dropped with it). Eviction is
+//! safe mid-flight: jobs hold `Arc` clones resolved at submit time, so
+//! an evicted matrix stays alive exactly until its last in-flight job
+//! drains.
 
-use crate::config::{KernelConfig, SimConfig};
+use crate::config::{KernelConfig, SimConfig, TablePlacement};
 use crate::formats::Csr;
-use crate::spgemm::{par_gustavson_with_plan, symbolic_plan, Dataflow, SymbolicPlan};
+use crate::kernels::{plan_windows, run_smash_with_plan, WindowPlan};
+use crate::spgemm::{
+    par_gustavson_with_plan_accum, symbolic_plan, Dataflow, SymbolicPlan, Traffic,
+};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
@@ -110,14 +119,48 @@ pub enum Job {
 /// symbolic pass per pair even when a burst lands on many workers at once.
 type PlanSlot = Arc<Mutex<Option<Arc<SymbolicPlan>>>>;
 
-/// Shared counters for the symbolic-plan cache, observable via
-/// [`Coordinator::symbolic_stats`].
+/// Same slot machinery for SMASH-sim window plans (`plan_windows` is the
+/// simulator's symbolic pass — §5.1.1 FMA counting + exact row sizes).
+type WindowSlot = Arc<Mutex<Option<Arc<WindowPlan>>>>;
+
+/// Cache key for a SMASH window plan: the registered pair plus every
+/// config knob `plan_windows` actually reads — jobs that differ in any of
+/// these plan differently and must not share.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct WindowPlanKey {
+    a: u64,
+    b: u64,
+    spad_placement: bool,
+    dense_row_threshold: usize,
+    load_factor_bits: u64,
+    spad_bytes: usize,
+}
+
+impl WindowPlanKey {
+    fn new(a: u64, b: u64, kcfg: &KernelConfig, scfg: &SimConfig) -> Self {
+        Self {
+            a,
+            b,
+            spad_placement: matches!(kcfg.placement, TablePlacement::Spad),
+            dense_row_threshold: kcfg.dense_row_threshold,
+            load_factor_bits: kcfg.table_load_factor.to_bits(),
+            spad_bytes: scfg.spad_bytes,
+        }
+    }
+}
+
+/// Shared counters for the plan caches, observable via
+/// [`Coordinator::symbolic_stats`] / [`Coordinator::window_plan_stats`].
 #[derive(Default)]
 struct SymbolicStats {
     /// Symbolic passes actually computed by workers.
     passes: AtomicU64,
     /// Jobs that reused an already-published plan.
     hits: AtomicU64,
+    /// SMASH window plans actually computed by workers.
+    window_passes: AtomicU64,
+    /// SMASH jobs that reused a cached window plan.
+    window_hits: AtomicU64,
 }
 
 /// A resolved job as shipped to workers: operands are always `Arc` pointer
@@ -129,6 +172,8 @@ enum Work {
         kernel: KernelConfig,
         sim: SimConfig,
         registered: Vec<MatrixId>,
+        /// Shared window-plan slot when batching applies to this job.
+        plan: Option<WindowSlot>,
     },
     Native {
         a: Arc<Csr>,
@@ -155,11 +200,17 @@ pub struct Response {
     /// Registered operands this job resolved at submit time, in (a, b)
     /// order; inline operands contribute nothing.
     pub registered: Vec<MatrixId>,
-    /// Symbolic-plan provenance: `None` — the symbolic cache was not
-    /// involved (inline operands, non-batchable dataflow, or cache
-    /// disabled); `Some(false)` — this job computed and published the
-    /// pair's plan; `Some(true)` — this job reused a cached plan.
+    /// Plan-cache provenance (native symbolic plans *and* SMASH window
+    /// plans): `None` — no plan cache was involved (inline operands,
+    /// non-batchable dataflow, or cache disabled); `Some(false)` — this
+    /// job computed and published the pair's plan; `Some(true)` — this
+    /// job reused a cached plan.
     pub symbolic_reused: Option<bool>,
+    /// Measured traffic of native jobs (including the accumulator-policy
+    /// stats on `traffic.accum`: dense vs hash rows, probe counts, peak
+    /// per-worker accumulator bytes). `None` for simulated SMASH jobs,
+    /// whose metrics live in the sim report.
+    pub traffic: Option<Traffic>,
 }
 
 /// Knobs for [`Coordinator::start`].
@@ -225,6 +276,8 @@ pub struct Coordinator {
     symbolic_cache_enabled: bool,
     /// Symbolic-plan slots keyed by registered (a, b) id pair.
     plans: HashMap<(u64, u64), PlanSlot>,
+    /// SMASH window-plan slots keyed by registered pair + planning knobs.
+    window_plans: HashMap<WindowPlanKey, WindowSlot>,
     stats: Arc<SymbolicStats>,
     evictions: u64,
 }
@@ -249,7 +302,7 @@ impl Coordinator {
                 match msg {
                     Ok(Envelope::Work(id, work)) => {
                         let t0 = std::time::Instant::now();
-                        let (c, sim_ms, registered, symbolic_reused) =
+                        let (c, sim_ms, registered, symbolic_reused, traffic) =
                             serve_work(work, &stats);
                         let _ = tx_done.send(Response {
                             id,
@@ -259,6 +312,7 @@ impl Coordinator {
                             worker,
                             registered,
                             symbolic_reused,
+                            traffic,
                         });
                     }
                     Ok(Envelope::Stop) | Err(_) => break,
@@ -279,6 +333,7 @@ impl Coordinator {
             max_resident_bytes: cfg.max_resident_bytes,
             symbolic_cache_enabled: cfg.symbolic_cache,
             plans: HashMap::new(),
+            window_plans: HashMap::new(),
             stats,
             evictions: 0,
         }
@@ -318,7 +373,7 @@ impl Coordinator {
         if let Some(old) = self.names.insert(name, id) {
             self.evict_id(old);
         }
-        self.enforce_budget(id);
+        self.enforce_budget(&[id]);
         id
     }
 
@@ -332,9 +387,21 @@ impl Coordinator {
         self.registry.get(&id.0).map(|r| Arc::clone(&r.m))
     }
 
-    /// Bytes of registered CSR data currently resident.
+    /// Bytes of registered CSR data currently resident (matrices only —
+    /// see [`Coordinator::plan_resident_bytes`] for the cached plans).
     pub fn resident_bytes(&self) -> usize {
         self.resident_bytes
+    }
+
+    /// Bytes held by published plan-cache entries (native symbolic plans
+    /// + SMASH window plans). Slots currently being computed by a worker
+    /// (lock held) are skipped — they are counted as soon as they
+    /// publish. These bytes count against `max_resident_bytes` alongside
+    /// the matrices themselves, so a server multiplying many distinct
+    /// resident pairs cannot grow plans unboundedly.
+    pub fn plan_resident_bytes(&self) -> usize {
+        published_bytes(self.plans.values(), SymbolicPlan::resident_bytes)
+            + published_bytes(self.window_plans.values(), WindowPlan::resident_bytes)
     }
 
     /// Number of registered resident matrices.
@@ -358,6 +425,17 @@ impl Coordinator {
         )
     }
 
+    /// SMASH window-plan cache counters: `(plans computed, cache hits)`.
+    /// The simulator analogue of [`Coordinator::symbolic_stats`] — a
+    /// burst of N simulated jobs sharing one registered pair (and
+    /// planning config) reports `(1, N - 1)`.
+    pub fn window_plan_stats(&self) -> (u64, u64) {
+        (
+            self.stats.window_passes.load(Ordering::Relaxed),
+            self.stats.window_hits.load(Ordering::Relaxed),
+        )
+    }
+
     /// Manually evict a named matrix; returns `false` for unknown names.
     /// In-flight jobs holding the resolved `Arc` complete unaffected;
     /// later lookups and submits with the stale id fail.
@@ -369,12 +447,14 @@ impl Coordinator {
     }
 
     /// Drop one matrix from the registry, its (possibly re-pointed) name
-    /// mapping, and every symbolic-plan cache entry involving it.
+    /// mapping, and every plan-cache entry (symbolic or window) involving
+    /// it.
     fn evict_id(&mut self, id: MatrixId) -> bool {
         match self.registry.remove(&id.0) {
             Some(r) => {
                 self.resident_bytes -= r.bytes;
                 self.plans.retain(|&(pa, pb), _| pa != id.0 && pb != id.0);
+                self.window_plans.retain(|k, _| k.a != id.0 && k.b != id.0);
                 if self.names.get(&r.name) == Some(&id) {
                     self.names.remove(&r.name);
                 }
@@ -385,22 +465,42 @@ impl Coordinator {
         }
     }
 
-    /// Evict least-recently-used residents until the registry fits the
-    /// byte budget. The matrix registered most recently (`keep`) is never
-    /// evicted, so one oversized matrix still registers successfully.
-    fn enforce_budget(&mut self, keep: MatrixId) {
-        while self.resident_bytes > self.max_resident_bytes {
+    /// Evict least-recently-used residents until the registry — matrices
+    /// plus published plan-cache bytes — fits the byte budget. Evicting a
+    /// matrix drops every plan keyed on it, so the loop converges. The
+    /// `protect` set (the matrix just registered, or the operands of the
+    /// job just submitted) is never evicted, so one oversized matrix
+    /// still registers and a job never evicts its own operands.
+    fn enforce_budget(&mut self, protect: &[MatrixId]) {
+        if self.max_resident_bytes == usize::MAX {
+            return; // unbudgeted server: skip the per-submit plan walk
+        }
+        while self.resident_bytes + self.plan_resident_bytes() > self.max_resident_bytes {
             let victim = self
                 .registry
                 .iter()
-                .filter(|(&id, _)| id != keep.0)
+                .filter(|(&id, _)| !protect.iter().any(|p| p.0 == id))
                 .min_by_key(|(_, r)| r.last_use)
                 .map(|(&id, _)| MatrixId(id));
             match victim {
                 Some(id) => {
                     self.evict_id(id);
                 }
-                None => break,
+                None => {
+                    // Every remaining resident is protected, so no matrix
+                    // can go — but plans are pure caches: shed the ones
+                    // not keyed entirely on protected matrices (a config
+                    // sweep over one protected pair can otherwise grow
+                    // window plans unboundedly). The protected pair's own
+                    // slots survive, so a burst against a persistently
+                    // over-budget registry still batches onto one pass;
+                    // workers mid-burst keep their Arc'd slot clones
+                    // either way.
+                    let prot = |id: u64| protect.iter().any(|p| p.0 == id);
+                    self.plans.retain(|&(pa, pb), _| prot(pa) && prot(pb));
+                    self.window_plans.retain(|k, _| prot(k.a) && prot(k.b));
+                    break;
+                }
             }
         }
     }
@@ -428,7 +528,8 @@ impl Coordinator {
 
     /// The shared symbolic-plan slot for a job, when batching applies:
     /// cache enabled, pool-backed parallel dataflow, and both operands
-    /// registered.
+    /// registered. Plans are accumulator-mode independent, so jobs that
+    /// differ only in `accum` share a slot.
     fn plan_slot(&mut self, used: &[MatrixId], dataflow: Dataflow) -> Option<PlanSlot> {
         if !self.symbolic_cache_enabled {
             return None;
@@ -446,35 +547,69 @@ impl Coordinator {
         }
     }
 
+    /// The shared window-plan slot for a SMASH-sim job, when batching
+    /// applies: cache enabled and both operands registered. Keyed by the
+    /// pair plus the planning knobs, so config sweeps never cross-share.
+    fn window_plan_slot(
+        &mut self,
+        used: &[MatrixId],
+        kernel: &KernelConfig,
+        sim: &SimConfig,
+    ) -> Option<WindowSlot> {
+        if !self.symbolic_cache_enabled {
+            return None;
+        }
+        match used {
+            [a, b] => Some(Arc::clone(
+                self.window_plans
+                    .entry(WindowPlanKey::new(a.0, b.0, kernel, sim))
+                    .or_insert_with(|| Arc::new(Mutex::new(None))),
+            )),
+            _ => None,
+        }
+    }
+
     /// Submit a job (blocks when the queue is full — backpressure).
     pub fn submit(&mut self, job: Job) -> JobId {
-        let work = match job {
+        let (work, used) = match job {
             Job::SmashSpgemm { a, b, kernel, sim } => {
                 let mut used = Vec::new();
                 let a = self.resolve(a, &mut used);
                 let b = self.resolve(b, &mut used);
-                Work::Smash {
-                    a,
-                    b,
-                    kernel,
-                    sim,
-                    registered: used,
-                }
+                let plan = self.window_plan_slot(&used, &kernel, &sim);
+                (
+                    Work::Smash {
+                        a,
+                        b,
+                        kernel,
+                        sim,
+                        registered: used.clone(),
+                        plan,
+                    },
+                    used,
+                )
             }
             Job::NativeSpgemm { a, b, dataflow } => {
                 let mut used = Vec::new();
                 let a = self.resolve(a, &mut used);
                 let b = self.resolve(b, &mut used);
                 let plan = self.plan_slot(&used, dataflow);
-                Work::Native {
-                    a,
-                    b,
-                    dataflow,
-                    registered: used,
-                    plan,
-                }
+                (
+                    Work::Native {
+                        a,
+                        b,
+                        dataflow,
+                        registered: used.clone(),
+                        plan,
+                    },
+                    used,
+                )
             }
         };
+        // Plans published since the last submit/register count against the
+        // registry budget too; evict LRU residents (never this job's own
+        // operands) if they pushed past it.
+        self.enforce_budget(&used);
         let id = JobId(self.next_id);
         self.next_id += 1;
         self.pending += 1;
@@ -521,12 +656,51 @@ impl Coordinator {
     }
 }
 
+/// Sum `bytes(plan)` over the published entries of a plan-slot map,
+/// skipping slots currently locked by a computing worker (they are
+/// counted once they publish).
+fn published_bytes<'s, T: 's>(
+    slots: impl Iterator<Item = &'s Arc<Mutex<Option<Arc<T>>>>>,
+    bytes: impl Fn(&T) -> usize,
+) -> usize {
+    slots
+        .filter_map(|slot| {
+            slot.try_lock()
+                .ok()
+                .and_then(|g| g.as_ref().map(|p| bytes(p)))
+        })
+        .sum()
+}
+
+/// Fetch-or-compute the shared plan in `slot`, bumping `hits`/`passes`.
+/// `build` runs under the slot lock, so the rest of a burst blocks here
+/// and reuses rather than racing a duplicate pass — this mutex is what
+/// makes "exactly one pass per pair" a guarantee. Returns the plan and
+/// whether it was reused.
+fn cached_or_compute<T>(
+    slot: &Mutex<Option<Arc<T>>>,
+    passes: &AtomicU64,
+    hits: &AtomicU64,
+    build: impl FnOnce() -> T,
+) -> (Arc<T>, bool) {
+    let mut guard = slot.lock().unwrap();
+    if let Some(p) = (*guard).clone() {
+        hits.fetch_add(1, Ordering::Relaxed);
+        (p, true)
+    } else {
+        let p = Arc::new(build());
+        passes.fetch_add(1, Ordering::Relaxed);
+        *guard = Some(Arc::clone(&p));
+        (p, false)
+    }
+}
+
 /// Execute one resolved work item on the calling worker thread, returning
-/// `(product, sim_ms, registered operands, symbolic provenance)`.
+/// `(product, sim_ms, registered operands, plan provenance, traffic)`.
 fn serve_work(
     work: Work,
     stats: &SymbolicStats,
-) -> (Csr, Option<f64>, Vec<MatrixId>, Option<bool>) {
+) -> (Csr, Option<f64>, Vec<MatrixId>, Option<bool>, Option<Traffic>) {
     match work {
         Work::Smash {
             a,
@@ -534,10 +708,21 @@ fn serve_work(
             kernel,
             sim,
             registered,
-        } => {
-            let run = crate::kernels::run_smash(&a, &b, &kernel, &sim);
-            (run.c, Some(run.report.ms), registered, None)
-        }
+            plan,
+        } => match plan {
+            Some(slot) => {
+                let (plan, reused) =
+                    cached_or_compute(&slot, &stats.window_passes, &stats.window_hits, || {
+                        plan_windows(&a, &b, &kernel, &sim)
+                    });
+                let run = run_smash_with_plan(&a, &b, &kernel, &sim, &plan);
+                (run.c, Some(run.report.ms), registered, Some(reused), None)
+            }
+            None => {
+                let run = crate::kernels::run_smash(&a, &b, &kernel, &sim);
+                (run.c, Some(run.report.ms), registered, None, None)
+            }
+        },
         Work::Native {
             a,
             b,
@@ -545,28 +730,16 @@ fn serve_work(
             registered,
             plan,
         } => match (dataflow, plan) {
-            (Dataflow::ParGustavson { threads }, Some(slot)) => {
-                let (plan, reused) = {
-                    let mut guard = slot.lock().unwrap();
-                    if let Some(p) = (*guard).clone() {
-                        stats.hits.fetch_add(1, Ordering::Relaxed);
-                        (p, true)
-                    } else {
-                        // First job of the pair: compute under the slot
-                        // lock so the rest of the burst blocks here and
-                        // reuses, rather than racing a duplicate pass.
-                        let p = Arc::new(symbolic_plan(&a, &b, threads));
-                        stats.passes.fetch_add(1, Ordering::Relaxed);
-                        *guard = Some(Arc::clone(&p));
-                        (p, false)
-                    }
-                };
-                let (c, _) = par_gustavson_with_plan(&a, &b, threads, &plan);
-                (c, None, registered, Some(reused))
+            (Dataflow::ParGustavson { threads, accum }, Some(slot)) => {
+                let (plan, reused) = cached_or_compute(&slot, &stats.passes, &stats.hits, || {
+                    symbolic_plan(&a, &b, threads)
+                });
+                let (c, t) = par_gustavson_with_plan_accum(&a, &b, threads, &plan, accum);
+                (c, None, registered, Some(reused), Some(t))
             }
             (df, _) => {
-                let (c, _) = df.multiply(&a, &b);
-                (c, None, registered, None)
+                let (c, t) = df.multiply(&a, &b);
+                (c, None, registered, None, Some(t))
             }
         },
     }
@@ -576,7 +749,7 @@ fn serve_work(
 mod tests {
     use super::*;
     use crate::gen::{erdos_renyi, rmat, RmatParams};
-    use crate::spgemm::gustavson;
+    use crate::spgemm::{gustavson, AccumMode};
 
     #[test]
     fn serves_native_jobs() {
@@ -753,7 +926,10 @@ mod tests {
             coord.submit(Job::NativeSpgemm {
                 a: id_a.into(),
                 b: id_b.into(),
-                dataflow: Dataflow::ParGustavson { threads: 2 },
+                dataflow: Dataflow::ParGustavson {
+                    threads: 2,
+                    accum: AccumMode::Adaptive,
+                },
             });
         }
         let responses = coord.collect_all();
@@ -797,7 +973,10 @@ mod tests {
             coord.submit(Job::NativeSpgemm {
                 a: id_a.into(),
                 b: id_b.into(),
-                dataflow: Dataflow::ParGustavson { threads: 2 },
+                dataflow: Dataflow::ParGustavson {
+                    threads: 2,
+                    accum: AccumMode::Adaptive,
+                },
             });
         }
         for r in coord.collect_all().values() {
@@ -878,6 +1057,150 @@ mod tests {
             "older resident evicted once a newer one arrives"
         );
         assert!(coord.matrix(id2).is_some());
+        coord.shutdown();
+    }
+
+    /// Accumulator modes plumb end-to-end: forced-hash and forced-dense
+    /// jobs return bitwise-oracle products, and the response's traffic
+    /// carries the per-multiply accumulator stats.
+    #[test]
+    fn accum_modes_served_bitwise_with_stats() {
+        let mut coord = Coordinator::start(ServerConfig {
+            workers: 2,
+            queue_depth: 16,
+            ..ServerConfig::default()
+        });
+        let a = rmat(&RmatParams::new(7, 900, 71));
+        let b = rmat(&RmatParams::new(7, 900, 72));
+        let (oracle, _) = gustavson(&a, &b);
+        let rows = a.rows as u64;
+        let id_a = coord.register("A", a);
+        let id_b = coord.register("B", b);
+        for accum in [AccumMode::Adaptive, AccumMode::Dense, AccumMode::Hash] {
+            coord.submit(Job::NativeSpgemm {
+                a: id_a.into(),
+                b: id_b.into(),
+                dataflow: Dataflow::ParGustavson { threads: 2, accum },
+            });
+            let r = coord.collect_one().expect("job outstanding");
+            assert_eq!(r.c.row_ptr, oracle.row_ptr, "{}", accum.name());
+            assert_eq!(r.c.col_idx, oracle.col_idx, "{}", accum.name());
+            assert_eq!(r.c.data, oracle.data, "{}", accum.name());
+            let t = r.traffic.expect("native jobs report traffic");
+            assert_eq!(t.accum.dense_rows + t.accum.hash_rows, rows, "{}", accum.name());
+            match accum {
+                AccumMode::Dense => assert_eq!(t.accum.hash_rows, 0),
+                AccumMode::Hash => assert_eq!(t.accum.dense_rows, 0),
+                AccumMode::Adaptive => {}
+            }
+        }
+        // all three modes shared ONE cached symbolic plan
+        assert_eq!(coord.symbolic_stats(), (1, 2));
+        coord.shutdown();
+    }
+
+    /// The SMASH window-plan cache: a burst of simulated jobs sharing one
+    /// registered pair plans windows exactly once; every later job reuses
+    /// the published plan and reports the reuse, with identical products
+    /// and simulated time.
+    #[test]
+    fn smash_burst_shares_one_window_plan() {
+        let mut coord = Coordinator::start(ServerConfig {
+            workers: 3,
+            queue_depth: 16,
+            ..ServerConfig::default()
+        });
+        let a = rmat(&RmatParams::new(7, 700, 81));
+        let b = rmat(&RmatParams::new(7, 700, 82));
+        let (oracle, _) = gustavson(&a, &b);
+        let id_a = coord.register("A", a);
+        let id_b = coord.register("B", b);
+        for _ in 0..6 {
+            coord.submit(Job::SmashSpgemm {
+                a: id_a.into(),
+                b: id_b.into(),
+                kernel: KernelConfig::v2(),
+                sim: SimConfig::test_tiny(),
+            });
+        }
+        let responses = coord.collect_all();
+        assert_eq!(responses.len(), 6);
+        assert_eq!(
+            coord.window_plan_stats(),
+            (1, 5),
+            "burst must share exactly one window-planning pass"
+        );
+        let mut computed = 0;
+        let mut sim_ms = None;
+        for r in responses.values() {
+            assert!(r.c.approx_same(&oracle));
+            match r.symbolic_reused {
+                Some(false) => computed += 1,
+                Some(true) => {}
+                None => panic!("batched SMASH job must report plan provenance"),
+            }
+            // deterministic simulator + shared plan => identical sim time
+            let ms = r.sim_ms.expect("SMASH jobs report sim time");
+            match sim_ms {
+                None => sim_ms = Some(ms),
+                Some(prev) => assert_eq!(prev, ms),
+            }
+        }
+        assert_eq!(computed, 1);
+        // the native symbolic cache was not involved
+        assert_eq!(coord.symbolic_stats(), (0, 0));
+        assert!(coord.plan_resident_bytes() > 0, "window plan bytes visible");
+        coord.shutdown();
+    }
+
+    /// Plan-cache byte budget: published plans count against
+    /// `max_resident_bytes`, so a server that keeps multiplying distinct
+    /// resident pairs evicts LRU matrices (and their plans) instead of
+    /// growing plan memory unboundedly.
+    #[test]
+    fn plan_bytes_count_toward_budget_and_trigger_eviction() {
+        let m0 = rmat(&RmatParams::new(7, 800, 91));
+        let m1 = rmat(&RmatParams::new(7, 800, 92));
+        // Budget fits both matrices with a sliver of slack, but not the
+        // pair's symbolic plan on top.
+        let slack = 256;
+        let budget = m0.resident_bytes() + m1.resident_bytes() + slack;
+        let mut coord = Coordinator::start(ServerConfig {
+            workers: 1,
+            queue_depth: 8,
+            max_resident_bytes: budget,
+            ..ServerConfig::default()
+        });
+        let id0 = coord.register("M0", m0);
+        let id1 = coord.register("M1", m1);
+        assert_eq!(coord.resident_count(), 2);
+        coord.submit(Job::NativeSpgemm {
+            a: id0.into(),
+            b: id1.into(),
+            dataflow: Dataflow::ParGustavson {
+                threads: 2,
+                accum: AccumMode::Adaptive,
+            },
+        });
+        // Drain so the worker has definitely published the plan.
+        let r = coord.collect_one().expect("job outstanding");
+        assert_eq!(r.symbolic_reused, Some(false));
+        let plan_bytes = coord.plan_resident_bytes();
+        assert!(plan_bytes > slack, "plan must overflow the slack: {plan_bytes}");
+        assert_eq!(coord.evictions(), 0, "nothing evicted while only submitted");
+        // The next registration sees matrices + plan over budget and
+        // evicts the LRU resident (M0 — resolved first); its plan entries
+        // are dropped with it, bringing the total back under budget.
+        let id2 = coord.register("M2", rmat(&RmatParams::new(5, 60, 93)));
+        assert!(
+            coord.evictions() >= 1,
+            "plan bytes past the budget must evict an LRU resident"
+        );
+        assert!(coord.matrix(id2).is_some());
+        assert!(
+            coord.resident_bytes() + coord.plan_resident_bytes() <= budget,
+            "eviction must restore the budget invariant"
+        );
         coord.shutdown();
     }
 

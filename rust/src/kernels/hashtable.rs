@@ -28,7 +28,7 @@ pub struct Upsert {
 }
 
 /// Cumulative table statistics.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct TableStats {
     pub upserts: u64,
     pub inserts: u64,
@@ -40,16 +40,32 @@ pub struct TableStats {
 
 impl TableStats {
     fn note(&mut self, u: Upsert) {
+        self.record(u.probes, u.inserted);
+    }
+
+    /// Record one upsert outcome — also the hook used by accumulators
+    /// that run the probe walk themselves
+    /// ([`crate::spgemm::RowAccumulator`]).
+    pub fn record(&mut self, probes: u32, inserted: bool) {
         self.upserts += 1;
-        self.probe_total += u.probes as u64;
-        if u.inserted {
+        self.probe_total += probes as u64;
+        if inserted {
             self.inserts += 1;
         } else {
             self.merges += 1;
         }
-        if u.probes > 1 {
+        if probes > 1 {
             self.collisions += 1;
         }
+    }
+
+    /// Fold another table's cumulative counters into this one.
+    pub fn merge(&mut self, o: TableStats) {
+        self.upserts += o.upserts;
+        self.inserts += o.inserts;
+        self.merges += o.merges;
+        self.probe_total += o.probe_total;
+        self.collisions += o.collisions;
     }
 
     /// Mean probes per upsert (1.0 = collision-free).

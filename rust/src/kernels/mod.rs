@@ -14,7 +14,7 @@ pub use hashtable::{
     hash_tag, insertion_sort_cost, insertion_sort_cost_quadratic, OffsetTable, TableStats,
     TagTable, EMPTY,
 };
-pub use smash::{run_smash, RunReport, SmashRun};
+pub use smash::{run_smash, run_smash_with_plan, RunReport, SmashRun};
 pub use spmv::{pagerank, run_spmv, SpmvReport};
 pub use window::{plan_windows, Window, WindowPlan};
 

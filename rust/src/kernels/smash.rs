@@ -84,10 +84,26 @@ impl SmashRun {
 
 /// Execute `C = A · B` with the given SMASH version on a simulated block.
 pub fn run_smash(a: &Csr, b: &Csr, kcfg: &KernelConfig, scfg: &SimConfig) -> SmashRun {
-    assert_eq!(a.cols, b.rows, "dimension mismatch");
     let plan = plan_windows(a, b, kcfg, scfg);
+    run_smash_with_plan(a, b, kcfg, scfg, &plan)
+}
+
+/// [`run_smash`] against a precomputed [`WindowPlan`] (which must come
+/// from the same `(A, B, kcfg, scfg)` — planning is deterministic, so the
+/// serving coordinator caches plans per registered operand pair and
+/// amortizes the §5.1.1 FMA-counting/symbolic pass across a burst of
+/// simulated jobs, exactly as it does for native `SymbolicPlan`s.
+pub fn run_smash_with_plan(
+    a: &Csr,
+    b: &Csr,
+    kcfg: &KernelConfig,
+    scfg: &SimConfig,
+    plan: &WindowPlan,
+) -> SmashRun {
+    assert_eq!(a.cols, b.rows, "dimension mismatch");
+    assert_eq!(plan.row_flops.len(), a.rows, "plan is for a different A");
     let mut sim = Sim::new(scfg.clone());
-    let mut k = KernelState::new(a, b, kcfg, &plan, &mut sim);
+    let mut k = KernelState::new(a, b, kcfg, plan, &mut sim);
 
     // ---- Phase 0: FMA counting over all of A (Gustavson step 1, §5.1.1).
     k.simulate_fma_counting(&mut sim);
@@ -580,11 +596,7 @@ impl<'m> KernelState<'m> {
     }
 
     fn table_stats_merge(&mut self, s: TableStats) {
-        self.table_stats.upserts += s.upserts;
-        self.table_stats.inserts += s.inserts;
-        self.table_stats.merges += s.merges;
-        self.table_stats.probe_total += s.probe_total;
-        self.table_stats.collisions += s.collisions;
+        self.table_stats.merge(s);
     }
 }
 
@@ -731,6 +743,24 @@ mod tests {
             .report
             .avg_utilization;
         assert!(u2 > u1, "V2 util {u2} should beat V1 {u1}");
+    }
+
+    /// A cached window plan must reproduce the from-scratch run exactly —
+    /// same product, same simulated cycles (planning is deterministic, so
+    /// the serving layer may share one plan across a burst).
+    #[test]
+    fn with_plan_matches_fresh_run() {
+        let a = rmat(&RmatParams::new(7, 600, 23));
+        let b = rmat(&RmatParams::new(7, 600, 24));
+        let kcfg = KernelConfig::v2();
+        let scfg = SimConfig::test_tiny();
+        let fresh = run_smash(&a, &b, &kcfg, &scfg);
+        let plan = crate::kernels::plan_windows(&a, &b, &kcfg, &scfg);
+        assert!(plan.resident_bytes() > 0);
+        let cached = run_smash_with_plan(&a, &b, &kcfg, &scfg, &plan);
+        assert!(cached.c.approx_same(&fresh.c));
+        assert_eq!(cached.report.cycles, fresh.report.cycles);
+        assert_eq!(cached.report.instructions, fresh.report.instructions);
     }
 
     #[test]

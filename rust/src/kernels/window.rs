@@ -42,6 +42,18 @@ pub struct WindowPlan {
     pub spad_budget: usize,
 }
 
+impl WindowPlan {
+    /// Approximate heap bytes held by the plan arrays — used by the
+    /// serving layer to count cached window plans against its registry
+    /// byte budget (the same accounting `SymbolicPlan` gets).
+    pub fn resident_bytes(&self) -> usize {
+        self.windows.len() * std::mem::size_of::<Window>()
+            + self.row_flops.len() * std::mem::size_of::<u64>()
+            + self.row_nnz.len() * std::mem::size_of::<usize>()
+            + self.dense_rows.len() * std::mem::size_of::<bool>()
+    }
+}
+
 /// Bytes of SPAD needed per hash bin: tag (8) + data (8) — Fig 5.3.
 pub const BIN_BYTES: usize = 16;
 /// V3 SPAD bytes per *entry*: dense tag (4ish→8 aligned) + value (8) +

@@ -1,0 +1,686 @@
+//! The unified per-row accumulator behind every row-wise SpGEMM path —
+//! SMASH's hashed scratchpad idea brought to the native serving backend.
+//!
+//! A [`RowAccumulator`] owns two interchangeable lanes and picks one per
+//! output row:
+//!
+//! * **dense** — the classic Gustavson accumulator (`acc`/`present`
+//!   arrays of length `cols` plus a touched-column list). O(cols) memory,
+//!   O(1) per product, unbeatable on heavy rows.
+//! * **hash** — an open-addressing tag/value table keyed by column index
+//!   with Fibonacci (multiplicative) hashing
+//!   ([`crate::kernels::hashtable::hash_tag`], `HashBits::Low`) and a
+//!   linear-probe walk. The table is reused across rows and grown
+//!   geometrically on demand, so a worker's footprint is O(live row nnz)
+//!   — never O(cols). This is what makes hypersparse wide matrices
+//!   (2^20+ columns) servable: the dense lane would pin ~9 bytes × cols
+//!   × workers of cache-hostile scratch.
+//!
+//! Selection follows Nagasaka et al. (KNL hash SpGEMM, arXiv:1804.01698):
+//! per row, compare the FLOPs upper bound `Σ_{k ∈ A[i,:]} nnz(B[k,:])` —
+//! already computed for window planning — against a threshold (default
+//! `cols / 16`). Light rows hash, heavy rows go dense. Forced
+//! [`AccumMode::Dense`] / [`AccumMode::Hash`] exist for benchmarks, the
+//! serial oracle, and `rowwise_hash`.
+//!
+//! **Bitwise determinism.** Both lanes add partial products in identical
+//! iteration order (A-row order, then B-row order), so a column's final
+//! value is the same floating-point reduction either way; both drain
+//! sorted by column. Serial, parallel, adaptive, forced-dense, and
+//! forced-hash outputs are therefore bitwise identical — the test suite
+//! asserts this against the [`super::gustavson`] oracle on every
+//! generator.
+
+use super::Traffic;
+use crate::config::HashBits;
+use crate::formats::{Csr, Index, Value};
+use crate::kernels::hashtable::{hash_tag, TableStats};
+
+/// Empty-slot sentinel of the hash lane. Column indices are always
+/// `< cols <= u32::MAX`, so the max value is never a real tag.
+const EMPTY_TAG: Index = Index::MAX;
+/// Smallest hash-lane capacity (power of two).
+const MIN_HASH_CAP: usize = 16;
+/// Tag bits handed to [`hash_tag`] (ignored by the `Low` mode's
+/// Fibonacci hash, which mixes the full 64-bit key).
+const TAG_BITS: u32 = 32;
+/// Default adaptive threshold divisor: rows whose FLOPs upper bound is at
+/// least `cols / 16` use the dense lane.
+pub const HASH_THRESHOLD_DIVISOR: usize = 16;
+
+/// Which accumulator lane a multiply uses.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum AccumMode {
+    /// Per-row choice off the symbolic FLOPs upper bound (the default).
+    #[default]
+    Adaptive,
+    /// Every row through the dense lane (the pre-adaptive behaviour and
+    /// the serial-oracle semantics).
+    Dense,
+    /// Every row through the hash lane (the SMASH scratchpad analogue).
+    Hash,
+}
+
+impl AccumMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AccumMode::Adaptive => "adaptive",
+            AccumMode::Dense => "dense",
+            AccumMode::Hash => "hash",
+        }
+    }
+
+    /// Parse a CLI spelling (`adaptive|dense|hash`).
+    pub fn parse(s: &str) -> Option<AccumMode> {
+        match s {
+            "adaptive" => Some(AccumMode::Adaptive),
+            "dense" => Some(AccumMode::Dense),
+            "hash" => Some(AccumMode::Hash),
+            _ => None,
+        }
+    }
+}
+
+/// Per-row lane-selection policy: a mode plus the adaptive threshold.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AccumPolicy {
+    pub mode: AccumMode,
+    /// Rows with FLOPs upper bound `>=` this go dense under
+    /// [`AccumMode::Adaptive`]; ignored by the forced modes.
+    pub hash_threshold: u64,
+}
+
+impl AccumPolicy {
+    /// Policy for a `cols`-wide output with the default threshold
+    /// (`cols / 16`, min 1).
+    pub fn new(mode: AccumMode, cols: usize) -> Self {
+        Self {
+            mode,
+            hash_threshold: (cols / HASH_THRESHOLD_DIVISOR).max(1) as u64,
+        }
+    }
+
+    /// Override the adaptive threshold (tuning knob).
+    pub fn with_threshold(mut self, threshold: u64) -> Self {
+        self.hash_threshold = threshold.max(1);
+        self
+    }
+
+    #[inline]
+    fn wants_hash(&self, row_flops: u64) -> bool {
+        match self.mode {
+            AccumMode::Dense => false,
+            AccumMode::Hash => true,
+            AccumMode::Adaptive => row_flops < self.hash_threshold,
+        }
+    }
+}
+
+/// Per-multiply accumulator statistics, carried on
+/// [`Traffic::accum`](super::Traffic). Numeric-pass semantics:
+/// `dense_rows + hash_rows` equals the number of output rows the
+/// accumulator processed.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct AccumStats {
+    /// Rows routed to the dense lane.
+    pub dense_rows: u64,
+    /// Rows routed to the hash lane.
+    pub hash_rows: u64,
+    /// Geometric regrowths of the hash table (excludes the first
+    /// allocation).
+    pub growths: u64,
+    /// Peak per-worker accumulator heap bytes observed (max across
+    /// workers after a parallel merge) — the O(live row nnz) vs
+    /// O(cols) memory story, measured.
+    pub peak_bytes: u64,
+    /// Hash-lane probe statistics (upserts, probes, collisions).
+    pub table: TableStats,
+}
+
+impl AccumStats {
+    /// Fold another worker's stats in: counters add, peaks take the max.
+    pub fn merge(&mut self, o: &AccumStats) {
+        self.dense_rows += o.dense_rows;
+        self.hash_rows += o.hash_rows;
+        self.growths += o.growths;
+        self.peak_bytes = self.peak_bytes.max(o.peak_bytes);
+        self.table.merge(o.table);
+    }
+}
+
+/// A reusable per-row accumulator with a dense and a hash lane. One per
+/// worker; every lane's scratch is lazily allocated and reused across
+/// rows, so a worker that only ever hashes never pays O(cols) memory.
+pub struct RowAccumulator {
+    cols: usize,
+    policy: AccumPolicy,
+    /// Dense numeric lane (allocated on first dense numeric row).
+    acc: Vec<Value>,
+    present: Vec<bool>,
+    /// Dense symbolic lane: visited-stamp array tagged by global row
+    /// index (allocated on first dense symbolic row).
+    stamp: Vec<u32>,
+    /// Touched columns of the live dense row, in first-touch order.
+    touched: Vec<Index>,
+    /// Hash lane: open-addressing tag/value table (capacity a power of
+    /// two, grown geometrically, reused across rows).
+    tags: Vec<Index>,
+    vals: Vec<Value>,
+    /// Occupied slots of the live hash row (cleared per row; rebuilt on
+    /// growth).
+    used_slots: Vec<u32>,
+    /// Sorted-drain scratch of the hash lane.
+    drain_buf: Vec<(Index, Value)>,
+    /// Cumulative statistics; snapshot via [`RowAccumulator::finish`].
+    pub stats: AccumStats,
+}
+
+impl RowAccumulator {
+    /// Accumulator for a `cols`-wide output under `policy`. Allocates
+    /// nothing until the first row demands a lane.
+    pub fn new(cols: usize, policy: AccumPolicy) -> Self {
+        Self {
+            cols,
+            policy,
+            acc: Vec::new(),
+            present: Vec::new(),
+            stamp: Vec::new(),
+            touched: Vec::new(),
+            tags: Vec::new(),
+            vals: Vec::new(),
+            used_slots: Vec::new(),
+            drain_buf: Vec::new(),
+            stats: AccumStats::default(),
+        }
+    }
+
+    /// Convenience: accumulator with the default threshold for `mode`.
+    pub fn with_mode(cols: usize, mode: AccumMode) -> Self {
+        Self::new(cols, AccumPolicy::new(mode, cols))
+    }
+
+    /// Heap bytes currently held by the accumulator's lanes and scratch.
+    /// O(cols) only if a dense row ever materialized a dense lane.
+    pub fn resident_bytes(&self) -> usize {
+        self.acc.len() * std::mem::size_of::<Value>()
+            + self.present.len()
+            + self.stamp.len() * std::mem::size_of::<u32>()
+            + self.touched.capacity() * std::mem::size_of::<Index>()
+            + self.tags.len() * std::mem::size_of::<Index>()
+            + self.vals.len() * std::mem::size_of::<Value>()
+            + self.used_slots.capacity() * std::mem::size_of::<u32>()
+            + self.drain_buf.capacity() * std::mem::size_of::<(Index, Value)>()
+    }
+
+    /// Snapshot the stats with the current footprint as `peak_bytes` —
+    /// what a worker stores into its `Traffic` share when its chunk ends.
+    pub fn finish(&self) -> AccumStats {
+        let mut s = self.stats;
+        s.peak_bytes = s.peak_bytes.max(self.resident_bytes() as u64);
+        s
+    }
+
+    /// Distinct-column count of output row `i` (one symbolic-phase step).
+    /// `row_flops` is the row's FLOPs upper bound (lane selection only —
+    /// pass 0 under a forced policy). Row indices must be globally unique
+    /// across all calls on one accumulator (they tag the stamp array).
+    pub fn symbolic_row(&mut self, a: &Csr, b: &Csr, i: usize, row_flops: u64) -> usize {
+        let (acols, _) = a.row(i);
+        if self.policy.wants_hash(row_flops) {
+            self.stats.hash_rows += 1;
+            for &k in acols {
+                let (bcols, _) = b.row(k as usize);
+                for &j in bcols {
+                    self.hash_upsert(j, 0.0);
+                }
+            }
+            let count = self.used_slots.len();
+            self.clear_hash_row();
+            count
+        } else {
+            self.stats.dense_rows += 1;
+            if self.stamp.is_empty() && self.cols > 0 {
+                self.stamp = vec![u32::MAX; self.cols];
+            }
+            let tag = i as u32;
+            let mut count = 0usize;
+            for &k in acols {
+                let (bcols, _) = b.row(k as usize);
+                for &j in bcols {
+                    if self.stamp[j as usize] != tag {
+                        self.stamp[j as usize] = tag;
+                        count += 1;
+                    }
+                }
+            }
+            count
+        }
+    }
+
+    /// Accumulate output row `i` and drain it sorted-by-column into the
+    /// row's output slices (`cols_out`/`data_out` must be exactly the
+    /// row's nnz long). The one Gustavson inner loop shared by the serial
+    /// oracle and both parallel backends.
+    #[allow(clippy::too_many_arguments)]
+    pub fn numeric_row(
+        &mut self,
+        a: &Csr,
+        b: &Csr,
+        i: usize,
+        row_flops: u64,
+        cols_out: &mut [Index],
+        data_out: &mut [Value],
+        t: &mut Traffic,
+    ) {
+        let mut slot = 0usize;
+        let n = self.numeric_row_emit(a, b, i, row_flops, t, |j, v| {
+            cols_out[slot] = j;
+            data_out[slot] = v;
+            slot += 1;
+        });
+        debug_assert_eq!(n, cols_out.len(), "row {i}: symbolic/numeric nnz mismatch");
+    }
+
+    /// Accumulate output row `i`, then emit its (column, value) pairs in
+    /// strictly increasing column order. Returns the row's nnz. Partial
+    /// products are added in A-row-then-B-row order in both lanes, so the
+    /// emitted values are bitwise lane-independent.
+    pub fn numeric_row_emit(
+        &mut self,
+        a: &Csr,
+        b: &Csr,
+        i: usize,
+        row_flops: u64,
+        t: &mut Traffic,
+        mut emit: impl FnMut(Index, Value),
+    ) -> usize {
+        let (acols, avals) = a.row(i);
+        if self.policy.wants_hash(row_flops) {
+            self.stats.hash_rows += 1;
+            for (&k, &av) in acols.iter().zip(avals) {
+                t.a_reads += 1;
+                let (bcols, bvals) = b.row(k as usize);
+                t.b_reads += bcols.len() as u64;
+                for (&j, &bv) in bcols.iter().zip(bvals) {
+                    self.hash_upsert(j, av * bv);
+                    t.flops += 1;
+                }
+            }
+            let n = self.used_slots.len();
+            self.drain_buf.clear();
+            for &s in &self.used_slots {
+                self.drain_buf.push((self.tags[s as usize], self.vals[s as usize]));
+            }
+            self.drain_buf.sort_unstable_by_key(|&(j, _)| j);
+            for idx in 0..self.drain_buf.len() {
+                let (j, v) = self.drain_buf[idx];
+                emit(j, v);
+                t.c_writes += 1;
+            }
+            self.clear_hash_row();
+            t.intermediate_peak = t.intermediate_peak.max(n as u64);
+            n
+        } else {
+            self.stats.dense_rows += 1;
+            if self.acc.is_empty() && self.cols > 0 {
+                self.acc = vec![0.0 as Value; self.cols];
+                self.present = vec![false; self.cols];
+            }
+            for (&k, &av) in acols.iter().zip(avals) {
+                t.a_reads += 1;
+                let (bcols, bvals) = b.row(k as usize);
+                t.b_reads += bcols.len() as u64;
+                for (&j, &bv) in bcols.iter().zip(bvals) {
+                    let ju = j as usize;
+                    if !self.present[ju] {
+                        self.present[ju] = true;
+                        self.touched.push(j);
+                    }
+                    self.acc[ju] += av * bv;
+                    t.flops += 1;
+                }
+            }
+            self.touched.sort_unstable();
+            let n = self.touched.len();
+            for idx in 0..n {
+                let j = self.touched[idx];
+                let ju = j as usize;
+                emit(j, self.acc[ju]);
+                self.acc[ju] = 0.0;
+                self.present[ju] = false;
+                t.c_writes += 1;
+            }
+            self.touched.clear();
+            t.intermediate_peak = t.intermediate_peak.max(n as u64);
+            n
+        }
+    }
+
+    /// Merge `val` under column `j` in the hash lane: Fibonacci hash,
+    /// linear-probe walk, growth only when an actual *insert* would cross
+    /// 1/2 load (merges never grow — occupancy is unchanged), so the walk
+    /// always terminates at an empty slot and the table stays at most
+    /// half full.
+    #[inline]
+    fn hash_upsert(&mut self, j: Index, val: Value) {
+        if self.tags.is_empty() {
+            self.grow_hash();
+        }
+        'table: loop {
+            let cap = self.tags.len();
+            let mask = cap - 1;
+            let mut slot = hash_tag(j as u64, cap, TAG_BITS, HashBits::Low);
+            let mut probes = 1u32;
+            loop {
+                let tag = self.tags[slot];
+                if tag == EMPTY_TAG {
+                    if (self.used_slots.len() + 1) * 2 > cap {
+                        // This insert would cross half load: double and
+                        // re-probe in the grown table (one pass suffices —
+                        // the doubled capacity is at least live + 2 slots).
+                        self.grow_hash();
+                        continue 'table;
+                    }
+                    self.tags[slot] = j;
+                    // `0.0 + val`, not `val`: the dense lane's first touch
+                    // is `acc[j] (== 0.0) += val`, and IEEE 754 maps -0.0
+                    // to +0.0 under that addition — storing `val` verbatim
+                    // would diverge bitwise from the oracle on signed-zero
+                    // products.
+                    self.vals[slot] = 0.0 + val;
+                    self.used_slots.push(slot as u32);
+                    self.stats.table.record(probes, true);
+                    return;
+                }
+                if tag == j {
+                    self.vals[slot] += val;
+                    self.stats.table.record(probes, false);
+                    return;
+                }
+                slot = (slot + 1) & mask;
+                probes += 1;
+            }
+        }
+    }
+
+    /// Double the hash table (first call allocates [`MIN_HASH_CAP`]) and
+    /// re-insert the live row's entries.
+    #[cold]
+    fn grow_hash(&mut self) {
+        let new_cap = (self.tags.len() * 2).max(MIN_HASH_CAP);
+        let old_tags = std::mem::replace(&mut self.tags, vec![EMPTY_TAG; new_cap]);
+        let old_vals = std::mem::replace(&mut self.vals, vec![0.0 as Value; new_cap]);
+        if !old_tags.is_empty() {
+            self.stats.growths += 1;
+        }
+        self.used_slots.clear();
+        let mask = new_cap - 1;
+        for (s, &tag) in old_tags.iter().enumerate() {
+            if tag == EMPTY_TAG {
+                continue;
+            }
+            let mut slot = hash_tag(tag as u64, new_cap, TAG_BITS, HashBits::Low);
+            while self.tags[slot] != EMPTY_TAG {
+                slot = (slot + 1) & mask;
+            }
+            self.tags[slot] = tag;
+            self.vals[slot] = old_vals[s];
+            self.used_slots.push(slot as u32);
+        }
+    }
+
+    /// Reset the live row's hash slots (O(row nnz), not O(capacity)).
+    fn clear_hash_row(&mut self) {
+        for &s in &self.used_slots {
+            self.tags[s as usize] = EMPTY_TAG;
+            self.vals[s as usize] = 0.0;
+        }
+        self.used_slots.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{banded, diagonal_noise, erdos_renyi, rmat, RmatParams};
+    use crate::spgemm::{flops_per_row, gustavson, symbolic_row_nnz};
+
+    /// Drive one full multiply through a fresh accumulator and return the
+    /// triplets plus traffic.
+    fn multiply(a: &Csr, b: &Csr, mode: AccumMode) -> (Csr, Traffic) {
+        let flops = flops_per_row(a, b);
+        let mut t = Traffic::default();
+        let mut racc = RowAccumulator::with_mode(b.cols, mode);
+        let mut triplets = Vec::new();
+        for i in 0..a.rows {
+            racc.numeric_row_emit(a, b, i, flops[i], &mut t, |j, v| {
+                triplets.push((i, j as usize, v));
+            });
+        }
+        t.accum = racc.finish();
+        (Csr::from_triplets(a.rows, b.cols, triplets), t)
+    }
+
+    fn assert_bitwise(c: &Csr, oracle: &Csr, label: &str) {
+        assert_eq!(c.row_ptr, oracle.row_ptr, "{label}: row_ptr");
+        assert_eq!(c.col_idx, oracle.col_idx, "{label}: col_idx");
+        assert_eq!(c.data, oracle.data, "{label}: data");
+    }
+
+    /// Forced-hash and forced-dense outputs are bitwise equal to the
+    /// serial oracle on every generator (same per-column accumulation
+    /// order in both lanes).
+    #[test]
+    fn forced_lanes_bitwise_equal_oracle_all_generators() {
+        let inputs: Vec<(&str, Csr, Csr)> = vec![
+            (
+                "rmat",
+                rmat(&RmatParams::new(7, 900, 3)),
+                rmat(&RmatParams::new(7, 900, 4)),
+            ),
+            (
+                "erdos_renyi",
+                erdos_renyi(96, 700, 5),
+                erdos_renyi(96, 700, 6),
+            ),
+            ("banded", banded(64, 3, 7), banded(64, 2, 8)),
+            (
+                "diagonal_noise",
+                diagonal_noise(80, 240, 9),
+                diagonal_noise(80, 240, 10),
+            ),
+        ];
+        for (name, a, b) in &inputs {
+            let (oracle, to) = gustavson(a, b);
+            for mode in [AccumMode::Adaptive, AccumMode::Dense, AccumMode::Hash] {
+                let (c, t) = multiply(a, b, mode);
+                assert_bitwise(&c, &oracle, &format!("{name}/{}", mode.name()));
+                assert_eq!(t.flops, to.flops, "{name}/{}", mode.name());
+                assert_eq!(t.c_writes, to.c_writes, "{name}/{}", mode.name());
+                assert_eq!(
+                    t.accum.dense_rows + t.accum.hash_rows,
+                    a.rows as u64,
+                    "{name}/{}: every row must pick exactly one lane",
+                    mode.name()
+                );
+            }
+        }
+    }
+
+    /// Empty rows: no products, no emits, no lane confusion.
+    #[test]
+    fn empty_rows_and_empty_matrix() {
+        let a = Csr::from_triplets(4, 4, vec![(2, 1, 3.0)]);
+        let b = Csr::from_triplets(4, 4, vec![(1, 0, 2.0)]);
+        for mode in [AccumMode::Adaptive, AccumMode::Dense, AccumMode::Hash] {
+            let (c, t) = multiply(&a, &b, mode);
+            assert_eq!(c.nnz(), 1);
+            assert_eq!(c.row(2), (&[0 as Index][..], &[6.0 as Value][..]));
+            assert_eq!(t.flops, 1);
+        }
+        let z = Csr::zero(3, 3);
+        for mode in [AccumMode::Dense, AccumMode::Hash] {
+            let (c, t) = multiply(&z, &z, mode);
+            assert_eq!(c.nnz(), 0);
+            assert_eq!(t.flops, 0);
+            assert_eq!(t.accum.dense_rows + t.accum.hash_rows, 3);
+        }
+    }
+
+    /// Single-element rows through both lanes.
+    #[test]
+    fn single_element_rows() {
+        let a = Csr::from_triplets(1, 1, vec![(0, 0, 3.0)]);
+        for mode in [AccumMode::Dense, AccumMode::Hash] {
+            let (c, t) = multiply(&a, &a, mode);
+            assert_eq!(c.row(0).1, &[9.0]);
+            assert_eq!(t.flops, 1);
+        }
+    }
+
+    /// A row denser than the threshold on a wide matrix goes dense under
+    /// the adaptive policy; its light siblings hash — and the output
+    /// still matches the oracle bitwise.
+    #[test]
+    fn adaptive_splits_heavy_and_light_rows_on_wide_matrix() {
+        let cols = 4096;
+        // row 0 of A is a hub hitting a dense B row; rows 1..16 are light.
+        let mut tr = vec![(0usize, 0usize, 1.0)];
+        for r in 1..16 {
+            tr.push((r, r, 1.0));
+        }
+        let a = Csr::from_triplets(16, cols, tr);
+        let mut btr: Vec<(usize, usize, f64)> = (0..cols).map(|c| (0usize, c, 0.5)).collect();
+        for r in 1..16 {
+            btr.push((r, r, 2.0));
+        }
+        let b = Csr::from_triplets(cols, cols, btr);
+        let flops = flops_per_row(&a, &b);
+        assert!(flops[0] >= (cols / HASH_THRESHOLD_DIVISOR) as u64);
+        let (oracle, _) = gustavson(&a, &b);
+        let (c, t) = multiply(&a, &b, AccumMode::Adaptive);
+        assert_bitwise(&c, &oracle, "adaptive wide");
+        assert_eq!(t.accum.dense_rows, 1, "only the hub row crosses the threshold");
+        assert_eq!(t.accum.hash_rows, 15);
+    }
+
+    /// The hash table grows geometrically across rows (capacity persists
+    /// between rows, growth re-inserts live entries correctly).
+    #[test]
+    fn hash_table_grows_across_rows() {
+        let n = 512;
+        // Row r of A selects B rows 0..=r, B row k holds one element, so
+        // row sizes ramp from 1 to n live entries.
+        let a = Csr::from_triplets(
+            n,
+            n,
+            (0..n)
+                .flat_map(|r| (0..=r).map(move |k| (r, k, 1.0)))
+                .collect::<Vec<_>>(),
+        );
+        let b = Csr::from_triplets(n, n, (0..n).map(|k| (k, k, 1.0 + k as f64)).collect::<Vec<_>>());
+        let (oracle, _) = gustavson(&a, &b);
+        let (c, t) = multiply(&a, &b, AccumMode::Hash);
+        assert_bitwise(&c, &oracle, "growth ramp");
+        assert!(
+            t.accum.growths >= 4,
+            "ramp to {n} live entries must regrow repeatedly: {} growths",
+            t.accum.growths
+        );
+        assert_eq!(t.accum.hash_rows, n as u64);
+    }
+
+    /// §7.2 regression: Fibonacci hashing keeps the probe walk short on
+    /// power-law (R-MAT) inputs — the pure low-bit mask hash this lane
+    /// replaced degenerated to hundreds of probes per upsert there.
+    #[test]
+    fn power_law_probe_counts_stay_bounded() {
+        let a = rmat(&RmatParams::new(9, 6_000, 11));
+        let b = rmat(&RmatParams::new(9, 6_000, 12));
+        let (_, t) = multiply(&a, &b, AccumMode::Hash);
+        let mean = t.accum.table.mean_probes();
+        assert!(
+            mean < 2.5,
+            "power-law mean probes/upsert {mean:.2} — hotspot pathology is back"
+        );
+        assert!(t.accum.table.upserts > 0);
+    }
+
+    /// Forced-hash never materializes the dense lane: footprint stays
+    /// O(live row nnz) on a wide hypersparse input. The bound below is
+    /// guaranteed: live entries per row never exceed nnz(B), so the
+    /// table caps far under the 9-bytes-per-column dense floor.
+    #[test]
+    fn hash_lane_memory_is_o_live_row_nnz() {
+        let n = 1 << 17;
+        let a = rmat(&RmatParams::new(17, 4_000, 21));
+        let b = rmat(&RmatParams::new(17, 4_000, 22));
+        assert_eq!(b.cols, n);
+        let (_, t) = multiply(&a, &b, AccumMode::Hash);
+        let dense_bytes = (n * 9) as u64; // acc (8 B) + present (1 B) per col
+        assert!(
+            t.accum.peak_bytes * 2 < dense_bytes,
+            "hash lane used {} B, dense lane would pin {} B",
+            t.accum.peak_bytes,
+            dense_bytes
+        );
+    }
+
+    /// Symbolic counts agree between lanes and with the serial oracle.
+    #[test]
+    fn symbolic_counts_lane_independent() {
+        let a = rmat(&RmatParams::new(7, 800, 31));
+        let b = rmat(&RmatParams::new(7, 800, 32));
+        let oracle = symbolic_row_nnz(&a, &b);
+        let flops = flops_per_row(&a, &b);
+        for mode in [AccumMode::Adaptive, AccumMode::Dense, AccumMode::Hash] {
+            let mut racc = RowAccumulator::with_mode(b.cols, mode);
+            for i in 0..a.rows {
+                assert_eq!(
+                    racc.symbolic_row(&a, &b, i, flops[i]),
+                    oracle[i],
+                    "row {i} under {}",
+                    mode.name()
+                );
+            }
+        }
+    }
+
+    /// Map-oracle property test of the hash lane across random rows.
+    #[test]
+    fn prop_hash_lane_matches_map_oracle() {
+        use crate::util::quick::forall;
+        forall(32, |g| {
+            let cols = 1usize << g.usize_in(4, 12);
+            let mut racc = RowAccumulator::with_mode(cols, AccumMode::Hash);
+            for _ in 0..g.usize_in(1, 4) {
+                // one synthetic row of random (col, val) products
+                let mut oracle = std::collections::HashMap::new();
+                let n = g.usize_in(0, 200);
+                let products: Vec<(Index, Value)> = (0..n)
+                    .map(|_| (g.usize_in(0, cols - 1) as Index, g.f64_in(-4.0, 4.0)))
+                    .collect();
+                for &(j, v) in &products {
+                    racc.hash_upsert(j, v);
+                    *oracle.entry(j).or_insert(0.0) += v;
+                }
+                // drain via the emit path of a fake empty row is not
+                // possible; drain manually in sorted order.
+                let mut drained: Vec<(Index, Value)> = racc
+                    .used_slots
+                    .iter()
+                    .map(|&s| (racc.tags[s as usize], racc.vals[s as usize]))
+                    .collect();
+                racc.clear_hash_row();
+                drained.sort_unstable_by_key(|&(j, _)| j);
+                let mut expect: Vec<(Index, f64)> = oracle.into_iter().collect();
+                expect.sort_unstable_by_key(|&(j, _)| j);
+                assert_eq!(drained.len(), expect.len());
+                for ((j1, v1), (j2, v2)) in drained.iter().zip(&expect) {
+                    assert_eq!(j1, j2);
+                    assert!((v1 - v2).abs() < 1e-9);
+                }
+            }
+        });
+    }
+}

@@ -1,8 +1,15 @@
-//! Gustavson's row-wise SpGEMM (1978) with a dense accumulator — the
-//! correctness oracle — plus the two-step symbolic pass the thesis uses for
-//! output-size estimation and window planning (§5.1.1, "Gustafson's
-//! algorithm", i.e. Gustavson's two fast algorithms paper).
+//! Gustavson's row-wise SpGEMM (1978) — the correctness oracle — plus the
+//! two-step symbolic pass the thesis uses for output-size estimation and
+//! window planning (§5.1.1, "Gustafson's algorithm", i.e. Gustavson's two
+//! fast algorithms paper).
+//!
+//! The per-row stamp/accumulate loops live in one place —
+//! [`super::RowAccumulator`] — shared with the parallel backends and
+//! `rowwise_hash`. The oracle runs the accumulator in forced-dense mode
+//! (today's `acc`/`present`/`touched` semantics, verbatim), so the
+//! adaptive and hash paths can be asserted bitwise against it.
 
+use super::accumulator::{AccumMode, RowAccumulator};
 use super::Traffic;
 use crate::formats::{Csr, Index, Value};
 
@@ -27,85 +34,12 @@ pub fn total_flops(a: &Csr, b: &Csr) -> u64 {
     flops_per_row(a, b).iter().sum()
 }
 
-/// Distinct-column count of output row `i` — one step of the symbolic
-/// phase, using a caller-owned visited-stamp array (`stamp[j] == tag`
-/// marks column `j` as seen for this row). `tag` must differ between
-/// consecutive rows served by the same stamp array; using the global row
-/// index keeps tags unique even when the array is shared across a whole
-/// pass. This is the one stamp loop shared by the serial
-/// [`symbolic_row_nnz`] and the parallel backend's symbolic phase, so
-/// their counts agree structurally rather than by parallel-test luck.
-#[inline]
-pub(crate) fn symbolic_row(a: &Csr, b: &Csr, i: usize, tag: u32, stamp: &mut [u32]) -> usize {
-    let (acols, _) = a.row(i);
-    let mut count = 0usize;
-    for &k in acols {
-        let (bcols, _) = b.row(k as usize);
-        for &j in bcols {
-            if stamp[j as usize] != tag {
-                stamp[j as usize] = tag;
-                count += 1;
-            }
-        }
-    }
-    count
-}
-
-/// Exact nnz of each output row (symbolic phase) — O(flops) with a
-/// visited-stamp array, no allocation per row.
+/// Exact nnz of each output row (symbolic phase) — O(flops) with the
+/// shared accumulator's dense stamp lane, no allocation per row.
 pub fn symbolic_row_nnz(a: &Csr, b: &Csr) -> Vec<usize> {
     assert_eq!(a.cols, b.rows, "dimension mismatch");
-    let mut stamp = vec![u32::MAX; b.cols];
-    let mut out = vec![0usize; a.rows];
-    for i in 0..a.rows {
-        out[i] = symbolic_row(a, b, i, i as u32, &mut stamp);
-    }
-    out
-}
-
-/// Accumulate output row `i` into the caller's dense accumulator, then
-/// drain it (sorted by column) into the row's slices of the output CSR —
-/// the one Gustavson inner loop shared by the serial oracle and the
-/// parallel backend, which makes their bitwise output equality structural
-/// (same code, same per-row accumulation order). `acc` must be all-zero
-/// and `present` all-false on entry; both are restored before returning.
-/// `cols_out`/`data_out` must be exactly this row's output slices.
-#[inline]
-pub(crate) fn numeric_row(
-    a: &Csr,
-    b: &Csr,
-    i: usize,
-    acc: &mut [Value],
-    present: &mut [bool],
-    touched: &mut Vec<Index>,
-    cols_out: &mut [Index],
-    data_out: &mut [Value],
-    t: &mut Traffic,
-) {
-    let (acols, avals) = a.row(i);
-    for (&k, &av) in acols.iter().zip(avals) {
-        t.a_reads += 1;
-        let (bcols, bvals) = b.row(k as usize);
-        t.b_reads += bcols.len() as u64;
-        for (&j, &bv) in bcols.iter().zip(bvals) {
-            let ju = j as usize;
-            if !present[ju] {
-                present[ju] = true;
-                touched.push(j);
-            }
-            acc[ju] += av * bv;
-            t.flops += 1;
-        }
-    }
-    touched.sort_unstable();
-    for (slot, &j) in touched.iter().enumerate() {
-        cols_out[slot] = j;
-        data_out[slot] = acc[j as usize];
-        acc[j as usize] = 0.0;
-        present[j as usize] = false;
-        t.c_writes += 1;
-    }
-    touched.clear();
+    let mut racc = RowAccumulator::with_mode(b.cols, AccumMode::Dense);
+    (0..a.rows).map(|i| racc.symbolic_row(a, b, i, 0)).collect()
 }
 
 /// Gustavson numeric SpGEMM with a dense accumulator per row. Returns the
@@ -126,25 +60,14 @@ pub fn gustavson(a: &Csr, b: &Csr) -> (Csr, Traffic) {
     let mut col_idx = vec![0 as Index; nnz_total];
     let mut data = vec![0.0 as Value; nnz_total];
 
-    // Numeric with dense accumulator + touched-list (the shared
-    // [`numeric_row`] loop — also the parallel backend's inner loop).
-    let mut acc = vec![0.0 as Value; b.cols];
-    let mut touched: Vec<Index> = Vec::with_capacity(256);
-    let mut present = vec![false; b.cols];
+    // Numeric with the shared accumulator's dense lane (also the parallel
+    // backends' inner loop, there under the adaptive policy).
+    let mut racc = RowAccumulator::with_mode(b.cols, AccumMode::Dense);
     for i in 0..a.rows {
         let (lo, hi) = (row_ptr[i], row_ptr[i + 1]);
-        numeric_row(
-            a,
-            b,
-            i,
-            &mut acc,
-            &mut present,
-            &mut touched,
-            &mut col_idx[lo..hi],
-            &mut data[lo..hi],
-            &mut t,
-        );
+        racc.numeric_row(a, b, i, 0, &mut col_idx[lo..hi], &mut data[lo..hi], &mut t);
     }
+    t.accum = racc.finish();
 
     let c = Csr {
         rows: a.rows,
@@ -175,6 +98,9 @@ mod tests {
         assert!(c.to_dense().approx_same(&dense_oracle(&a, &b)));
         assert_eq!(t.flops, 3); // 2 from row0 (b rows 0 and 2), 1 from row2
         assert_eq!(t.c_writes, c.nnz() as u64);
+        // the oracle runs every row through the dense lane
+        assert_eq!(t.accum.dense_rows, a.rows as u64);
+        assert_eq!(t.accum.hash_rows, 0);
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //!    size) regenerated from measured counters;
 //! 3. fast CPU baselines for the benchmark harness.
 
+mod accumulator;
 pub mod graph;
 mod gustavson;
 mod inner;
@@ -16,13 +17,14 @@ mod par;
 mod rowwise;
 pub mod semiring;
 
+pub use accumulator::{AccumMode, AccumPolicy, AccumStats, RowAccumulator};
 pub use gustavson::{flops_per_row, gustavson, symbolic_row_nnz, total_flops};
 pub use inner::inner_product;
 pub use intensity::{arithmetic_intensity, compression_factor, IntensityReport};
 pub use outer::outer_product;
 pub use par::{
-    par_gustavson, par_gustavson_spawning, par_gustavson_with_plan, symbolic_plan, SymbolicPlan,
-    WorkerPool,
+    par_gustavson, par_gustavson_accum, par_gustavson_spawning, par_gustavson_with_plan,
+    par_gustavson_with_plan_accum, symbolic_plan, SymbolicPlan, WorkerPool,
 };
 pub use rowwise::{rowwise_hash, rowwise_heap};
 pub use semiring::{ewise_add, spgemm_semiring, Arithmetic, Boolean, MaxTimes, MinPlus, Semiring};
@@ -47,9 +49,26 @@ pub struct Traffic {
     pub intermediate_peak: u64,
     /// Fused multiply-adds performed.
     pub flops: u64,
+    /// Accumulator-policy statistics of the numeric pass (dense vs hash
+    /// rows, probe counts, peak per-worker accumulator bytes) — zero for
+    /// dataflows that do not use the [`RowAccumulator`].
+    pub accum: AccumStats,
 }
 
 impl Traffic {
+    /// Fold another worker's traffic share in: counters add, peaks take
+    /// the max.
+    pub fn merge(&mut self, o: &Traffic) {
+        self.a_reads += o.a_reads;
+        self.b_reads += o.b_reads;
+        self.c_writes += o.c_writes;
+        self.intermediate_writes += o.intermediate_writes;
+        self.intermediate_reads += o.intermediate_reads;
+        self.intermediate_peak = self.intermediate_peak.max(o.intermediate_peak);
+        self.flops += o.flops;
+        self.accum.merge(&o.accum);
+    }
+
     /// Input reuse factor: useful input elements / total input reads.
     /// 1.0 = each input element read exactly once (perfect reuse).
     pub fn input_reuse(&self, a_nnz: u64, b_nnz: u64) -> f64 {
@@ -80,11 +99,12 @@ pub enum Dataflow {
     RowWiseHeap,
     RowWiseHash,
     /// Row-partitioned parallel Gustavson with this many threads, executed
-    /// on the persistent [`WorkerPool`].
-    ParGustavson { threads: usize },
+    /// on the persistent [`WorkerPool`], with the given per-row
+    /// accumulator mode (`AccumMode::Adaptive` is the serving default).
+    ParGustavson { threads: usize, accum: AccumMode },
     /// [`ParGustavson`](Dataflow::ParGustavson) with spawn-per-call
     /// execution instead of the pool — the benchmark baseline for the
-    /// pooled-vs-spawn serving comparison.
+    /// pooled-vs-spawn serving comparison. Always adaptive.
     ParGustavsonSpawn { threads: usize },
 }
 
@@ -117,7 +137,9 @@ impl Dataflow {
             Dataflow::Outer => outer_product(a, b),
             Dataflow::RowWiseHeap => rowwise_heap(a, b),
             Dataflow::RowWiseHash => rowwise_hash(a, b),
-            Dataflow::ParGustavson { threads } => par_gustavson(a, b, *threads),
+            Dataflow::ParGustavson { threads, accum } => {
+                par_gustavson_accum(a, b, *threads, *accum)
+            }
             Dataflow::ParGustavsonSpawn { threads } => par_gustavson_spawning(a, b, *threads),
         }
     }
@@ -153,13 +175,18 @@ mod tests {
         let a = rmat(&RmatParams::new(7, 800, 3));
         let b = rmat(&RmatParams::new(7, 800, 4));
         let (oracle, serial_t) = gustavson(&a, &b);
-        let df = Dataflow::ParGustavson { threads: 4 };
+        let df = Dataflow::ParGustavson {
+            threads: 4,
+            accum: AccumMode::Adaptive,
+        };
         let (c, t) = df.multiply(&a, &b);
         assert!(c.approx_same(&oracle), "{} disagrees with oracle", df.name());
         assert_eq!(t.flops, serial_t.flops);
         assert_eq!(t.c_writes, oracle.nnz() as u64);
         assert_eq!(t.a_reads, serial_t.a_reads);
         assert_eq!(t.b_reads, serial_t.b_reads);
+        // the adaptive policy routed every row through exactly one lane
+        assert_eq!(t.accum.dense_rows + t.accum.hash_rows, a.rows as u64);
     }
 
     /// Table 1.2 qualitative shape: outer product reads inputs once but has

@@ -9,8 +9,9 @@
 //!    (`flops_of_row`, chunked over the pool) drive the partition.
 //! 2. **Symbolic pass** (§5.1.1 two-step, parallel): exact per-row output
 //!    sizes give every row a disjoint, pre-allocated slice of the output
-//!    CSR — threads never contend. The per-row stamp loop is the shared
-//!    `symbolic_row` used by the serial oracle too.
+//!    CSR — threads never contend. The per-row distinct-count step is the
+//!    shared [`super::RowAccumulator::symbolic_row`] the serial oracle
+//!    uses too.
 //! 3. **Prefix sum** (parallel two-pass scan): per-chunk sums, a serial
 //!    scan over the handful of chunk offsets, then parallel local scans —
 //!    exact, so the result is identical to the serial scan.
@@ -19,10 +20,13 @@
 //!    coordinator's longest-processing-time scheduler
 //!    ([`crate::coordinator::schedule_windows`]) — equal-row splits
 //!    collapse on power-law inputs where a few hub rows carry most FLOPs.
-//! 5. **Numeric pass** (parallel): per-thread dense accumulators write
-//!    their windows' slices via the shared `numeric_row` loop; output is
-//!    bitwise identical to the serial [`gustavson`] oracle (same code,
-//!    same per-row accumulation order).
+//! 5. **Numeric pass** (parallel): per-thread hybrid accumulators
+//!    ([`super::RowAccumulator`] — hash lane for light rows, dense lane
+//!    for heavy rows, chosen per row from the FLOPs upper bound) write
+//!    their windows' slices; output is bitwise identical to the serial
+//!    [`gustavson`] oracle (same per-row, per-column accumulation order
+//!    in every lane). On hypersparse inputs a worker's scratch is O(live
+//!    row nnz), not O(b.cols).
 //!
 //! Steps 1–3 are captured in a reusable [`SymbolicPlan`] so the serving
 //! coordinator can amortize one symbolic pass across a batch of jobs that
@@ -36,7 +40,8 @@
 //! [`par_gustavson_spawning`] keeps the old spawn-per-call execution as a
 //! benchmark baseline.
 
-use super::gustavson::{flops_of_row, gustavson, numeric_row, symbolic_row};
+use super::accumulator::{AccumMode, AccumPolicy, RowAccumulator};
+use super::gustavson::{flops_of_row, gustavson};
 use super::Traffic;
 use crate::coordinator::{schedule_windows, SchedPolicy};
 use crate::formats::{Csr, Index, Value};
@@ -308,14 +313,16 @@ impl SymbolicPlan {
 
 /// Compute the full symbolic plan of C = A·B (FLOP counts, exact per-row
 /// output sizes, row pointers) with up to `threads`-way parallelism on
-/// the persistent pool. The result is independent of `threads` — only
-/// the chunking varies — so plans are safely shareable across jobs that
-/// request different thread counts.
+/// the persistent pool. The result is independent of `threads` *and* of
+/// the accumulator mode — only the chunking and scratch shape vary — so
+/// plans are safely shareable across jobs that request different thread
+/// counts or accumulator modes.
 pub fn symbolic_plan(a: &Csr, b: &Csr, threads: usize) -> SymbolicPlan {
-    symbolic_plan_exec(a, b, threads.max(1), Exec::Pool)
+    symbolic_plan_exec(a, b, threads.max(1), Exec::Pool, AccumMode::Adaptive)
 }
 
-fn symbolic_plan_exec(a: &Csr, b: &Csr, threads: usize, exec: Exec) -> SymbolicPlan {
+fn symbolic_plan_exec(a: &Csr, b: &Csr, threads: usize, exec: Exec, mode: AccumMode) -> SymbolicPlan {
+    let policy = AccumPolicy::new(mode, b.cols);
     assert_eq!(a.cols, b.rows, "dimension mismatch");
     let rows = a.rows;
 
@@ -344,7 +351,10 @@ fn symbolic_plan_exec(a: &Csr, b: &Csr, threads: usize, exec: Exec) -> SymbolicP
 
     // ---- Symbolic pass: exact nnz of every output row. Chunked by FMA
     // volume (the same windows the numeric pass will use) so a hub row
-    // does not serialize one stamp array.
+    // does not serialize one accumulator. Each worker's accumulator picks
+    // the stamp-array or hash lane per row from the FLOPs bound — under
+    // the adaptive policy a hash-only chunk never allocates O(b.cols)
+    // scratch.
     let windows = partition_rows(&row_flops, threads);
     let assignment = schedule_windows(&windows, threads, SchedPolicy::Lpt);
     let mut row_nnz = vec![0usize; rows];
@@ -355,17 +365,17 @@ fn symbolic_plan_exec(a: &Csr, b: &Csr, threads: usize, exec: Exec) -> SymbolicP
             work[assignment.window_to_block[wi]].push((wi, sl));
         }
         let windows = &windows;
+        let row_flops = &row_flops;
         let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = work
             .into_iter()
             .filter(|chunk| !chunk.is_empty())
             .map(|chunk| {
                 Box::new(move || {
-                    // visited-stamp array, tagged by (globally unique) row
-                    let mut stamp = vec![u32::MAX; b.cols];
+                    let mut racc = RowAccumulator::new(b.cols, policy);
                     for (wi, out) in chunk {
                         let w = &windows[wi];
                         for (off, i) in (w.row_begin..w.row_end).enumerate() {
-                            out[off] = symbolic_row(a, b, i, i as u32, &mut stamp);
+                            out[off] = racc.symbolic_row(a, b, i, row_flops[i]);
                         }
                     }
                 }) as Box<dyn FnOnce() + Send + '_>
@@ -439,16 +449,31 @@ fn symbolic_plan_exec(a: &Csr, b: &Csr, threads: usize, exec: Exec) -> SymbolicP
 /// from the same A·B pair — checked by shape assertions and a debug
 /// validation of the result). Used by the coordinator to amortize one
 /// symbolic pass across a batch of jobs sharing registered operands;
-/// output is bitwise identical to [`gustavson`].
+/// output is bitwise identical to [`gustavson`]. Runs the adaptive
+/// accumulator policy; see [`par_gustavson_with_plan_accum`] to force a
+/// lane.
 pub fn par_gustavson_with_plan(
     a: &Csr,
     b: &Csr,
     threads: usize,
     plan: &SymbolicPlan,
 ) -> (Csr, Traffic) {
+    par_gustavson_with_plan_accum(a, b, threads, plan, AccumMode::Adaptive)
+}
+
+/// [`par_gustavson_with_plan`] with an explicit accumulator mode. Plans
+/// are mode-independent, so one cached plan serves adaptive, forced-dense
+/// and forced-hash jobs alike.
+pub fn par_gustavson_with_plan_accum(
+    a: &Csr,
+    b: &Csr,
+    threads: usize,
+    plan: &SymbolicPlan,
+    accum: AccumMode,
+) -> (Csr, Traffic) {
     assert_eq!(a.cols, b.rows, "dimension mismatch");
     assert_eq!(plan.row_ptr.len(), a.rows + 1, "plan is for a different A");
-    numeric_with_plan(a, b, threads.max(1), plan, Exec::Pool)
+    numeric_with_plan(a, b, threads.max(1), plan, Exec::Pool, accum)
 }
 
 fn numeric_with_plan(
@@ -457,7 +482,9 @@ fn numeric_with_plan(
     threads: usize,
     plan: &SymbolicPlan,
     exec: Exec,
+    mode: AccumMode,
 ) -> (Csr, Traffic) {
+    let policy = AccumPolicy::new(mode, b.cols);
     // Recomputed per call even with a cached plan: the partition is
     // O(rows) and LPT packs ~4×threads windows — noise next to the
     // O(flops) numeric pass, and it keeps plans thread-count independent.
@@ -480,6 +507,7 @@ fn numeric_with_plan(
         }
         let windows = &windows;
         let row_ptr = &row_ptr;
+        let row_flops = &plan.row_flops;
         let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = work
             .into_iter()
             .zip(traffics.iter_mut())
@@ -487,28 +515,29 @@ fn numeric_with_plan(
             .map(|(chunk, traffic)| {
                 Box::new(move || {
                     let mut t = Traffic::default();
-                    let mut acc = vec![0.0 as Value; b.cols];
-                    let mut present = vec![false; b.cols];
-                    let mut touched: Vec<Index> = Vec::with_capacity(256);
+                    // One accumulator per worker, reused across its rows:
+                    // dense scratch materializes only if a row crosses
+                    // the threshold, so hypersparse inputs keep worker
+                    // memory at O(live row nnz), not O(b.cols).
+                    let mut racc = RowAccumulator::new(b.cols, policy);
                     for (wi, cols_out, data_out) in chunk {
                         let w = &windows[wi];
                         let base = row_ptr[w.row_begin];
                         for i in w.row_begin..w.row_end {
                             let lo = row_ptr[i] - base;
                             let hi = row_ptr[i + 1] - base;
-                            numeric_row(
+                            racc.numeric_row(
                                 a,
                                 b,
                                 i,
-                                &mut acc,
-                                &mut present,
-                                &mut touched,
+                                row_flops[i],
                                 &mut cols_out[lo..hi],
                                 &mut data_out[lo..hi],
                                 &mut t,
                             );
                         }
                     }
+                    t.accum = racc.finish();
                     *traffic = t;
                 }) as Box<dyn FnOnce() + Send + '_>
             })
@@ -517,11 +546,8 @@ fn numeric_with_plan(
     }
 
     let mut t = Traffic::default();
-    for p in traffics {
-        t.a_reads += p.a_reads;
-        t.b_reads += p.b_reads;
-        t.c_writes += p.c_writes;
-        t.flops += p.flops;
+    for p in &traffics {
+        t.merge(p);
     }
 
     let c = Csr {
@@ -535,30 +561,45 @@ fn numeric_with_plan(
     (c, t)
 }
 
-fn par_gustavson_exec(a: &Csr, b: &Csr, threads: usize, exec: Exec) -> (Csr, Traffic) {
+fn par_gustavson_exec(a: &Csr, b: &Csr, threads: usize, exec: Exec, mode: AccumMode) -> (Csr, Traffic) {
     assert_eq!(a.cols, b.rows, "dimension mismatch");
     let threads = threads.max(1);
-    if threads == 1 || a.rows == 0 || b.cols == 0 {
+    if a.rows == 0 {
+        // No rows: nothing to partition and no lane ever fires, so the
+        // serial oracle's (mode-agnostic, all-zero) stats are correct.
         return gustavson(a, b);
     }
-    let plan = symbolic_plan_exec(a, b, threads, exec);
-    numeric_with_plan(a, b, threads, &plan, exec)
+    // b.cols == 0 flows through the normal path: every row is an empty
+    // product, and the requested lane is still the one reported in
+    // `Traffic::accum` (the oracle fallback would mislabel forced-hash
+    // rows as dense).
+    let plan = symbolic_plan_exec(a, b, threads, exec, mode);
+    numeric_with_plan(a, b, threads, &plan, exec, mode)
 }
 
 /// Parallel Gustavson SpGEMM over `threads` workers of the persistent
-/// process-wide [`WorkerPool`]. Returns the canonical (sorted, merged)
-/// CSR product — bitwise identical to [`gustavson`] — and the summed
-/// traffic profile.
+/// process-wide [`WorkerPool`], with the adaptive per-row accumulator
+/// policy (hash light rows, dense heavy rows). Returns the canonical
+/// (sorted, merged) CSR product — bitwise identical to [`gustavson`] —
+/// and the summed traffic profile.
 pub fn par_gustavson(a: &Csr, b: &Csr, threads: usize) -> (Csr, Traffic) {
-    par_gustavson_exec(a, b, threads, Exec::Pool)
+    par_gustavson_exec(a, b, threads, Exec::Pool, AccumMode::Adaptive)
+}
+
+/// [`par_gustavson`] with an explicit accumulator mode — forced dense
+/// (the pre-adaptive behaviour) and forced hash exist for benchmarks and
+/// the `serve --accum` flag; all three modes produce bitwise-identical
+/// output.
+pub fn par_gustavson_accum(a: &Csr, b: &Csr, threads: usize, accum: AccumMode) -> (Csr, Traffic) {
+    par_gustavson_exec(a, b, threads, Exec::Pool, accum)
 }
 
 /// [`par_gustavson`] with spawn-per-call execution (`std::thread::scope`)
 /// instead of the persistent pool — the PR-1 behaviour, kept as the
 /// benchmark baseline for the pooled-vs-spawn comparison in
-/// `benches/hot_paths.rs`.
+/// `benches/hot_paths.rs`. Adaptive accumulator policy.
 pub fn par_gustavson_spawning(a: &Csr, b: &Csr, threads: usize) -> (Csr, Traffic) {
-    par_gustavson_exec(a, b, threads, Exec::Spawn)
+    par_gustavson_exec(a, b, threads, Exec::Spawn, AccumMode::Adaptive)
 }
 
 #[cfg(test)]
@@ -659,6 +700,74 @@ mod tests {
             assert_eq!(c1.data, cp.data, "threads={threads}");
             assert_eq!(t1.flops, tp.flops, "threads={threads}");
         }
+    }
+
+    /// Adaptive, forced-dense, and forced-hash backends are bitwise equal
+    /// to the serial oracle on every generator — the tentpole acceptance
+    /// bar.
+    #[test]
+    fn accum_modes_bitwise_equal_oracle() {
+        use crate::gen::banded;
+        let inputs: Vec<(&str, Csr, Csr)> = vec![
+            (
+                "rmat",
+                rmat(&RmatParams::new(8, 2600, 41)),
+                rmat(&RmatParams::new(8, 2600, 42)),
+            ),
+            (
+                "erdos_renyi",
+                erdos_renyi(128, 1200, 43),
+                erdos_renyi(128, 1200, 44),
+            ),
+            ("banded", banded(96, 4, 45), banded(96, 3, 46)),
+        ];
+        for (name, a, b) in &inputs {
+            let (c1, t1) = gustavson(a, b);
+            for mode in [AccumMode::Adaptive, AccumMode::Dense, AccumMode::Hash] {
+                for threads in [1, 3, 4] {
+                    let (cp, tp) = par_gustavson_accum(a, b, threads, mode);
+                    let label = format!("{name}/{}/t{threads}", mode.name());
+                    assert_eq!(c1.row_ptr, cp.row_ptr, "{label}");
+                    assert_eq!(c1.col_idx, cp.col_idx, "{label}");
+                    assert_eq!(c1.data, cp.data, "{label}");
+                    assert_eq!(t1.flops, tp.flops, "{label}");
+                    assert_eq!(t1.c_writes, tp.c_writes, "{label}");
+                    assert_eq!(
+                        tp.accum.dense_rows + tp.accum.hash_rows,
+                        a.rows as u64,
+                        "{label}: numeric pass must route every row"
+                    );
+                }
+            }
+        }
+    }
+
+    /// The memory story: on a hypersparse wide input the adaptive policy
+    /// keeps per-worker accumulator bytes at O(live row nnz), while the
+    /// forced-dense baseline pins O(b.cols) per worker.
+    #[test]
+    fn adaptive_worker_memory_is_o_live_nnz_on_hypersparse() {
+        // Erdős–Rényi at this sparsity has no hub rows: every row's FLOPs
+        // bound sits orders of magnitude under the cols/16 threshold, so
+        // the adaptive policy hashes everything.
+        let a = erdos_renyi(1 << 15, 4_000, 51);
+        let b = erdos_renyi(1 << 15, 4_000, 52);
+        let cols = b.cols as u64;
+        let (ca, ta) = par_gustavson_accum(&a, &b, 4, AccumMode::Adaptive);
+        let (cd, td) = par_gustavson_accum(&a, &b, 4, AccumMode::Dense);
+        assert_eq!(ca.data, cd.data, "lanes must agree bitwise");
+        let dense_floor = cols * 9; // acc (8 B) + present (1 B) per column
+        assert!(
+            td.accum.peak_bytes >= dense_floor,
+            "dense lane must pin O(cols): {} < {dense_floor}",
+            td.accum.peak_bytes
+        );
+        assert!(
+            ta.accum.peak_bytes * 8 < dense_floor,
+            "adaptive peak {} B should be far under the dense floor {dense_floor} B",
+            ta.accum.peak_bytes
+        );
+        assert_eq!(ta.accum.dense_rows, 0, "no hypersparse row crosses cols/16");
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! baseline flavours: heap-merge (Nagasaka-style) and hashtable-merge
 //! (the algorithmic core of SMASH, minus the architecture).
 
+use super::accumulator::{AccumMode, RowAccumulator};
 use super::Traffic;
 use crate::formats::{Csr, Index, Value};
 use std::collections::BinaryHeap;
@@ -85,67 +86,28 @@ pub fn rowwise_heap(a: &Csr, b: &Csr) -> (Csr, Traffic) {
     (Csr::from_triplets(a.rows, b.cols, triplets), t)
 }
 
-/// Row-wise with a per-row hashtable accumulator (open addressing, linear
-/// probing) — the software analogue of the SMASH SPAD hashtable.
+/// Row-wise with a per-row hashtable accumulator — the software analogue
+/// of the SMASH SPAD hashtable, running the shared
+/// [`RowAccumulator`] in forced-hash mode.
+///
+/// This used to hand-roll its own table with a pure low-order-bit mask
+/// hash (`j & mask`) — exactly the §7.2 hotspot pathology
+/// `kernels::hashtable::hash_tag` documents: on power-law inputs a hub
+/// row's clustered columns collapse into one nearly-full run and the
+/// linear walk degenerates to hundreds of probes. The shared accumulator
+/// hashes with the Fibonacci multiply instead; the probe-count
+/// regression test below pins the fix.
 pub fn rowwise_hash(a: &Csr, b: &Csr) -> (Csr, Traffic) {
     assert_eq!(a.cols, b.rows, "dimension mismatch");
     let mut t = Traffic::default();
     let mut triplets: Vec<(usize, usize, Value)> = Vec::new();
-
-    const EMPTY: Index = Index::MAX;
-    // Table reused across rows; sized to the max row FLOPs upper bound.
-    let mut cap = 16usize;
-    let mut tags: Vec<Index> = vec![EMPTY; cap];
-    let mut vals: Vec<Value> = vec![0.0; cap];
-
+    let mut racc = RowAccumulator::with_mode(b.cols, AccumMode::Hash);
     for i in 0..a.rows {
-        let (acols, avals) = a.row(i);
-        if acols.is_empty() {
-            continue;
-        }
-        t.a_reads += acols.len() as u64;
-        let upper: usize = acols
-            .iter()
-            .map(|&k| b.row_nnz(k as usize))
-            .sum::<usize>()
-            .max(1);
-        let want = (upper * 2).next_power_of_two();
-        if want > cap {
-            cap = want;
-            tags = vec![EMPTY; cap];
-            vals = vec![0.0; cap];
-        }
-        let mask = cap - 1;
-        let mut used: Vec<usize> = Vec::with_capacity(upper.min(cap));
-        for (&k, &av) in acols.iter().zip(avals) {
-            let (bc, bv) = b.row(k as usize);
-            t.b_reads += bc.len() as u64;
-            for (&j, &bvv) in bc.iter().zip(bv) {
-                // low-order-bit hash (SMASH V2 choice, §5.2)
-                let mut slot = (j as usize) & mask;
-                loop {
-                    if tags[slot] == EMPTY {
-                        tags[slot] = j;
-                        vals[slot] = av * bvv;
-                        used.push(slot);
-                        break;
-                    } else if tags[slot] == j {
-                        vals[slot] += av * bvv;
-                        break;
-                    }
-                    slot = (slot + 1) & mask; // hashtable walk (Fig 5.2)
-                }
-                t.flops += 1;
-            }
-        }
-        t.intermediate_peak = t.intermediate_peak.max(used.len() as u64);
-        for &slot in &used {
-            triplets.push((i, tags[slot] as usize, vals[slot]));
-            t.c_writes += 1;
-            tags[slot] = EMPTY;
-            vals[slot] = 0.0;
-        }
+        racc.numeric_row_emit(a, b, i, 0, &mut t, |j, v| {
+            triplets.push((i, j as usize, v));
+        });
     }
+    t.accum = racc.finish();
     (Csr::from_triplets(a.rows, b.cols, triplets), t)
 }
 
@@ -183,6 +145,26 @@ mod tests {
         let (c, _) = rowwise_hash(&a, &a);
         let (o, _) = gustavson(&a, &a);
         assert!(c.approx_same(&o));
+    }
+
+    /// §7.2 regression for the old `j & mask` hash: on power-law R-MAT
+    /// inputs the mask hash collapsed hub columns into one run and walked
+    /// hundreds of probes per upsert; the shared Fibonacci-hashing lane
+    /// must stay near collision-free. (Load is capped at 1/2, so even a
+    /// pathological input cannot exceed ~2 expected probes.)
+    #[test]
+    fn power_law_probe_regression() {
+        let a = rmat(&RmatParams::new(9, 7_000, 17));
+        let b = rmat(&RmatParams::new(9, 7_000, 18));
+        let (c, t) = rowwise_hash(&a, &b);
+        let (o, _) = gustavson(&a, &b);
+        assert!(c.approx_same(&o));
+        assert_eq!(t.accum.dense_rows, 0, "forced-hash must never go dense");
+        let mean = t.accum.table.mean_probes();
+        assert!(
+            mean < 2.5,
+            "R-MAT mean probes/upsert {mean:.2}: low-bit-mask pathology is back"
+        );
     }
 
     #[test]
