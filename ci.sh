@@ -1,15 +1,15 @@
 #!/usr/bin/env bash
-# Minimal CI for the SMASH reproduction: format check + build + tier-1
-# tests + warning-clean rustdoc + example smoke test.
+# Minimal CI for the SMASH reproduction: format gate + build + tier-1
+# tests + warning-clean rustdoc + example/perf smoke tests.
 # Usage: ./ci.sh        (from anywhere inside the repo)
 set -euo pipefail
 cd "$(dirname "$0")"
 
-echo "== fmt check (advisory, matches .github/workflows/ci.yml) =="
+echo "== fmt check (enforcing, matches .github/workflows/ci.yml) =="
 if command -v rustfmt >/dev/null 2>&1; then
-    cargo fmt --all -- --check || echo "fmt drift detected (advisory only)"
+    cargo fmt --all -- --check
 else
-    echo "rustfmt not installed; skipping format check"
+    echo "rustfmt not installed; skipping format check (CI enforces it)"
 fi
 
 echo "== build (release) =="
@@ -32,6 +32,23 @@ echo "== rustdoc (deny warnings) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
 echo "== example smoke test: serve_spgemm =="
-cargo run --release --example serve_spgemm >/dev/null
+# Assert on the output markers that prove the serving pipeline actually
+# exercised its machinery (registration + batched plan reuse + auto
+# policy resolution), instead of discarding stdout and only checking the
+# exit code.
+serve_out=$(cargo run --release --example serve_spgemm)
+echo "$serve_out" | grep -q "registered resident pair" \
+    || { echo "FAIL: registration marker missing from serve_spgemm output"; exit 1; }
+echo "$serve_out" | grep -q "cache hits" \
+    || { echo "FAIL: plan-cache hit marker missing from serve_spgemm output"; exit 1; }
+echo "$serve_out" | grep -q "auto accumulator job: resolved policy" \
+    || { echo "FAIL: auto-policy marker missing from serve_spgemm output"; exit 1; }
+
+echo "== perf smoke sweep: smash tune --smoke (accumulator threshold gate) =="
+# Tiny fixed-seed sweep; asserts bitwise oracle equality + stat sanity at
+# every swept threshold and exits nonzero on any violation. The JSON
+# report is the machine-readable artifact CI uploads.
+cargo run --release -- tune --smoke --out BENCH_4.json
+test -s BENCH_4.json || { echo "FAIL: tune report BENCH_4.json missing/empty"; exit 1; }
 
 echo "CI green ✓"

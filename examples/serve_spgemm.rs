@@ -12,7 +12,7 @@ use smash::config::{KernelConfig, SimConfig};
 use smash::coordinator::{schedule_windows, Coordinator, Job, SchedPolicy, ServerConfig};
 use smash::gen::{rmat, RmatParams};
 use smash::kernels::plan_windows;
-use smash::spgemm::{AccumMode, AccumStats, Dataflow, WorkerPool};
+use smash::spgemm::{AccumMode, AccumSpec, AccumStats, Dataflow, WorkerPool};
 use std::time::Instant;
 
 fn main() {
@@ -77,7 +77,7 @@ fn main() {
             b: id_b.into(),
             dataflow: Dataflow::ParGustavson {
                 threads: 4,
-                accum: AccumMode::Adaptive,
+                accum: AccumMode::Adaptive.into(),
             },
         });
         submitted += 1;
@@ -142,6 +142,27 @@ fn main() {
     for (w, n) in workers {
         println!("  worker {w}: {n} jobs");
     }
+
+    // One more job with `--accum auto` semantics: the coordinator resolves
+    // the per-matrix heuristic threshold from the pair's (already cached)
+    // symbolic FLOPs distribution and records the pick on the response.
+    coord.submit(Job::NativeSpgemm {
+        a: id_a.into(),
+        b: id_b.into(),
+        dataflow: Dataflow::ParGustavson {
+            threads: 4,
+            accum: AccumSpec::Auto,
+        },
+    });
+    let auto_resp = coord.collect_one().expect("auto job outstanding");
+    println!(
+        "auto accumulator job: resolved policy {}, symbolic plan reused: {}",
+        auto_resp
+            .accum_policy
+            .expect("native par-Gustavson jobs record their policy")
+            .describe(),
+        auto_resp.symbolic_reused == Some(true)
+    );
     coord.shutdown();
 
     // ---- Part 3: registry lifecycle under a byte budget ----
@@ -166,7 +187,7 @@ fn main() {
         b: id0.into(),
         dataflow: Dataflow::ParGustavson {
             threads: 2,
-            accum: AccumMode::Adaptive,
+            accum: AccumMode::Adaptive.into(),
         },
     });
     // ...then a third registration pushes past the budget. G0 was touched

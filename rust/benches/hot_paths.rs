@@ -14,8 +14,8 @@ use smash::kernels::{
     insertion_sort_cost, insertion_sort_cost_quadratic, run_smash, TagTable,
 };
 use smash::spgemm::{
-    gustavson, par_gustavson, par_gustavson_accum, par_gustavson_spawning,
-    par_gustavson_with_plan, rowwise_hash, symbolic_plan, AccumMode, Dataflow,
+    gustavson, par_gustavson, par_gustavson_accum, par_gustavson_spawning, par_gustavson_spec,
+    par_gustavson_with_plan, rowwise_hash, symbolic_plan, AccumMode, AccumSpec, Dataflow,
 };
 use smash::util::prng::Xoshiro256;
 use std::sync::Arc;
@@ -136,6 +136,17 @@ fn main() {
                 par_gustavson_accum(ai, bi, 4, mode)
             });
         }
+        // The per-matrix heuristic threshold (`--accum auto`, the tune
+        // subsystem's pick) — bitwise-checked like the fixed modes.
+        let (c_auto, _, policy) = par_gustavson_spec(ai, bi, 4, AccumSpec::Auto);
+        assert_eq!(
+            oracle.data, c_auto.data,
+            "{name}/auto ({}): must match the oracle bitwise",
+            policy.describe()
+        );
+        h.run(&format!("par_gustavson_t4_auto_{name}"), || {
+            par_gustavson_spec(ai, bi, 4, AccumSpec::Auto)
+        });
     }
 
     // Batched vs independent serving: a 16-job burst against one
@@ -158,7 +169,7 @@ fn main() {
                 b: id_b.into(),
                 dataflow: Dataflow::ParGustavson {
                     threads: 2,
-                    accum: AccumMode::Adaptive,
+                    accum: AccumSpec::default(),
                 },
             });
         }

@@ -5,7 +5,7 @@
 
 use smash::bench::{self, Bench};
 use smash::gen::{rmat, RmatParams};
-use smash::spgemm::{AccumMode, Dataflow};
+use smash::spgemm::{AccumSpec, Dataflow};
 
 fn main() {
     println!("# Table 1.1 / Table 1.2\n");
@@ -24,7 +24,7 @@ fn main() {
     for threads in [2, 4, 8] {
         let df = Dataflow::ParGustavson {
             threads,
-            accum: AccumMode::Adaptive,
+            accum: AccumSpec::default(),
         };
         bench_h.run(&format!("{} (t={threads})", df.name()), || {
             df.multiply(&a, &b)

@@ -309,7 +309,12 @@ mod tests {
     fn eval_tables_from_reports() {
         let (a, b) = small_inputs();
         let reports = run_all_versions(&a, &b, &SimConfig::test_tiny());
-        for t in [table_6_4(&reports), table_6_5(&reports), table_6_6(&reports), table_6_7(&reports)] {
+        for t in [
+            table_6_4(&reports),
+            table_6_5(&reports),
+            table_6_6(&reports),
+            table_6_7(&reports),
+        ] {
             assert_eq!(t.rows.len(), 3);
             assert!(!t.render().is_empty());
         }

@@ -33,6 +33,9 @@ pub struct Bench {
     measure_iters: usize,
     /// Upper wall-clock bound; measurement stops early past this.
     max_total: Duration,
+    /// Suppress the per-benchmark console line (library callers like the
+    /// tune sweep collect `BenchResult`s instead of printing).
+    quiet: bool,
     results: Vec<BenchResult>,
 }
 
@@ -50,6 +53,7 @@ impl Bench {
             warmup_iters: if fast { 1 } else { 2 },
             measure_iters: if fast { 3 } else { 10 },
             max_total: Duration::from_secs(if fast { 10 } else { 60 }),
+            quiet: false,
             results: Vec::new(),
         }
     }
@@ -57,6 +61,12 @@ impl Bench {
     pub fn with_iters(mut self, warmup: usize, measure: usize) -> Self {
         self.warmup_iters = warmup;
         self.measure_iters = measure.max(1);
+        self
+    }
+
+    /// Suppress per-benchmark console output (results are still recorded).
+    pub fn silent(mut self) -> Self {
+        self.quiet = true;
         self
     }
 
@@ -99,7 +109,9 @@ impl Bench {
             min: samples[0],
             max: samples[n - 1],
         };
-        println!("{}", result.report_line());
+        if !self.quiet {
+            println!("{}", result.report_line());
+        }
         self.results.push(result);
         self.results.last().unwrap()
     }

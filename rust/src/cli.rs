@@ -17,7 +17,7 @@ use crate::formats::mm;
 use crate::gen::{rmat, RmatParams};
 use crate::kernels::{run_all_versions, run_smash};
 use crate::report::bar_chart;
-use crate::spgemm::{AccumMode, Dataflow};
+use crate::spgemm::{AccumMode, AccumSpec, Dataflow};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 
@@ -71,7 +71,7 @@ impl Args {
 pub const USAGE: &str = "\
 smash — SMASH SpGEMM reproduction (PIUMA simulator + JAX/Pallas AOT runtime)
 
-USAGE: smash <tables|figures|run|gcn|gen|serve|help> [flags]
+USAGE: smash <tables|figures|run|gcn|gen|serve|tune|help> [flags]
 
   tables  [--id 1.1|1.2|6.1|6.2|6.4|6.5|6.6|6.7] [--scale small|full|full-mild] [--seed N]
   figures [--id 1.1|6.1|6.3|6.4] [--scale small|full|full-mild]
@@ -79,7 +79,8 @@ USAGE: smash <tables|figures|run|gcn|gen|serve|help> [flags]
   gcn     [--seed N]             (requires `make artifacts`)
   gen     --out graph.mtx [--log2n 10] [--edges 10000] [--seed N]
   serve   [--jobs 8] [--workers 4] [--threads 4] [--log2n 10] [--edges 20000] [--smash]
-          [--no-batch] [--spawn] [--max-resident-mb N] [--accum adaptive|dense|hash]
+          [--no-batch] [--spawn] [--max-resident-mb N]
+          [--accum adaptive|dense|hash|auto] [--accum-threshold N]
           — register one resident matrix pair, serve a burst of zero-copy
           requests against it (native parallel Gustavson on the persistent
           worker pool, or --smash sim). Jobs sharing the registered pair
@@ -88,7 +89,15 @@ USAGE: smash <tables|figures|run|gcn|gen|serve|help> [flags]
           bounds the registry + plan caches (LRU eviction past it, 0 =
           unlimited); --accum picks the per-row accumulator policy
           (adaptive = hash light rows / dense heavy rows, keyed off the
-          symbolic FLOPs bound)
+          symbolic FLOPs bound; auto = per-matrix heuristic threshold);
+          --accum-threshold overrides the adaptive switch point (FLOPs)
+  tune    [--smoke] [--out report.json] [--threads 4] [--iters N] [--seed N]
+          — sweep the adaptive accumulator threshold (powers-of-two
+          fractions of b.cols, forced dense/hash endpoints, and the auto
+          heuristic) over the generator suite, asserting bitwise oracle
+          equality at every point; prints a summary table and writes a
+          machine-readable JSON report with --out. --smoke runs the tiny
+          fixed-seed CI suite (the perf-regression gate)
   graph   [--dataset Cora] — BFS / APSP / closure / triangles via semiring SpGEMM
   die     [--blocks 4] [--policy lpt|rr] — multi-block scale-out run
   trace   [--out trace.bin] — record a V2 run's instruction trace, replay it,
@@ -106,6 +115,7 @@ pub fn dispatch(argv: Vec<String>) -> Result<()> {
         "gcn" => cmd_gcn(&args),
         "gen" => cmd_gen(&args),
         "serve" => cmd_serve(&args),
+        "tune" => cmd_tune(&args),
         "graph" => cmd_graph(&args),
         "die" => cmd_die(&args),
         "trace" => cmd_trace(&args),
@@ -343,19 +353,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let smash = args.get("smash").is_some();
     let spawn = args.get("spawn").is_some();
     let batch = args.get("no-batch").is_none();
-    let accum = match args.get("accum") {
-        None => AccumMode::Adaptive,
-        Some(s) => AccumMode::parse(s)
-            .with_context(|| format!("unknown --accum `{s}` (adaptive|dense|hash)"))?,
-    };
-    // --accum only steers the pooled native backend; reject combinations
-    // where the requested policy would be silently ignored. (`--spawn
-    // --accum adaptive` is allowed — adaptive is what the spawn baseline
-    // runs anyway.)
-    if spawn && accum != AccumMode::Adaptive {
-        bail!("--accum has no effect with --spawn (the spawn baseline is always adaptive)");
+    let accum = parse_accum_flags(args)?;
+    // --accum/--accum-threshold only steer the pooled native backend;
+    // reject combinations where the requested policy would be silently
+    // ignored. (`--spawn --accum adaptive` is allowed — adaptive at the
+    // default threshold is what the spawn baseline runs anyway.)
+    if spawn && accum != AccumSpec::default() {
+        bail!(
+            "--accum/--accum-threshold have no effect with --spawn \
+             (the spawn baseline is always default-adaptive)"
+        );
     }
-    if args.get("accum").is_some() && smash {
+    if (args.get("accum").is_some() || args.get("accum-threshold").is_some()) && smash {
         bail!("--accum applies to native jobs; --smash runs the simulated SPAD hashtable");
     }
     // 0 (the default) = unlimited; N bounds the registry to N MiB with
@@ -391,6 +400,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut total_nnz = 0usize;
     let mut reused = 0usize;
     let mut accum_stats = crate::spgemm::AccumStats::default();
+    let mut resolved_policy: Option<crate::spgemm::AccumPolicy> = None;
     let mut drain = |r: crate::coordinator::Response| {
         total_nnz += r.c.nnz();
         served += 1;
@@ -399,6 +409,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         if let Some(t) = &r.traffic {
             accum_stats.merge(&t.accum);
+        }
+        if r.accum_policy.is_some() {
+            resolved_policy = r.accum_policy;
         }
     };
     for _ in 0..jobs {
@@ -435,13 +448,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         } else if spawn {
             format!("native par-Gustavson({threads}, spawn-per-call)")
         } else {
-            format!("native par-Gustavson({threads}, pooled, {} accumulator)", accum.name())
+            format!(
+                "native par-Gustavson({threads}, pooled, {} accumulator)",
+                accum.describe()
+            )
         },
         crate::util::timer::fmt_duration(wall),
         crate::util::fmt_count(total_nnz as u64),
         served as f64 / wall.as_secs_f64()
     );
     if !smash && accum_stats.dense_rows + accum_stats.hash_rows > 0 {
+        if let Some(p) = resolved_policy {
+            // The concrete policy each job's numeric pass ran with — under
+            // `--accum auto` this is the per-matrix heuristic pick.
+            println!("accumulator policy resolved per job: {}", p.describe());
+        }
         println!(
             "accumulator policy: {} dense rows, {} hash rows per burst; {:.2} probes/upsert, \
              {:.2}% collisions, peak worker accumulator {} (dense lane would pin {})",
@@ -476,6 +497,54 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
     coord.shutdown();
+    Ok(())
+}
+
+/// Resolve `--accum` / `--accum-threshold` into an [`AccumSpec`].
+/// `--accum-threshold N` implies (and only combines with) the adaptive
+/// mode; `--accum auto` defers the threshold to the per-matrix heuristic.
+fn parse_accum_flags(args: &Args) -> Result<AccumSpec> {
+    let spec = match args.get("accum") {
+        None => AccumSpec::default(),
+        Some(s) => AccumSpec::parse(s)
+            .with_context(|| format!("unknown --accum `{s}` (adaptive|dense|hash|auto)"))?,
+    };
+    match args.get("accum-threshold") {
+        None => Ok(spec),
+        Some(t) => {
+            let t: u64 = t
+                .parse()
+                .with_context(|| format!("bad --accum-threshold value `{t}`"))?;
+            match spec {
+                AccumSpec::Fixed(AccumMode::Adaptive) => Ok(AccumSpec::AdaptiveAt(t)),
+                other => bail!(
+                    "--accum-threshold only combines with --accum adaptive \
+                     (got --accum {})",
+                    other.describe()
+                ),
+            }
+        }
+    }
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    let smoke = args.get("smoke").is_some();
+    let opts = crate::tune::TuneOptions {
+        smoke,
+        threads: args.get_u64("threads", 4)? as usize,
+        iters: args.get_u64("iters", if smoke { 3 } else { 5 })? as usize,
+        seed: args.get_u64("seed", 7)?,
+        quiet: false,
+    };
+    let report = crate::tune::run_sweep(&opts)?;
+    println!("{}", report.render_table().render());
+    for line in report.summary_lines() {
+        println!("{line}");
+    }
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, report.to_json().to_string_pretty())?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 
@@ -631,6 +700,36 @@ mod tests {
         assert_eq!(a.get("all"), Some("true"));
         assert_eq!(a.get_u64("seed", 0).unwrap(), 9);
         assert_eq!(a.get_u64("missing", 42).unwrap(), 42);
+    }
+
+    #[test]
+    fn accum_flag_parsing() {
+        let argv = |s: &[&str]| -> Args {
+            Args::parse(&s.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+        };
+        assert_eq!(parse_accum_flags(&argv(&[])).unwrap(), AccumSpec::default());
+        assert_eq!(
+            parse_accum_flags(&argv(&["--accum", "hash"])).unwrap(),
+            AccumSpec::Fixed(AccumMode::Hash)
+        );
+        assert_eq!(
+            parse_accum_flags(&argv(&["--accum", "auto"])).unwrap(),
+            AccumSpec::Auto
+        );
+        assert_eq!(
+            parse_accum_flags(&argv(&["--accum-threshold", "512"])).unwrap(),
+            AccumSpec::AdaptiveAt(512)
+        );
+        assert_eq!(
+            parse_accum_flags(&argv(&["--accum", "adaptive", "--accum-threshold", "64"])).unwrap(),
+            AccumSpec::AdaptiveAt(64)
+        );
+        assert!(parse_accum_flags(&argv(&["--accum", "bogus"])).is_err());
+        assert!(
+            parse_accum_flags(&argv(&["--accum", "dense", "--accum-threshold", "64"])).is_err()
+        );
+        assert!(parse_accum_flags(&argv(&["--accum", "auto", "--accum-threshold", "64"])).is_err());
+        assert!(parse_accum_flags(&argv(&["--accum-threshold", "not-a-number"])).is_err());
     }
 
     #[test]

@@ -46,7 +46,8 @@ use crate::config::{KernelConfig, SimConfig, TablePlacement};
 use crate::formats::Csr;
 use crate::kernels::{plan_windows, run_smash_with_plan, WindowPlan};
 use crate::spgemm::{
-    par_gustavson_with_plan_accum, symbolic_plan, Dataflow, SymbolicPlan, Traffic,
+    par_gustavson_spec, par_gustavson_with_plan_policy, symbolic_plan, AccumPolicy, Dataflow,
+    SymbolicPlan, Traffic,
 };
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -211,6 +212,14 @@ pub struct Response {
     /// per-worker accumulator bytes). `None` for simulated SMASH jobs,
     /// whose metrics live in the sim report.
     pub traffic: Option<Traffic>,
+    /// The concrete accumulator policy (mode + threshold) the job's
+    /// numeric pass ran with — the resolution of the request's
+    /// [`AccumSpec`](crate::spgemm::AccumSpec), which under `auto` is the
+    /// per-matrix heuristic pick. `None` for SMASH-sim jobs and dataflows
+    /// without a [`RowAccumulator`](crate::spgemm::RowAccumulator)
+    /// policy. Together with `traffic.accum` this makes the per-job
+    /// accumulator behaviour observable in serving.
+    pub accum_policy: Option<AccumPolicy>,
 }
 
 /// Knobs for [`Coordinator::start`].
@@ -302,7 +311,7 @@ impl Coordinator {
                 match msg {
                     Ok(Envelope::Work(id, work)) => {
                         let t0 = std::time::Instant::now();
-                        let (c, sim_ms, registered, symbolic_reused, traffic) =
+                        let (c, sim_ms, registered, symbolic_reused, traffic, accum_policy) =
                             serve_work(work, &stats);
                         let _ = tx_done.send(Response {
                             id,
@@ -313,6 +322,7 @@ impl Coordinator {
                             registered,
                             symbolic_reused,
                             traffic,
+                            accum_policy,
                         });
                     }
                     Ok(Envelope::Stop) | Err(_) => break,
@@ -696,11 +706,20 @@ fn cached_or_compute<T>(
 }
 
 /// Execute one resolved work item on the calling worker thread, returning
-/// `(product, sim_ms, registered operands, plan provenance, traffic)`.
+/// `(product, sim_ms, registered operands, plan provenance, traffic,
+/// resolved accumulator policy)`.
+#[allow(clippy::type_complexity)]
 fn serve_work(
     work: Work,
     stats: &SymbolicStats,
-) -> (Csr, Option<f64>, Vec<MatrixId>, Option<bool>, Option<Traffic>) {
+) -> (
+    Csr,
+    Option<f64>,
+    Vec<MatrixId>,
+    Option<bool>,
+    Option<Traffic>,
+    Option<AccumPolicy>,
+) {
     match work {
         Work::Smash {
             a,
@@ -716,11 +735,11 @@ fn serve_work(
                         plan_windows(&a, &b, &kernel, &sim)
                     });
                 let run = run_smash_with_plan(&a, &b, &kernel, &sim, &plan);
-                (run.c, Some(run.report.ms), registered, Some(reused), None)
+                (run.c, Some(run.report.ms), registered, Some(reused), None, None)
             }
             None => {
                 let run = crate::kernels::run_smash(&a, &b, &kernel, &sim);
-                (run.c, Some(run.report.ms), registered, None, None)
+                (run.c, Some(run.report.ms), registered, None, None, None)
             }
         },
         Work::Native {
@@ -734,12 +753,20 @@ fn serve_work(
                 let (plan, reused) = cached_or_compute(&slot, &stats.passes, &stats.hits, || {
                     symbolic_plan(&a, &b, threads)
                 });
-                let (c, t) = par_gustavson_with_plan_accum(&a, &b, threads, &plan, accum);
-                (c, None, registered, Some(reused), Some(t))
+                // Per-job resolution against the (shared) plan: jobs that
+                // differ only in accumulator spec — mode, threshold, or
+                // auto — reuse one symbolic pass and diverge here.
+                let policy = accum.resolve(b.cols, &plan.row_flops);
+                let (c, t) = par_gustavson_with_plan_policy(&a, &b, threads, &plan, policy);
+                (c, None, registered, Some(reused), Some(t), Some(policy))
+            }
+            (Dataflow::ParGustavson { threads, accum }, None) => {
+                let (c, t, policy) = par_gustavson_spec(&a, &b, threads, accum);
+                (c, None, registered, None, Some(t), Some(policy))
             }
             (df, _) => {
                 let (c, t) = df.multiply(&a, &b);
-                (c, None, registered, None, Some(t))
+                (c, None, registered, None, Some(t), None)
             }
         },
     }
@@ -749,7 +776,7 @@ fn serve_work(
 mod tests {
     use super::*;
     use crate::gen::{erdos_renyi, rmat, RmatParams};
-    use crate::spgemm::{gustavson, AccumMode};
+    use crate::spgemm::{gustavson, AccumMode, AccumSpec};
 
     #[test]
     fn serves_native_jobs() {
@@ -928,7 +955,7 @@ mod tests {
                 b: id_b.into(),
                 dataflow: Dataflow::ParGustavson {
                     threads: 2,
-                    accum: AccumMode::Adaptive,
+                    accum: AccumSpec::default(),
                 },
             });
         }
@@ -975,7 +1002,7 @@ mod tests {
                 b: id_b.into(),
                 dataflow: Dataflow::ParGustavson {
                     threads: 2,
-                    accum: AccumMode::Adaptive,
+                    accum: AccumSpec::default(),
                 },
             });
         }
@@ -1080,7 +1107,10 @@ mod tests {
             coord.submit(Job::NativeSpgemm {
                 a: id_a.into(),
                 b: id_b.into(),
-                dataflow: Dataflow::ParGustavson { threads: 2, accum },
+                dataflow: Dataflow::ParGustavson {
+                    threads: 2,
+                    accum: accum.into(),
+                },
             });
             let r = coord.collect_one().expect("job outstanding");
             assert_eq!(r.c.row_ptr, oracle.row_ptr, "{}", accum.name());
@@ -1095,6 +1125,73 @@ mod tests {
             }
         }
         // all three modes shared ONE cached symbolic plan
+        assert_eq!(coord.symbolic_stats(), (1, 2));
+        coord.shutdown();
+    }
+
+    /// Per-job thresholds: two jobs in one burst with different adaptive
+    /// thresholds (plus an auto job) share ONE symbolic plan, produce
+    /// bitwise-equal products, but report different `Traffic.accum`
+    /// dense/hash row splits — and each response records the concrete
+    /// policy its numeric pass ran with.
+    #[test]
+    fn per_job_thresholds_share_plan_with_distinct_splits() {
+        let mut coord = Coordinator::start(ServerConfig {
+            workers: 2,
+            queue_depth: 16,
+            ..ServerConfig::default()
+        });
+        let a = rmat(&RmatParams::new(7, 900, 75));
+        let b = rmat(&RmatParams::new(7, 900, 76));
+        let (oracle, _) = gustavson(&a, &b);
+        let rows = a.rows as u64;
+        let expected_auto =
+            crate::spgemm::AccumPolicy::auto_for(b.cols, &crate::spgemm::flops_per_row(&a, &b));
+        let id_a = coord.register("A", a);
+        let id_b = coord.register("B", b);
+        let submit = |coord: &mut Coordinator, accum: AccumSpec| {
+            coord.submit(Job::NativeSpgemm {
+                a: id_a.into(),
+                b: id_b.into(),
+                dataflow: Dataflow::ParGustavson { threads: 2, accum },
+            })
+        };
+        let job_lo = submit(&mut coord, AccumSpec::AdaptiveAt(1));
+        let job_hi = submit(&mut coord, AccumSpec::AdaptiveAt(u64::MAX));
+        let job_auto = submit(&mut coord, AccumSpec::Auto);
+        let responses = coord.collect_all();
+        assert_eq!(responses.len(), 3);
+        for r in responses.values() {
+            assert_eq!(r.c.row_ptr, oracle.row_ptr);
+            assert_eq!(r.c.col_idx, oracle.col_idx);
+            assert_eq!(r.c.data, oracle.data, "all thresholds must stay bitwise-oracle");
+            let t = r.traffic.expect("native jobs report traffic");
+            assert_eq!(t.accum.dense_rows + t.accum.hash_rows, rows);
+        }
+        let split = |id: &JobId| {
+            let t = responses[id].traffic.unwrap();
+            (t.accum.dense_rows, t.accum.hash_rows)
+        };
+        let (lo_dense, _) = split(&job_lo);
+        let (hi_dense, hi_hash) = split(&job_hi);
+        assert_eq!(hi_dense, 0, "an unreachable threshold must hash every row");
+        assert_eq!(hi_hash, rows);
+        assert!(
+            lo_dense > 0 && lo_dense > hi_dense,
+            "threshold=1 must route the non-empty rows dense ({lo_dense} vs {hi_dense})"
+        );
+        // Policy provenance: each response carries the resolved policy.
+        assert_eq!(responses[&job_lo].accum_policy.unwrap().hash_threshold, 1);
+        assert_eq!(
+            responses[&job_hi].accum_policy.unwrap().hash_threshold,
+            u64::MAX
+        );
+        assert_eq!(
+            responses[&job_auto].accum_policy.unwrap(),
+            expected_auto,
+            "auto must resolve to the deterministic per-matrix heuristic"
+        );
+        // ...and the whole mixed-spec burst shared exactly one plan.
         assert_eq!(coord.symbolic_stats(), (1, 2));
         coord.shutdown();
     }
@@ -1179,7 +1276,7 @@ mod tests {
             b: id1.into(),
             dataflow: Dataflow::ParGustavson {
                 threads: 2,
-                accum: AccumMode::Adaptive,
+                accum: AccumSpec::default(),
             },
         });
         // Drain so the worker has definitely published the plan.

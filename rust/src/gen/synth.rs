@@ -61,6 +61,14 @@ pub fn diagonal_noise(n: usize, extra: usize, seed: u64) -> Csr {
     coo.to_csr()
 }
 
+/// Hypersparse wide matrix: `2^scale` columns with `edges` nnz spread
+/// uniformly — well under one nnz per row, no hub rows. The shape that
+/// makes O(cols) dense accumulator scratch unservable (the §7.2 memory
+/// story) and the wide endpoint of the `tune` threshold-sweep suite.
+pub fn hypersparse(scale: u32, edges: usize, seed: u64) -> Csr {
+    erdos_renyi(1usize << scale, edges, seed)
+}
+
 /// Uniform random matrix with a target density in [0,1].
 pub fn uniform_random(rows: usize, cols: usize, density: f64, seed: u64) -> Csr {
     let mut rng = Xoshiro256::seed_from_u64(seed);

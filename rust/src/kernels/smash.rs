@@ -332,7 +332,8 @@ impl<'m> KernelState<'m> {
         let rows = win.rows();
         let a = self.a;
         let b = self.b;
-        let (a_ci, a_dat, b_rp, b_ci, b_dat) = (self.a_ci, self.a_dat, self.b_rp, self.b_ci, self.b_dat);
+        let (a_ci, a_dat, b_rp, b_ci, b_dat) =
+            (self.a_ci, self.a_dat, self.b_rp, self.b_ci, self.b_dat);
         let col_bits = self.col_bits;
         let dense_rows = &self.plan.dense_rows;
         let dense_map = &mut self.dense_map;

@@ -26,7 +26,12 @@ pub struct SpmvReport {
 }
 
 /// Simulate `y = A·x` and return (y, report).
-pub fn run_spmv(a: &Csr, x: &[Value], sched: Scheduling, scfg: &SimConfig) -> (Vec<Value>, SpmvReport) {
+pub fn run_spmv(
+    a: &Csr,
+    x: &[Value],
+    sched: Scheduling,
+    scfg: &SimConfig,
+) -> (Vec<Value>, SpmvReport) {
     assert_eq!(x.len(), a.cols, "dimension mismatch");
     let mut sim = Sim::new(scfg.clone());
     let a_rp = sim.alloc_dram((a.rows as u64 + 1) * 4, Region::MatrixA);

@@ -218,7 +218,13 @@ mod tests {
     #[test]
     fn dense_row_classification() {
         let a = Csr::from_triplets(2, 2, vec![(0, 0, 1.0), (0, 1, 1.0)]);
-        let b = Csr::from_triplets(2, 2, (0..2).flat_map(|r| (0..2).map(move |c| (r, c, 1.0))).collect::<Vec<_>>());
+        let b = Csr::from_triplets(
+            2,
+            2,
+            (0..2)
+                .flat_map(|r| (0..2).map(move |c| (r, c, 1.0)))
+                .collect::<Vec<_>>(),
+        );
         let mut k = KernelConfig::v1();
         k.dense_row_threshold = 3;
         let p = plan_windows(&a, &b, &k, &SimConfig::test_tiny());

@@ -13,6 +13,8 @@
 //! * [`coordinator`] — L3 request routing / window scheduling / batching.
 //! * [`runtime`] — PJRT client loading `artifacts/*.hlo.txt` (L2/L1 output).
 //! * [`bench`]/[`report`] — regeneration harness for every paper table/figure.
+//! * [`tune`] — accumulator-threshold autotuning (sweep driver, per-matrix
+//!   heuristic, machine-readable JSON reports, the CI perf-smoke gate).
 
 pub mod util;
 pub mod config;
@@ -25,4 +27,5 @@ pub mod coordinator;
 pub mod runtime;
 pub mod bench;
 pub mod report;
+pub mod tune;
 pub mod cli;

@@ -81,8 +81,17 @@ impl AccumMode {
     }
 }
 
+/// Largest threshold the [`AccumPolicy::auto_for`] heuristic will pick:
+/// `cols / 4` (a row touching a quarter of the output width is dense by
+/// any reading).
+pub const AUTO_DIVISOR_MIN: usize = 4;
+/// Smallest threshold the heuristic will pick: `cols / 64` (below that,
+/// routing near-empty rows to the dense lane costs O(cols) scratch for
+/// nothing — the §7.2 memory story).
+pub const AUTO_DIVISOR_MAX: usize = 64;
+
 /// Per-row lane-selection policy: a mode plus the adaptive threshold.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct AccumPolicy {
     pub mode: AccumMode,
     /// Rows with FLOPs upper bound `>=` this go dense under
@@ -106,12 +115,120 @@ impl AccumPolicy {
         self
     }
 
+    /// Per-matrix heuristic threshold, picked from the symbolic
+    /// FLOPs-per-row distribution of the product instead of the global
+    /// `cols / 16` constant (`--accum auto`, [`AccumSpec::Auto`]).
+    ///
+    /// Rationale: the threshold should split the row *population*, not
+    /// the column count — hub rows (the power-law tail SMASH §7.2 is
+    /// about) belong in the dense lane, the typical row in the hash lane.
+    /// We target twice the median positive row-FLOPs ("a few times the
+    /// typical row"), snap to the power-of-two-fraction grid the sweep
+    /// driver explores (`cols / 2^k`), and clamp to
+    /// `[cols / AUTO_DIVISOR_MAX, cols / AUTO_DIVISOR_MIN]` so the pick
+    /// never strays more than 4× from the Nagasaka-shaped default.
+    ///
+    /// Deterministic: depends only on `cols` and the multiset of
+    /// `row_flops` values. Empty inputs fall back to the default policy.
+    pub fn auto_for(cols: usize, row_flops: &[u64]) -> AccumPolicy {
+        let mut policy = AccumPolicy::new(AccumMode::Adaptive, cols);
+        let mut nz: Vec<u64> = row_flops.iter().copied().filter(|&f| f > 0).collect();
+        if nz.is_empty() {
+            return policy;
+        }
+        let mid = nz.len() / 2;
+        let (_, &mut median, _) = nz.select_nth_unstable(mid);
+        let target = (2 * median).max(1) as u128;
+        let floor = (cols / AUTO_DIVISOR_MAX).max(1) as u64;
+        let mut thr = (cols / AUTO_DIVISOR_MIN).max(1) as u64;
+        // Halve down the power-of-two grid while the threshold is more
+        // than √2 above the target (thr > target·√2 ⇔ thr² > 2·target²),
+        // i.e. until we reach the grid point geometrically nearest the
+        // target — or hit the clamp floor.
+        while thr > floor && (thr as u128) * (thr as u128) > 2 * target * target {
+            thr = (thr / 2).max(floor);
+        }
+        policy.hash_threshold = thr.max(1);
+        policy
+    }
+
+    /// Human-readable form, e.g. `adaptive(threshold=1024)` or `dense`.
+    pub fn describe(&self) -> String {
+        match self.mode {
+            AccumMode::Adaptive => format!("adaptive(threshold={})", self.hash_threshold),
+            m => m.name().to_string(),
+        }
+    }
+
     #[inline]
     fn wants_hash(&self, row_flops: u64) -> bool {
         match self.mode {
             AccumMode::Dense => false,
             AccumMode::Hash => true,
             AccumMode::Adaptive => row_flops < self.hash_threshold,
+        }
+    }
+}
+
+/// How a job *asks for* an accumulator policy — the serializable,
+/// CLI-level spelling carried on
+/// [`Dataflow::ParGustavson`](super::Dataflow::ParGustavson) and resolved
+/// to a concrete [`AccumPolicy`] once the operands (and, for
+/// [`AccumSpec::Auto`], the symbolic FLOPs distribution) are known.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AccumSpec {
+    /// A fixed mode with the default adaptive threshold (`cols / 16`).
+    Fixed(AccumMode),
+    /// Adaptive with an explicit threshold override — the per-job tuning
+    /// knob (`serve --accum-threshold N`, the `tune` sweep driver).
+    AdaptiveAt(u64),
+    /// Adaptive with the per-matrix heuristic threshold
+    /// ([`AccumPolicy::auto_for`]) picked at serve time from the job's
+    /// own symbolic plan (`--accum auto`).
+    Auto,
+}
+
+impl Default for AccumSpec {
+    fn default() -> Self {
+        AccumSpec::Fixed(AccumMode::Adaptive)
+    }
+}
+
+impl From<AccumMode> for AccumSpec {
+    fn from(mode: AccumMode) -> Self {
+        AccumSpec::Fixed(mode)
+    }
+}
+
+impl AccumSpec {
+    /// Parse a CLI spelling (`adaptive|dense|hash|auto`).
+    pub fn parse(s: &str) -> Option<AccumSpec> {
+        match s {
+            "auto" => Some(AccumSpec::Auto),
+            other => AccumMode::parse(other).map(AccumSpec::Fixed),
+        }
+    }
+
+    /// Display form: `adaptive`, `dense`, `hash`, `auto`, `adaptive@N`.
+    pub fn describe(&self) -> String {
+        match self {
+            AccumSpec::Fixed(m) => m.name().to_string(),
+            AccumSpec::AdaptiveAt(t) => format!("adaptive@{t}"),
+            AccumSpec::Auto => "auto".to_string(),
+        }
+    }
+
+    /// Resolve to a concrete policy for a `cols`-wide product whose
+    /// symbolic FLOPs-per-row are `row_flops` (only [`AccumSpec::Auto`]
+    /// reads them; pass `&[]` when no plan exists yet and a default-
+    /// threshold policy is acceptable).
+    pub fn resolve(&self, cols: usize, row_flops: &[u64]) -> AccumPolicy {
+        match self {
+            AccumSpec::Fixed(mode) => AccumPolicy::new(*mode, cols),
+            AccumSpec::AdaptiveAt(t) => {
+                AccumPolicy::new(AccumMode::Adaptive, cols).with_threshold(*t)
+            }
+            AccumSpec::Auto => AccumPolicy::auto_for(cols, row_flops),
         }
     }
 }
@@ -578,7 +695,11 @@ mod tests {
                 .flat_map(|r| (0..=r).map(move |k| (r, k, 1.0)))
                 .collect::<Vec<_>>(),
         );
-        let b = Csr::from_triplets(n, n, (0..n).map(|k| (k, k, 1.0 + k as f64)).collect::<Vec<_>>());
+        let b = Csr::from_triplets(
+            n,
+            n,
+            (0..n).map(|k| (k, k, 1.0 + k as f64)).collect::<Vec<_>>(),
+        );
         let (oracle, _) = gustavson(&a, &b);
         let (c, t) = multiply(&a, &b, AccumMode::Hash);
         assert_bitwise(&c, &oracle, "growth ramp");
@@ -644,6 +765,96 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// The `auto_for` heuristic is deterministic (same inputs → same
+    /// policy), always adaptive, and clamped to the documented
+    /// power-of-two-fraction grid.
+    #[test]
+    fn auto_for_is_deterministic_and_clamped() {
+        let inputs: Vec<(&str, Csr, Csr)> = vec![
+            (
+                "rmat",
+                rmat(&RmatParams::new(8, 2_600, 101)),
+                rmat(&RmatParams::new(8, 2_600, 102)),
+            ),
+            (
+                "erdos_renyi",
+                erdos_renyi(128, 1_200, 103),
+                erdos_renyi(128, 1_200, 104),
+            ),
+            ("banded", banded(96, 4, 105), banded(96, 3, 106)),
+            (
+                "hypersparse",
+                erdos_renyi(1 << 15, 4_000, 107),
+                erdos_renyi(1 << 15, 4_000, 108),
+            ),
+        ];
+        for (name, a, b) in &inputs {
+            let flops = flops_per_row(a, b);
+            let p1 = AccumPolicy::auto_for(b.cols, &flops);
+            let p2 = AccumPolicy::auto_for(b.cols, &flops);
+            assert_eq!(p1, p2, "{name}: auto_for must be deterministic");
+            assert_eq!(p1.mode, AccumMode::Adaptive, "{name}");
+            let floor = (b.cols / AUTO_DIVISOR_MAX).max(1) as u64;
+            let ceil = (b.cols / AUTO_DIVISOR_MIN).max(1) as u64;
+            assert!(
+                p1.hash_threshold >= floor && p1.hash_threshold <= ceil,
+                "{name}: auto threshold {} outside [{floor}, {ceil}]",
+                p1.hash_threshold
+            );
+            // The resolved policy still produces the oracle product.
+            let (oracle, _) = gustavson(a, b);
+            let mut t = Traffic::default();
+            let mut racc = RowAccumulator::new(b.cols, p1);
+            let mut triplets = Vec::new();
+            for i in 0..a.rows {
+                racc.numeric_row_emit(a, b, i, flops[i], &mut t, |j, v| {
+                    triplets.push((i, j as usize, v));
+                });
+            }
+            let c = Csr::from_triplets(a.rows, b.cols, triplets);
+            assert_bitwise(&c, &oracle, &format!("{name}/auto"));
+        }
+        // Degenerate shapes fall back to the default policy.
+        assert_eq!(
+            AccumPolicy::auto_for(64, &[]),
+            AccumPolicy::new(AccumMode::Adaptive, 64)
+        );
+        assert_eq!(
+            AccumPolicy::auto_for(64, &[0, 0, 0]),
+            AccumPolicy::new(AccumMode::Adaptive, 64)
+        );
+        assert!(AccumPolicy::auto_for(0, &[3, 5]).hash_threshold >= 1);
+    }
+
+    /// `AccumSpec` parsing, display, and resolution round-trip.
+    #[test]
+    fn accum_spec_parse_and_resolve() {
+        assert_eq!(
+            AccumSpec::parse("adaptive"),
+            Some(AccumSpec::Fixed(AccumMode::Adaptive))
+        );
+        assert_eq!(AccumSpec::parse("dense"), Some(AccumSpec::Fixed(AccumMode::Dense)));
+        assert_eq!(AccumSpec::parse("hash"), Some(AccumSpec::Fixed(AccumMode::Hash)));
+        assert_eq!(AccumSpec::parse("auto"), Some(AccumSpec::Auto));
+        assert_eq!(AccumSpec::parse("bogus"), None);
+        assert_eq!(AccumSpec::default(), AccumMode::Adaptive.into());
+        assert_eq!(AccumSpec::AdaptiveAt(512).describe(), "adaptive@512");
+
+        let flops = vec![1u64, 2, 3, 400];
+        let fixed = AccumSpec::Fixed(AccumMode::Dense).resolve(1024, &flops);
+        assert_eq!(fixed.mode, AccumMode::Dense);
+        assert_eq!(fixed.hash_threshold, (1024 / HASH_THRESHOLD_DIVISOR) as u64);
+        let at = AccumSpec::AdaptiveAt(7).resolve(1024, &flops);
+        assert_eq!(at.mode, AccumMode::Adaptive);
+        assert_eq!(at.hash_threshold, 7);
+        assert_eq!(
+            AccumSpec::Auto.resolve(1024, &flops),
+            AccumPolicy::auto_for(1024, &flops)
+        );
+        // The explicit-threshold knob clamps to ≥ 1 like with_threshold.
+        assert_eq!(AccumSpec::AdaptiveAt(0).resolve(64, &flops).hash_threshold, 1);
     }
 
     /// Map-oracle property test of the hash lane across random rows.

@@ -17,14 +17,18 @@ mod par;
 mod rowwise;
 pub mod semiring;
 
-pub use accumulator::{AccumMode, AccumPolicy, AccumStats, RowAccumulator};
+pub use accumulator::{
+    AccumMode, AccumPolicy, AccumSpec, AccumStats, RowAccumulator, AUTO_DIVISOR_MAX,
+    AUTO_DIVISOR_MIN, HASH_THRESHOLD_DIVISOR,
+};
 pub use gustavson::{flops_per_row, gustavson, symbolic_row_nnz, total_flops};
 pub use inner::inner_product;
 pub use intensity::{arithmetic_intensity, compression_factor, IntensityReport};
 pub use outer::outer_product;
 pub use par::{
-    par_gustavson, par_gustavson_accum, par_gustavson_spawning, par_gustavson_with_plan,
-    par_gustavson_with_plan_accum, symbolic_plan, SymbolicPlan, WorkerPool,
+    par_gustavson, par_gustavson_accum, par_gustavson_spawning, par_gustavson_spec,
+    par_gustavson_with_plan, par_gustavson_with_plan_accum, par_gustavson_with_plan_policy,
+    symbolic_plan, SymbolicPlan, WorkerPool,
 };
 pub use rowwise::{rowwise_hash, rowwise_heap};
 pub use semiring::{ewise_add, spgemm_semiring, Arithmetic, Boolean, MaxTimes, MinPlus, Semiring};
@@ -99,9 +103,11 @@ pub enum Dataflow {
     RowWiseHeap,
     RowWiseHash,
     /// Row-partitioned parallel Gustavson with this many threads, executed
-    /// on the persistent [`WorkerPool`], with the given per-row
-    /// accumulator mode (`AccumMode::Adaptive` is the serving default).
-    ParGustavson { threads: usize, accum: AccumMode },
+    /// on the persistent [`WorkerPool`], with a per-job accumulator spec
+    /// (fixed mode, explicit threshold, or the per-matrix auto heuristic;
+    /// `AccumSpec::default()` — adaptive at `cols/16` — is the serving
+    /// default).
+    ParGustavson { threads: usize, accum: AccumSpec },
     /// [`ParGustavson`](Dataflow::ParGustavson) with spawn-per-call
     /// execution instead of the pool — the benchmark baseline for the
     /// pooled-vs-spawn serving comparison. Always adaptive.
@@ -138,7 +144,8 @@ impl Dataflow {
             Dataflow::RowWiseHeap => rowwise_heap(a, b),
             Dataflow::RowWiseHash => rowwise_hash(a, b),
             Dataflow::ParGustavson { threads, accum } => {
-                par_gustavson_accum(a, b, *threads, *accum)
+                let (c, t, _) = par_gustavson_spec(a, b, *threads, *accum);
+                (c, t)
             }
             Dataflow::ParGustavsonSpawn { threads } => par_gustavson_spawning(a, b, *threads),
         }
@@ -177,7 +184,7 @@ mod tests {
         let (oracle, serial_t) = gustavson(&a, &b);
         let df = Dataflow::ParGustavson {
             threads: 4,
-            accum: AccumMode::Adaptive,
+            accum: AccumSpec::default(),
         };
         let (c, t) = df.multiply(&a, &b);
         assert!(c.approx_same(&oracle), "{} disagrees with oracle", df.name());

@@ -40,7 +40,7 @@
 //! [`par_gustavson_spawning`] keeps the old spawn-per-call execution as a
 //! benchmark baseline.
 
-use super::accumulator::{AccumMode, AccumPolicy, RowAccumulator};
+use super::accumulator::{AccumMode, AccumPolicy, AccumSpec, RowAccumulator};
 use super::gustavson::{flops_of_row, gustavson};
 use super::Traffic;
 use crate::coordinator::{schedule_windows, SchedPolicy};
@@ -314,15 +314,20 @@ impl SymbolicPlan {
 /// Compute the full symbolic plan of C = A·B (FLOP counts, exact per-row
 /// output sizes, row pointers) with up to `threads`-way parallelism on
 /// the persistent pool. The result is independent of `threads` *and* of
-/// the accumulator mode — only the chunking and scratch shape vary — so
+/// the accumulator policy — only the chunking and scratch shape vary — so
 /// plans are safely shareable across jobs that request different thread
-/// counts or accumulator modes.
+/// counts, accumulator modes, or thresholds.
 pub fn symbolic_plan(a: &Csr, b: &Csr, threads: usize) -> SymbolicPlan {
-    symbolic_plan_exec(a, b, threads.max(1), Exec::Pool, AccumMode::Adaptive)
+    symbolic_plan_exec(a, b, threads.max(1), Exec::Pool, AccumSpec::default())
 }
 
-fn symbolic_plan_exec(a: &Csr, b: &Csr, threads: usize, exec: Exec, mode: AccumMode) -> SymbolicPlan {
-    let policy = AccumPolicy::new(mode, b.cols);
+fn symbolic_plan_exec(
+    a: &Csr,
+    b: &Csr,
+    threads: usize,
+    exec: Exec,
+    spec: AccumSpec,
+) -> SymbolicPlan {
     assert_eq!(a.cols, b.rows, "dimension mismatch");
     let rows = a.rows;
 
@@ -348,6 +353,12 @@ fn symbolic_plan_exec(a: &Csr, b: &Csr, threads: usize, exec: Exec, mode: AccumM
             .collect();
         run_scoped(tasks, exec);
     }
+
+    // The FLOPs distribution is known now, so even AccumSpec::Auto can
+    // resolve before the symbolic pass. Lane choice here affects only
+    // scratch shape and stats, never the counted nnz — plans stay
+    // policy-independent.
+    let policy = spec.resolve(b.cols, &row_flops);
 
     // ---- Symbolic pass: exact nnz of every output row. Chunked by FMA
     // volume (the same windows the numeric pass will use) so a hub row
@@ -471,9 +482,24 @@ pub fn par_gustavson_with_plan_accum(
     plan: &SymbolicPlan,
     accum: AccumMode,
 ) -> (Csr, Traffic) {
+    par_gustavson_with_plan_policy(a, b, threads, plan, AccumPolicy::new(accum, b.cols))
+}
+
+/// [`par_gustavson_with_plan`] with a fully resolved [`AccumPolicy`] —
+/// mode *and* threshold. The per-job tuning surface: the `tune` sweep
+/// driver and the coordinator's per-job `AccumSpec` resolution both land
+/// here. Plans are policy-independent, so one cached plan serves every
+/// swept threshold.
+pub fn par_gustavson_with_plan_policy(
+    a: &Csr,
+    b: &Csr,
+    threads: usize,
+    plan: &SymbolicPlan,
+    policy: AccumPolicy,
+) -> (Csr, Traffic) {
     assert_eq!(a.cols, b.rows, "dimension mismatch");
     assert_eq!(plan.row_ptr.len(), a.rows + 1, "plan is for a different A");
-    numeric_with_plan(a, b, threads.max(1), plan, Exec::Pool, accum)
+    numeric_with_plan(a, b, threads.max(1), plan, Exec::Pool, policy)
 }
 
 fn numeric_with_plan(
@@ -482,9 +508,8 @@ fn numeric_with_plan(
     threads: usize,
     plan: &SymbolicPlan,
     exec: Exec,
-    mode: AccumMode,
+    policy: AccumPolicy,
 ) -> (Csr, Traffic) {
-    let policy = AccumPolicy::new(mode, b.cols);
     // Recomputed per call even with a cached plan: the partition is
     // O(rows) and LPT packs ~4×threads windows — noise next to the
     // O(flops) numeric pass, and it keeps plans thread-count independent.
@@ -561,20 +586,29 @@ fn numeric_with_plan(
     (c, t)
 }
 
-fn par_gustavson_exec(a: &Csr, b: &Csr, threads: usize, exec: Exec, mode: AccumMode) -> (Csr, Traffic) {
+fn par_gustavson_exec(
+    a: &Csr,
+    b: &Csr,
+    threads: usize,
+    exec: Exec,
+    spec: AccumSpec,
+) -> (Csr, Traffic, AccumPolicy) {
     assert_eq!(a.cols, b.rows, "dimension mismatch");
     let threads = threads.max(1);
     if a.rows == 0 {
         // No rows: nothing to partition and no lane ever fires, so the
         // serial oracle's (mode-agnostic, all-zero) stats are correct.
-        return gustavson(a, b);
+        let (c, t) = gustavson(a, b);
+        return (c, t, spec.resolve(b.cols, &[]));
     }
     // b.cols == 0 flows through the normal path: every row is an empty
     // product, and the requested lane is still the one reported in
     // `Traffic::accum` (the oracle fallback would mislabel forced-hash
     // rows as dense).
-    let plan = symbolic_plan_exec(a, b, threads, exec, mode);
-    numeric_with_plan(a, b, threads, &plan, exec, mode)
+    let plan = symbolic_plan_exec(a, b, threads, exec, spec);
+    let policy = spec.resolve(b.cols, &plan.row_flops);
+    let (c, t) = numeric_with_plan(a, b, threads, &plan, exec, policy);
+    (c, t, policy)
 }
 
 /// Parallel Gustavson SpGEMM over `threads` workers of the persistent
@@ -583,7 +617,8 @@ fn par_gustavson_exec(a: &Csr, b: &Csr, threads: usize, exec: Exec, mode: AccumM
 /// (sorted, merged) CSR product — bitwise identical to [`gustavson`] —
 /// and the summed traffic profile.
 pub fn par_gustavson(a: &Csr, b: &Csr, threads: usize) -> (Csr, Traffic) {
-    par_gustavson_exec(a, b, threads, Exec::Pool, AccumMode::Adaptive)
+    let (c, t, _) = par_gustavson_exec(a, b, threads, Exec::Pool, AccumSpec::default());
+    (c, t)
 }
 
 /// [`par_gustavson`] with an explicit accumulator mode — forced dense
@@ -591,7 +626,22 @@ pub fn par_gustavson(a: &Csr, b: &Csr, threads: usize) -> (Csr, Traffic) {
 /// the `serve --accum` flag; all three modes produce bitwise-identical
 /// output.
 pub fn par_gustavson_accum(a: &Csr, b: &Csr, threads: usize, accum: AccumMode) -> (Csr, Traffic) {
-    par_gustavson_exec(a, b, threads, Exec::Pool, accum)
+    let (c, t, _) = par_gustavson_exec(a, b, threads, Exec::Pool, AccumSpec::Fixed(accum));
+    (c, t)
+}
+
+/// [`par_gustavson`] with a full per-job [`AccumSpec`] (fixed mode,
+/// explicit threshold, or the auto heuristic). Also returns the resolved
+/// [`AccumPolicy`] the numeric pass actually ran — under
+/// [`AccumSpec::Auto`] that is the per-matrix heuristic pick, which the
+/// serving layer records on `Response::accum_policy`.
+pub fn par_gustavson_spec(
+    a: &Csr,
+    b: &Csr,
+    threads: usize,
+    spec: AccumSpec,
+) -> (Csr, Traffic, AccumPolicy) {
+    par_gustavson_exec(a, b, threads, Exec::Pool, spec)
 }
 
 /// [`par_gustavson`] with spawn-per-call execution (`std::thread::scope`)
@@ -599,7 +649,8 @@ pub fn par_gustavson_accum(a: &Csr, b: &Csr, threads: usize, accum: AccumMode) -
 /// benchmark baseline for the pooled-vs-spawn comparison in
 /// `benches/hot_paths.rs`. Adaptive accumulator policy.
 pub fn par_gustavson_spawning(a: &Csr, b: &Csr, threads: usize) -> (Csr, Traffic) {
-    par_gustavson_exec(a, b, threads, Exec::Spawn, AccumMode::Adaptive)
+    let (c, t, _) = par_gustavson_exec(a, b, threads, Exec::Spawn, AccumSpec::default());
+    (c, t)
 }
 
 #[cfg(test)]
@@ -740,6 +791,45 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Per-job thresholds: one cached plan serves every swept threshold
+    /// and the auto heuristic; every point is bitwise equal to the oracle
+    /// while the dense/hash row split moves monotonically with the
+    /// threshold.
+    #[test]
+    fn threshold_sweep_shares_plan_and_stays_bitwise() {
+        let a = rmat(&RmatParams::new(8, 2_800, 61));
+        let b = rmat(&RmatParams::new(8, 2_800, 62));
+        let (oracle, to) = gustavson(&a, &b);
+        let plan = symbolic_plan(&a, &b, 4);
+        let mut last_dense = u64::MAX;
+        for threshold in [1u64, 4, 16, 64, 256, 1 << 20] {
+            let policy = AccumPolicy::new(AccumMode::Adaptive, b.cols).with_threshold(threshold);
+            let (c, t) = par_gustavson_with_plan_policy(&a, &b, 3, &plan, policy);
+            assert_eq!(c.row_ptr, oracle.row_ptr, "t={threshold}");
+            assert_eq!(c.col_idx, oracle.col_idx, "t={threshold}");
+            assert_eq!(c.data, oracle.data, "t={threshold}");
+            assert_eq!(t.flops, to.flops, "t={threshold}");
+            assert_eq!(
+                t.accum.dense_rows + t.accum.hash_rows,
+                a.rows as u64,
+                "t={threshold}"
+            );
+            assert!(
+                t.accum.dense_rows <= last_dense,
+                "raising the threshold must not add dense rows \
+                 (t={threshold}: {} > {last_dense})",
+                t.accum.dense_rows
+            );
+            last_dense = t.accum.dense_rows;
+        }
+        // The auto spec resolves off the same plan's FLOPs distribution,
+        // deterministically, and matches the oracle bitwise too.
+        let (c, _, policy) = par_gustavson_spec(&a, &b, 3, AccumSpec::Auto);
+        assert_eq!(c.data, oracle.data, "auto");
+        assert_eq!(policy, AccumPolicy::auto_for(b.cols, &plan.row_flops));
+        assert_eq!(policy.mode, AccumMode::Adaptive);
     }
 
     /// The memory story: on a hypersparse wide input the adaptive policy

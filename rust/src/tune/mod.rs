@@ -1,0 +1,367 @@
+//! Accumulator-threshold autotuning: measure, don't guess.
+//!
+//! PR 3's adaptive `RowAccumulator` switches a row between its dense and
+//! hash lanes at `b.cols / 16` — Nagasaka et al.'s KNL heuristic shape,
+//! adopted without ever being swept on this codebase. This module is the
+//! measurement-and-selection machinery ROADMAP asked for:
+//!
+//! * [`run_sweep`] drives the **sweep**: for every workload pair of the
+//!   generator suite (R-MAT, Erdős–Rényi, banded, diagonal+noise, and a
+//!   hypersparse 2^18-column wide matrix) it computes one shared
+//!   [`SymbolicPlan`](crate::spgemm::SymbolicPlan), then times the numeric
+//!   pass at every candidate policy: powers-of-two fractions of `b.cols`
+//!   (`cols/4` … `cols/256`), both forced endpoints (`dense`, `hash`), and
+//!   the per-matrix `auto` heuristic
+//!   ([`AccumPolicy::auto_for`](crate::spgemm::AccumPolicy::auto_for)).
+//! * Every swept point is **gated on bitwise equality** with the serial
+//!   Gustavson oracle and on stat sanity (every row routed to exactly one
+//!   lane, forced modes route exclusively, dense-row counts fall
+//!   monotonically as the threshold rises). A violation returns `Err`,
+//!   which the CLI turns into a nonzero exit — this is the CI
+//!   perf-regression gate (`smash tune --smoke` in `ci.sh` and the
+//!   workflow).
+//! * The result is a [`TuneReport`]: a versioned, machine-readable JSON
+//!   document (uploaded as a CI artifact) plus a console table, so the
+//!   default threshold — and every future perf claim about the
+//!   accumulator — is regression-guarded instead of folklore.
+//!
+//! Timing uses the in-tree [`Bench`] harness (warmup + best-of-N, the
+//! same timer `benches/hot_paths.rs` uses); correctness and stats come
+//! from an untimed verification pass so the timed closure stays pure.
+
+mod report;
+
+pub use report::{PairSweep, SweepPoint, TuneReport, SCHEMA_VERSION};
+
+use crate::bench::Bench;
+use crate::formats::Csr;
+use crate::gen::{banded, diagonal_noise, erdos_renyi, hypersparse, rmat, RmatParams};
+use crate::spgemm::{
+    gustavson, par_gustavson_with_plan_policy, symbolic_plan, AccumMode, AccumSpec,
+    HASH_THRESHOLD_DIVISOR,
+};
+use anyhow::{ensure, Result};
+use std::collections::BTreeSet;
+
+/// Sweep configuration (`smash tune` flags).
+#[derive(Clone, Copy, Debug)]
+pub struct TuneOptions {
+    /// Tiny fixed-seed suite sized for CI (<30 s release-mode wall clock)
+    /// instead of the full tuning workloads.
+    pub smoke: bool,
+    /// Worker threads for the swept numeric passes.
+    pub threads: usize,
+    /// Timed iterations per point (one warmup on top).
+    pub iters: usize,
+    /// Generator seed; the smoke suite pins determinism by fixing this.
+    pub seed: u64,
+    /// Suppress per-point console lines (tests).
+    pub quiet: bool,
+}
+
+impl Default for TuneOptions {
+    fn default() -> Self {
+        Self {
+            smoke: true,
+            threads: 4,
+            iters: 3,
+            seed: 7,
+            quiet: false,
+        }
+    }
+}
+
+/// The generator suite the sweep runs over. Smoke keeps every pair tiny
+/// (the CI gate must stay well under 30 s); the full suite is sized to
+/// give the timer real signal per point.
+fn suite(smoke: bool, seed: u64) -> Vec<(String, Csr, Csr)> {
+    let s = seed;
+    let pairs: Vec<(&str, Csr, Csr)> = if smoke {
+        vec![
+            (
+                "rmat-s8",
+                rmat(&RmatParams::new(8, 2_600, s)),
+                rmat(&RmatParams::new(8, 2_600, s + 1)),
+            ),
+            (
+                "erdos-renyi-128",
+                erdos_renyi(128, 1_200, s + 2),
+                erdos_renyi(128, 1_200, s + 3),
+            ),
+            ("banded-96", banded(96, 4, s + 4), banded(96, 3, s + 5)),
+            (
+                "diagonal-256",
+                diagonal_noise(256, 600, s + 6),
+                diagonal_noise(256, 600, s + 7),
+            ),
+            (
+                "hypersparse-2^18",
+                hypersparse(18, 4_000, s + 8),
+                hypersparse(18, 4_000, s + 9),
+            ),
+        ]
+    } else {
+        vec![
+            (
+                "rmat-s11",
+                rmat(&RmatParams::new(11, 60_000, s)),
+                rmat(&RmatParams::new(11, 60_000, s + 1)),
+            ),
+            (
+                "erdos-renyi-4096",
+                erdos_renyi(4_096, 60_000, s + 2),
+                erdos_renyi(4_096, 60_000, s + 3),
+            ),
+            ("banded-2048", banded(2_048, 8, s + 4), banded(2_048, 8, s + 5)),
+            (
+                "diagonal-4096",
+                diagonal_noise(4_096, 12_000, s + 6),
+                diagonal_noise(4_096, 12_000, s + 7),
+            ),
+            (
+                "hypersparse-2^18",
+                hypersparse(18, 120_000, s + 8),
+                hypersparse(18, 120_000, s + 9),
+            ),
+        ]
+    };
+    pairs
+        .into_iter()
+        .map(|(n, a, b)| (n.to_string(), a, b))
+        .collect()
+}
+
+/// Candidate policies for a `cols`-wide product: both forced endpoints,
+/// the auto heuristic, and the powers-of-two-fraction threshold grid
+/// (deduplicated — on narrow matrices the small fractions all collapse
+/// to 1).
+fn candidate_specs(cols: usize) -> Vec<(String, AccumSpec)> {
+    let mut out: Vec<(String, AccumSpec)> = vec![
+        ("dense".to_string(), AccumSpec::Fixed(AccumMode::Dense)),
+        ("hash".to_string(), AccumSpec::Fixed(AccumMode::Hash)),
+        ("auto".to_string(), AccumSpec::Auto),
+    ];
+    let mut seen = BTreeSet::new();
+    for div in [4usize, 8, 16, 32, 64, 128, 256] {
+        let t = (cols / div).max(1) as u64;
+        if seen.insert(t) {
+            out.push((format!("cols/{div}"), AccumSpec::AdaptiveAt(t)));
+        }
+    }
+    out
+}
+
+/// Run the sweep. Returns `Err` — and therefore a nonzero `smash tune`
+/// exit — on any oracle-equality or stat-sanity violation at any point.
+pub fn run_sweep(opts: &TuneOptions) -> Result<TuneReport> {
+    let mut bench = Bench::new().with_iters(1, opts.iters.max(1));
+    if opts.quiet {
+        bench = bench.silent();
+    }
+    let mut pairs = Vec::new();
+    for (workload, a, b) in suite(opts.smoke, opts.seed) {
+        pairs.push(sweep_pair(&workload, &a, &b, opts, &mut bench)?);
+    }
+    Ok(TuneReport {
+        schema: SCHEMA_VERSION,
+        smoke: opts.smoke,
+        threads: opts.threads,
+        iters: opts.iters.max(1),
+        seed: opts.seed,
+        pairs,
+    })
+}
+
+fn sweep_pair(
+    workload: &str,
+    a: &Csr,
+    b: &Csr,
+    opts: &TuneOptions,
+    bench: &mut Bench,
+) -> Result<PairSweep> {
+    let threads = opts.threads.max(1);
+    // One oracle product and ONE symbolic plan serve every swept point —
+    // plans are policy-independent, which is exactly what lets the
+    // serving layer batch mixed-threshold jobs onto a single pass.
+    let (oracle, oracle_t) = gustavson(a, b);
+    let plan = symbolic_plan(a, b, threads);
+    let default_threshold = (b.cols / HASH_THRESHOLD_DIVISOR).max(1) as u64;
+    // (Determinism of the auto heuristic is covered by the accumulator
+    // unit tests; re-resolving the same inputs here would be a tautology.)
+    let auto_policy = AccumSpec::Auto.resolve(b.cols, &plan.row_flops);
+
+    let mut points = Vec::new();
+    for (label, spec) in candidate_specs(b.cols) {
+        let policy = spec.resolve(b.cols, &plan.row_flops);
+        // Untimed verification pass: bitwise oracle equality + stats.
+        let (c, t) = par_gustavson_with_plan_policy(a, b, threads, &plan, policy);
+        ensure!(
+            c.row_ptr == oracle.row_ptr && c.col_idx == oracle.col_idx && c.data == oracle.data,
+            "{workload}/{label}: swept point diverges from the serial oracle (bitwise)"
+        );
+        ensure!(
+            t.flops == oracle_t.flops && t.c_writes == oracle_t.c_writes,
+            "{workload}/{label}: traffic counters diverge from the oracle"
+        );
+        ensure!(
+            t.accum.dense_rows + t.accum.hash_rows == a.rows as u64,
+            "{workload}/{label}: every row must be routed to exactly one lane \
+             ({} dense + {} hash != {} rows)",
+            t.accum.dense_rows,
+            t.accum.hash_rows,
+            a.rows
+        );
+        match spec {
+            AccumSpec::Fixed(AccumMode::Dense) => ensure!(
+                t.accum.hash_rows == 0,
+                "{workload}/{label}: forced dense must never hash"
+            ),
+            AccumSpec::Fixed(AccumMode::Hash) => ensure!(
+                t.accum.dense_rows == 0,
+                "{workload}/{label}: forced hash must never go dense"
+            ),
+            _ => {}
+        }
+
+        let r = bench.run(&format!("tune/{workload}/{label}"), || {
+            par_gustavson_with_plan_policy(a, b, threads, &plan, policy)
+        });
+        let (best_ns, mean_ns) = (r.min.as_nanos() as u64, r.mean.as_nanos() as u64);
+        ensure!(best_ns > 0, "{workload}/{label}: timer measured nothing");
+        points.push(SweepPoint {
+            label,
+            mode: policy.mode,
+            threshold: policy.hash_threshold,
+            best_ns,
+            mean_ns,
+            dense_rows: t.accum.dense_rows,
+            hash_rows: t.accum.hash_rows,
+            mean_probes: t.accum.table.mean_probes(),
+            peak_bytes: t.accum.peak_bytes,
+        });
+    }
+
+    // Monotonicity across the explicit threshold grid: raising the
+    // threshold can only move rows dense→hash, never the other way.
+    let mut grid: Vec<&SweepPoint> = points
+        .iter()
+        .filter(|p| p.label.starts_with("cols/"))
+        .collect();
+    grid.sort_by_key(|p| p.threshold);
+    for w in grid.windows(2) {
+        ensure!(
+            w[0].dense_rows >= w[1].dense_rows,
+            "{workload}: dense-row count must fall monotonically as the threshold rises \
+             ({} @ {} vs {} @ {})",
+            w[0].dense_rows,
+            w[0].threshold,
+            w[1].dense_rows,
+            w[1].threshold
+        );
+    }
+
+    let best = points
+        .iter()
+        .min_by_key(|p| p.best_ns)
+        .expect("candidate set is never empty")
+        .label
+        .clone();
+    Ok(PairSweep {
+        workload: workload.to_string(),
+        rows: a.rows,
+        cols: b.cols,
+        nnz_a: a.nnz(),
+        nnz_b: b.nnz(),
+        flops: oracle_t.flops,
+        out_nnz: oracle.nnz(),
+        default_threshold,
+        auto_threshold: auto_policy.hash_threshold,
+        best,
+        points,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn tiny_opts() -> TuneOptions {
+        TuneOptions {
+            smoke: true,
+            threads: 2,
+            iters: 1,
+            seed: 7,
+            quiet: true,
+        }
+    }
+
+    /// The CI smoke sweep is green: every point bitwise-equal to the
+    /// oracle, stats sane, all five generator workloads covered.
+    #[test]
+    fn smoke_sweep_is_green() {
+        let report = run_sweep(&tiny_opts()).expect("smoke sweep must pass its own gates");
+        assert_eq!(report.schema, SCHEMA_VERSION);
+        assert_eq!(report.pairs.len(), 5);
+        let names: Vec<&str> = report.pairs.iter().map(|p| p.workload.as_str()).collect();
+        assert!(names.contains(&"hypersparse-2^18"), "{names:?}");
+        for pair in &report.pairs {
+            assert!(pair.points.len() >= 4, "{}: endpoints + auto + grid", pair.workload);
+            assert!(
+                pair.points.iter().any(|p| p.label == pair.best),
+                "{}: best label must be a swept point",
+                pair.workload
+            );
+            // Forced endpoints are always present and exclusive.
+            let dense = pair.points.iter().find(|p| p.label == "dense").unwrap();
+            assert_eq!(dense.hash_rows, 0);
+            let hash = pair.points.iter().find(|p| p.label == "hash").unwrap();
+            assert_eq!(hash.dense_rows, 0);
+            assert_eq!(hash.dense_rows + hash.hash_rows, pair.rows as u64);
+            // The auto point sits on the clamped heuristic grid.
+            let auto = pair.points.iter().find(|p| p.label == "auto").unwrap();
+            assert_eq!(auto.threshold, pair.auto_threshold);
+        }
+        // Fixed seed ⇒ the sweep's structural outputs are reproducible.
+        let again = run_sweep(&tiny_opts()).unwrap();
+        for (x, y) in report.pairs.iter().zip(&again.pairs) {
+            assert_eq!(x.flops, y.flops);
+            assert_eq!(x.out_nnz, y.out_nnz);
+            assert_eq!(x.auto_threshold, y.auto_threshold);
+            let splits = |p: &PairSweep| -> Vec<(String, u64, u64)> {
+                p.points
+                    .iter()
+                    .map(|pt| (pt.label.clone(), pt.dense_rows, pt.hash_rows))
+                    .collect()
+            };
+            assert_eq!(splits(x), splits(y), "{}: lane splits must be deterministic", x.workload);
+        }
+    }
+
+    /// The JSON schema round-trips: serialize → parse → identical report
+    /// (timing fields included — shortest-round-trip float formatting).
+    #[test]
+    fn report_json_round_trips() {
+        let report = run_sweep(&tiny_opts()).unwrap();
+        for text in [
+            report.to_json().to_string_pretty(),
+            report.to_json().to_string_compact(),
+        ] {
+            let parsed = TuneReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(parsed, report);
+        }
+        // Schema mismatches are rejected, not silently misparsed.
+        let mut wrong = report.to_json();
+        if let Json::Obj(pairs) = &mut wrong {
+            pairs[0].1 = Json::u64(SCHEMA_VERSION + 1);
+        }
+        assert!(TuneReport::from_json(&wrong).is_err());
+        // The rendered artifacts exist and mention every workload.
+        let table = report.render_table().render();
+        let summaries = report.summary_lines();
+        assert_eq!(summaries.len(), report.pairs.len());
+        for pair in &report.pairs {
+            assert!(table.contains(&pair.workload));
+        }
+    }
+}

@@ -1,0 +1,233 @@
+//! The machine-readable tune report: one record per swept point, grouped
+//! by workload pair, serialized to JSON (`smash tune --out`) and rendered
+//! as a console table. The JSON schema is versioned ([`SCHEMA_VERSION`])
+//! and round-trips exactly through [`TuneReport::to_json`] /
+//! [`TuneReport::from_json`] — asserted by the test suite, so CI tooling
+//! can parse reports without guessing.
+
+use crate::report::Table;
+use crate::spgemm::AccumMode;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::time::Duration;
+
+/// Bump when a field is added/renamed/retyped; parsers reject mismatches.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// One swept accumulator policy on one workload pair.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepPoint {
+    /// Sweep label: `dense`, `hash`, `auto`, or `cols/<div>`.
+    pub label: String,
+    /// Resolved accumulator mode the numeric pass ran with.
+    pub mode: AccumMode,
+    /// Resolved adaptive threshold (present but inert for forced modes).
+    pub threshold: u64,
+    /// Fastest timed numeric pass, nanoseconds.
+    pub best_ns: u64,
+    /// Mean timed numeric pass, nanoseconds.
+    pub mean_ns: u64,
+    /// Rows the adaptive policy routed to the dense lane.
+    pub dense_rows: u64,
+    /// Rows routed to the hash lane.
+    pub hash_rows: u64,
+    /// Mean hash-lane probes per upsert (0 when no row hashed).
+    pub mean_probes: f64,
+    /// Peak per-worker accumulator heap bytes.
+    pub peak_bytes: u64,
+}
+
+/// All swept points of one generator-suite workload pair.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PairSweep {
+    pub workload: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz_a: usize,
+    pub nnz_b: usize,
+    /// Total FMAs of the product (sweep-invariant).
+    pub flops: u64,
+    /// Exact output nnz (sweep-invariant).
+    pub out_nnz: usize,
+    /// What the global default (`cols / 16`) resolves to on this pair.
+    pub default_threshold: u64,
+    /// What `--accum auto` resolves to on this pair.
+    pub auto_threshold: u64,
+    /// Label of the fastest point (by `best_ns`).
+    pub best: String,
+    pub points: Vec<SweepPoint>,
+}
+
+/// A full sweep run: configuration + per-pair results.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuneReport {
+    pub schema: u64,
+    pub smoke: bool,
+    pub threads: usize,
+    pub iters: usize,
+    pub seed: u64,
+    pub pairs: Vec<PairSweep>,
+}
+
+impl SweepPoint {
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("label".into(), Json::Str(self.label.clone())),
+            ("mode".into(), Json::Str(self.mode.name().to_string())),
+            ("threshold".into(), Json::u64(self.threshold)),
+            ("best_ns".into(), Json::u64(self.best_ns)),
+            ("mean_ns".into(), Json::u64(self.mean_ns)),
+            ("dense_rows".into(), Json::u64(self.dense_rows)),
+            ("hash_rows".into(), Json::u64(self.hash_rows)),
+            ("mean_probes".into(), Json::Num(self.mean_probes)),
+            ("peak_bytes".into(), Json::u64(self.peak_bytes)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<SweepPoint> {
+        let mode = j.field("mode")?.as_str()?;
+        Ok(SweepPoint {
+            label: j.field("label")?.as_str()?.to_string(),
+            mode: AccumMode::parse(mode)
+                .with_context(|| format!("unknown accumulator mode `{mode}`"))?,
+            threshold: j.field("threshold")?.as_u64()?,
+            best_ns: j.field("best_ns")?.as_u64()?,
+            mean_ns: j.field("mean_ns")?.as_u64()?,
+            dense_rows: j.field("dense_rows")?.as_u64()?,
+            hash_rows: j.field("hash_rows")?.as_u64()?,
+            mean_probes: j.field("mean_probes")?.as_f64()?,
+            peak_bytes: j.field("peak_bytes")?.as_u64()?,
+        })
+    }
+}
+
+impl PairSweep {
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("workload".into(), Json::Str(self.workload.clone())),
+            ("rows".into(), Json::u64(self.rows as u64)),
+            ("cols".into(), Json::u64(self.cols as u64)),
+            ("nnz_a".into(), Json::u64(self.nnz_a as u64)),
+            ("nnz_b".into(), Json::u64(self.nnz_b as u64)),
+            ("flops".into(), Json::u64(self.flops)),
+            ("out_nnz".into(), Json::u64(self.out_nnz as u64)),
+            ("default_threshold".into(), Json::u64(self.default_threshold)),
+            ("auto_threshold".into(), Json::u64(self.auto_threshold)),
+            ("best".into(), Json::Str(self.best.clone())),
+            (
+                "points".into(),
+                Json::Arr(self.points.iter().map(SweepPoint::to_json).collect()),
+            ),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<PairSweep> {
+        Ok(PairSweep {
+            workload: j.field("workload")?.as_str()?.to_string(),
+            rows: j.field("rows")?.as_u64()? as usize,
+            cols: j.field("cols")?.as_u64()? as usize,
+            nnz_a: j.field("nnz_a")?.as_u64()? as usize,
+            nnz_b: j.field("nnz_b")?.as_u64()? as usize,
+            flops: j.field("flops")?.as_u64()?,
+            out_nnz: j.field("out_nnz")?.as_u64()? as usize,
+            default_threshold: j.field("default_threshold")?.as_u64()?,
+            auto_threshold: j.field("auto_threshold")?.as_u64()?,
+            best: j.field("best")?.as_str()?.to_string(),
+            points: j
+                .field("points")?
+                .as_arr()?
+                .iter()
+                .map(SweepPoint::from_json)
+                .collect::<Result<Vec<_>>>()?,
+        })
+    }
+}
+
+impl TuneReport {
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("schema".into(), Json::u64(self.schema)),
+            ("smoke".into(), Json::Bool(self.smoke)),
+            ("threads".into(), Json::u64(self.threads as u64)),
+            ("iters".into(), Json::u64(self.iters as u64)),
+            ("seed".into(), Json::u64(self.seed)),
+            (
+                "pairs".into(),
+                Json::Arr(self.pairs.iter().map(PairSweep::to_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<TuneReport> {
+        let schema = j.field("schema")?.as_u64()?;
+        anyhow::ensure!(
+            schema == SCHEMA_VERSION,
+            "tune report schema {schema} != supported {SCHEMA_VERSION}"
+        );
+        Ok(TuneReport {
+            schema,
+            smoke: j.field("smoke")?.as_bool()?,
+            threads: j.field("threads")?.as_u64()? as usize,
+            iters: j.field("iters")?.as_u64()? as usize,
+            seed: j.field("seed")?.as_u64()?,
+            pairs: j
+                .field("pairs")?
+                .as_arr()?
+                .iter()
+                .map(PairSweep::from_json)
+                .collect::<Result<Vec<_>>>()?,
+        })
+    }
+
+    /// Console rendering: every swept point, grouped by workload.
+    pub fn render_table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "Accumulator threshold sweep ({} suite, {} threads, best of {})",
+                if self.smoke { "smoke" } else { "full" },
+                self.threads,
+                self.iters
+            ),
+            &[
+                "workload", "point", "mode", "threshold", "best", "mean", "dense rows",
+                "hash rows", "probes/upsert", "peak accum",
+            ],
+        );
+        for pair in &self.pairs {
+            for p in &pair.points {
+                let marker = if p.label == pair.best { " *" } else { "" };
+                t.push_row(vec![
+                    pair.workload.clone(),
+                    format!("{}{marker}", p.label),
+                    p.mode.name().to_string(),
+                    p.threshold.to_string(),
+                    fmt_ns(p.best_ns),
+                    fmt_ns(p.mean_ns),
+                    crate::util::fmt_count(p.dense_rows),
+                    crate::util::fmt_count(p.hash_rows),
+                    format!("{:.2}", p.mean_probes),
+                    crate::util::fmt_bytes(p.peak_bytes),
+                ]);
+            }
+        }
+        t
+    }
+
+    /// One-line-per-workload conclusions (fastest point, default vs auto).
+    pub fn summary_lines(&self) -> Vec<String> {
+        self.pairs
+            .iter()
+            .map(|p| {
+                format!(
+                    "{}: fastest = {} (* above); default cols/16 -> threshold {}, \
+                     auto heuristic -> {}",
+                    p.workload, p.best, p.default_threshold, p.auto_threshold
+                )
+            })
+            .collect()
+    }
+}
+
+fn fmt_ns(ns: u64) -> String {
+    crate::util::timer::fmt_duration(Duration::from_nanos(ns))
+}

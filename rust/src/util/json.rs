@@ -1,0 +1,418 @@
+//! A minimal JSON value, writer, and parser (serde is unavailable in the
+//! offline build). Covers the full JSON grammar at the fidelity the tune
+//! reports need:
+//!
+//! * objects keep **insertion order** (a `Vec` of pairs, not a map), so
+//!   serialization is deterministic and diffs are stable;
+//! * numbers are `f64` — integers round-trip exactly up to 2^53, far past
+//!   any counter we serialize;
+//! * `Display`-formatted floats use Rust's shortest-round-trip
+//!   representation, so `parse(to_string(x)) == x` bitwise for every
+//!   finite value (NaN/Inf are not valid JSON and are rejected on write).
+
+use anyhow::{bail, Context, Result};
+
+/// A JSON document.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    /// Ordered key/value pairs (insertion order preserved).
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Convenience constructor for integer counters.
+    pub fn u64(v: u64) -> Json {
+        Json::Num(v as f64)
+    }
+
+    /// Object field lookup (first match).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Required object field, with a path-ish error message.
+    pub fn field(&self, key: &str) -> Result<&Json> {
+        self.get(key)
+            .with_context(|| format!("missing JSON field `{key}`"))
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(v) => Ok(*v),
+            other => bail!("expected number, found {}", other.kind()),
+        }
+    }
+
+    pub fn as_u64(&self) -> Result<u64> {
+        let v = self.as_f64()?;
+        if v < 0.0 || v.fract() != 0.0 || v > (1u64 << 53) as f64 {
+            bail!("expected unsigned integer, found {v}");
+        }
+        Ok(v as u64)
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Json::Bool(v) => Ok(*v),
+            other => bail!("expected bool, found {}", other.kind()),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            other => bail!("expected string, found {}", other.kind()),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(items) => Ok(items),
+            other => bail!("expected array, found {}", other.kind()),
+        }
+    }
+
+    fn kind(&self) -> &'static str {
+        match self {
+            Json::Null => "null",
+            Json::Bool(_) => "bool",
+            Json::Num(_) => "number",
+            Json::Str(_) => "string",
+            Json::Arr(_) => "array",
+            Json::Obj(_) => "object",
+        }
+    }
+
+    /// Compact single-line serialization.
+    pub fn to_string_compact(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, None, 0);
+        out
+    }
+
+    /// Two-space-indented serialization (what `smash tune --out` writes).
+    pub fn to_string_pretty(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, Some(2), 0);
+        out.push('\n');
+        out
+    }
+
+    fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
+        let pad = |out: &mut String, depth: usize| {
+            if let Some(w) = indent {
+                out.push('\n');
+                for _ in 0..w * depth {
+                    out.push(' ');
+                }
+            }
+        };
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(v) => {
+                debug_assert!(v.is_finite(), "NaN/Inf are not representable in JSON");
+                // `{}` on f64 is the shortest representation that parses
+                // back to the same value; force a trailing `.0`-free form
+                // for integers (Display already omits it).
+                out.push_str(&v.to_string());
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    pad(out, depth + 1);
+                    item.write(out, indent, depth + 1);
+                }
+                if !items.is_empty() {
+                    pad(out, depth);
+                }
+                out.push(']');
+            }
+            Json::Obj(pairs) => {
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    pad(out, depth + 1);
+                    write_escaped(out, k);
+                    out.push(':');
+                    if indent.is_some() {
+                        out.push(' ');
+                    }
+                    v.write(out, indent, depth + 1);
+                }
+                if !pairs.is_empty() {
+                    pad(out, depth);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Parse one JSON document (trailing whitespace allowed, trailing
+    /// garbage rejected).
+    pub fn parse(text: &str) -> Result<Json> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let value = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            bail!("trailing characters at byte {pos}");
+        }
+        Ok(value)
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn skip_ws(bytes: &[u8], pos: &mut usize) {
+    while *pos < bytes.len() && matches!(bytes[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(bytes: &[u8], pos: &mut usize, b: u8) -> Result<()> {
+    if *pos < bytes.len() && bytes[*pos] == b {
+        *pos += 1;
+        Ok(())
+    } else {
+        bail!("expected `{}` at byte {}", b as char, *pos)
+    }
+}
+
+fn parse_value(bytes: &[u8], pos: &mut usize) -> Result<Json> {
+    skip_ws(bytes, pos);
+    match bytes.get(*pos) {
+        None => bail!("unexpected end of input"),
+        Some(b'n') => parse_literal(bytes, pos, "null", Json::Null),
+        Some(b't') => parse_literal(bytes, pos, "true", Json::Bool(true)),
+        Some(b'f') => parse_literal(bytes, pos, "false", Json::Bool(false)),
+        Some(b'"') => Ok(Json::Str(parse_string(bytes, pos)?)),
+        Some(b'[') => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(bytes, pos);
+            if bytes.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            loop {
+                items.push(parse_value(bytes, pos)?);
+                skip_ws(bytes, pos);
+                match bytes.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(items));
+                    }
+                    _ => bail!("expected `,` or `]` at byte {}", *pos),
+                }
+            }
+        }
+        Some(b'{') => {
+            *pos += 1;
+            let mut pairs = Vec::new();
+            skip_ws(bytes, pos);
+            if bytes.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Json::Obj(pairs));
+            }
+            loop {
+                skip_ws(bytes, pos);
+                let key = parse_string(bytes, pos)?;
+                skip_ws(bytes, pos);
+                expect(bytes, pos, b':')?;
+                let value = parse_value(bytes, pos)?;
+                pairs.push((key, value));
+                skip_ws(bytes, pos);
+                match bytes.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(pairs));
+                    }
+                    _ => bail!("expected `,` or `}}` at byte {}", *pos),
+                }
+            }
+        }
+        Some(_) => parse_number(bytes, pos),
+    }
+}
+
+fn parse_literal(bytes: &[u8], pos: &mut usize, lit: &str, value: Json) -> Result<Json> {
+    if bytes[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(value)
+    } else {
+        bail!("invalid literal at byte {}", *pos)
+    }
+}
+
+fn parse_number(bytes: &[u8], pos: &mut usize) -> Result<Json> {
+    let start = *pos;
+    if bytes.get(*pos) == Some(&b'-') {
+        *pos += 1;
+    }
+    while *pos < bytes.len()
+        && matches!(bytes[*pos], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+    {
+        *pos += 1;
+    }
+    let slice = std::str::from_utf8(&bytes[start..*pos]).expect("ascii number slice");
+    let v: f64 = slice
+        .parse()
+        .with_context(|| format!("invalid number `{slice}` at byte {start}"))?;
+    if !v.is_finite() {
+        bail!("non-finite number `{slice}` at byte {start}");
+    }
+    Ok(Json::Num(v))
+}
+
+fn parse_string(bytes: &[u8], pos: &mut usize) -> Result<String> {
+    expect(bytes, pos, b'"')?;
+    let mut out = String::new();
+    let mut chunk_start = *pos;
+    loop {
+        match bytes.get(*pos) {
+            None => bail!("unterminated string"),
+            Some(b'"') => {
+                out.push_str(std::str::from_utf8(&bytes[chunk_start..*pos])?);
+                *pos += 1;
+                return Ok(out);
+            }
+            Some(b'\\') => {
+                out.push_str(std::str::from_utf8(&bytes[chunk_start..*pos])?);
+                *pos += 1;
+                let esc = bytes.get(*pos).context("unterminated escape")?;
+                *pos += 1;
+                match esc {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'b' => out.push('\u{0008}'),
+                    b'f' => out.push('\u{000c}'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'u' => {
+                        let hi = parse_hex4(bytes, pos)?;
+                        let code = if (0xD800..0xDC00).contains(&hi) {
+                            // Surrogate pair: the low half must follow.
+                            expect(bytes, pos, b'\\')?;
+                            expect(bytes, pos, b'u')?;
+                            let lo = parse_hex4(bytes, pos)?;
+                            if !(0xDC00..0xE000).contains(&lo) {
+                                bail!("invalid low surrogate \\u{lo:04x}");
+                            }
+                            0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                        } else {
+                            hi
+                        };
+                        out.push(char::from_u32(code).context("invalid unicode escape")?);
+                    }
+                    other => bail!("invalid escape `\\{}`", *other as char),
+                }
+                chunk_start = *pos;
+            }
+            Some(_) => *pos += 1,
+        }
+    }
+}
+
+fn parse_hex4(bytes: &[u8], pos: &mut usize) -> Result<u32> {
+    let slice = bytes
+        .get(*pos..*pos + 4)
+        .context("truncated \\u escape")?;
+    *pos += 4;
+    u32::from_str_radix(std::str::from_utf8(slice)?, 16).context("invalid \\u escape")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_document() {
+        let doc = Json::Obj(vec![
+            ("schema".into(), Json::u64(1)),
+            ("name".into(), Json::Str("hypersparse-2^18 \"wide\"".into())),
+            ("ok".into(), Json::Bool(true)),
+            ("nothing".into(), Json::Null),
+            (
+                "values".into(),
+                Json::Arr(vec![Json::Num(1.5), Json::Num(-0.25), Json::u64(1 << 50)]),
+            ),
+            ("empty_arr".into(), Json::Arr(vec![])),
+            ("empty_obj".into(), Json::Obj(vec![])),
+        ]);
+        for text in [doc.to_string_compact(), doc.to_string_pretty()] {
+            assert_eq!(Json::parse(&text).unwrap(), doc, "source: {text}");
+        }
+    }
+
+    #[test]
+    fn floats_round_trip_bitwise() {
+        for v in [0.1, 1.0 / 3.0, 2.5e-300, 7.23e18, f64::MIN_POSITIVE] {
+            let j = Json::Num(v);
+            let parsed = Json::parse(&j.to_string_compact()).unwrap();
+            assert_eq!(parsed.as_f64().unwrap().to_bits(), v.to_bits(), "{v}");
+        }
+    }
+
+    #[test]
+    fn string_escapes() {
+        let s = "tab\t newline\n quote\" backslash\\ nul\u{0001} emoji\u{1F600}";
+        let j = Json::Str(s.to_string());
+        assert_eq!(Json::parse(&j.to_string_compact()).unwrap(), j);
+        // Escaped input forms, including a \uXXXX surrogate pair.
+        let parsed = Json::parse(r#""aA 😀 \/ \b\f \u0041 \uD83D\uDE00""#).unwrap();
+        assert_eq!(
+            parsed.as_str().unwrap(),
+            "aA \u{1F600} / \u{0008}\u{000c} A \u{1F600}"
+        );
+        assert!(Json::parse(r#""\uD83D alone""#).is_err(), "lone high surrogate");
+    }
+
+    #[test]
+    fn accessors_and_errors() {
+        let doc = Json::parse(r#"{"a": 3, "b": [1, 2], "c": "x"}"#).unwrap();
+        assert_eq!(doc.field("a").unwrap().as_u64().unwrap(), 3);
+        assert_eq!(doc.field("b").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(doc.field("c").unwrap().as_str().unwrap(), "x");
+        assert!(doc.field("missing").is_err());
+        assert!(doc.field("c").unwrap().as_u64().is_err());
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("12 34").is_err());
+        assert!(Json::parse("1e999").is_err(), "overflowing number must be rejected");
+        assert!(Json::Num(2.75).as_u64().is_err());
+    }
+}

@@ -1,6 +1,7 @@
 //! Small in-tree utilities that substitute for crates unavailable in the
 //! offline build environment (`rand`, `proptest`, `criterion`).
 
+pub mod json;
 pub mod prng;
 pub mod quick;
 pub mod timer;
