@@ -1,0 +1,130 @@
+//! Graph workloads on the SMASH serving fast path: one adjacency matrix
+//! registered with the coordinator, then BFS, all-pairs shortest paths,
+//! transitive closure, and triangle counting served as semiring SpGEMM
+//! jobs on the parallel backend (persistent worker pool, hybrid
+//! accumulators) — with every same-pair product, *whatever its semiring*,
+//! sharing one cached value-free symbolic plan.
+//!
+//! Every served result is checked against the serial oracle
+//! implementations before it is printed.
+//!
+//! Run: `cargo run --release --example graph_serving`
+
+use smash::coordinator::{Coordinator, Job, ServerConfig};
+use smash::formats::Csr;
+use smash::gen::{rmat, undirected, RmatParams};
+use smash::spgemm::graph::{
+    apsp_minplus, apsp_minplus_served, bfs_levels, bfs_levels_served, transitive_closure,
+    transitive_closure_served, triangles, triangles_served,
+};
+use smash::spgemm::{spgemm_semiring, AccumSpec, Dataflow, SemiringKind};
+
+/// Full structural + value equality — `.data` alone degenerates to a
+/// count check on all-ones boolean matrices.
+fn assert_bitwise(c: &Csr, oracle: &Csr, label: &str) {
+    assert_eq!(c.row_ptr, oracle.row_ptr, "{label}: row_ptr");
+    assert_eq!(c.col_idx, oracle.col_idx, "{label}: col_idx");
+    assert_eq!(c.data, oracle.data, "{label}: data");
+}
+
+fn main() {
+    let threads = 4;
+    // Symmetrized, loop-free 0/1 graph from an R-MAT sample — a simple
+    // undirected graph so the triangle count is well-defined.
+    let adj = undirected(&rmat(&RmatParams::new(9, 3_000, 42)));
+    println!(
+        "graph: {} vertices, {} undirected edges",
+        adj.rows,
+        adj.nnz() / 2
+    );
+
+    let mut coord = Coordinator::start(ServerConfig {
+        workers: 4,
+        queue_depth: 8,
+        ..ServerConfig::default()
+    });
+    // ONE resident copy serves every job below — BFS frontiers are the
+    // only inline (per-request) operands.
+    let id = coord.register("adjacency", adj.clone());
+
+    // ---- Triangle counting: A² as one arithmetic job on the registered
+    // pair (this computes — and caches — the pair's symbolic plan).
+    let tri = triangles_served(&mut coord, id, threads);
+    assert_eq!(tri, triangles(&adj), "served triangles must match serial");
+    println!("triangle count (tr(A³)/6, served arithmetic semiring): {tri}");
+
+    // ---- Transitive closure: boolean squaring. The first A⊗A runs on
+    // the registered pair and REUSES the plan the arithmetic job cached —
+    // the mixed-semiring batching story in one line.
+    let tc = transitive_closure_served(&mut coord, id, threads);
+    assert_bitwise(&tc, &transitive_closure(&adj), "served closure vs serial");
+    println!(
+        "transitive closure (served boolean semiring): {} reachable pairs",
+        tc.nnz()
+    );
+
+    // ---- Multi-source BFS: one boolean frontier ⊗ A job per level.
+    let levels = bfs_levels_served(&mut coord, id, &[0], threads);
+    assert_eq!(levels, bfs_levels(&adj, &[0]), "served BFS must match serial");
+    let max_depth = levels
+        .iter()
+        .filter(|l| **l != usize::MAX)
+        .max()
+        .copied()
+        .unwrap_or(0);
+    let unreachable = levels.iter().filter(|l| **l == usize::MAX).count();
+    println!("BFS level histogram (from vertex 0):");
+    for d in 0..=max_depth {
+        let count = levels.iter().filter(|l| **l == d).count();
+        println!("  level {d}: {count} vertices");
+    }
+    println!("  unreachable: {unreachable} vertices");
+
+    // ---- APSP: min-plus squaring rounds, each a served product.
+    let d = apsp_minplus_served(&mut coord, id, 4, threads);
+    assert_bitwise(&d, &apsp_minplus(&adj, 4), "served APSP vs serial");
+    println!(
+        "APSP (served min-plus semiring, 4 squaring rounds): {} finite pairs",
+        d.nnz()
+    );
+
+    // ---- A mixed-semiring burst against the registered pair: four jobs,
+    // four semirings, ONE symbolic plan between them (plans are
+    // value-free). Each product is bitwise-checked against the serial
+    // semiring oracle.
+    let mut ids = Vec::new();
+    for kind in SemiringKind::ALL {
+        ids.push((
+            kind,
+            coord.submit(Job::NativeSpgemm {
+                a: id.into(),
+                b: id.into(),
+                dataflow: Dataflow::ParGustavson {
+                    threads,
+                    accum: AccumSpec::default(),
+                    semiring: kind,
+                },
+            }),
+        ));
+    }
+    let responses = coord.collect_all();
+    for (kind, job) in ids {
+        let r = &responses[&job];
+        let oracle = spgemm_semiring(&adj, &adj, kind);
+        assert_bitwise(&r.c, &oracle, &format!("{} burst job", kind.name()));
+        assert_eq!(r.semiring, Some(kind));
+    }
+    println!("mixed-semiring burst: 4 jobs (arith/bool/minplus/maxtimes) served bitwise-correct");
+
+    // Every (adjacency, adjacency) product above — the arithmetic A², the
+    // closure's first boolean square, and the 4-job burst — shared ONE
+    // symbolic pass.
+    let (passes, hits) = coord.symbolic_stats();
+    println!(
+        "plan-cache: {passes} symbolic pass(es) computed, {hits} cache hit(s) across semirings"
+    );
+    assert_eq!(passes, 1, "same-pair graph jobs must share one symbolic plan");
+    assert!(hits >= 5, "closure + burst must all hit the cached plan");
+
+    coord.shutdown();
+}

@@ -12,7 +12,7 @@ use smash::config::{KernelConfig, SimConfig};
 use smash::coordinator::{schedule_windows, Coordinator, Job, SchedPolicy, ServerConfig};
 use smash::gen::{rmat, RmatParams};
 use smash::kernels::plan_windows;
-use smash::spgemm::{AccumMode, AccumSpec, AccumStats, Dataflow, WorkerPool};
+use smash::spgemm::{AccumMode, AccumSpec, AccumStats, Dataflow, SemiringKind, WorkerPool};
 use std::time::Instant;
 
 fn main() {
@@ -78,6 +78,7 @@ fn main() {
             dataflow: Dataflow::ParGustavson {
                 threads: 4,
                 accum: AccumMode::Adaptive.into(),
+                semiring: SemiringKind::Arithmetic,
             },
         });
         submitted += 1;
@@ -152,6 +153,7 @@ fn main() {
         dataflow: Dataflow::ParGustavson {
             threads: 4,
             accum: AccumSpec::Auto,
+            semiring: SemiringKind::Arithmetic,
         },
     });
     let auto_resp = coord.collect_one().expect("auto job outstanding");
@@ -188,6 +190,7 @@ fn main() {
         dataflow: Dataflow::ParGustavson {
             threads: 2,
             accum: AccumMode::Adaptive.into(),
+            semiring: SemiringKind::Arithmetic,
         },
     });
     // ...then a third registration pushes past the budget. G0 was touched

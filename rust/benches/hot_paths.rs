@@ -14,8 +14,9 @@ use smash::kernels::{
     insertion_sort_cost, insertion_sort_cost_quadratic, run_smash, TagTable,
 };
 use smash::spgemm::{
-    gustavson, par_gustavson, par_gustavson_accum, par_gustavson_spawning, par_gustavson_spec,
-    par_gustavson_with_plan, rowwise_hash, symbolic_plan, AccumMode, AccumSpec, Dataflow,
+    gustavson, par_gustavson, par_gustavson_accum, par_gustavson_kind, par_gustavson_spawning,
+    par_gustavson_spec, par_gustavson_with_plan, rowwise_hash, spgemm_semiring, symbolic_plan,
+    AccumMode, AccumSpec, Dataflow, SemiringKind,
 };
 use smash::util::prng::Xoshiro256;
 use std::sync::Arc;
@@ -149,6 +150,29 @@ fn main() {
         });
     }
 
+    // ---- Semiring sweep (the graph fast path): all four semirings
+    // through the pooled parallel backend on the same 2^11 R-MAT pair,
+    // each bitwise-checked against the serial semiring oracle before
+    // timing. The arithmetic leg doubles as the no-regression baseline
+    // for the semiring generalization (compare with
+    // par_gustavson_t4_pooled_2^11 above).
+    for kind in SemiringKind::ALL {
+        let oracle = spgemm_semiring(&a, &b, kind);
+        let (c, t, _) = par_gustavson_kind(&a, &b, 4, AccumSpec::default(), kind);
+        assert_eq!(oracle.row_ptr, c.row_ptr, "{}", kind.name());
+        assert_eq!(oracle.col_idx, c.col_idx, "{}", kind.name());
+        assert_eq!(
+            oracle.data,
+            c.data,
+            "{}: parallel semiring product must match the serial oracle bitwise",
+            kind.name()
+        );
+        assert_eq!(t.accum.dense_rows + t.accum.hash_rows, a.rows as u64);
+        h.run(&format!("par_gustavson_t4_semiring_{}_2^11", kind.name()), || {
+            par_gustavson_kind(&a, &b, 4, AccumSpec::default(), kind)
+        });
+    }
+
     // Batched vs independent serving: a 16-job burst against one
     // registered operand pair, with the coordinator's symbolic cache on
     // (one symbolic pass, 15 reuses) vs off (16 independent passes).
@@ -170,6 +194,7 @@ fn main() {
                 dataflow: Dataflow::ParGustavson {
                     threads: 2,
                     accum: AccumSpec::default(),
+                    semiring: SemiringKind::Arithmetic,
                 },
             });
         }

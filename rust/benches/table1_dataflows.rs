@@ -5,7 +5,7 @@
 
 use smash::bench::{self, Bench};
 use smash::gen::{rmat, RmatParams};
-use smash::spgemm::{AccumSpec, Dataflow};
+use smash::spgemm::{AccumSpec, Dataflow, SemiringKind};
 
 fn main() {
     println!("# Table 1.1 / Table 1.2\n");
@@ -25,6 +25,7 @@ fn main() {
         let df = Dataflow::ParGustavson {
             threads,
             accum: AccumSpec::default(),
+            semiring: SemiringKind::Arithmetic,
         };
         bench_h.run(&format!("{} (t={threads})", df.name()), || {
             df.multiply(&a, &b)

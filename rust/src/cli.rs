@@ -17,7 +17,7 @@ use crate::formats::mm;
 use crate::gen::{rmat, RmatParams};
 use crate::kernels::{run_all_versions, run_smash};
 use crate::report::bar_chart;
-use crate::spgemm::{AccumMode, AccumSpec, Dataflow};
+use crate::spgemm::{AccumMode, AccumSpec, Dataflow, SemiringKind};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 
@@ -81,6 +81,7 @@ USAGE: smash <tables|figures|run|gcn|gen|serve|tune|help> [flags]
   serve   [--jobs 8] [--workers 4] [--threads 4] [--log2n 10] [--edges 20000] [--smash]
           [--no-batch] [--spawn] [--max-resident-mb N]
           [--accum adaptive|dense|hash|auto] [--accum-threshold N]
+          [--semiring arith|bool|minplus|maxtimes]
           — register one resident matrix pair, serve a burst of zero-copy
           requests against it (native parallel Gustavson on the persistent
           worker pool, or --smash sim). Jobs sharing the registered pair
@@ -90,7 +91,10 @@ USAGE: smash <tables|figures|run|gcn|gen|serve|tune|help> [flags]
           unlimited); --accum picks the per-row accumulator policy
           (adaptive = hash light rows / dense heavy rows, keyed off the
           symbolic FLOPs bound; auto = per-matrix heuristic threshold);
-          --accum-threshold overrides the adaptive switch point (FLOPs)
+          --accum-threshold overrides the adaptive switch point (FLOPs);
+          --semiring folds products under an algebraic semiring (boolean
+          reachability, min-plus shortest paths, max-times reliability) on
+          the same parallel backend and shared symbolic plans
   tune    [--smoke] [--out report.json] [--threads 4] [--iters N] [--seed N]
           — sweep the adaptive accumulator threshold (powers-of-two
           fractions of b.cols, forced dense/hash endpoints, and the auto
@@ -98,7 +102,11 @@ USAGE: smash <tables|figures|run|gcn|gen|serve|tune|help> [flags]
           equality at every point; prints a summary table and writes a
           machine-readable JSON report with --out. --smoke runs the tiny
           fixed-seed CI suite (the perf-regression gate)
-  graph   [--dataset Cora] — BFS / APSP / closure / triangles via semiring SpGEMM
+  graph   [--dataset Cora] [--serial] [--workers 4] [--threads 4]
+          — BFS / APSP / closure / triangles via semiring SpGEMM, served
+          through the coordinator's parallel backend (one registered
+          adjacency, per-job semirings, shared symbolic plans); --serial
+          runs the single-threaded oracle implementations instead
   die     [--blocks 4] [--policy lpt|rr] — multi-block scale-out run
   trace   [--out trace.bin] — record a V2 run's instruction trace, replay it,
           and verify cycle-exact equivalence (execution- vs trace-driven, §4.2)
@@ -354,10 +362,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let spawn = args.get("spawn").is_some();
     let batch = args.get("no-batch").is_none();
     let accum = parse_accum_flags(args)?;
-    // --accum/--accum-threshold only steer the pooled native backend;
-    // reject combinations where the requested policy would be silently
-    // ignored. (`--spawn --accum adaptive` is allowed — adaptive at the
-    // default threshold is what the spawn baseline runs anyway.)
+    let semiring = match args.get("semiring") {
+        None => SemiringKind::Arithmetic,
+        Some(s) => SemiringKind::parse(s)
+            .with_context(|| format!("unknown --semiring `{s}` (arith|bool|minplus|maxtimes)"))?,
+    };
+    // --accum/--accum-threshold/--semiring only steer the pooled native
+    // backend; reject combinations where the requested policy would be
+    // silently ignored. (`--spawn --accum adaptive` is allowed — adaptive
+    // at the default threshold is what the spawn baseline runs anyway.)
     if spawn && accum != AccumSpec::default() {
         bail!(
             "--accum/--accum-threshold have no effect with --spawn \
@@ -366,6 +379,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     if (args.get("accum").is_some() || args.get("accum-threshold").is_some()) && smash {
         bail!("--accum applies to native jobs; --smash runs the simulated SPAD hashtable");
+    }
+    if semiring != SemiringKind::Arithmetic && smash {
+        bail!("--semiring applies to native jobs; the simulated SMASH kernel is arithmetic-only");
+    }
+    if semiring != SemiringKind::Arithmetic && spawn {
+        bail!("--semiring has no effect with --spawn (the spawn baseline is arithmetic-only)");
     }
     // 0 (the default) = unlimited; N bounds the registry to N MiB with
     // LRU eviction past it.
@@ -393,7 +412,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let dataflow = if spawn {
         Dataflow::ParGustavsonSpawn { threads }
     } else {
-        Dataflow::ParGustavson { threads, accum }
+        Dataflow::ParGustavson { threads, accum, semiring }
     };
     let t0 = std::time::Instant::now();
     let mut served = 0usize;
@@ -449,8 +468,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             format!("native par-Gustavson({threads}, spawn-per-call)")
         } else {
             format!(
-                "native par-Gustavson({threads}, pooled, {} accumulator)",
-                accum.describe()
+                "native par-Gustavson({threads}, pooled, {} accumulator, {} semiring)",
+                accum.describe(),
+                semiring.name()
             )
         },
         crate::util::timer::fmt_duration(wall),
@@ -549,7 +569,11 @@ fn cmd_tune(args: &Args) -> Result<()> {
 }
 
 fn cmd_graph(args: &Args) -> Result<()> {
-    use crate::spgemm::graph::{apsp_minplus, bfs_levels, transitive_closure, triangles};
+    use crate::spgemm::graph::{
+        apsp_minplus, apsp_minplus_served, bfs_levels, bfs_levels_served, transitive_closure,
+        transitive_closure_served, triangles, triangles_served,
+    };
+    use crate::util::timer::{fmt_duration, time};
     // `--in file` loads a real graph (.mtx or SNAP edge list); otherwise a
     // Table 1.1 synthetic analog.
     let (label, adj) = if let Some(path) = args.get("in") {
@@ -570,14 +594,43 @@ fn cmd_graph(args: &Args) -> Result<()> {
             crate::gen::dataset_analog(spec, args.get_u64("seed", 7)?),
         )
     };
-    println!("{label}: {} vertices, {} edges", adj.rows, adj.nnz());
-    let (levels, bfs_dt) = crate::util::timer::time(|| bfs_levels(&adj, &[0]));
+    // The served path (default) registers the adjacency once and routes
+    // every product through the coordinator onto the parallel backend —
+    // same-pair jobs share one symbolic plan across semirings. --serial
+    // runs the single-threaded oracle implementations instead.
+    let serial = args.get("serial").is_some();
+    let workers = args.get_u64("workers", 4)? as usize;
+    let threads = args.get_u64("threads", 4)? as usize;
+    println!(
+        "{label}: {} vertices, {} edges ({})",
+        adj.rows,
+        adj.nnz(),
+        if serial {
+            "serial oracle path".to_string()
+        } else {
+            format!("served path: {workers} workers × {threads}-thread jobs")
+        }
+    );
+    let mut coord = if serial {
+        None
+    } else {
+        Some(Coordinator::start(ServerConfig {
+            workers,
+            queue_depth: 8,
+            ..ServerConfig::default()
+        }))
+    };
+    let id_adj = coord.as_mut().map(|c| c.register("adjacency", adj.clone()));
+    let (levels, bfs_dt) = time(|| match (coord.as_mut(), id_adj) {
+        (Some(c), Some(id)) => bfs_levels_served(c, id, &[0], threads),
+        _ => bfs_levels(&adj, &[0]),
+    });
     let reached = levels.iter().filter(|l| **l != usize::MAX).count();
     println!(
         "BFS from vertex 0: reached {reached}/{} (max depth {}) in {}",
         adj.rows,
         levels.iter().filter(|l| **l != usize::MAX).max().unwrap(),
-        crate::util::timer::fmt_duration(bfs_dt)
+        fmt_duration(bfs_dt)
     );
     // restrict the O(n^3 log n) kernels to a subgraph for interactivity
     let n = adj.rows.min(512);
@@ -593,23 +646,38 @@ fn cmd_graph(args: &Args) -> Result<()> {
                 .collect::<Vec<_>>()
         }),
     );
-    let (d, apsp_dt) = crate::util::timer::time(|| apsp_minplus(&sub, 4));
+    let id_sub = coord.as_mut().map(|c| c.register("subgraph", sub.clone()));
+    let (d, apsp_dt) = time(|| match (coord.as_mut(), id_sub) {
+        (Some(c), Some(id)) => apsp_minplus_served(c, id, 4, threads),
+        _ => apsp_minplus(&sub, 4),
+    });
     println!(
         "APSP (min-plus squaring) on {n}-vertex subgraph: {} finite pairs in {}",
         d.nnz(),
-        crate::util::timer::fmt_duration(apsp_dt)
+        fmt_duration(apsp_dt)
     );
-    let (tc, tc_dt) = crate::util::timer::time(|| transitive_closure(&sub));
+    let (tc, tc_dt) = time(|| match (coord.as_mut(), id_sub) {
+        (Some(c), Some(id)) => transitive_closure_served(c, id, threads),
+        _ => transitive_closure(&sub),
+    });
     println!(
         "transitive closure: {} reachable pairs in {}",
         tc.nnz(),
-        crate::util::timer::fmt_duration(tc_dt)
+        fmt_duration(tc_dt)
     );
-    let (tri, tri_dt) = crate::util::timer::time(|| triangles(&sub));
-    println!(
-        "triangles (tr(A³)/6): {tri} in {}",
-        crate::util::timer::fmt_duration(tri_dt)
-    );
+    let (tri, tri_dt) = time(|| match (coord.as_mut(), id_sub) {
+        (Some(c), Some(id)) => triangles_served(c, id, threads),
+        _ => triangles(&sub),
+    });
+    println!("triangles (tr(A³)/6): {tri} in {}", fmt_duration(tri_dt));
+    if let Some(c) = coord {
+        let (passes, hits) = c.symbolic_stats();
+        println!(
+            "plan cache across graph jobs: {passes} symbolic pass(es) computed, {hits} hit(s) \
+             (same-pair products share one value-free plan, even across semirings)"
+        );
+        c.shutdown();
+    }
     Ok(())
 }
 

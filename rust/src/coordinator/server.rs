@@ -46,8 +46,8 @@ use crate::config::{KernelConfig, SimConfig, TablePlacement};
 use crate::formats::Csr;
 use crate::kernels::{plan_windows, run_smash_with_plan, WindowPlan};
 use crate::spgemm::{
-    par_gustavson_spec, par_gustavson_with_plan_policy, symbolic_plan, AccumPolicy, Dataflow,
-    SymbolicPlan, Traffic,
+    par_gustavson_kind, par_gustavson_with_plan_kind, symbolic_plan, AccumPolicy, Dataflow,
+    SemiringKind, SymbolicPlan, Traffic,
 };
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -220,6 +220,11 @@ pub struct Response {
     /// policy. Together with `traffic.accum` this makes the per-job
     /// accumulator behaviour observable in serving.
     pub accum_policy: Option<AccumPolicy>,
+    /// The semiring the job's product was folded under — `Some` for
+    /// [`Dataflow::ParGustavson`] jobs (the semiring-generic path),
+    /// `None` for SMASH-sim jobs and the arithmetic-only reference
+    /// dataflows. Makes mixed-semiring bursts auditable per response.
+    pub semiring: Option<SemiringKind>,
 }
 
 /// Knobs for [`Coordinator::start`].
@@ -311,18 +316,18 @@ impl Coordinator {
                 match msg {
                     Ok(Envelope::Work(id, work)) => {
                         let t0 = std::time::Instant::now();
-                        let (c, sim_ms, registered, symbolic_reused, traffic, accum_policy) =
-                            serve_work(work, &stats);
+                        let served = serve_work(work, &stats);
                         let _ = tx_done.send(Response {
                             id,
-                            c,
-                            sim_ms,
+                            c: served.c,
+                            sim_ms: served.sim_ms,
                             wall: t0.elapsed(),
                             worker,
-                            registered,
-                            symbolic_reused,
-                            traffic,
-                            accum_policy,
+                            registered: served.registered,
+                            symbolic_reused: served.symbolic_reused,
+                            traffic: served.traffic,
+                            accum_policy: served.accum_policy,
+                            semiring: served.semiring,
                         });
                     }
                     Ok(Envelope::Stop) | Err(_) => break,
@@ -705,21 +710,36 @@ fn cached_or_compute<T>(
     }
 }
 
-/// Execute one resolved work item on the calling worker thread, returning
-/// `(product, sim_ms, registered operands, plan provenance, traffic,
-/// resolved accumulator policy)`.
-#[allow(clippy::type_complexity)]
-fn serve_work(
-    work: Work,
-    stats: &SymbolicStats,
-) -> (
-    Csr,
-    Option<f64>,
-    Vec<MatrixId>,
-    Option<bool>,
-    Option<Traffic>,
-    Option<AccumPolicy>,
-) {
+/// What executing one work item produced — everything a [`Response`]
+/// needs beyond the envelope metadata (id, wall time, worker index).
+struct ServedJob {
+    c: Csr,
+    sim_ms: Option<f64>,
+    registered: Vec<MatrixId>,
+    symbolic_reused: Option<bool>,
+    traffic: Option<Traffic>,
+    accum_policy: Option<AccumPolicy>,
+    semiring: Option<SemiringKind>,
+}
+
+impl ServedJob {
+    /// A SMASH-sim result: no native traffic, no accumulator policy, no
+    /// semiring (the simulator is arithmetic-only).
+    fn sim(c: Csr, ms: f64, registered: Vec<MatrixId>, reused: Option<bool>) -> Self {
+        Self {
+            c,
+            sim_ms: Some(ms),
+            registered,
+            symbolic_reused: reused,
+            traffic: None,
+            accum_policy: None,
+            semiring: None,
+        }
+    }
+}
+
+/// Execute one resolved work item on the calling worker thread.
+fn serve_work(work: Work, stats: &SymbolicStats) -> ServedJob {
     match work {
         Work::Smash {
             a,
@@ -735,11 +755,11 @@ fn serve_work(
                         plan_windows(&a, &b, &kernel, &sim)
                     });
                 let run = run_smash_with_plan(&a, &b, &kernel, &sim, &plan);
-                (run.c, Some(run.report.ms), registered, Some(reused), None, None)
+                ServedJob::sim(run.c, run.report.ms, registered, Some(reused))
             }
             None => {
                 let run = crate::kernels::run_smash(&a, &b, &kernel, &sim);
-                (run.c, Some(run.report.ms), registered, None, None, None)
+                ServedJob::sim(run.c, run.report.ms, registered, None)
             }
         },
         Work::Native {
@@ -749,24 +769,50 @@ fn serve_work(
             registered,
             plan,
         } => match (dataflow, plan) {
-            (Dataflow::ParGustavson { threads, accum }, Some(slot)) => {
+            (Dataflow::ParGustavson { threads, accum, semiring }, Some(slot)) => {
                 let (plan, reused) = cached_or_compute(&slot, &stats.passes, &stats.hits, || {
                     symbolic_plan(&a, &b, threads)
                 });
                 // Per-job resolution against the (shared) plan: jobs that
                 // differ only in accumulator spec — mode, threshold, or
-                // auto — reuse one symbolic pass and diverge here.
+                // auto — or in *semiring* reuse one symbolic pass and
+                // diverge here (the plan is value-free, so it is valid
+                // for every semiring).
                 let policy = accum.resolve(b.cols, &plan.row_flops);
-                let (c, t) = par_gustavson_with_plan_policy(&a, &b, threads, &plan, policy);
-                (c, None, registered, Some(reused), Some(t), Some(policy))
+                let (c, t) = par_gustavson_with_plan_kind(&a, &b, threads, &plan, policy, semiring);
+                ServedJob {
+                    c,
+                    sim_ms: None,
+                    registered,
+                    symbolic_reused: Some(reused),
+                    traffic: Some(t),
+                    accum_policy: Some(policy),
+                    semiring: Some(semiring),
+                }
             }
-            (Dataflow::ParGustavson { threads, accum }, None) => {
-                let (c, t, policy) = par_gustavson_spec(&a, &b, threads, accum);
-                (c, None, registered, None, Some(t), Some(policy))
+            (Dataflow::ParGustavson { threads, accum, semiring }, None) => {
+                let (c, t, policy) = par_gustavson_kind(&a, &b, threads, accum, semiring);
+                ServedJob {
+                    c,
+                    sim_ms: None,
+                    registered,
+                    symbolic_reused: None,
+                    traffic: Some(t),
+                    accum_policy: Some(policy),
+                    semiring: Some(semiring),
+                }
             }
             (df, _) => {
                 let (c, t) = df.multiply(&a, &b);
-                (c, None, registered, None, Some(t), None)
+                ServedJob {
+                    c,
+                    sim_ms: None,
+                    registered,
+                    symbolic_reused: None,
+                    traffic: Some(t),
+                    accum_policy: None,
+                    semiring: None,
+                }
             }
         },
     }
@@ -956,6 +1002,7 @@ mod tests {
                 dataflow: Dataflow::ParGustavson {
                     threads: 2,
                     accum: AccumSpec::default(),
+                    semiring: SemiringKind::Arithmetic,
                 },
             });
         }
@@ -1003,6 +1050,7 @@ mod tests {
                 dataflow: Dataflow::ParGustavson {
                     threads: 2,
                     accum: AccumSpec::default(),
+                    semiring: SemiringKind::Arithmetic,
                 },
             });
         }
@@ -1110,6 +1158,7 @@ mod tests {
                 dataflow: Dataflow::ParGustavson {
                     threads: 2,
                     accum: accum.into(),
+                    semiring: SemiringKind::Arithmetic,
                 },
             });
             let r = coord.collect_one().expect("job outstanding");
@@ -1153,7 +1202,11 @@ mod tests {
             coord.submit(Job::NativeSpgemm {
                 a: id_a.into(),
                 b: id_b.into(),
-                dataflow: Dataflow::ParGustavson { threads: 2, accum },
+                dataflow: Dataflow::ParGustavson {
+                    threads: 2,
+                    accum,
+                    semiring: SemiringKind::Arithmetic,
+                },
             })
         };
         let job_lo = submit(&mut coord, AccumSpec::AdaptiveAt(1));
@@ -1193,6 +1246,68 @@ mod tests {
         );
         // ...and the whole mixed-spec burst shared exactly one plan.
         assert_eq!(coord.symbolic_stats(), (1, 2));
+        coord.shutdown();
+    }
+
+    /// The tentpole serving contract: a mixed-semiring burst on one
+    /// registered operand pair — arithmetic, boolean, min-plus, max-times
+    /// — shares ONE cached symbolic plan (plans are value-free), each
+    /// response records its semiring, and every product is bitwise equal
+    /// to the serial `spgemm_semiring` oracle under its own semiring.
+    #[test]
+    fn mixed_semiring_burst_shares_one_plan() {
+        use crate::spgemm::spgemm_semiring;
+        let mut coord = Coordinator::start(ServerConfig {
+            workers: 3,
+            queue_depth: 16,
+            ..ServerConfig::default()
+        });
+        let a = rmat(&RmatParams::new(7, 900, 85));
+        let b = rmat(&RmatParams::new(7, 900, 86));
+        let oracles: Vec<(SemiringKind, Csr)> = SemiringKind::ALL
+            .iter()
+            .map(|&k| (k, spgemm_semiring(&a, &b, k)))
+            .collect();
+        let id_a = coord.register("A", a);
+        let id_b = coord.register("B", b);
+        let mut ids = Vec::new();
+        for kind in SemiringKind::ALL {
+            ids.push((
+                kind,
+                coord.submit(Job::NativeSpgemm {
+                    a: id_a.into(),
+                    b: id_b.into(),
+                    dataflow: Dataflow::ParGustavson {
+                        threads: 2,
+                        accum: AccumSpec::default(),
+                        semiring: kind,
+                    },
+                }),
+            ));
+        }
+        let responses = coord.collect_all();
+        assert_eq!(responses.len(), 4);
+        assert_eq!(
+            coord.symbolic_stats(),
+            (1, 3),
+            "a mixed-semiring burst must share exactly one symbolic pass"
+        );
+        for (kind, id) in ids {
+            let r = &responses[&id];
+            assert_eq!(r.semiring, Some(kind), "response must record its semiring");
+            let oracle = &oracles.iter().find(|(k, _)| *k == kind).unwrap().1;
+            assert_eq!(r.c.row_ptr, oracle.row_ptr, "{}", kind.name());
+            assert_eq!(r.c.col_idx, oracle.col_idx, "{}", kind.name());
+            assert_eq!(r.c.data, oracle.data, "{}", kind.name());
+            assert!(r.symbolic_reused.is_some(), "batched job reports provenance");
+            let t = r.traffic.expect("native jobs report traffic");
+            assert_eq!(
+                t.accum.dense_rows + t.accum.hash_rows,
+                r.c.rows as u64,
+                "{}: every row routed",
+                kind.name()
+            );
+        }
         coord.shutdown();
     }
 
@@ -1277,6 +1392,7 @@ mod tests {
             dataflow: Dataflow::ParGustavson {
                 threads: 2,
                 accum: AccumSpec::default(),
+                semiring: SemiringKind::Arithmetic,
             },
         });
         // Drain so the worker has definitely published the plan.

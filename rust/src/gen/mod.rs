@@ -10,6 +10,6 @@ mod synth;
 
 pub use rmat::{rmat, RmatParams};
 pub use synth::{
-    banded, dataset_analog, diagonal_noise, erdos_renyi, hypersparse, uniform_random, DatasetSpec,
-    TABLE_1_1,
+    banded, dataset_analog, diagonal_noise, erdos_renyi, hypersparse, undirected, uniform_random,
+    DatasetSpec, TABLE_1_1,
 };

@@ -69,6 +69,31 @@ pub fn hypersparse(scale: u32, edges: usize, seed: u64) -> Csr {
     erdos_renyi(1usize << scale, edges, seed)
 }
 
+/// Simple-undirected-graph view of any generator sample: drop self-loops
+/// and explicit zeros, collapse duplicate/antiparallel edges, symmetrize
+/// with unit weights. The adjacency shape the graph algorithms (triangle
+/// counting in particular) expect.
+pub fn undirected(m: &Csr) -> Csr {
+    let mut edges = Vec::new();
+    for r in 0..m.rows {
+        let (cols, vals) = m.row(r);
+        for (c, v) in cols.iter().zip(vals) {
+            let c = *c as usize;
+            if r != c && *v != 0.0 {
+                edges.push((r.min(c), r.max(c)));
+            }
+        }
+    }
+    edges.sort_unstable();
+    edges.dedup();
+    let mut sym = Vec::with_capacity(edges.len() * 2);
+    for (r, c) in edges {
+        sym.push((r, c, 1.0));
+        sym.push((c, r, 1.0));
+    }
+    Csr::from_triplets(m.rows, m.cols, sym)
+}
+
 /// Uniform random matrix with a target density in [0,1].
 pub fn uniform_random(rows: usize, cols: usize, density: f64, seed: u64) -> Csr {
     let mut rng = Xoshiro256::seed_from_u64(seed);

@@ -31,6 +31,7 @@
 //! asserts this against the [`super::gustavson`] oracle on every
 //! generator.
 
+use super::semiring::{Arithmetic, Semiring};
 use super::Traffic;
 use crate::config::HashBits;
 use crate::formats::{Csr, Index, Value};
@@ -268,9 +269,17 @@ impl AccumStats {
 /// A reusable per-row accumulator with a dense and a hash lane. One per
 /// worker; every lane's scratch is lazily allocated and reused across
 /// rows, so a worker that only ever hashes never pays O(cols) memory.
-pub struct RowAccumulator {
+///
+/// Generic over the [`Semiring`] whose ⊕/⊗ the numeric pass applies —
+/// [`Arithmetic`] by default, so the SMASH serving paths are unchanged;
+/// the graph workloads instantiate Boolean / min-plus / max-times lanes
+/// over the *same* machinery ([`RowAccumulator::with_semiring`]). The
+/// symbolic pass ([`RowAccumulator::symbolic_row`]) never reads values,
+/// so it is semiring-invariant by construction.
+pub struct RowAccumulator<S: Semiring = Arithmetic> {
     cols: usize,
     policy: AccumPolicy,
+    semiring: S,
     /// Dense numeric lane (allocated on first dense numeric row).
     acc: Vec<Value>,
     present: Vec<bool>,
@@ -292,13 +301,32 @@ pub struct RowAccumulator {
     pub stats: AccumStats,
 }
 
-impl RowAccumulator {
-    /// Accumulator for a `cols`-wide output under `policy`. Allocates
-    /// nothing until the first row demands a lane.
+impl RowAccumulator<Arithmetic> {
+    /// Arithmetic (+,×) accumulator for a `cols`-wide output under
+    /// `policy` — the SMASH serving default. Allocates nothing until the
+    /// first row demands a lane.
     pub fn new(cols: usize, policy: AccumPolicy) -> Self {
+        Self::with_semiring(cols, policy, Arithmetic)
+    }
+
+    /// Convenience: arithmetic accumulator with the default threshold for
+    /// `mode`.
+    pub fn with_mode(cols: usize, mode: AccumMode) -> Self {
+        Self::new(cols, AccumPolicy::new(mode, cols))
+    }
+}
+
+impl<S: Semiring> RowAccumulator<S> {
+    /// Accumulator whose numeric pass folds partial products with the
+    /// given semiring's ⊕/⊗ (the graph workloads' entry point). The
+    /// dense lane's scratch is initialized to — and cleared back to —
+    /// `semiring.zero()`, so min-plus rows start from +∞ exactly like
+    /// arithmetic rows start from 0.0.
+    pub fn with_semiring(cols: usize, policy: AccumPolicy, semiring: S) -> Self {
         Self {
             cols,
             policy,
+            semiring,
             acc: Vec::new(),
             present: Vec::new(),
             stamp: Vec::new(),
@@ -309,11 +337,6 @@ impl RowAccumulator {
             drain_buf: Vec::new(),
             stats: AccumStats::default(),
         }
-    }
-
-    /// Convenience: accumulator with the default threshold for `mode`.
-    pub fn with_mode(cols: usize, mode: AccumMode) -> Self {
-        Self::new(cols, AccumPolicy::new(mode, cols))
     }
 
     /// Heap bytes currently held by the accumulator's lanes and scratch.
@@ -419,7 +442,8 @@ impl RowAccumulator {
                 let (bcols, bvals) = b.row(k as usize);
                 t.b_reads += bcols.len() as u64;
                 for (&j, &bv) in bcols.iter().zip(bvals) {
-                    self.hash_upsert(j, av * bv);
+                    let prod = self.semiring.mul(av, bv);
+                    self.hash_upsert(j, prod);
                     t.flops += 1;
                 }
             }
@@ -439,8 +463,9 @@ impl RowAccumulator {
             n
         } else {
             self.stats.dense_rows += 1;
+            let zero = self.semiring.zero();
             if self.acc.is_empty() && self.cols > 0 {
-                self.acc = vec![0.0 as Value; self.cols];
+                self.acc = vec![zero; self.cols];
                 self.present = vec![false; self.cols];
             }
             for (&k, &av) in acols.iter().zip(avals) {
@@ -453,7 +478,9 @@ impl RowAccumulator {
                         self.present[ju] = true;
                         self.touched.push(j);
                     }
-                    self.acc[ju] += av * bv;
+                    // First touch folds onto the zero left in `acc` —
+                    // `add(zero, prod)` — matching the hash lane's insert.
+                    self.acc[ju] = self.semiring.add(self.acc[ju], self.semiring.mul(av, bv));
                     t.flops += 1;
                 }
             }
@@ -463,7 +490,7 @@ impl RowAccumulator {
                 let j = self.touched[idx];
                 let ju = j as usize;
                 emit(j, self.acc[ju]);
-                self.acc[ju] = 0.0;
+                self.acc[ju] = zero;
                 self.present[ju] = false;
                 t.c_writes += 1;
             }
@@ -499,18 +526,19 @@ impl RowAccumulator {
                         continue 'table;
                     }
                     self.tags[slot] = j;
-                    // `0.0 + val`, not `val`: the dense lane's first touch
-                    // is `acc[j] (== 0.0) += val`, and IEEE 754 maps -0.0
-                    // to +0.0 under that addition — storing `val` verbatim
-                    // would diverge bitwise from the oracle on signed-zero
-                    // products.
-                    self.vals[slot] = 0.0 + val;
+                    // `add(zero, val)`, not `val`: the dense lane's first
+                    // touch folds onto the zero left in `acc`, and the
+                    // fold can change the bits — under arithmetic, IEEE
+                    // 754 maps -0.0 to +0.0 in `0.0 + val`; under boolean,
+                    // `add` re-normalizes to {0,1}. Storing `val` verbatim
+                    // would diverge bitwise from the oracle.
+                    self.vals[slot] = self.semiring.add(self.semiring.zero(), val);
                     self.used_slots.push(slot as u32);
                     self.stats.table.record(probes, true);
                     return;
                 }
                 if tag == j {
-                    self.vals[slot] += val;
+                    self.vals[slot] = self.semiring.add(self.vals[slot], val);
                     self.stats.table.record(probes, false);
                     return;
                 }
@@ -524,9 +552,10 @@ impl RowAccumulator {
     /// re-insert the live row's entries.
     #[cold]
     fn grow_hash(&mut self) {
+        let zero = self.semiring.zero();
         let new_cap = (self.tags.len() * 2).max(MIN_HASH_CAP);
         let old_tags = std::mem::replace(&mut self.tags, vec![EMPTY_TAG; new_cap]);
-        let old_vals = std::mem::replace(&mut self.vals, vec![0.0 as Value; new_cap]);
+        let old_vals = std::mem::replace(&mut self.vals, vec![zero; new_cap]);
         if !old_tags.is_empty() {
             self.stats.growths += 1;
         }
@@ -548,9 +577,10 @@ impl RowAccumulator {
 
     /// Reset the live row's hash slots (O(row nnz), not O(capacity)).
     fn clear_hash_row(&mut self) {
+        let zero = self.semiring.zero();
         for &s in &self.used_slots {
             self.tags[s as usize] = EMPTY_TAG;
-            self.vals[s as usize] = 0.0;
+            self.vals[s as usize] = zero;
         }
         self.used_slots.clear();
     }
@@ -855,6 +885,51 @@ mod tests {
         );
         // The explicit-threshold knob clamps to ≥ 1 like with_threshold.
         assert_eq!(AccumSpec::AdaptiveAt(0).resolve(64, &flops).hash_threshold, 1);
+    }
+
+    /// Semiring-generic lanes: forced-dense, forced-hash, and adaptive
+    /// accumulators over every [`SemiringKind`] reproduce the serial
+    /// semiring oracle bitwise — same `add(zero, prod)` first-touch, same
+    /// A-row-then-B-row fold order, same sorted drain.
+    #[test]
+    fn semiring_lanes_bitwise_equal_serial_oracle() {
+        use crate::spgemm::semiring::{spgemm_semiring, SemiringKind};
+        let a = rmat(&RmatParams::new(7, 700, 201));
+        let b = rmat(&RmatParams::new(7, 700, 202));
+        let flops = flops_per_row(&a, &b);
+        for kind in SemiringKind::ALL {
+            let oracle = spgemm_semiring(&a, &b, kind);
+            for mode in [AccumMode::Adaptive, AccumMode::Dense, AccumMode::Hash] {
+                let mut racc =
+                    RowAccumulator::with_semiring(b.cols, AccumPolicy::new(mode, b.cols), kind);
+                let mut t = Traffic::default();
+                let mut row_ptr = vec![0usize];
+                let mut col_idx = Vec::new();
+                let mut data = Vec::new();
+                for i in 0..a.rows {
+                    racc.numeric_row_emit(&a, &b, i, flops[i], &mut t, |j, v| {
+                        col_idx.push(j);
+                        data.push(v);
+                    });
+                    row_ptr.push(col_idx.len());
+                }
+                let c = Csr {
+                    rows: a.rows,
+                    cols: b.cols,
+                    row_ptr,
+                    col_idx,
+                    data,
+                };
+                assert_bitwise(&c, &oracle, &format!("{}/{}", kind.name(), mode.name()));
+                assert_eq!(
+                    t.accum.dense_rows + t.accum.hash_rows,
+                    a.rows as u64,
+                    "{}/{}: every row picks exactly one lane",
+                    kind.name(),
+                    mode.name()
+                );
+            }
+        }
     }
 
     /// Map-oracle property test of the hash lane across random rows.

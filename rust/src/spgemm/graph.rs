@@ -1,13 +1,108 @@
 //! Graph algorithms built on semiring SpGEMM — the applications of
 //! §1.3/§1.4 (path-finding, BFS, graph analysis) expressed as the linear
 //! algebra the thesis targets.
+//!
+//! Every algorithm exists in two forms:
+//!
+//! * **serial** ([`bfs_levels`], [`apsp_minplus`], [`transitive_closure`],
+//!   [`triangles`]) — straight-line implementations over
+//!   [`spgemm_semiring`] (or a direct frontier walk for BFS). These are
+//!   the *bitwise oracles*.
+//! * **served** ([`bfs_levels_served`], [`apsp_minplus_served`],
+//!   [`transitive_closure_served`], [`triangles_served`]) — the same
+//!   algorithms with every matrix product routed through the
+//!   [`Coordinator`] as a [`Dataflow::ParGustavson`] job carrying the
+//!   right [`SemiringKind`]. The products run on the persistent worker
+//!   pool with hybrid accumulators, and products over the *registered*
+//!   adjacency pair share one cached symbolic plan — even across
+//!   semirings, because plans are value-free. Results are identical to
+//!   the serial oracles (bitwise for the CSR-valued algorithms).
+//!
+//! The served functions take `&mut Coordinator` plus the [`MatrixId`] of
+//! a registered adjacency matrix and require exclusive use of the
+//! coordinator (no other jobs in flight) — they submit and collect one
+//! product at a time.
+//!
+//! Explicit stored zeros: the boolean semiring treats a stored `0.0` as
+//! "no edge" (its ⊗ annihilates), and the serial oracles do the same, so
+//! serial and served agree even on graphs with explicit zeros. BFS is the
+//! one structural exception — like the classic frontier walk, it follows
+//! every *stored* entry. Prune explicit zeros first
+//! ([`Csr::prune_zeros`]) if that distinction matters for your graph.
 
-use super::semiring::{ewise_add, spgemm_semiring, Boolean, MinPlus};
+use super::semiring::{ewise_add, spgemm_semiring, Boolean, MinPlus, SemiringKind};
+use super::{AccumSpec, Dataflow};
+use crate::coordinator::{Coordinator, Job, MatrixId, MatrixRef};
 use crate::formats::{Csr, Value};
+use std::sync::Arc;
 
-/// Multi-source BFS levels via repeated boolean SpMV (frontier × Aᵀ).
-/// Returns `levels[v] = hops from the nearest source` (usize::MAX if
-/// unreachable).
+// ---------------------------------------------------------------------------
+// Shared building blocks (serial and served paths use the same ones, so
+// the only difference between the two forms is *where* products execute).
+// ---------------------------------------------------------------------------
+
+/// `D₁` of the min-plus squaring: a zero diagonal plus every off-diagonal
+/// adjacency entry (self-loops are superseded by the 0-cost diagonal).
+fn minplus_init(adj: &Csr) -> Csr {
+    let mut triplets: Vec<(usize, usize, Value)> = (0..adj.rows).map(|i| (i, i, 0.0)).collect();
+    for r in 0..adj.rows {
+        let (cols, vals) = adj.row(r);
+        for (c, v) in cols.iter().zip(vals) {
+            if r != *c as usize {
+                triplets.push((r, *c as usize, *v));
+            }
+        }
+    }
+    Csr::from_triplets(adj.rows, adj.cols, triplets)
+}
+
+/// The boolean view of an adjacency matrix: every nonzero entry becomes
+/// `1.0`, explicit stored zeros are dropped (boolean ⊗ annihilates on
+/// them, so they are "no edge"). Keeping the matrix zero-free is what
+/// lets the closure fixpoint test compare structurally — a zero-valued
+/// entry flickering in and out of the union would never converge.
+fn booleanize(adj: &Csr) -> Csr {
+    let mut triplets = Vec::with_capacity(adj.nnz());
+    for r in 0..adj.rows {
+        let (cols, vals) = adj.row(r);
+        for (c, v) in cols.iter().zip(vals) {
+            if *v != 0.0 {
+                triplets.push((r, *c as usize, 1.0));
+            }
+        }
+    }
+    Csr::from_triplets(adj.rows, adj.cols, triplets)
+}
+
+/// `tr(A² ⊙ Aᵀ)` — the masked dot step of the triangle count. `adj` must
+/// be symmetric (simple undirected graph), so `Aᵀ = A`.
+fn masked_trace(a2: &Csr, adj: &Csr) -> f64 {
+    let mut trace = 0.0;
+    for i in 0..a2.rows {
+        let (cols, vals) = a2.row(i);
+        for (j, v) in cols.iter().zip(vals) {
+            let (bc, bv) = adj.row(*j as usize);
+            if let Ok(pos) = bc.binary_search(&(i as u32)) {
+                trace += v * bv[pos];
+            }
+        }
+    }
+    trace
+}
+
+/// Rounds after which repeated squaring must have reached the closure
+/// fixpoint.
+fn closure_rounds(n: usize) -> u32 {
+    crate::util::ilog2_ceil(n as u64) + 1
+}
+
+// ---------------------------------------------------------------------------
+// Serial oracles.
+// ---------------------------------------------------------------------------
+
+/// Multi-source BFS levels via a direct frontier walk — the serial oracle
+/// of [`bfs_levels_served`]. Returns `levels[v] = hops from the nearest
+/// source` (`usize::MAX` if unreachable).
 pub fn bfs_levels(adj: &Csr, sources: &[usize]) -> Vec<usize> {
     let n = adj.rows;
     let mut levels = vec![usize::MAX; n];
@@ -37,26 +132,11 @@ pub fn bfs_levels(adj: &Csr, sources: &[usize]) -> Vec<usize> {
 }
 
 /// All-pairs shortest paths by tropical matrix squaring:
-/// `D_{2k} = D_k ⊗ D_k (min,+)`, log₂(n) rounds. O(n³ log n) worst case —
-/// for the small graphs of the examples/tests.
+/// `D_{2k} = D_k ⊗ D_k (min,+)`, `rounds` rounds — the serial oracle of
+/// [`apsp_minplus_served`]. O(n³ log n) worst case; for the small graphs
+/// of the examples/tests.
 pub fn apsp_minplus(adj: &Csr, rounds: u32) -> Csr {
-    // D₁ = A ⊕ I(0 diagonal) under min-plus
-    let mut with_diag: Vec<(usize, usize, Value)> = (0..adj.rows).map(|i| (i, i, 0.0)).collect();
-    for r in 0..adj.rows {
-        let (cols, vals) = adj.row(r);
-        for (c, v) in cols.iter().zip(vals) {
-            if r != *c as usize {
-                with_diag.push((r, *c as usize, *v));
-            }
-        }
-    }
-    // min-merge duplicates by construction: from_triplets sums, so build
-    // manually via semiring ewise instead
-    let mut d = Csr::from_triplets(adj.rows, adj.cols, vec![]);
-    for (r, c, v) in with_diag {
-        let single = Csr::from_triplets(adj.rows, adj.cols, vec![(r, c, v)]);
-        d = ewise_add(&d, &single, MinPlus);
-    }
+    let mut d = minplus_init(adj);
     for _ in 0..rounds {
         let sq = spgemm_semiring(&d, &d, MinPlus);
         d = ewise_add(&d, &sq, MinPlus);
@@ -64,14 +144,11 @@ pub fn apsp_minplus(adj: &Csr, rounds: u32) -> Csr {
     d
 }
 
-/// Transitive closure via boolean squaring (reachability matrix).
+/// Transitive closure via boolean squaring (reachability matrix) — the
+/// serial oracle of [`transitive_closure_served`].
 pub fn transitive_closure(adj: &Csr) -> Csr {
-    let mut reach = Csr {
-        data: adj.data.iter().map(|_| 1.0).collect(),
-        ..adj.clone()
-    };
-    let rounds = crate::util::ilog2_ceil(adj.rows as u64) + 1;
-    for _ in 0..rounds {
+    let mut reach = booleanize(adj);
+    for _ in 0..closure_rounds(adj.rows) {
         let sq = spgemm_semiring(&reach, &reach, Boolean);
         let next = ewise_add(&reach, &sq, Boolean);
         if next.approx_same(&reach) {
@@ -83,25 +160,163 @@ pub fn transitive_closure(adj: &Csr) -> Csr {
 }
 
 /// Triangle count of a simple undirected graph: tr(A³)/6 via one SpGEMM
-/// plus a masked dot with A.
+/// plus a masked dot with A — the serial oracle of [`triangles_served`].
 pub fn triangles(adj: &Csr) -> u64 {
     let a2 = spgemm_semiring(adj, adj, super::semiring::Arithmetic);
-    let mut trace = 0.0;
-    for i in 0..a2.rows {
-        let (cols, vals) = a2.row(i);
-        for (j, v) in cols.iter().zip(vals) {
-            let (bc, bv) = adj.row(*j as usize);
-            if let Ok(pos) = bc.binary_search(&(i as u32)) {
-                trace += v * bv[pos];
+    (masked_trace(&a2, adj) / 6.0).round() as u64
+}
+
+// ---------------------------------------------------------------------------
+// Served variants: every product goes through the Coordinator onto the
+// parallel backend (worker pool, hybrid accumulators, cached plans).
+// ---------------------------------------------------------------------------
+
+/// Submit one semiring SpGEMM job and wait for its product. Requires
+/// exclusive use of the coordinator: with foreign jobs in flight the
+/// response collected here could be someone else's.
+fn served_spgemm(
+    coord: &mut Coordinator,
+    a: MatrixRef,
+    b: MatrixRef,
+    kind: SemiringKind,
+    threads: usize,
+) -> Csr {
+    assert_eq!(
+        coord.pending(),
+        0,
+        "served graph algorithms need exclusive use of the coordinator"
+    );
+    let id = coord.submit(Job::NativeSpgemm {
+        a,
+        b,
+        dataflow: Dataflow::ParGustavson { threads, accum: AccumSpec::default(), semiring: kind },
+    });
+    let r = coord.collect_one().expect("graph job outstanding");
+    debug_assert_eq!(r.id, id, "exclusive use violated");
+    r.c
+}
+
+/// Pointer clone of a registered adjacency matrix, or a panic naming the
+/// caller's contract.
+fn registered(coord: &Coordinator, adj: MatrixId) -> Arc<Csr> {
+    coord
+        .matrix(adj)
+        .expect("graph adjacency must be registered with the coordinator")
+}
+
+/// [`bfs_levels`] on the served fast path: each frontier expansion is a
+/// `frontier ⊗ A` boolean product (one job per level). The adjacency is
+/// the registered resident; frontiers are one-shot inline operands.
+pub fn bfs_levels_served(
+    coord: &mut Coordinator,
+    adj: MatrixId,
+    sources: &[usize],
+    threads: usize,
+) -> Vec<usize> {
+    let n = registered(coord, adj).rows;
+    let mut levels = vec![usize::MAX; n];
+    let mut frontier: Vec<usize> = Vec::new();
+    for &s in sources {
+        assert!(s < n);
+        if levels[s] == usize::MAX {
+            levels[s] = 0;
+            frontier.push(s);
+        }
+    }
+    let mut depth = 0usize;
+    while !frontier.is_empty() {
+        depth += 1;
+        let f = Csr::from_triplets(1, n, frontier.iter().map(|&c| (0usize, c, 1.0)));
+        let next = served_spgemm(coord, f.into(), adj.into(), SemiringKind::Boolean, threads);
+        frontier.clear();
+        let (cols, _) = next.row(0);
+        for &j in cols {
+            let j = j as usize;
+            if levels[j] == usize::MAX {
+                levels[j] = depth;
+                frontier.push(j);
             }
         }
     }
-    (trace / 6.0).round() as u64
+    levels
+}
+
+/// [`apsp_minplus`] on the served fast path: each squaring round is a
+/// `D ⊗ D` min-plus job (inline — `D` changes every round); the cheap
+/// O(nnz) ⊕-union with the previous `D` stays on the caller's thread.
+pub fn apsp_minplus_served(
+    coord: &mut Coordinator,
+    adj: MatrixId,
+    rounds: u32,
+    threads: usize,
+) -> Csr {
+    let adj_m = registered(coord, adj);
+    let mut d = minplus_init(&adj_m);
+    for _ in 0..rounds {
+        let da = Arc::new(d);
+        let sq = served_spgemm(
+            coord,
+            Arc::clone(&da).into(),
+            Arc::clone(&da).into(),
+            SemiringKind::MinPlus,
+            threads,
+        );
+        d = ewise_add(&da, &sq, MinPlus);
+    }
+    d
+}
+
+/// [`transitive_closure`] on the served fast path. The first squaring
+/// runs on the *registered* adjacency pair — boolean ⊗ only reads
+/// nonzero-ness, so after pruning the (structural) zero-valued entries a
+/// raw-adjacency square equals the booleanized square — and therefore
+/// shares the coordinator's cached `(adj, adj)` symbolic plan with any
+/// other same-pair job, whatever its semiring (e.g. a
+/// [`triangles_served`] call). Later rounds square the evolving
+/// reachability matrix inline (zero-free by construction, so no pruning
+/// is needed there).
+pub fn transitive_closure_served(coord: &mut Coordinator, adj: MatrixId, threads: usize) -> Csr {
+    let adj_m = registered(coord, adj);
+    let mut reach = Arc::new(booleanize(&adj_m));
+    for round in 0..closure_rounds(adj_m.rows) {
+        let sq = if round == 0 {
+            let sq = served_spgemm(coord, adj.into(), adj.into(), SemiringKind::Boolean, threads);
+            // A product through an explicit-zero edge is a stored 0.0 in
+            // the structural output; drop it — `booleanize` dropped the
+            // edge itself on the serial side.
+            sq.prune_zeros()
+        } else {
+            served_spgemm(
+                coord,
+                Arc::clone(&reach).into(),
+                Arc::clone(&reach).into(),
+                SemiringKind::Boolean,
+                threads,
+            )
+        };
+        let next = ewise_add(&reach, &sq, Boolean);
+        if next.approx_same(&reach) {
+            break;
+        }
+        reach = Arc::new(next);
+    }
+    Arc::try_unwrap(reach).unwrap_or_else(|r| (*r).clone())
+}
+
+/// [`triangles`] on the served fast path: `A²` is one arithmetic job on
+/// the registered pair (plan-cached and shared with any other `(adj,
+/// adj)` job); the masked trace stays on the caller's thread.
+pub fn triangles_served(coord: &mut Coordinator, adj: MatrixId, threads: usize) -> u64 {
+    let a2 = served_spgemm(coord, adj.into(), adj.into(), SemiringKind::Arithmetic, threads);
+    let adj_m = registered(coord, adj);
+    (masked_trace(&a2, &adj_m) / 6.0).round() as u64
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::ServerConfig;
+    use crate::gen::{banded, rmat, undirected, RmatParams};
 
     /// Undirected path graph 0-1-2-3.
     fn path4() -> Csr {
@@ -170,5 +385,111 @@ mod tests {
         assert_eq!(triangles(&k3), 1);
         // path graph has none
         assert_eq!(triangles(&path4()), 0);
+    }
+
+    /// Served == serial on rmat and banded inputs: BFS levels, APSP
+    /// values (bitwise), closure (bitwise), and triangle counts.
+    #[test]
+    fn served_matches_serial_oracles() {
+        let inputs: Vec<(&str, Csr)> = vec![
+            ("rmat", undirected(&rmat(&RmatParams::new(7, 500, 31)))),
+            ("banded", undirected(&banded(96, 3, 32))),
+        ];
+        for (name, adj) in &inputs {
+            let mut coord = Coordinator::start(ServerConfig {
+                workers: 2,
+                queue_depth: 8,
+                ..ServerConfig::default()
+            });
+            let id = coord.register("adjacency", adj.clone());
+
+            let levels = bfs_levels_served(&mut coord, id, &[0], 2);
+            assert_eq!(levels, bfs_levels(adj, &[0]), "{name}: BFS levels");
+
+            let d_served = apsp_minplus_served(&mut coord, id, 3, 2);
+            let d_serial = apsp_minplus(adj, 3);
+            assert_eq!(d_served.row_ptr, d_serial.row_ptr, "{name}: APSP shape");
+            assert_eq!(d_served.col_idx, d_serial.col_idx, "{name}: APSP cols");
+            assert_eq!(d_served.data, d_serial.data, "{name}: APSP values");
+
+            let tc_served = transitive_closure_served(&mut coord, id, 2);
+            let tc_serial = transitive_closure(adj);
+            assert_eq!(tc_served.row_ptr, tc_serial.row_ptr, "{name}: closure");
+            assert_eq!(tc_served.col_idx, tc_serial.col_idx, "{name}: closure");
+            assert_eq!(tc_served.data, tc_serial.data, "{name}: closure");
+
+            assert_eq!(
+                triangles_served(&mut coord, id, 2),
+                triangles(adj),
+                "{name}: triangles"
+            );
+            coord.shutdown();
+        }
+    }
+
+    /// The mixed-semiring plan-sharing contract: triangle counting
+    /// (arithmetic) and the closure's first squaring (boolean) both run
+    /// on the registered `(adj, adj)` pair and must share ONE cached
+    /// symbolic plan.
+    #[test]
+    fn same_pair_jobs_share_plan_across_semirings() {
+        let adj = undirected(&rmat(&RmatParams::new(6, 220, 41)));
+        let mut coord = Coordinator::start(ServerConfig {
+            workers: 2,
+            queue_depth: 8,
+            ..ServerConfig::default()
+        });
+        let id = coord.register("adjacency", adj.clone());
+        let tri = triangles_served(&mut coord, id, 2);
+        let tc = transitive_closure_served(&mut coord, id, 2);
+        assert_eq!(tri, triangles(&adj));
+        assert!(tc.nnz() >= adj.nnz());
+        let (passes, hits) = coord.symbolic_stats();
+        assert_eq!(
+            passes, 1,
+            "arithmetic A² and boolean A⊗A must share one symbolic pass"
+        );
+        assert!(hits >= 1, "the cross-semiring reuse must register as a hit");
+        coord.shutdown();
+    }
+
+    /// Explicit stored-zero edges are "no edge" to the closure (boolean
+    /// ⊗ annihilates on them): the fixpoint converges instead of
+    /// oscillating on the structural zero, and served == serial bitwise.
+    #[test]
+    fn closure_treats_stored_zero_edges_as_absent() {
+        let a = Csr::from_triplets(3, 3, vec![(0, 1, 0.0), (1, 2, 1.0)]);
+        assert_eq!(a.nnz(), 2, "the zero edge must be stored for this test");
+        let tc = transitive_closure(&a);
+        assert_eq!(tc.nnz(), 1, "only the real 1->2 edge is reachable");
+        assert_eq!(tc.row(1).0, &[2]);
+        let mut coord = Coordinator::start(ServerConfig {
+            workers: 1,
+            queue_depth: 4,
+            ..ServerConfig::default()
+        });
+        let id = coord.register("adjacency", a.clone());
+        let served = transitive_closure_served(&mut coord, id, 2);
+        assert_eq!(served.row_ptr, tc.row_ptr);
+        assert_eq!(served.col_idx, tc.col_idx);
+        assert_eq!(served.data, tc.data);
+        coord.shutdown();
+    }
+
+    /// Serial BFS on a disconnected multi-source graph equals served BFS
+    /// (exercises the empty-frontier and duplicate-source edges).
+    #[test]
+    fn served_bfs_edge_cases() {
+        let a = Csr::from_triplets(5, 5, vec![(0, 1, 1.0), (3, 4, 1.0)]);
+        let mut coord = Coordinator::start(ServerConfig {
+            workers: 1,
+            queue_depth: 4,
+            ..ServerConfig::default()
+        });
+        let id = coord.register("adjacency", a.clone());
+        let served = bfs_levels_served(&mut coord, id, &[0, 0, 3], 2);
+        assert_eq!(served, bfs_levels(&a, &[0, 0, 3]));
+        assert_eq!(served[2], usize::MAX);
+        coord.shutdown();
     }
 }

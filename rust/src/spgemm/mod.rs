@@ -26,12 +26,16 @@ pub use inner::inner_product;
 pub use intensity::{arithmetic_intensity, compression_factor, IntensityReport};
 pub use outer::outer_product;
 pub use par::{
-    par_gustavson, par_gustavson_accum, par_gustavson_spawning, par_gustavson_spec,
-    par_gustavson_with_plan, par_gustavson_with_plan_accum, par_gustavson_with_plan_policy,
+    par_gustavson, par_gustavson_accum, par_gustavson_kind, par_gustavson_semiring,
+    par_gustavson_spawning, par_gustavson_spawning_kind, par_gustavson_spawning_semiring,
+    par_gustavson_spec, par_gustavson_with_plan, par_gustavson_with_plan_accum,
+    par_gustavson_with_plan_kind, par_gustavson_with_plan_policy, par_gustavson_with_plan_semiring,
     symbolic_plan, SymbolicPlan, WorkerPool,
 };
 pub use rowwise::{rowwise_hash, rowwise_heap};
-pub use semiring::{ewise_add, spgemm_semiring, Arithmetic, Boolean, MaxTimes, MinPlus, Semiring};
+pub use semiring::{
+    ewise_add, spgemm_semiring, Arithmetic, Boolean, MaxTimes, MinPlus, Semiring, SemiringKind,
+};
 
 use crate::formats::Csr;
 
@@ -106,8 +110,11 @@ pub enum Dataflow {
     /// on the persistent [`WorkerPool`], with a per-job accumulator spec
     /// (fixed mode, explicit threshold, or the per-matrix auto heuristic;
     /// `AccumSpec::default()` — adaptive at `cols/16` — is the serving
-    /// default).
-    ParGustavson { threads: usize, accum: AccumSpec },
+    /// default) and a per-job [`SemiringKind`] (arithmetic by default;
+    /// boolean/min-plus/max-times put graph workloads on the same fast
+    /// path). Jobs that differ only in `accum` or `semiring` still share
+    /// one cached symbolic plan — the plan is value-free.
+    ParGustavson { threads: usize, accum: AccumSpec, semiring: SemiringKind },
     /// [`ParGustavson`](Dataflow::ParGustavson) with spawn-per-call
     /// execution instead of the pool — the benchmark baseline for the
     /// pooled-vs-spawn serving comparison. Always adaptive.
@@ -143,8 +150,8 @@ impl Dataflow {
             Dataflow::Outer => outer_product(a, b),
             Dataflow::RowWiseHeap => rowwise_heap(a, b),
             Dataflow::RowWiseHash => rowwise_hash(a, b),
-            Dataflow::ParGustavson { threads, accum } => {
-                let (c, t, _) = par_gustavson_spec(a, b, *threads, *accum);
+            Dataflow::ParGustavson { threads, accum, semiring } => {
+                let (c, t, _) = par_gustavson_kind(a, b, *threads, *accum, *semiring);
                 (c, t)
             }
             Dataflow::ParGustavsonSpawn { threads } => par_gustavson_spawning(a, b, *threads),
@@ -185,6 +192,7 @@ mod tests {
         let df = Dataflow::ParGustavson {
             threads: 4,
             accum: AccumSpec::default(),
+            semiring: SemiringKind::Arithmetic,
         };
         let (c, t) = df.multiply(&a, &b);
         assert!(c.approx_same(&oracle), "{} disagrees with oracle", df.name());

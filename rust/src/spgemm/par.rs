@@ -32,6 +32,13 @@
 //! coordinator can amortize one symbolic pass across a batch of jobs that
 //! share operands ([`par_gustavson_with_plan`]).
 //!
+//! The numeric pass is generic over a [`Semiring`]: the same pipeline
+//! serves boolean reachability, min-plus shortest-path, and max-times
+//! reliability products ([`par_gustavson_semiring`] /
+//! [`par_gustavson_kind`]). Steps 1–3 never read values, so a
+//! `SymbolicPlan` is semiring-invariant — one cached plan serves a
+//! mixed-semiring burst against the same operand pair.
+//!
 //! ## The persistent worker pool
 //!
 //! All parallel phases execute on a process-wide [`WorkerPool`] of
@@ -42,6 +49,7 @@
 
 use super::accumulator::{AccumMode, AccumPolicy, AccumSpec, RowAccumulator};
 use super::gustavson::{flops_of_row, gustavson};
+use super::semiring::{Arithmetic, Boolean, MaxTimes, MinPlus, Semiring, SemiringKind};
 use super::Traffic;
 use crate::coordinator::{schedule_windows, SchedPolicy};
 use crate::formats::{Csr, Index, Value};
@@ -497,18 +505,65 @@ pub fn par_gustavson_with_plan_policy(
     plan: &SymbolicPlan,
     policy: AccumPolicy,
 ) -> (Csr, Traffic) {
-    assert_eq!(a.cols, b.rows, "dimension mismatch");
-    assert_eq!(plan.row_ptr.len(), a.rows + 1, "plan is for a different A");
-    numeric_with_plan(a, b, threads.max(1), plan, Exec::Pool, policy)
+    par_gustavson_with_plan_semiring(a, b, threads, plan, policy, Arithmetic)
 }
 
-fn numeric_with_plan(
+/// [`par_gustavson_with_plan_policy`] over an arbitrary [`Semiring`] —
+/// the semiring-generic serving hot path. The plan is *semiring-invariant*
+/// (the symbolic pass never reads values and the output is structural),
+/// so one cached plan serves arithmetic, boolean, min-plus, and max-times
+/// jobs against the same operand pair alike; only the numeric fold
+/// changes. Output is bitwise identical to the serial
+/// [`spgemm_semiring`](super::spgemm_semiring) oracle.
+pub fn par_gustavson_with_plan_semiring<S: Semiring>(
+    a: &Csr,
+    b: &Csr,
+    threads: usize,
+    plan: &SymbolicPlan,
+    policy: AccumPolicy,
+    semiring: S,
+) -> (Csr, Traffic) {
+    assert_eq!(a.cols, b.rows, "dimension mismatch");
+    assert_eq!(plan.row_ptr.len(), a.rows + 1, "plan is for a different A");
+    numeric_with_plan(a, b, threads.max(1), plan, Exec::Pool, policy, semiring)
+}
+
+/// [`par_gustavson_with_plan_semiring`] dispatched from a runtime
+/// [`SemiringKind`] — what the coordinator calls. The match hands each
+/// kind to its *monomorphized* kernel, so an arithmetic serving job pays
+/// no per-FLOP dispatch for the generalization.
+pub fn par_gustavson_with_plan_kind(
+    a: &Csr,
+    b: &Csr,
+    threads: usize,
+    plan: &SymbolicPlan,
+    policy: AccumPolicy,
+    kind: SemiringKind,
+) -> (Csr, Traffic) {
+    match kind {
+        SemiringKind::Arithmetic => {
+            par_gustavson_with_plan_semiring(a, b, threads, plan, policy, Arithmetic)
+        }
+        SemiringKind::Boolean => {
+            par_gustavson_with_plan_semiring(a, b, threads, plan, policy, Boolean)
+        }
+        SemiringKind::MinPlus => {
+            par_gustavson_with_plan_semiring(a, b, threads, plan, policy, MinPlus)
+        }
+        SemiringKind::MaxTimes => {
+            par_gustavson_with_plan_semiring(a, b, threads, plan, policy, MaxTimes)
+        }
+    }
+}
+
+fn numeric_with_plan<S: Semiring>(
     a: &Csr,
     b: &Csr,
     threads: usize,
     plan: &SymbolicPlan,
     exec: Exec,
     policy: AccumPolicy,
+    semiring: S,
 ) -> (Csr, Traffic) {
     // Recomputed per call even with a cached plan: the partition is
     // O(rows) and LPT packs ~4×threads windows — noise next to the
@@ -544,7 +599,7 @@ fn numeric_with_plan(
                     // dense scratch materializes only if a row crosses
                     // the threshold, so hypersparse inputs keep worker
                     // memory at O(live row nnz), not O(b.cols).
-                    let mut racc = RowAccumulator::new(b.cols, policy);
+                    let mut racc = RowAccumulator::with_semiring(b.cols, policy, semiring);
                     for (wi, cols_out, data_out) in chunk {
                         let w = &windows[wi];
                         let base = row_ptr[w.row_begin];
@@ -586,18 +641,20 @@ fn numeric_with_plan(
     (c, t)
 }
 
-fn par_gustavson_exec(
+fn par_gustavson_exec<S: Semiring>(
     a: &Csr,
     b: &Csr,
     threads: usize,
     exec: Exec,
     spec: AccumSpec,
+    semiring: S,
 ) -> (Csr, Traffic, AccumPolicy) {
     assert_eq!(a.cols, b.rows, "dimension mismatch");
     let threads = threads.max(1);
     if a.rows == 0 {
         // No rows: nothing to partition and no lane ever fires, so the
-        // serial oracle's (mode-agnostic, all-zero) stats are correct.
+        // serial oracle's (mode- and semiring-agnostic, all-zero) stats
+        // and empty product are correct for every semiring.
         let (c, t) = gustavson(a, b);
         return (c, t, spec.resolve(b.cols, &[]));
     }
@@ -607,7 +664,7 @@ fn par_gustavson_exec(
     // rows as dense).
     let plan = symbolic_plan_exec(a, b, threads, exec, spec);
     let policy = spec.resolve(b.cols, &plan.row_flops);
-    let (c, t) = numeric_with_plan(a, b, threads, &plan, exec, policy);
+    let (c, t) = numeric_with_plan(a, b, threads, &plan, exec, policy, semiring);
     (c, t, policy)
 }
 
@@ -617,7 +674,7 @@ fn par_gustavson_exec(
 /// (sorted, merged) CSR product — bitwise identical to [`gustavson`] —
 /// and the summed traffic profile.
 pub fn par_gustavson(a: &Csr, b: &Csr, threads: usize) -> (Csr, Traffic) {
-    let (c, t, _) = par_gustavson_exec(a, b, threads, Exec::Pool, AccumSpec::default());
+    let (c, t, _) = par_gustavson_exec(a, b, threads, Exec::Pool, AccumSpec::default(), Arithmetic);
     (c, t)
 }
 
@@ -626,7 +683,8 @@ pub fn par_gustavson(a: &Csr, b: &Csr, threads: usize) -> (Csr, Traffic) {
 /// the `serve --accum` flag; all three modes produce bitwise-identical
 /// output.
 pub fn par_gustavson_accum(a: &Csr, b: &Csr, threads: usize, accum: AccumMode) -> (Csr, Traffic) {
-    let (c, t, _) = par_gustavson_exec(a, b, threads, Exec::Pool, AccumSpec::Fixed(accum));
+    let (c, t, _) =
+        par_gustavson_exec(a, b, threads, Exec::Pool, AccumSpec::Fixed(accum), Arithmetic);
     (c, t)
 }
 
@@ -641,7 +699,41 @@ pub fn par_gustavson_spec(
     threads: usize,
     spec: AccumSpec,
 ) -> (Csr, Traffic, AccumPolicy) {
-    par_gustavson_exec(a, b, threads, Exec::Pool, spec)
+    par_gustavson_exec(a, b, threads, Exec::Pool, spec, Arithmetic)
+}
+
+/// [`par_gustavson_spec`] over an arbitrary [`Semiring`]: full parallel
+/// pipeline (FLOP pass, symbolic pass, prefix sum, LPT windows, hybrid
+/// accumulators) with the numeric fold swapped for the semiring's ⊕/⊗ —
+/// the "one merge/accumulate engine serves many sparse workloads" move.
+/// Output is bitwise identical to
+/// [`spgemm_semiring`](super::spgemm_semiring) under the same semiring.
+pub fn par_gustavson_semiring<S: Semiring>(
+    a: &Csr,
+    b: &Csr,
+    threads: usize,
+    spec: AccumSpec,
+    semiring: S,
+) -> (Csr, Traffic, AccumPolicy) {
+    par_gustavson_exec(a, b, threads, Exec::Pool, spec, semiring)
+}
+
+/// [`par_gustavson_semiring`] dispatched from a runtime [`SemiringKind`]
+/// (monomorphized per kind — no per-FLOP dispatch). The coordinator's
+/// plan-less serving path.
+pub fn par_gustavson_kind(
+    a: &Csr,
+    b: &Csr,
+    threads: usize,
+    spec: AccumSpec,
+    kind: SemiringKind,
+) -> (Csr, Traffic, AccumPolicy) {
+    match kind {
+        SemiringKind::Arithmetic => par_gustavson_semiring(a, b, threads, spec, Arithmetic),
+        SemiringKind::Boolean => par_gustavson_semiring(a, b, threads, spec, Boolean),
+        SemiringKind::MinPlus => par_gustavson_semiring(a, b, threads, spec, MinPlus),
+        SemiringKind::MaxTimes => par_gustavson_semiring(a, b, threads, spec, MaxTimes),
+    }
 }
 
 /// [`par_gustavson`] with spawn-per-call execution (`std::thread::scope`)
@@ -649,8 +741,41 @@ pub fn par_gustavson_spec(
 /// benchmark baseline for the pooled-vs-spawn comparison in
 /// `benches/hot_paths.rs`. Adaptive accumulator policy.
 pub fn par_gustavson_spawning(a: &Csr, b: &Csr, threads: usize) -> (Csr, Traffic) {
-    let (c, t, _) = par_gustavson_exec(a, b, threads, Exec::Spawn, AccumSpec::default());
+    let (c, t, _) =
+        par_gustavson_exec(a, b, threads, Exec::Spawn, AccumSpec::default(), Arithmetic);
     (c, t)
+}
+
+/// [`par_gustavson_semiring`] on the spawn-per-call backend — the
+/// semiring parity suite exercises both executors so neither can quietly
+/// regress to arithmetic-only.
+pub fn par_gustavson_spawning_semiring<S: Semiring>(
+    a: &Csr,
+    b: &Csr,
+    threads: usize,
+    spec: AccumSpec,
+    semiring: S,
+) -> (Csr, Traffic, AccumPolicy) {
+    par_gustavson_exec(a, b, threads, Exec::Spawn, spec, semiring)
+}
+
+/// [`par_gustavson_spawning_semiring`] dispatched from a runtime
+/// [`SemiringKind`].
+pub fn par_gustavson_spawning_kind(
+    a: &Csr,
+    b: &Csr,
+    threads: usize,
+    spec: AccumSpec,
+    kind: SemiringKind,
+) -> (Csr, Traffic, AccumPolicy) {
+    match kind {
+        SemiringKind::Arithmetic => {
+            par_gustavson_spawning_semiring(a, b, threads, spec, Arithmetic)
+        }
+        SemiringKind::Boolean => par_gustavson_spawning_semiring(a, b, threads, spec, Boolean),
+        SemiringKind::MinPlus => par_gustavson_spawning_semiring(a, b, threads, spec, MinPlus),
+        SemiringKind::MaxTimes => par_gustavson_spawning_semiring(a, b, threads, spec, MaxTimes),
+    }
 }
 
 #[cfg(test)]
@@ -830,6 +955,33 @@ mod tests {
         assert_eq!(c.data, oracle.data, "auto");
         assert_eq!(policy, AccumPolicy::auto_for(b.cols, &plan.row_flops));
         assert_eq!(policy.mode, AccumMode::Adaptive);
+    }
+
+    /// One semiring-invariant plan serves every semiring: the numeric
+    /// pass under each kind stays bitwise equal to its serial oracle
+    /// while reusing a single arithmetic-computed `SymbolicPlan`.
+    #[test]
+    fn one_plan_serves_every_semiring_bitwise() {
+        use crate::spgemm::semiring::spgemm_semiring;
+        let a = rmat(&RmatParams::new(8, 2_400, 71));
+        let b = rmat(&RmatParams::new(8, 2_400, 72));
+        let plan = symbolic_plan(&a, &b, 4);
+        let policy = AccumPolicy::new(AccumMode::Adaptive, b.cols);
+        for kind in SemiringKind::ALL {
+            let oracle = spgemm_semiring(&a, &b, kind);
+            for threads in [1, 3, 4] {
+                let (c, t) = par_gustavson_with_plan_kind(&a, &b, threads, &plan, policy, kind);
+                let label = format!("{}/t{threads}", kind.name());
+                assert_eq!(c.row_ptr, oracle.row_ptr, "{label}");
+                assert_eq!(c.col_idx, oracle.col_idx, "{label}");
+                assert_eq!(c.data, oracle.data, "{label}");
+                assert_eq!(
+                    t.accum.dense_rows + t.accum.hash_rows,
+                    a.rows as u64,
+                    "{label}: numeric pass must route every row"
+                );
+            }
+        }
     }
 
     /// The memory story: on a hypersparse wide input the adaptive policy

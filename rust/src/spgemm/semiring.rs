@@ -17,7 +17,10 @@ use crate::formats::{Csr, Index, Value};
 /// A semiring over `Value` (f64). `add` must be commutative+associative
 /// with identity `zero`; `mul` distributes over `add` with identity `one`
 /// and annihilator `zero`.
-pub trait Semiring: Copy {
+///
+/// `Send + Sync + 'static` because semiring tokens ride into the parallel
+/// backends' worker closures — every implementor is a tiny `Copy` value.
+pub trait Semiring: Copy + Send + Sync + 'static {
     const NAME: &'static str;
     fn zero(&self) -> Value;
     fn one(&self) -> Value;
@@ -113,9 +116,111 @@ impl Semiring for MaxTimes {
     }
 }
 
-/// Gustavson row-wise SpGEMM over an arbitrary semiring. Entries equal to
-/// the semiring zero are dropped from the output (they are structurally
-/// absent by definition).
+/// The semiring a *job* asks for — the serializable, coordinator-level
+/// spelling of the four zero-sized semiring types, carried on
+/// [`Dataflow::ParGustavson`](super::Dataflow::ParGustavson) and the
+/// `serve --semiring` flag.
+///
+/// The serving layer dispatches a kind to the matching monomorphized
+/// kernel ([`super::par_gustavson_kind`]), so an arithmetic job pays zero
+/// dispatch cost on the per-FLOP path. `SemiringKind` also implements
+/// [`Semiring`] directly (match-per-op), which is what lets tests and
+/// examples drive the *serial* oracle [`spgemm_semiring`] from a runtime
+/// kind: both routes perform the identical `f64` operations, so they stay
+/// bitwise interchangeable.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum SemiringKind {
+    /// (+,×) — numeric SpGEMM (the default; the SMASH kernels).
+    #[default]
+    Arithmetic,
+    /// (∨,∧) — reachability / transitive-closure steps.
+    Boolean,
+    /// (min,+) — shortest-path steps.
+    MinPlus,
+    /// (max,×) — most-reliable-path steps.
+    MaxTimes,
+}
+
+impl SemiringKind {
+    /// Every kind, in CLI-spelling order.
+    pub const ALL: [SemiringKind; 4] = [
+        SemiringKind::Arithmetic,
+        SemiringKind::Boolean,
+        SemiringKind::MinPlus,
+        SemiringKind::MaxTimes,
+    ];
+
+    /// The CLI spelling (`serve --semiring <name>`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SemiringKind::Arithmetic => "arith",
+            SemiringKind::Boolean => "bool",
+            SemiringKind::MinPlus => "minplus",
+            SemiringKind::MaxTimes => "maxtimes",
+        }
+    }
+
+    /// Parse a CLI spelling (`arith|bool|minplus|maxtimes`; the long
+    /// forms `arithmetic`/`boolean` are accepted too).
+    pub fn parse(s: &str) -> Option<SemiringKind> {
+        match s {
+            "arith" | "arithmetic" => Some(SemiringKind::Arithmetic),
+            "bool" | "boolean" => Some(SemiringKind::Boolean),
+            "minplus" => Some(SemiringKind::MinPlus),
+            "maxtimes" => Some(SemiringKind::MaxTimes),
+            _ => None,
+        }
+    }
+}
+
+impl Semiring for SemiringKind {
+    const NAME: &'static str = "dynamic";
+    fn zero(&self) -> Value {
+        match self {
+            SemiringKind::Arithmetic => Arithmetic.zero(),
+            SemiringKind::Boolean => Boolean.zero(),
+            SemiringKind::MinPlus => MinPlus.zero(),
+            SemiringKind::MaxTimes => MaxTimes.zero(),
+        }
+    }
+    fn one(&self) -> Value {
+        match self {
+            SemiringKind::Arithmetic => Arithmetic.one(),
+            SemiringKind::Boolean => Boolean.one(),
+            SemiringKind::MinPlus => MinPlus.one(),
+            SemiringKind::MaxTimes => MaxTimes.one(),
+        }
+    }
+    fn add(&self, a: Value, b: Value) -> Value {
+        match self {
+            SemiringKind::Arithmetic => Arithmetic.add(a, b),
+            SemiringKind::Boolean => Boolean.add(a, b),
+            SemiringKind::MinPlus => MinPlus.add(a, b),
+            SemiringKind::MaxTimes => MaxTimes.add(a, b),
+        }
+    }
+    fn mul(&self, a: Value, b: Value) -> Value {
+        match self {
+            SemiringKind::Arithmetic => Arithmetic.mul(a, b),
+            SemiringKind::Boolean => Boolean.mul(a, b),
+            SemiringKind::MinPlus => MinPlus.mul(a, b),
+            SemiringKind::MaxTimes => MaxTimes.mul(a, b),
+        }
+    }
+}
+
+/// Gustavson row-wise SpGEMM over an arbitrary semiring — the serial
+/// oracle of the semiring-generic parallel backends.
+///
+/// Output is *structural*: every column the product touches is stored,
+/// even when its accumulated value equals the semiring zero (numeric
+/// cancellation). This matches [`super::gustavson`] and the parallel
+/// paths, whose output shape comes from the value-free symbolic pass —
+/// which is exactly why one cached
+/// [`SymbolicPlan`](super::SymbolicPlan) serves every semiring. A
+/// column's first partial product is folded as `add(zero, prod)` (the
+/// dense accumulator's first-touch semantics), so serial and parallel
+/// results are bitwise identical under every semiring.
 pub fn spgemm_semiring<S: Semiring>(a: &Csr, b: &Csr, s: S) -> Csr {
     assert_eq!(a.cols, b.rows, "dimension mismatch");
     let zero = s.zero();
@@ -134,23 +239,20 @@ pub fn spgemm_semiring<S: Semiring>(a: &Csr, b: &Csr, s: S) -> Csr {
             let (bcols, bvals) = b.row(k as usize);
             for (&j, &bv) in bcols.iter().zip(bvals) {
                 let ju = j as usize;
-                let prod = s.mul(av, bv);
                 if !present[ju] {
                     present[ju] = true;
                     touched.push(j);
-                    acc[ju] = prod;
-                } else {
-                    acc[ju] = s.add(acc[ju], prod);
                 }
+                // First touch folds onto the zero left in `acc` — the
+                // same `add(zero, prod)` the RowAccumulator lanes apply,
+                // keeping the reduction bitwise lane-independent.
+                acc[ju] = s.add(acc[ju], s.mul(av, bv));
             }
         }
         touched.sort_unstable();
         for &j in &touched {
-            let v = acc[j as usize];
-            if v != zero {
-                col_idx.push(j);
-                data.push(v);
-            }
+            col_idx.push(j);
+            data.push(acc[j as usize]);
             acc[j as usize] = zero;
             present[j as usize] = false;
         }
@@ -210,8 +312,40 @@ mod tests {
         let b = erdos_renyi(40, 200, 2);
         let c = spgemm_semiring(&a, &b, Arithmetic);
         let (oracle, _) = gustavson(&a, &b);
-        // semiring version drops exact zeros; prune oracle the same way
-        assert!(c.approx_same(&oracle.prune_zeros()));
+        // structural output + identical accumulation order: the semiring
+        // oracle under (+,×) IS the Gustavson oracle, bitwise.
+        assert_eq!(c.row_ptr, oracle.row_ptr);
+        assert_eq!(c.col_idx, oracle.col_idx);
+        assert_eq!(c.data, oracle.data);
+    }
+
+    /// The runtime-dispatched `SemiringKind` performs the identical f64
+    /// operations as the matching zero-sized semiring type.
+    #[test]
+    fn kind_dispatch_matches_static_semirings() {
+        let a = erdos_renyi(48, 260, 11);
+        let b = erdos_renyi(48, 260, 12);
+        let check = |kind: SemiringKind, c_static: Csr| {
+            let c_kind = spgemm_semiring(&a, &b, kind);
+            assert_eq!(c_kind.row_ptr, c_static.row_ptr, "{}", kind.name());
+            assert_eq!(c_kind.col_idx, c_static.col_idx, "{}", kind.name());
+            assert_eq!(c_kind.data, c_static.data, "{}", kind.name());
+        };
+        check(SemiringKind::Arithmetic, spgemm_semiring(&a, &b, Arithmetic));
+        check(SemiringKind::Boolean, spgemm_semiring(&a, &b, Boolean));
+        check(SemiringKind::MinPlus, spgemm_semiring(&a, &b, MinPlus));
+        check(SemiringKind::MaxTimes, spgemm_semiring(&a, &b, MaxTimes));
+    }
+
+    #[test]
+    fn kind_parse_and_names() {
+        for kind in SemiringKind::ALL {
+            assert_eq!(SemiringKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(SemiringKind::parse("arithmetic"), Some(SemiringKind::Arithmetic));
+        assert_eq!(SemiringKind::parse("boolean"), Some(SemiringKind::Boolean));
+        assert_eq!(SemiringKind::parse("bogus"), None);
+        assert_eq!(SemiringKind::default(), SemiringKind::Arithmetic);
     }
 
     #[test]

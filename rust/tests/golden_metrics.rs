@@ -66,15 +66,18 @@ fn pinned_cycle_counts() {
     }
     // The write-back conservation fix (PR 1: remainder entries/shifts that
     // the old accounting silently dropped are now charged) moved V1/V2
-    // counts slightly; the goldens below predate it. The pin stays a
-    // ±0.25% band until the exact values are re-captured via SMASH_REPIN
-    // above on a machine with a Rust toolchain — restore exact equality
-    // then (ROADMAP open item; PR 2's environment had no toolchain, so
-    // tightening the band here would be a guess, not a measurement).
-    // Determinism itself is asserted exactly by `determinism_across_runs`
-    // in smash_correctness.rs; this band only exists because the goldens
-    // were pinned before the accounting fix.
-    const REPIN_BAND: f64 = 0.0025;
+    // counts slightly; the goldens below predate it. 2026-08-01 (PR 5):
+    // this environment still has no Rust toolchain and no reach into the
+    // `golden-repin-values` CI artifact, so the exact values remain
+    // unmeasured here; per the re-pin plan the band is tightened from
+    // ±0.25% to ±0.05% (the PR-1 drift was documented as ≪0.1%, so this
+    // band still covers it while catching an order of magnitude more
+    // accidental drift). A follow-up with toolchain/artifact access
+    // should paste the SMASH_REPIN values into golden() and set this to
+    // 0.0. Determinism itself is asserted exactly by
+    // `determinism_across_runs` in smash_correctness.rs; this band only
+    // exists because the goldens were pinned before the accounting fix.
+    const REPIN_BAND: f64 = 0.0005;
     let want = golden();
     for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
         let dev = (g as f64 - w as f64).abs() / w as f64;

@@ -1,0 +1,95 @@
+//! Semiring parity suite — the tentpole acceptance bar for the
+//! semiring-generic parallel backend.
+//!
+//! For each of the four semirings (arithmetic, boolean, min-plus,
+//! max-times), both parallel executors (persistent pool and
+//! spawn-per-call) under every accumulator mode (adaptive, forced dense,
+//! forced hash) must be **bitwise** equal to the serial
+//! [`spgemm_semiring`] oracle across the generator suite, including the
+//! hypersparse 2^18-column shape where the hash lane is what keeps the
+//! products servable.
+
+use smash::formats::Csr;
+use smash::gen::{banded, diagonal_noise, erdos_renyi, hypersparse, rmat, RmatParams};
+use smash::spgemm::{
+    par_gustavson_kind, par_gustavson_spawning_kind, spgemm_semiring, AccumMode, AccumSpec,
+    SemiringKind,
+};
+
+/// The generator suite (the same shapes the tune sweep gates on),
+/// including the hypersparse wide pair.
+fn suite() -> Vec<(&'static str, Csr, Csr)> {
+    vec![
+        (
+            "rmat",
+            rmat(&RmatParams::new(7, 900, 1)),
+            rmat(&RmatParams::new(7, 900, 2)),
+        ),
+        (
+            "erdos_renyi",
+            erdos_renyi(96, 700, 3),
+            erdos_renyi(96, 700, 4),
+        ),
+        ("banded", banded(64, 3, 5), banded(64, 2, 6)),
+        (
+            "diagonal_noise",
+            diagonal_noise(80, 240, 7),
+            diagonal_noise(80, 240, 8),
+        ),
+        (
+            "hypersparse_2^18",
+            hypersparse(18, 3_000, 9),
+            hypersparse(18, 3_000, 10),
+        ),
+    ]
+}
+
+fn assert_bitwise(c: &Csr, oracle: &Csr, label: &str) {
+    assert_eq!(c.row_ptr, oracle.row_ptr, "{label}: row_ptr");
+    assert_eq!(c.col_idx, oracle.col_idx, "{label}: col_idx");
+    assert_eq!(c.data, oracle.data, "{label}: data");
+}
+
+#[test]
+fn every_semiring_every_backend_every_mode_bitwise_equals_serial_oracle() {
+    for (name, a, b) in suite() {
+        for kind in SemiringKind::ALL {
+            let oracle = spgemm_semiring(&a, &b, kind);
+            for mode in [AccumMode::Adaptive, AccumMode::Dense, AccumMode::Hash] {
+                let spec = AccumSpec::Fixed(mode);
+                let (cp, tp, _) = par_gustavson_kind(&a, &b, 3, spec, kind);
+                let (cs, ts, _) = par_gustavson_spawning_kind(&a, &b, 3, spec, kind);
+                let label = format!("{name}/{}/{}", kind.name(), mode.name());
+                assert_bitwise(&cp, &oracle, &format!("{label}/pooled"));
+                assert_bitwise(&cs, &oracle, &format!("{label}/spawning"));
+                for (backend, t) in [("pooled", &tp), ("spawning", &ts)] {
+                    assert_eq!(
+                        t.accum.dense_rows + t.accum.hash_rows,
+                        a.rows as u64,
+                        "{label}/{backend}: every row must be routed to exactly one lane"
+                    );
+                    match mode {
+                        AccumMode::Dense => assert_eq!(t.accum.hash_rows, 0, "{label}/{backend}"),
+                        AccumMode::Hash => assert_eq!(t.accum.dense_rows, 0, "{label}/{backend}"),
+                        AccumMode::Adaptive => {}
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Thread-count independence under non-arithmetic semirings: the fold
+/// order is row-local, so results cannot depend on the partition.
+#[test]
+fn semiring_results_thread_count_independent() {
+    let a = rmat(&RmatParams::new(7, 800, 21));
+    let b = rmat(&RmatParams::new(7, 800, 22));
+    for kind in [SemiringKind::Boolean, SemiringKind::MinPlus, SemiringKind::MaxTimes] {
+        let oracle = spgemm_semiring(&a, &b, kind);
+        for threads in [1, 2, 5, 8] {
+            let (c, _, _) = par_gustavson_kind(&a, &b, threads, AccumSpec::default(), kind);
+            assert_bitwise(&c, &oracle, &format!("{}/t{threads}", kind.name()));
+        }
+    }
+}
