@@ -12,7 +12,9 @@ use smash::config::{KernelConfig, SimConfig};
 use smash::coordinator::{schedule_windows, Coordinator, Job, SchedPolicy, ServerConfig};
 use smash::gen::{rmat, RmatParams};
 use smash::kernels::plan_windows;
-use smash::spgemm::{AccumMode, AccumSpec, AccumStats, Dataflow, SemiringKind, WorkerPool};
+use smash::spgemm::{
+    AccumMode, AccumSpec, AccumStats, BandSpec, Dataflow, SemiringKind, WorkerPool,
+};
 use std::time::Instant;
 
 fn main() {
@@ -164,6 +166,37 @@ fn main() {
             .expect("native par-Gustavson jobs record their policy")
             .describe(),
         auto_resp.symbolic_reused == Some(true)
+    );
+
+    // And one blocked job: the propagation-blocking banded backend serves
+    // the same registered pair with B's columns cut into bands, so the
+    // dense accumulator lane never exceeds the band width. Blocked jobs
+    // key their plan-cache slot separately from the unblocked burst
+    // above, so this computes its own symbolic pass.
+    coord.submit(Job::NativeSpgemm {
+        a: id_a.into(),
+        b: id_b.into(),
+        dataflow: Dataflow::ParGustavsonBlocked {
+            threads: 4,
+            accum: AccumSpec::Auto,
+            semiring: SemiringKind::Arithmetic,
+            bands: BandSpec::Auto,
+        },
+    });
+    let blocked_resp = coord.collect_one().expect("blocked job outstanding");
+    let bt = blocked_resp.traffic.expect("native jobs report traffic");
+    assert!(bt.band.band_cols > 0, "blocked jobs record band stats");
+    assert!(
+        bt.band.max_dense_lane_cols <= bt.band.band_cols,
+        "the dense lane must fit the band"
+    );
+    println!(
+        "blocked job: {} band(s) of {} cols, max dense lane {} cols, \
+         plan slot distinct from unblocked burst: {}",
+        bt.band.bands,
+        bt.band.band_cols,
+        bt.band.max_dense_lane_cols,
+        blocked_resp.symbolic_reused == Some(false)
     );
     coord.shutdown();
 

@@ -14,9 +14,10 @@ use smash::kernels::{
     insertion_sort_cost, insertion_sort_cost_quadratic, run_smash, TagTable,
 };
 use smash::spgemm::{
-    gustavson, par_gustavson, par_gustavson_accum, par_gustavson_kind, par_gustavson_spawning,
-    par_gustavson_spec, par_gustavson_with_plan, rowwise_hash, spgemm_semiring, symbolic_plan,
-    AccumMode, AccumSpec, Dataflow, SemiringKind,
+    gustavson, par_gustavson, par_gustavson_accum, par_gustavson_blocked_with_plan_policy,
+    par_gustavson_kind, par_gustavson_spawning, par_gustavson_spec, par_gustavson_with_plan,
+    par_gustavson_with_plan_policy, rowwise_hash, spgemm_semiring, symbolic_plan, AccumMode,
+    AccumSpec, BandSpec, Dataflow, SemiringKind,
 };
 use smash::util::prng::Xoshiro256;
 use std::sync::Arc;
@@ -170,6 +171,49 @@ fn main() {
         assert_eq!(t.accum.dense_rows + t.accum.hash_rows, a.rows as u64);
         h.run(&format!("par_gustavson_t4_semiring_{}_2^11", kind.name()), || {
             par_gustavson_kind(&a, &b, 4, AccumSpec::default(), kind)
+        });
+    }
+
+    // ---- Propagation blocking (the banded backend): blocked vs
+    // unblocked on the hypersparse 2^18-column pair — the wide shape
+    // banding exists for — sharing ONE symbolic plan so the diff is pure
+    // numeric-pass cost. Every band width is bitwise-asserted against
+    // the serial oracle before timing, and the band stats must bound the
+    // dense accumulator lane by the configured band.
+    {
+        let (_, ai, bi) = accum_inputs
+            .iter()
+            .find(|(n, _, _)| *n == "hypersparse_2^18")
+            .expect("hypersparse pair present");
+        let (oracle, _) = gustavson(ai, bi);
+        let plan = symbolic_plan(ai, bi, 4);
+        for (label, spec) in [("auto", BandSpec::Auto), ("64", BandSpec::Cols(64))] {
+            let band_cols = spec.resolve(bi.cols);
+            let policy = AccumSpec::Auto.resolve(band_cols, &plan.row_flops);
+            let (c, t) =
+                par_gustavson_blocked_with_plan_policy(ai, bi, 4, &plan, policy, band_cols);
+            assert_eq!(oracle.row_ptr, c.row_ptr, "blocked/{label}");
+            assert_eq!(oracle.col_idx, c.col_idx, "blocked/{label}");
+            assert_eq!(
+                oracle.data,
+                c.data,
+                "blocked/{label}: banded product must match the oracle bitwise"
+            );
+            assert!(
+                t.band.max_dense_lane_cols <= band_cols as u64,
+                "blocked/{label}: dense lane ({}) must fit the band ({band_cols})",
+                t.band.max_dense_lane_cols
+            );
+            h.run(
+                &format!("par_gustavson_t4_blocked_{label}_hypersparse_2^18"),
+                || par_gustavson_blocked_with_plan_policy(ai, bi, 4, &plan, policy, band_cols),
+            );
+        }
+        let policy = AccumSpec::Auto.resolve(bi.cols, &plan.row_flops);
+        let (c, _) = par_gustavson_with_plan_policy(ai, bi, 4, &plan, policy);
+        assert_eq!(oracle.data, c.data, "unblocked baseline must stay bitwise-oracle");
+        h.run("par_gustavson_t4_unblocked_hypersparse_2^18", || {
+            par_gustavson_with_plan_policy(ai, bi, 4, &plan, policy)
         });
     }
 

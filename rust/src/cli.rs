@@ -17,7 +17,7 @@ use crate::formats::mm;
 use crate::gen::{rmat, RmatParams};
 use crate::kernels::{run_all_versions, run_smash};
 use crate::report::bar_chart;
-use crate::spgemm::{AccumMode, AccumSpec, Dataflow, SemiringKind};
+use crate::spgemm::{AccumMode, AccumSpec, BandSpec, Dataflow, SemiringKind};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 
@@ -82,6 +82,7 @@ USAGE: smash <tables|figures|run|gcn|gen|serve|tune|help> [flags]
           [--no-batch] [--spawn] [--max-resident-mb N]
           [--accum adaptive|dense|hash|auto] [--accum-threshold N]
           [--semiring arith|bool|minplus|maxtimes]
+          [--blocked] [--band-cols N|auto]
           — register one resident matrix pair, serve a burst of zero-copy
           requests against it (native parallel Gustavson on the persistent
           worker pool, or --smash sim). Jobs sharing the registered pair
@@ -94,7 +95,12 @@ USAGE: smash <tables|figures|run|gcn|gen|serve|tune|help> [flags]
           --accum-threshold overrides the adaptive switch point (FLOPs);
           --semiring folds products under an algebraic semiring (boolean
           reachability, min-plus shortest paths, max-times reliability) on
-          the same parallel backend and shared symbolic plans
+          the same parallel backend and shared symbolic plans; --blocked
+          serves the propagation-blocking banded backend (B's columns
+          split into bands so the dense accumulator lane never exceeds
+          the band width — bitwise-identical output); --band-cols sets
+          the band width (auto = widest power of two whose dense lane
+          fits one 64 KiB scratchpad way)
   tune    [--smoke] [--out report.json] [--threads 4] [--iters N] [--seed N]
           — sweep the adaptive accumulator threshold (powers-of-two
           fractions of b.cols, forced dense/hash endpoints, and the auto
@@ -362,6 +368,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let spawn = args.get("spawn").is_some();
     let batch = args.get("no-batch").is_none();
     let accum = parse_accum_flags(args)?;
+    let bands = parse_band_flags(args)?;
     let semiring = match args.get("semiring") {
         None => SemiringKind::Arithmetic,
         Some(s) => SemiringKind::parse(s)
@@ -385,6 +392,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     if semiring != SemiringKind::Arithmetic && spawn {
         bail!("--semiring has no effect with --spawn (the spawn baseline is arithmetic-only)");
+    }
+    if bands.is_some() && smash {
+        bail!("--blocked applies to native jobs; the simulated SMASH kernel is unbanded");
+    }
+    if bands.is_some() && spawn {
+        bail!("--blocked has no effect with --spawn (the spawn baseline is unbanded)");
     }
     // 0 (the default) = unlimited; N bounds the registry to N MiB with
     // LRU eviction past it.
@@ -411,6 +424,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let dataflow = if spawn {
         Dataflow::ParGustavsonSpawn { threads }
+    } else if let Some(bands) = bands {
+        Dataflow::ParGustavsonBlocked { threads, accum, semiring, bands }
     } else {
         Dataflow::ParGustavson { threads, accum, semiring }
     };
@@ -419,6 +434,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut total_nnz = 0usize;
     let mut reused = 0usize;
     let mut accum_stats = crate::spgemm::AccumStats::default();
+    let mut band_stats = crate::spgemm::BandStats::default();
     let mut resolved_policy: Option<crate::spgemm::AccumPolicy> = None;
     let mut drain = |r: crate::coordinator::Response| {
         total_nnz += r.c.nnz();
@@ -428,6 +444,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         if let Some(t) = &r.traffic {
             accum_stats.merge(&t.accum);
+            band_stats.merge(&t.band);
         }
         if r.accum_policy.is_some() {
             resolved_policy = r.accum_policy;
@@ -466,6 +483,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "simulated SMASH".to_string()
         } else if spawn {
             format!("native par-Gustavson({threads}, spawn-per-call)")
+        } else if let Some(b) = bands {
+            format!(
+                "native par-Gustavson({threads}, blocked bands={}, {} accumulator, {} semiring)",
+                b.describe(),
+                accum.describe(),
+                semiring.name()
+            )
         } else {
             format!(
                 "native par-Gustavson({threads}, pooled, {} accumulator, {} semiring)",
@@ -492,6 +516,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
             accum_stats.table.collision_rate() * 100.0,
             crate::util::fmt_bytes(accum_stats.peak_bytes),
             crate::util::fmt_bytes(9 * (1u64 << log2n)),
+        );
+    }
+    if bands.is_some() && band_stats.band_cols > 0 {
+        println!(
+            "propagation blocking: {} bands of {} cols, {} row-band segments per burst, \
+             max dense lane {} cols (unblocked lane would span {} cols)",
+            band_stats.bands,
+            band_stats.band_cols,
+            crate::util::fmt_count(band_stats.segments),
+            band_stats.max_dense_lane_cols,
+            1u64 << log2n,
         );
     }
     let (passes, hits) = coord.symbolic_stats();
@@ -544,6 +579,21 @@ fn parse_accum_flags(args: &Args) -> Result<AccumSpec> {
                 ),
             }
         }
+    }
+}
+
+/// Resolve `--blocked` / `--band-cols` into an optional [`BandSpec`]:
+/// `None` means the unblocked backend. `--blocked` alone defaults to the
+/// auto band width; `--band-cols` only combines with `--blocked` (it
+/// would silently do nothing otherwise).
+fn parse_band_flags(args: &Args) -> Result<Option<BandSpec>> {
+    let blocked = args.get("blocked").is_some();
+    match args.get("band-cols") {
+        None => Ok(blocked.then_some(BandSpec::Auto)),
+        Some(_) if !blocked => bail!("--band-cols only combines with --blocked"),
+        Some(s) => BandSpec::parse(s)
+            .map(Some)
+            .with_context(|| format!("bad --band-cols value `{s}` (positive integer or `auto`)")),
     }
 }
 
@@ -798,6 +848,29 @@ mod tests {
         );
         assert!(parse_accum_flags(&argv(&["--accum", "auto", "--accum-threshold", "64"])).is_err());
         assert!(parse_accum_flags(&argv(&["--accum-threshold", "not-a-number"])).is_err());
+    }
+
+    #[test]
+    fn band_flag_parsing() {
+        let argv = |s: &[&str]| -> Args {
+            Args::parse(&s.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+        };
+        assert_eq!(parse_band_flags(&argv(&[])).unwrap(), None);
+        assert_eq!(
+            parse_band_flags(&argv(&["--blocked"])).unwrap(),
+            Some(BandSpec::Auto)
+        );
+        assert_eq!(
+            parse_band_flags(&argv(&["--blocked", "--band-cols", "auto"])).unwrap(),
+            Some(BandSpec::Auto)
+        );
+        assert_eq!(
+            parse_band_flags(&argv(&["--blocked", "--band-cols", "256"])).unwrap(),
+            Some(BandSpec::Cols(256))
+        );
+        assert!(parse_band_flags(&argv(&["--band-cols", "256"])).is_err());
+        assert!(parse_band_flags(&argv(&["--blocked", "--band-cols", "0"])).is_err());
+        assert!(parse_band_flags(&argv(&["--blocked", "--band-cols", "wide"])).is_err());
     }
 
     #[test]

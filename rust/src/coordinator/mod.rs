@@ -12,5 +12,5 @@ pub mod scheduler;
 pub mod server;
 
 pub use die::{run_die, DieReport};
-pub use scheduler::{schedule_windows, Assignment, SchedPolicy};
+pub use scheduler::{schedule_loads, schedule_windows, Assignment, SchedPolicy};
 pub use server::{Coordinator, Job, JobId, MatrixId, MatrixRef, Response, ServerConfig};

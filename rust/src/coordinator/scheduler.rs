@@ -1,87 +1,22 @@
 //! Window scheduling across blocks (§5.1.1): windows are shipped to blocks
 //! over the DGAS and processed independently, "scheduled to blocks in
-//! random order and oversubscribed". We implement and compare:
+//! random order and oversubscribed".
 //!
-//! * round-robin (the naive baseline),
-//! * LPT (longest-processing-time-first greedy on FMA estimates) — the
-//!   oversubscription policy: light windows pack onto busy blocks.
+//! The packer itself lives in the plan pipeline
+//! ([`crate::spgemm::plan::schedule`]) since the refactor that made
+//! scheduling an axis-free pass (it packs any load vector — row windows
+//! here, column bands in the blocked backend). This module re-exports it
+//! under the coordinator's historical path and keeps the scheduling
+//! behaviour tests close to the serving layer that depends on them.
 
-use crate::kernels::Window;
-
-/// Assignment of window index -> block index.
-#[derive(Clone, Debug, PartialEq)]
-pub struct Assignment {
-    pub window_to_block: Vec<usize>,
-    pub blocks: usize,
-    /// Estimated per-block load (sum of assigned FMA counts).
-    pub block_load: Vec<u64>,
-}
-
-impl Assignment {
-    /// Load imbalance: max/mean block load (1.0 = perfect).
-    pub fn imbalance(&self) -> f64 {
-        let max = *self.block_load.iter().max().unwrap_or(&0) as f64;
-        let sum: u64 = self.block_load.iter().sum();
-        let mean = sum as f64 / self.blocks.max(1) as f64;
-        if mean == 0.0 {
-            1.0
-        } else {
-            max / mean
-        }
-    }
-
-    /// Makespan estimate (max block load).
-    pub fn makespan(&self) -> u64 {
-        *self.block_load.iter().max().unwrap_or(&0)
-    }
-}
-
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum SchedPolicy {
-    RoundRobin,
-    /// Longest-processing-time-first greedy (oversubscription).
-    Lpt,
-}
-
-/// Compute the assignment of `windows` onto `blocks` blocks.
-pub fn schedule_windows(windows: &[Window], blocks: usize, policy: SchedPolicy) -> Assignment {
-    assert!(blocks > 0, "need at least one block");
-    let mut window_to_block = vec![0usize; windows.len()];
-    let mut block_load = vec![0u64; blocks];
-    match policy {
-        SchedPolicy::RoundRobin => {
-            for (i, w) in windows.iter().enumerate() {
-                let b = i % blocks;
-                window_to_block[i] = b;
-                block_load[b] += w.flops.max(1);
-            }
-        }
-        SchedPolicy::Lpt => {
-            // sort window indices by descending cost, assign each to the
-            // least-loaded block
-            let mut order: Vec<usize> = (0..windows.len()).collect();
-            order.sort_by_key(|&i| std::cmp::Reverse(windows[i].flops));
-            for i in order {
-                let (b, _) = block_load
-                    .iter()
-                    .enumerate()
-                    .min_by_key(|(_, l)| **l)
-                    .unwrap();
-                window_to_block[i] = b;
-                block_load[b] += windows[i].flops.max(1);
-            }
-        }
-    }
-    Assignment {
-        window_to_block,
-        blocks,
-        block_load,
-    }
-}
+pub use crate::spgemm::plan::schedule::{
+    schedule_loads, schedule_windows, Assignment, SchedPolicy,
+};
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernels::Window;
     use crate::util::quick::forall;
 
     fn mk_windows(costs: &[u64]) -> Vec<Window> {

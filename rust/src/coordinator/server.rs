@@ -46,8 +46,9 @@ use crate::config::{KernelConfig, SimConfig, TablePlacement};
 use crate::formats::Csr;
 use crate::kernels::{plan_windows, run_smash_with_plan, WindowPlan};
 use crate::spgemm::{
-    par_gustavson_kind, par_gustavson_with_plan_kind, symbolic_plan, AccumPolicy, Dataflow,
-    SemiringKind, SymbolicPlan, Traffic,
+    par_gustavson_blocked_kind, par_gustavson_blocked_with_plan_kind, par_gustavson_kind,
+    par_gustavson_with_plan_kind, symbolic_plan, AccumPolicy, BandSpec, Dataflow, SemiringKind,
+    SymbolicPlan, Traffic,
 };
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -288,8 +289,13 @@ pub struct Coordinator {
     resident_bytes: usize,
     max_resident_bytes: usize,
     symbolic_cache_enabled: bool,
-    /// Symbolic-plan slots keyed by registered (a, b) id pair.
-    plans: HashMap<(u64, u64), PlanSlot>,
+    /// Symbolic-plan slots keyed by registered (a, b) id pair plus the
+    /// job's band spec (`None` = unblocked). Symbolic plans are in fact
+    /// band-independent, but blocked and unblocked jobs resolve their
+    /// accumulator policies against different widths, so keeping the
+    /// slots distinct makes the pass accounting per backend observable
+    /// (and keeps the keying rule dumb enough to audit).
+    plans: HashMap<(u64, u64, Option<BandSpec>), PlanSlot>,
     /// SMASH window-plan slots keyed by registered pair + planning knobs.
     window_plans: HashMap<WindowPlanKey, WindowSlot>,
     stats: Arc<SymbolicStats>,
@@ -468,7 +474,7 @@ impl Coordinator {
         match self.registry.remove(&id.0) {
             Some(r) => {
                 self.resident_bytes -= r.bytes;
-                self.plans.retain(|&(pa, pb), _| pa != id.0 && pb != id.0);
+                self.plans.retain(|&(pa, pb, _), _| pa != id.0 && pb != id.0);
                 self.window_plans.retain(|k, _| k.a != id.0 && k.b != id.0);
                 if self.names.get(&r.name) == Some(&id) {
                     self.names.remove(&r.name);
@@ -512,7 +518,7 @@ impl Coordinator {
                     // workers mid-burst keep their Arc'd slot clones
                     // either way.
                     let prot = |id: u64| protect.iter().any(|p| p.0 == id);
-                    self.plans.retain(|&(pa, pb), _| prot(pa) && prot(pb));
+                    self.plans.retain(|&(pa, pb, _), _| prot(pa) && prot(pb));
                     self.window_plans.retain(|k, _| prot(k.a) && prot(k.b));
                     break;
                 }
@@ -544,18 +550,21 @@ impl Coordinator {
     /// The shared symbolic-plan slot for a job, when batching applies:
     /// cache enabled, pool-backed parallel dataflow, and both operands
     /// registered. Plans are accumulator-mode independent, so jobs that
-    /// differ only in `accum` share a slot.
+    /// differ only in `accum` share a slot; blocked jobs are keyed by
+    /// their band spec and never share a slot with unblocked jobs.
     fn plan_slot(&mut self, used: &[MatrixId], dataflow: Dataflow) -> Option<PlanSlot> {
         if !self.symbolic_cache_enabled {
             return None;
         }
-        if !matches!(dataflow, Dataflow::ParGustavson { .. }) {
-            return None;
-        }
+        let bands = match dataflow {
+            Dataflow::ParGustavson { .. } => None,
+            Dataflow::ParGustavsonBlocked { bands, .. } => Some(bands),
+            _ => return None,
+        };
         match used {
             [a, b] => Some(Arc::clone(
                 self.plans
-                    .entry((a.0, b.0))
+                    .entry((a.0, b.0, bands))
                     .or_insert_with(|| Arc::new(Mutex::new(None))),
             )),
             _ => None,
@@ -785,6 +794,47 @@ fn serve_work(work: Work, stats: &SymbolicStats) -> ServedJob {
                     sim_ms: None,
                     registered,
                     symbolic_reused: Some(reused),
+                    traffic: Some(t),
+                    accum_policy: Some(policy),
+                    semiring: Some(semiring),
+                }
+            }
+            (Dataflow::ParGustavsonBlocked { threads, accum, semiring, bands }, Some(slot)) => {
+                let (plan, reused) = cached_or_compute(&slot, &stats.passes, &stats.hits, || {
+                    symbolic_plan(&a, &b, threads)
+                });
+                // Blocked jobs resolve their accumulator policy against
+                // the BAND width, not the full column count — that is the
+                // point of banding: the dense lane never exceeds the band.
+                let band_cols = bands.resolve(b.cols);
+                let policy = accum.resolve(band_cols, &plan.row_flops);
+                let (c, t) = par_gustavson_blocked_with_plan_kind(
+                    &a,
+                    &b,
+                    threads,
+                    &plan,
+                    policy,
+                    band_cols,
+                    semiring,
+                );
+                ServedJob {
+                    c,
+                    sim_ms: None,
+                    registered,
+                    symbolic_reused: Some(reused),
+                    traffic: Some(t),
+                    accum_policy: Some(policy),
+                    semiring: Some(semiring),
+                }
+            }
+            (Dataflow::ParGustavsonBlocked { threads, accum, semiring, bands }, None) => {
+                let (c, t, policy) =
+                    par_gustavson_blocked_kind(&a, &b, threads, accum, bands, semiring);
+                ServedJob {
+                    c,
+                    sim_ms: None,
+                    registered,
+                    symbolic_reused: None,
                     traffic: Some(t),
                     accum_policy: Some(policy),
                     semiring: Some(semiring),
@@ -1307,6 +1357,121 @@ mod tests {
                 "{}: every row routed",
                 kind.name()
             );
+        }
+        coord.shutdown();
+    }
+
+    /// Plan-cache keying: blocked and unblocked jobs on the SAME
+    /// registered pair must NOT share a slot — each computes its own
+    /// symbolic pass — while both return bitwise-oracle products, and the
+    /// blocked response's traffic carries band stats bounding the dense
+    /// lane by the configured band width.
+    #[test]
+    fn blocked_and_unblocked_jobs_use_distinct_plan_slots() {
+        let mut coord = Coordinator::start(ServerConfig {
+            workers: 2,
+            queue_depth: 8,
+            ..ServerConfig::default()
+        });
+        let a = rmat(&RmatParams::new(7, 900, 95));
+        let b = rmat(&RmatParams::new(7, 900, 96));
+        let (oracle, _) = gustavson(&a, &b);
+        let id_a = coord.register("A", a);
+        let id_b = coord.register("B", b);
+        let plain = coord.submit(Job::NativeSpgemm {
+            a: id_a.into(),
+            b: id_b.into(),
+            dataflow: Dataflow::ParGustavson {
+                threads: 2,
+                accum: AccumSpec::default(),
+                semiring: SemiringKind::Arithmetic,
+            },
+        });
+        let blocked = coord.submit(Job::NativeSpgemm {
+            a: id_a.into(),
+            b: id_b.into(),
+            dataflow: Dataflow::ParGustavsonBlocked {
+                threads: 2,
+                accum: AccumSpec::default(),
+                semiring: SemiringKind::Arithmetic,
+                bands: BandSpec::Cols(32),
+            },
+        });
+        let responses = coord.collect_all();
+        assert_eq!(responses.len(), 2);
+        assert_eq!(
+            coord.symbolic_stats(),
+            (2, 0),
+            "blocked and unblocked jobs must not share a plan slot"
+        );
+        for id in [&plain, &blocked] {
+            let r = &responses[id];
+            assert_eq!(r.c.row_ptr, oracle.row_ptr);
+            assert_eq!(r.c.col_idx, oracle.col_idx);
+            assert_eq!(r.c.data, oracle.data, "blocked output must stay bitwise-oracle");
+            assert_eq!(r.symbolic_reused, Some(false));
+        }
+        let t = responses[&blocked].traffic.expect("native jobs report traffic");
+        assert_eq!(t.band.band_cols, 32);
+        assert_eq!(t.band.bands, (oracle.cols as u64).div_ceil(32));
+        assert!(
+            t.band.max_dense_lane_cols <= 32,
+            "dense lane must fit the configured band"
+        );
+        let tp = responses[&plain].traffic.unwrap();
+        assert_eq!(tp.band.band_cols, 0, "unblocked jobs report no band stats");
+        coord.shutdown();
+    }
+
+    /// The batching contract extends to the blocked backend: a burst of
+    /// blocked jobs sharing one registered pair and one band spec performs
+    /// exactly ONE symbolic pass (mixed accumulator specs still share —
+    /// plans are policy-free), with every product bitwise-oracle.
+    #[test]
+    fn blocked_burst_shares_one_plan() {
+        let mut coord = Coordinator::start(ServerConfig {
+            workers: 3,
+            queue_depth: 16,
+            ..ServerConfig::default()
+        });
+        let a = rmat(&RmatParams::new(7, 900, 97));
+        let b = rmat(&RmatParams::new(7, 900, 98));
+        let (oracle, _) = gustavson(&a, &b);
+        let id_a = coord.register("A", a);
+        let id_b = coord.register("B", b);
+        for accum in [
+            AccumSpec::Auto,
+            AccumSpec::from(AccumMode::Dense),
+            AccumSpec::from(AccumMode::Hash),
+            AccumSpec::AdaptiveAt(8),
+            AccumSpec::Auto,
+            AccumSpec::Auto,
+        ] {
+            coord.submit(Job::NativeSpgemm {
+                a: id_a.into(),
+                b: id_b.into(),
+                dataflow: Dataflow::ParGustavsonBlocked {
+                    threads: 2,
+                    accum,
+                    semiring: SemiringKind::Arithmetic,
+                    bands: BandSpec::Auto,
+                },
+            });
+        }
+        let responses = coord.collect_all();
+        assert_eq!(responses.len(), 6);
+        assert_eq!(
+            coord.symbolic_stats(),
+            (1, 5),
+            "a blocked burst must share exactly one symbolic pass"
+        );
+        for r in responses.values() {
+            assert_eq!(r.c.row_ptr, oracle.row_ptr);
+            assert_eq!(r.c.col_idx, oracle.col_idx);
+            assert_eq!(r.c.data, oracle.data);
+            assert!(r.symbolic_reused.is_some());
+            let t = r.traffic.expect("native jobs report traffic");
+            assert!(t.band.band_cols > 0, "blocked jobs report band stats");
         }
         coord.shutdown();
     }

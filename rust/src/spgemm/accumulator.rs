@@ -297,6 +297,10 @@ pub struct RowAccumulator<S: Semiring = Arithmetic> {
     used_slots: Vec<u32>,
     /// Sorted-drain scratch of the hash lane.
     drain_buf: Vec<(Index, Value)>,
+    /// Per-A-entry `[start, end)` segment bounds of the live band
+    /// ([`RowAccumulator::numeric_row_band`] scratch, reused across
+    /// calls).
+    seg_buf: Vec<(u32, u32)>,
     /// Cumulative statistics; snapshot via [`RowAccumulator::finish`].
     pub stats: AccumStats,
 }
@@ -335,6 +339,7 @@ impl<S: Semiring> RowAccumulator<S> {
             vals: Vec::new(),
             used_slots: Vec::new(),
             drain_buf: Vec::new(),
+            seg_buf: Vec::new(),
             stats: AccumStats::default(),
         }
     }
@@ -350,6 +355,7 @@ impl<S: Semiring> RowAccumulator<S> {
             + self.vals.len() * std::mem::size_of::<Value>()
             + self.used_slots.capacity() * std::mem::size_of::<u32>()
             + self.drain_buf.capacity() * std::mem::size_of::<(Index, Value)>()
+            + self.seg_buf.capacity() * std::mem::size_of::<(u32, u32)>()
     }
 
     /// Snapshot the stats with the current footprint as `peak_bytes` —
@@ -498,6 +504,122 @@ impl<S: Semiring> RowAccumulator<S> {
             t.intermediate_peak = t.intermediate_peak.max(n as u64);
             n
         }
+    }
+
+    /// Accumulate the segment of output row `i` whose columns fall in the
+    /// band `[lo, hi)`, then emit its `(global column, value)` pairs in
+    /// strictly increasing column order — the propagation-blocking
+    /// numeric kernel (`par_gustavson_blocked`). Returns the segment's
+    /// nnz.
+    ///
+    /// The accumulator must be sized to the band (`cols >= hi - lo`):
+    /// dense-lane indices are rebased to band-local offsets, so the dense
+    /// scratch is O(band width), never O(b.cols) — that is the whole
+    /// point of banding. Lane selection uses the *band-local* FLOPs
+    /// bound, counted here by binary-searching each B row's sorted column
+    /// list for the band segment (index probes — not charged as
+    /// `b_reads`; only segment values actually multiplied are).
+    ///
+    /// Bitwise contract: every output column lives in exactly one band,
+    /// and within the band partial products fold in the same
+    /// A-row-then-B-row order as [`RowAccumulator::numeric_row_emit`]
+    /// folds them — so per-column values are bitwise identical to the
+    /// unblocked lanes, and concatenating per-band drains in ascending
+    /// band order reproduces the full row in ascending column order.
+    pub fn numeric_row_band(
+        &mut self,
+        a: &Csr,
+        b: &Csr,
+        i: usize,
+        band: (usize, usize),
+        t: &mut Traffic,
+        mut emit: impl FnMut(Index, Value),
+    ) -> usize {
+        let (lo, hi) = band;
+        debug_assert!(hi - lo <= self.cols, "band wider than the accumulator");
+        let (acols, avals) = a.row(i);
+        // Segment pass: locate each B row's [lo, hi) column range and sum
+        // the band-local FLOPs bound that picks the lane.
+        let mut seg = std::mem::take(&mut self.seg_buf);
+        seg.clear();
+        let mut band_flops = 0u64;
+        for &k in acols {
+            let (bcols, _) = b.row(k as usize);
+            let s = bcols.partition_point(|&j| (j as usize) < lo);
+            let e = bcols.partition_point(|&j| (j as usize) < hi);
+            seg.push((s as u32, e as u32));
+            band_flops += (e - s) as u64;
+        }
+        if band_flops == 0 {
+            // Nothing of row `i` lands in this band: no lane fires and no
+            // element is read, so the segment does not count toward the
+            // routed-row stats.
+            self.seg_buf = seg;
+            return 0;
+        }
+        t.a_reads += acols.len() as u64;
+        let n = if self.policy.wants_hash(band_flops) {
+            self.stats.hash_rows += 1;
+            for ((&k, &av), &(s, e)) in acols.iter().zip(avals).zip(&seg) {
+                let (bcols, bvals) = b.row(k as usize);
+                t.b_reads += (e - s) as u64;
+                for idx in s as usize..e as usize {
+                    let prod = self.semiring.mul(av, bvals[idx]);
+                    self.hash_upsert(bcols[idx], prod);
+                    t.flops += 1;
+                }
+            }
+            let n = self.used_slots.len();
+            self.drain_buf.clear();
+            for &s in &self.used_slots {
+                self.drain_buf.push((self.tags[s as usize], self.vals[s as usize]));
+            }
+            self.drain_buf.sort_unstable_by_key(|&(j, _)| j);
+            for idx in 0..self.drain_buf.len() {
+                let (j, v) = self.drain_buf[idx];
+                emit(j, v);
+                t.c_writes += 1;
+            }
+            self.clear_hash_row();
+            n
+        } else {
+            self.stats.dense_rows += 1;
+            let zero = self.semiring.zero();
+            if self.acc.is_empty() && self.cols > 0 {
+                self.acc = vec![zero; self.cols];
+                self.present = vec![false; self.cols];
+            }
+            for ((&k, &av), &(s, e)) in acols.iter().zip(avals).zip(&seg) {
+                let (bcols, bvals) = b.row(k as usize);
+                t.b_reads += (e - s) as u64;
+                for idx in s as usize..e as usize {
+                    // Band-local rebase: the dense lane never indexes past
+                    // the band width.
+                    let jl = bcols[idx] as usize - lo;
+                    if !self.present[jl] {
+                        self.present[jl] = true;
+                        self.touched.push(jl as Index);
+                    }
+                    self.acc[jl] =
+                        self.semiring.add(self.acc[jl], self.semiring.mul(av, bvals[idx]));
+                    t.flops += 1;
+                }
+            }
+            self.touched.sort_unstable();
+            let n = self.touched.len();
+            for idx in 0..n {
+                let jl = self.touched[idx] as usize;
+                emit((jl + lo) as Index, self.acc[jl]);
+                self.acc[jl] = zero;
+                self.present[jl] = false;
+                t.c_writes += 1;
+            }
+            self.touched.clear();
+            n
+        };
+        t.intermediate_peak = t.intermediate_peak.max(n as u64);
+        self.seg_buf = seg;
+        n
     }
 
     /// Merge `val` under column `j` in the hash lane: Fibonacci hash,
@@ -927,6 +1049,53 @@ mod tests {
                     "{}/{}: every row picks exactly one lane",
                     kind.name(),
                     mode.name()
+                );
+            }
+        }
+    }
+
+    /// Band-sliced accumulation: concatenating `numeric_row_band` drains
+    /// over any band width reproduces the full-width `numeric_row_emit`
+    /// row bitwise, for both lanes, and the dense scratch stays sized to
+    /// the band.
+    #[test]
+    fn banded_rows_concatenate_to_full_rows_bitwise() {
+        let a = rmat(&RmatParams::new(7, 900, 301));
+        let b = rmat(&RmatParams::new(7, 900, 302));
+        let flops = flops_per_row(&a, &b);
+        for mode in [AccumMode::Adaptive, AccumMode::Dense, AccumMode::Hash] {
+            // Full-width reference.
+            let mut full = RowAccumulator::with_mode(b.cols, mode);
+            let mut tf = Traffic::default();
+            let mut want: Vec<(usize, Index, Value)> = Vec::new();
+            for i in 0..a.rows {
+                full.numeric_row_emit(&a, &b, i, flops[i], &mut tf, |j, v| {
+                    want.push((i, j, v));
+                });
+            }
+            for band_cols in [1usize, 7, 64, b.cols] {
+                let mut racc = RowAccumulator::with_mode(band_cols, mode);
+                let mut t = Traffic::default();
+                let mut got: Vec<(usize, Index, Value)> = Vec::new();
+                for i in 0..a.rows {
+                    let mut lo = 0usize;
+                    while lo < b.cols {
+                        let hi = (lo + band_cols).min(b.cols);
+                        racc.numeric_row_band(&a, &b, i, (lo, hi), &mut t, |j, v| {
+                            got.push((i, j, v));
+                        });
+                        lo = hi;
+                    }
+                }
+                assert_eq!(got, want, "{}/band={band_cols}", mode.name());
+                assert_eq!(t.flops, tf.flops, "banding conserves FLOPs");
+                assert_eq!(t.c_writes, tf.c_writes, "banding conserves writes");
+                // The dense lane is sized to the band, not to b.cols.
+                assert!(
+                    racc.acc.len() <= band_cols,
+                    "{}/band={band_cols}: dense lane {} cols",
+                    mode.name(),
+                    racc.acc.len()
                 );
             }
         }

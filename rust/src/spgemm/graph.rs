@@ -204,9 +204,16 @@ fn registered(coord: &Coordinator, adj: MatrixId) -> Arc<Csr> {
         .expect("graph adjacency must be registered with the coordinator")
 }
 
-/// [`bfs_levels`] on the served fast path: each frontier expansion is a
-/// `frontier ⊗ A` boolean product (one job per level). The adjacency is
-/// the registered resident; frontiers are one-shot inline operands.
+/// [`bfs_levels`] on the served fast path, with batched multi-source
+/// frontiers: the distinct sources run one independent BFS each, but
+/// every level expands ALL of them with a single served `F ⊗ A` boolean
+/// product, where `F` is a k×n frontier matrix (one row per source).
+/// One job per level — not one per source per level — so a k-source
+/// traversal costs the same number of round-trips through the
+/// coordinator as a single-source one. The merged result takes the
+/// per-vertex minimum across sources, which is exactly the serial
+/// oracle's "hops from the nearest source". The adjacency is the
+/// registered resident; frontier matrices are one-shot inline operands.
 pub fn bfs_levels_served(
     coord: &mut Coordinator,
     adj: MatrixId,
@@ -214,31 +221,52 @@ pub fn bfs_levels_served(
     threads: usize,
 ) -> Vec<usize> {
     let n = registered(coord, adj).rows;
-    let mut levels = vec![usize::MAX; n];
-    let mut frontier: Vec<usize> = Vec::new();
+    // Deduplicate sources: a repeated source would add an identical BFS
+    // row (pure waste) without changing the min-merge.
+    let mut distinct: Vec<usize> = Vec::new();
     for &s in sources {
         assert!(s < n);
-        if levels[s] == usize::MAX {
-            levels[s] = 0;
-            frontier.push(s);
+        if !distinct.contains(&s) {
+            distinct.push(s);
         }
     }
+    let k = distinct.len();
+    let mut levels = vec![vec![usize::MAX; n]; k];
+    let mut frontiers: Vec<Vec<usize>> = distinct.iter().map(|&s| vec![s]).collect();
+    for (lv, &s) in levels.iter_mut().zip(&distinct) {
+        lv[s] = 0;
+    }
     let mut depth = 0usize;
-    while !frontier.is_empty() {
+    while frontiers.iter().any(|f| !f.is_empty()) {
         depth += 1;
-        let f = Csr::from_triplets(1, n, frontier.iter().map(|&c| (0usize, c, 1.0)));
+        let f = Csr::from_triplets(
+            k,
+            n,
+            frontiers
+                .iter()
+                .enumerate()
+                .flat_map(|(r, fr)| fr.iter().map(move |&c| (r, c, 1.0))),
+        );
         let next = served_spgemm(coord, f.into(), adj.into(), SemiringKind::Boolean, threads);
-        frontier.clear();
-        let (cols, _) = next.row(0);
-        for &j in cols {
-            let j = j as usize;
-            if levels[j] == usize::MAX {
-                levels[j] = depth;
-                frontier.push(j);
+        for (r, (fr, lv)) in frontiers.iter_mut().zip(levels.iter_mut()).enumerate() {
+            fr.clear();
+            let (cols, _) = next.row(r);
+            for &j in cols {
+                let j = j as usize;
+                if lv[j] == usize::MAX {
+                    lv[j] = depth;
+                    fr.push(j);
+                }
             }
         }
     }
-    levels
+    let mut merged = vec![usize::MAX; n];
+    for lv in &levels {
+        for (m, &l) in merged.iter_mut().zip(lv) {
+            *m = (*m).min(l);
+        }
+    }
+    merged
 }
 
 /// [`apsp_minplus`] on the served fast path: each squaring round is a
@@ -474,6 +502,34 @@ mod tests {
         assert_eq!(served.col_idx, tc.col_idx);
         assert_eq!(served.data, tc.data);
         coord.shutdown();
+    }
+
+    /// Batched multi-source BFS: k sources traverse as one k-row frontier
+    /// matrix per level, and the min-merged levels equal the serial
+    /// multi-source oracle on graphs where the sources' BFS trees overlap,
+    /// run to different depths, and leave vertices unreachable.
+    #[test]
+    fn served_multi_source_bfs_matches_serial() {
+        let cases: Vec<(&str, Csr, Vec<usize>)> = vec![
+            ("path-ends", path4(), vec![0, 3]),
+            ("rmat", undirected(&rmat(&RmatParams::new(7, 420, 33))), vec![0, 17, 63, 5]),
+            ("banded", undirected(&banded(80, 2, 35)), vec![79, 0, 40]),
+        ];
+        for (name, adj, sources) in &cases {
+            let mut coord = Coordinator::start(ServerConfig {
+                workers: 2,
+                queue_depth: 8,
+                ..ServerConfig::default()
+            });
+            let id = coord.register("adjacency", adj.clone());
+            let served = bfs_levels_served(&mut coord, id, sources, 2);
+            assert_eq!(served, bfs_levels(adj, sources), "{name}");
+            // sanity: the merged result really is nearest-source hops
+            for &s in sources {
+                assert_eq!(served[s], 0, "{name}: source level");
+            }
+            coord.shutdown();
+        }
     }
 
     /// Serial BFS on a disconnected multi-source graph equals served BFS

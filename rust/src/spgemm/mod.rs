@@ -14,6 +14,7 @@ mod inner;
 mod intensity;
 mod outer;
 mod par;
+pub mod plan;
 mod rowwise;
 pub mod semiring;
 
@@ -26,12 +27,15 @@ pub use inner::inner_product;
 pub use intensity::{arithmetic_intensity, compression_factor, IntensityReport};
 pub use outer::outer_product;
 pub use par::{
-    par_gustavson, par_gustavson_accum, par_gustavson_kind, par_gustavson_semiring,
+    par_gustavson, par_gustavson_accum, par_gustavson_blocked, par_gustavson_blocked_kind,
+    par_gustavson_blocked_semiring, par_gustavson_blocked_with_plan_kind,
+    par_gustavson_blocked_with_plan_policy, par_gustavson_kind, par_gustavson_semiring,
     par_gustavson_spawning, par_gustavson_spawning_kind, par_gustavson_spawning_semiring,
     par_gustavson_spec, par_gustavson_with_plan, par_gustavson_with_plan_accum,
     par_gustavson_with_plan_kind, par_gustavson_with_plan_policy, par_gustavson_with_plan_semiring,
-    symbolic_plan, SymbolicPlan, WorkerPool,
+    symbolic_plan, WorkerPool,
 };
+pub use plan::{symbolic_plan_serial, BandPartition, BandSpec, SymbolicPlan};
 pub use rowwise::{rowwise_hash, rowwise_heap};
 pub use semiring::{
     ewise_add, spgemm_semiring, Arithmetic, Boolean, MaxTimes, MinPlus, Semiring, SemiringKind,
@@ -61,6 +65,41 @@ pub struct Traffic {
     /// rows, probe counts, peak per-worker accumulator bytes) — zero for
     /// dataflows that do not use the [`RowAccumulator`].
     pub accum: AccumStats,
+    /// Column-band statistics of the propagation-blocking backend
+    /// ([`par_gustavson_blocked`]) — zero for every unblocked dataflow.
+    pub band: BandStats,
+}
+
+/// Column-band counters of one blocked multiply, carried on
+/// [`Traffic::band`]. The load-bearing invariant is
+/// `max_dense_lane_cols <= band_cols`: banding bounds the dense
+/// accumulator lane by construction, and these stats surface that bound
+/// so tests and the serving layer can assert it.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BandStats {
+    /// Configured band width in columns (0 when the multiply was
+    /// unblocked).
+    pub band_cols: u64,
+    /// Column bands the partition produced (`⌈b.cols / band_cols⌉`).
+    pub bands: u64,
+    /// (row, band) segments that accumulated at least one product —
+    /// empty segments are skipped without touching a lane.
+    pub segments: u64,
+    /// Widest dense accumulator lane any worker materialized; stays 0 if
+    /// every segment hashed, and never exceeds `band_cols`.
+    pub max_dense_lane_cols: u64,
+}
+
+impl BandStats {
+    /// Fold another worker's band stats in: segment counts add, widths
+    /// and band counts (identical across workers of one multiply) take
+    /// the max.
+    pub fn merge(&mut self, o: &BandStats) {
+        self.band_cols = self.band_cols.max(o.band_cols);
+        self.bands = self.bands.max(o.bands);
+        self.segments += o.segments;
+        self.max_dense_lane_cols = self.max_dense_lane_cols.max(o.max_dense_lane_cols);
+    }
 }
 
 impl Traffic {
@@ -75,6 +114,7 @@ impl Traffic {
         self.intermediate_peak = self.intermediate_peak.max(o.intermediate_peak);
         self.flops += o.flops;
         self.accum.merge(&o.accum);
+        self.band.merge(&o.band);
     }
 
     /// Input reuse factor: useful input elements / total input reads.
@@ -115,6 +155,21 @@ pub enum Dataflow {
     /// path). Jobs that differ only in `accum` or `semiring` still share
     /// one cached symbolic plan — the plan is value-free.
     ParGustavson { threads: usize, accum: AccumSpec, semiring: SemiringKind },
+    /// [`ParGustavson`](Dataflow::ParGustavson) with propagation
+    /// blocking ([`par_gustavson_blocked`]): B's columns are cut into
+    /// [`BandSpec`]-width bands and each worker accumulates one band at a
+    /// time in a band-sized accumulator, so the dense lane is O(band)
+    /// instead of O(b.cols). Output is bitwise identical to the
+    /// unblocked backend. `bands` is a *plan-cache key* parameter in the
+    /// serving layer (blocked and unblocked jobs on one registered pair
+    /// use distinct slots), though the cached plan contents are
+    /// band-independent.
+    ParGustavsonBlocked {
+        threads: usize,
+        accum: AccumSpec,
+        semiring: SemiringKind,
+        bands: BandSpec,
+    },
     /// [`ParGustavson`](Dataflow::ParGustavson) with spawn-per-call
     /// execution instead of the pool — the benchmark baseline for the
     /// pooled-vs-spawn serving comparison. Always adaptive.
@@ -139,6 +194,7 @@ impl Dataflow {
             Dataflow::RowWiseHeap => "Row-wise (heap)",
             Dataflow::RowWiseHash => "Row-wise (hash)",
             Dataflow::ParGustavson { .. } => "Parallel Gustavson",
+            Dataflow::ParGustavsonBlocked { .. } => "Parallel Gustavson (blocked)",
             Dataflow::ParGustavsonSpawn { .. } => "Parallel Gustavson (spawn)",
         }
     }
@@ -152,6 +208,16 @@ impl Dataflow {
             Dataflow::RowWiseHash => rowwise_hash(a, b),
             Dataflow::ParGustavson { threads, accum, semiring } => {
                 let (c, t, _) = par_gustavson_kind(a, b, *threads, *accum, *semiring);
+                (c, t)
+            }
+            Dataflow::ParGustavsonBlocked {
+                threads,
+                accum,
+                semiring,
+                bands,
+            } => {
+                let (c, t, _) =
+                    par_gustavson_blocked_kind(a, b, *threads, *accum, *bands, *semiring);
                 (c, t)
             }
             Dataflow::ParGustavsonSpawn { threads } => par_gustavson_spawning(a, b, *threads),

@@ -48,12 +48,14 @@
 //! benchmark baseline.
 
 use super::accumulator::{AccumMode, AccumPolicy, AccumSpec, RowAccumulator};
-use super::gustavson::{flops_of_row, gustavson};
+use super::gustavson::gustavson;
+use super::plan::{partition_rows, rank, schedule_windows, BandPartition, BandSpec, SchedPolicy};
 use super::semiring::{Arithmetic, Boolean, MaxTimes, MinPlus, Semiring, SemiringKind};
-use super::Traffic;
-use crate::coordinator::{schedule_windows, SchedPolicy};
+use super::{BandStats, Traffic};
 use crate::formats::{Csr, Index, Value};
 use crate::kernels::Window;
+
+pub use super::plan::SymbolicPlan;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex, OnceLock};
@@ -247,36 +249,6 @@ fn even_chunks(n: usize, parts: usize) -> Vec<(usize, usize)> {
     out
 }
 
-/// Group rows into contiguous windows of roughly equal FMA volume —
-/// about `4 × threads` of them, so LPT can balance power-law skew by
-/// packing light windows onto the thread stuck with a hub row. A window
-/// is never empty; a single row heavier than the target gets its own.
-/// `out_nnz`/`bins` are not used on this path and stay zero.
-fn partition_rows(row_flops: &[u64], threads: usize) -> Vec<Window> {
-    let rows = row_flops.len();
-    let total: u64 = row_flops.iter().sum();
-    let parts = (threads * 4).clamp(1, rows.max(1));
-    let target = (total / parts as u64).max(1);
-    let mut windows = Vec::with_capacity(parts + 4);
-    let mut begin = 0usize;
-    let mut acc = 0u64;
-    for r in 0..rows {
-        acc += row_flops[r];
-        if acc >= target || r + 1 == rows {
-            windows.push(Window {
-                row_begin: begin,
-                row_end: r + 1,
-                flops: acc,
-                out_nnz: 0,
-                bins: 0,
-            });
-            begin = r + 1;
-            acc = 0;
-        }
-    }
-    windows
-}
-
 /// Below this row count the parallel FLOP pass is not worth the task
 /// plumbing; the serial loop runs instead (results are identical).
 const PAR_FLOPS_MIN_ROWS: usize = 1 << 10;
@@ -285,46 +257,17 @@ const PAR_FLOPS_MIN_ROWS: usize = 1 << 10;
 /// pay for themselves on large row counts.
 const PAR_SCAN_MIN_ROWS: usize = 1 << 16;
 
-/// The reusable symbolic result of one A·B product: per-row FMA counts
-/// (window planning), exact per-row output nnz, and the exclusive prefix
-/// sum (`row_ptr`) of the output CSR.
-///
-/// Computing this once and amortizing it across a batch of jobs that
-/// share operands is the serving analogue of the paper's two-step
-/// symbolic/numeric split — the coordinator caches plans per registered
-/// operand pair and hands them to [`par_gustavson_with_plan`].
-#[derive(Clone, Debug, PartialEq, Eq)]
-pub struct SymbolicPlan {
-    /// FMA count per output row (window planning input).
-    pub row_flops: Vec<u64>,
-    /// Exact nnz per output row.
-    pub row_nnz: Vec<usize>,
-    /// Exclusive prefix sum of `row_nnz` (`rows + 1` entries) — the
-    /// output's CSR row-pointer array.
-    pub row_ptr: Vec<usize>,
-}
-
-impl SymbolicPlan {
-    /// Exact nnz of the product this plan describes.
-    pub fn nnz(&self) -> usize {
-        *self.row_ptr.last().unwrap_or(&0)
-    }
-
-    /// Approximate heap bytes held by the plan arrays (for cache
-    /// accounting in the serving layer).
-    pub fn resident_bytes(&self) -> usize {
-        self.row_flops.len() * std::mem::size_of::<u64>()
-            + self.row_nnz.len() * std::mem::size_of::<usize>()
-            + self.row_ptr.len() * std::mem::size_of::<usize>()
-    }
-}
-
 /// Compute the full symbolic plan of C = A·B (FLOP counts, exact per-row
 /// output sizes, row pointers) with up to `threads`-way parallelism on
-/// the persistent pool. The result is independent of `threads` *and* of
-/// the accumulator policy — only the chunking and scratch shape vary — so
-/// plans are safely shareable across jobs that request different thread
-/// counts, accumulator modes, or thresholds.
+/// the persistent pool — the parallel driver of the plan pipeline
+/// ([`super::plan`]): the same rank-pass kernels the serial reference
+/// composition runs, chunked over the pool, with the partition and
+/// schedule passes deciding the chunking. The result is independent of
+/// `threads` *and* of the accumulator policy — only the chunking and
+/// scratch shape vary — so plans are safely shareable across jobs that
+/// request different thread counts, accumulator modes, or thresholds;
+/// it is also field-for-field identical to
+/// [`symbolic_plan_serial`](super::plan::symbolic_plan_serial).
 pub fn symbolic_plan(a: &Csr, b: &Csr, threads: usize) -> SymbolicPlan {
     symbolic_plan_exec(a, b, threads.max(1), Exec::Pool, AccumSpec::default())
 }
@@ -339,12 +282,11 @@ fn symbolic_plan_exec(
     assert_eq!(a.cols, b.rows, "dimension mismatch");
     let rows = a.rows;
 
-    // ---- FLOP pass: per-row FMA counts, chunked evenly by row count.
+    // ---- Rank pass, FLOPs statistic: chunked evenly by row count over
+    // the same `rank::flops_chunk` kernel the serial pipeline runs.
     let mut row_flops = vec![0u64; rows];
     if threads == 1 || rows < PAR_FLOPS_MIN_ROWS {
-        for (i, f) in row_flops.iter_mut().enumerate() {
-            *f = flops_of_row(a, b, i);
-        }
+        rank::flops_chunk(a, b, 0, &mut row_flops);
     } else {
         let chunks = even_chunks(rows, threads);
         let slices = split_disjoint(row_flops.as_mut_slice(), chunks.iter().map(|&(s, e)| e - s));
@@ -353,9 +295,7 @@ fn symbolic_plan_exec(
             .zip(slices)
             .map(|(&(begin, _), out)| {
                 Box::new(move || {
-                    for (off, f) in out.iter_mut().enumerate() {
-                        *f = flops_of_row(a, b, begin + off);
-                    }
+                    rank::flops_chunk(a, b, begin, out);
                 }) as Box<dyn FnOnce() + Send + '_>
             })
             .collect();
@@ -368,11 +308,13 @@ fn symbolic_plan_exec(
     // policy-independent.
     let policy = spec.resolve(b.cols, &row_flops);
 
-    // ---- Symbolic pass: exact nnz of every output row. Chunked by FMA
-    // volume (the same windows the numeric pass will use) so a hub row
-    // does not serialize one accumulator. Each worker's accumulator picks
-    // the stamp-array or hash lane per row from the FLOPs bound — under
-    // the adaptive policy a hash-only chunk never allocates O(b.cols)
+    // ---- Rank pass, exact-nnz statistic: the partition pass cuts row
+    // windows by FMA volume (the same windows the numeric pass will use)
+    // and the schedule pass packs them, so a hub row does not serialize
+    // one accumulator. Each worker runs the serial pipeline's
+    // `rank::symbolic_chunk` kernel; its accumulator picks the
+    // stamp-array or hash lane per row from the FLOPs bound — under the
+    // adaptive policy a hash-only chunk never allocates O(b.cols)
     // scratch.
     let windows = partition_rows(&row_flops, threads);
     let assignment = schedule_windows(&windows, threads, SchedPolicy::Lpt);
@@ -393,9 +335,7 @@ fn symbolic_plan_exec(
                     let mut racc = RowAccumulator::new(b.cols, policy);
                     for (wi, out) in chunk {
                         let w = &windows[wi];
-                        for (off, i) in (w.row_begin..w.row_end).enumerate() {
-                            out[off] = racc.symbolic_row(a, b, i, row_flops[i]);
-                        }
+                        rank::symbolic_chunk(a, b, &mut racc, row_flops, w.row_begin, out);
                     }
                 }) as Box<dyn FnOnce() + Send + '_>
             })
@@ -406,15 +346,12 @@ fn symbolic_plan_exec(
     // ---- Prefix sum -> row pointers. Parallel two-pass scan past the
     // serial-grain threshold: per-chunk sums, serial scan over the few
     // chunk offsets, parallel local scans. Integer addition is exact, so
-    // this is identical to the serial scan.
-    let mut row_ptr = vec![0usize; rows + 1];
+    // this is identical to the serial pipeline's `rank::prefix_sum`.
+    let mut row_ptr;
     if threads == 1 || rows < PAR_SCAN_MIN_ROWS {
-        let mut acc = 0usize;
-        for (i, &n) in row_nnz.iter().enumerate() {
-            acc += n;
-            row_ptr[i + 1] = acc;
-        }
+        row_ptr = rank::prefix_sum(&row_nnz);
     } else {
+        row_ptr = vec![0usize; rows + 1];
         let chunks = even_chunks(rows, threads);
         let mut sums = vec![0usize; chunks.len()];
         {
@@ -641,6 +578,154 @@ fn numeric_with_plan<S: Semiring>(
     (c, t)
 }
 
+/// Numeric phase of the propagation-blocking backend: same row windows
+/// and LPT packing as [`numeric_with_plan`], but each worker owns one
+/// *band-sized* accumulator and walks its rows band by band
+/// ([`RowAccumulator::numeric_row_band`]), appending each band's sorted
+/// drain at the row's output cursor. Bands ascend, so the concatenation
+/// is the full row in ascending column order — bitwise equal to the
+/// unblocked backend and the serial oracle.
+#[allow(clippy::too_many_arguments)]
+fn numeric_blocked_with_plan<S: Semiring>(
+    a: &Csr,
+    b: &Csr,
+    threads: usize,
+    plan: &SymbolicPlan,
+    exec: Exec,
+    policy: AccumPolicy,
+    band_cols: usize,
+    semiring: S,
+) -> (Csr, Traffic) {
+    let bands = BandPartition {
+        band_cols,
+        total_cols: b.cols,
+    };
+    let windows = partition_rows(&plan.row_flops, threads);
+    let assignment = schedule_windows(&windows, threads, SchedPolicy::Lpt);
+    let row_ptr = plan.row_ptr.clone();
+    let nnz_total = *row_ptr.last().unwrap();
+    let mut col_idx = vec![0 as Index; nnz_total];
+    let mut data = vec![0.0 as Value; nnz_total];
+
+    let mut traffics = vec![Traffic::default(); threads];
+    {
+        let window_len = |w: &Window| row_ptr[w.row_end] - row_ptr[w.row_begin];
+        let col_slices = split_disjoint(col_idx.as_mut_slice(), windows.iter().map(window_len));
+        let data_slices = split_disjoint(data.as_mut_slice(), windows.iter().map(window_len));
+        let mut work: Vec<Vec<(usize, &mut [Index], &mut [Value])>> =
+            (0..threads).map(|_| Vec::new()).collect();
+        for (wi, (cs, ds)) in col_slices.into_iter().zip(data_slices).enumerate() {
+            work[assignment.window_to_block[wi]].push((wi, cs, ds));
+        }
+        let windows = &windows;
+        let row_ptr = &row_ptr;
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = work
+            .into_iter()
+            .zip(traffics.iter_mut())
+            .filter(|(chunk, _)| !chunk.is_empty())
+            .map(|(chunk, traffic)| {
+                Box::new(move || {
+                    let mut t = Traffic::default();
+                    // One *band-sized* accumulator per worker: its dense
+                    // lane is O(band_cols), never O(b.cols) — the blocked
+                    // backend's memory contract.
+                    let mut racc = RowAccumulator::with_semiring(band_cols, policy, semiring);
+                    let mut segments = 0u64;
+                    for (wi, cols_out, data_out) in chunk {
+                        let w = &windows[wi];
+                        let base = row_ptr[w.row_begin];
+                        for i in w.row_begin..w.row_end {
+                            let lo = row_ptr[i] - base;
+                            let hi = row_ptr[i + 1] - base;
+                            if hi == lo {
+                                // Structurally empty output row: no band
+                                // can emit anything (flops > 0 implies
+                                // nnz > 0), so skip the whole band walk —
+                                // on a hypersparse matrix this is nearly
+                                // every row times every band.
+                                continue;
+                            }
+                            let rowc = &mut cols_out[lo..hi];
+                            let rowd = &mut data_out[lo..hi];
+                            let mut cursor = 0usize;
+                            for span in bands.ranges() {
+                                let n = racc.numeric_row_band(a, b, i, span, &mut t, |j, v| {
+                                    rowc[cursor] = j;
+                                    rowd[cursor] = v;
+                                    cursor += 1;
+                                });
+                                if n > 0 {
+                                    segments += 1;
+                                }
+                            }
+                            debug_assert_eq!(cursor, hi - lo, "row {i}: banded nnz mismatch");
+                        }
+                    }
+                    let stats = racc.finish();
+                    t.accum = stats;
+                    t.band = BandStats {
+                        band_cols: band_cols as u64,
+                        bands: bands.count() as u64,
+                        segments,
+                        // The dense lane is allocated at the accumulator's
+                        // width, so its column count is exactly band_cols
+                        // whenever any segment went dense.
+                        max_dense_lane_cols: if stats.dense_rows > 0 {
+                            band_cols as u64
+                        } else {
+                            0
+                        },
+                    };
+                    *traffic = t;
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        run_scoped(tasks, exec);
+    }
+
+    let mut t = Traffic::default();
+    for p in &traffics {
+        t.merge(p);
+    }
+
+    let c = Csr {
+        rows: a.rows,
+        cols: b.cols,
+        row_ptr,
+        col_idx,
+        data,
+    };
+    debug_assert!(c.validate().is_ok());
+    (c, t)
+}
+
+fn par_gustavson_blocked_exec<S: Semiring>(
+    a: &Csr,
+    b: &Csr,
+    threads: usize,
+    exec: Exec,
+    spec: AccumSpec,
+    bands: BandSpec,
+    semiring: S,
+) -> (Csr, Traffic, AccumPolicy) {
+    assert_eq!(a.cols, b.rows, "dimension mismatch");
+    let threads = threads.max(1);
+    if a.rows == 0 {
+        // No rows: nothing to band and no lane ever fires (mirrors
+        // par_gustavson_exec).
+        let (c, t) = gustavson(a, b);
+        return (c, t, spec.resolve(bands.resolve(b.cols), &[]));
+    }
+    let plan = symbolic_plan_exec(a, b, threads, exec, spec);
+    let band_cols = bands.resolve(b.cols);
+    // Thresholds are relative to the accumulator width the numeric pass
+    // actually uses — the band, not b.cols: a "heavy" band segment is one
+    // that fills a meaningful fraction of the *band's* dense lane.
+    let policy = spec.resolve(band_cols, &plan.row_flops);
+    let (c, t) = numeric_blocked_with_plan(a, b, threads, &plan, exec, policy, band_cols, semiring);
+    (c, t, policy)
+}
+
 fn par_gustavson_exec<S: Semiring>(
     a: &Csr,
     b: &Csr,
@@ -733,6 +818,135 @@ pub fn par_gustavson_kind(
         SemiringKind::Boolean => par_gustavson_semiring(a, b, threads, spec, Boolean),
         SemiringKind::MinPlus => par_gustavson_semiring(a, b, threads, spec, MinPlus),
         SemiringKind::MaxTimes => par_gustavson_semiring(a, b, threads, spec, MaxTimes),
+    }
+}
+
+/// Propagation-blocking parallel Gustavson (Gu et al., arXiv:2002.11302):
+/// the full pipeline of [`par_gustavson`], but the numeric pass cuts B's
+/// columns into [`BandSpec`]-width bands and accumulates each row band by
+/// band in a band-sized accumulator — the dense lane is O(band), never
+/// O(b.cols), so wide hypersparse products keep the accumulator
+/// scratchpad-resident. Per-band sorted drains concatenate in ascending
+/// band order, so the output is bitwise identical to [`par_gustavson`]
+/// and the serial [`gustavson`] oracle. Adaptive arithmetic entry point;
+/// [`Traffic::band`] carries the band statistics.
+pub fn par_gustavson_blocked(a: &Csr, b: &Csr, threads: usize, bands: BandSpec) -> (Csr, Traffic) {
+    let (c, t, _) = par_gustavson_blocked_exec(
+        a,
+        b,
+        threads,
+        Exec::Pool,
+        AccumSpec::default(),
+        bands,
+        Arithmetic,
+    );
+    (c, t)
+}
+
+/// [`par_gustavson_blocked`] with a per-job [`AccumSpec`] and an
+/// arbitrary [`Semiring`]. Under [`AccumSpec::Auto`] (and the default
+/// `cols/16`), thresholds resolve against the *band* width — the
+/// accumulator the numeric pass actually holds.
+pub fn par_gustavson_blocked_semiring<S: Semiring>(
+    a: &Csr,
+    b: &Csr,
+    threads: usize,
+    spec: AccumSpec,
+    bands: BandSpec,
+    semiring: S,
+) -> (Csr, Traffic, AccumPolicy) {
+    par_gustavson_blocked_exec(a, b, threads, Exec::Pool, spec, bands, semiring)
+}
+
+/// [`par_gustavson_blocked_semiring`] dispatched from a runtime
+/// [`SemiringKind`] (monomorphized per kind) — what
+/// [`Dataflow::ParGustavsonBlocked`](super::Dataflow::ParGustavsonBlocked)
+/// and the coordinator's plan-less blocked path call.
+pub fn par_gustavson_blocked_kind(
+    a: &Csr,
+    b: &Csr,
+    threads: usize,
+    spec: AccumSpec,
+    bands: BandSpec,
+    kind: SemiringKind,
+) -> (Csr, Traffic, AccumPolicy) {
+    match kind {
+        SemiringKind::Arithmetic => {
+            par_gustavson_blocked_semiring(a, b, threads, spec, bands, Arithmetic)
+        }
+        SemiringKind::Boolean => {
+            par_gustavson_blocked_semiring(a, b, threads, spec, bands, Boolean)
+        }
+        SemiringKind::MinPlus => {
+            par_gustavson_blocked_semiring(a, b, threads, spec, bands, MinPlus)
+        }
+        SemiringKind::MaxTimes => {
+            par_gustavson_blocked_semiring(a, b, threads, spec, bands, MaxTimes)
+        }
+    }
+}
+
+/// Blocked numeric phase against a precomputed [`SymbolicPlan`] with a
+/// fully resolved policy and band width — the blocked analogue of
+/// [`par_gustavson_with_plan_policy`], and the `tune` band sweep's entry
+/// point. Plans are band-independent, so the same cached plan serves
+/// every swept width.
+pub fn par_gustavson_blocked_with_plan_policy(
+    a: &Csr,
+    b: &Csr,
+    threads: usize,
+    plan: &SymbolicPlan,
+    policy: AccumPolicy,
+    band_cols: usize,
+) -> (Csr, Traffic) {
+    par_gustavson_blocked_with_plan_kind(
+        a,
+        b,
+        threads,
+        plan,
+        policy,
+        band_cols,
+        SemiringKind::Arithmetic,
+    )
+}
+
+/// [`par_gustavson_blocked_with_plan_policy`] dispatched from a runtime
+/// [`SemiringKind`] — the coordinator's cached-plan blocked serving path.
+pub fn par_gustavson_blocked_with_plan_kind(
+    a: &Csr,
+    b: &Csr,
+    threads: usize,
+    plan: &SymbolicPlan,
+    policy: AccumPolicy,
+    band_cols: usize,
+    kind: SemiringKind,
+) -> (Csr, Traffic) {
+    assert_eq!(a.cols, b.rows, "dimension mismatch");
+    assert_eq!(plan.row_ptr.len(), a.rows + 1, "plan is for a different A");
+    let threads = threads.max(1);
+    let band_cols = band_cols.clamp(1, b.cols.max(1));
+    match kind {
+        SemiringKind::Arithmetic => {
+            numeric_blocked_with_plan(
+                a,
+                b,
+                threads,
+                plan,
+                Exec::Pool,
+                policy,
+                band_cols,
+                Arithmetic,
+            )
+        }
+        SemiringKind::Boolean => {
+            numeric_blocked_with_plan(a, b, threads, plan, Exec::Pool, policy, band_cols, Boolean)
+        }
+        SemiringKind::MinPlus => {
+            numeric_blocked_with_plan(a, b, threads, plan, Exec::Pool, policy, band_cols, MinPlus)
+        }
+        SemiringKind::MaxTimes => {
+            numeric_blocked_with_plan(a, b, threads, plan, Exec::Pool, policy, band_cols, MaxTimes)
+        }
     }
 }
 
@@ -861,6 +1075,12 @@ mod tests {
         assert!(plan.resident_bytes() > 0);
         // Plans are thread-count independent (shareable across jobs).
         assert_eq!(plan, symbolic_plan(&a, &b, 7));
+        // The parallel driver is a consumer of the pass pipeline: its
+        // plan is field-for-field the serial reference composition's.
+        assert_eq!(
+            plan,
+            crate::spgemm::plan::symbolic_plan_serial(&a, &b, AccumSpec::default())
+        );
     }
 
     #[test]
@@ -982,6 +1202,54 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// The blocked backend is bitwise equal to the unblocked one (and so
+    /// to the serial oracle) for every band width, with band stats
+    /// surfacing the bounded dense lane. Exhaustive semiring × mode ×
+    /// generator coverage lives in `tests/blocked_parity.rs`; this is the
+    /// fast in-module gate.
+    #[test]
+    fn blocked_matches_oracle_across_band_widths() {
+        let a = rmat(&RmatParams::new(8, 2_600, 201));
+        let b = rmat(&RmatParams::new(8, 2_600, 202));
+        let (oracle, to) = gustavson(&a, &b);
+        for bands in [
+            BandSpec::Cols(1),
+            BandSpec::Cols(64),
+            BandSpec::Cols(b.cols),
+            BandSpec::Auto,
+        ] {
+            for threads in [1, 3, 4] {
+                let (c, t) = par_gustavson_blocked(&a, &b, threads, bands);
+                let label = format!("bands={}/t{threads}", bands.describe());
+                assert_eq!(c.row_ptr, oracle.row_ptr, "{label}");
+                assert_eq!(c.col_idx, oracle.col_idx, "{label}");
+                assert_eq!(c.data, oracle.data, "{label}");
+                // Banding re-walks A per band but performs the same
+                // useful work: FLOPs and output writes are conserved.
+                assert_eq!(t.flops, to.flops, "{label}");
+                assert_eq!(t.c_writes, to.c_writes, "{label}");
+                let width = bands.resolve(b.cols) as u64;
+                assert_eq!(t.band.band_cols, width, "{label}");
+                assert_eq!(
+                    t.band.bands,
+                    (b.cols as u64).div_ceil(width),
+                    "{label}"
+                );
+                assert!(
+                    t.band.max_dense_lane_cols <= width,
+                    "{label}: dense lane {} wider than the band",
+                    t.band.max_dense_lane_cols
+                );
+                // Every nonempty output row accumulates in ≥ 1 band.
+                let nonempty = oracle.row_ptr.windows(2).filter(|w| w[1] > w[0]).count() as u64;
+                assert!(t.band.segments >= nonempty, "{label}");
+            }
+        }
+        // The unblocked backend reports zeroed band stats.
+        let (_, t) = par_gustavson(&a, &b, 4);
+        assert_eq!(t.band, BandStats::default());
     }
 
     /// The memory story: on a hypersparse wide input the adaptive policy

@@ -1,0 +1,169 @@
+//! The plan pipeline: planning a parallel SpGEMM as composable passes.
+//!
+//! A plan answers three questions, each owned by one pass:
+//!
+//! 1. [`rank`] — *how heavy is each row?* Per-row symbolic statistics:
+//!    the FLOPs upper bound (`Σ_{k ∈ A[i,:]} nnz(B[k,:])`) and the exact
+//!    output nnz, computed with the same `flops_of_row` /
+//!    [`RowAccumulator::symbolic_row`] kernels the serial oracle uses.
+//! 2. [`partition`] — *how is the work sliced?* Row windows of roughly
+//!    equal FMA volume for every parallel backend, and fixed-width column
+//!    bands ([`BandSpec`]) for the propagation-blocking backend.
+//! 3. [`schedule`] — *who runs which slice?* The LPT / round-robin
+//!    load packer ([`schedule_loads`]), axis-free: it sees only a load
+//!    vector, so row windows and column bands schedule identically.
+//!
+//! The passes compose into a [`SymbolicPlan`] — the reusable symbolic
+//! product description the serving coordinator caches per operand pair.
+//! [`symbolic_plan_serial`] is the reference composition: a
+//! single-threaded, dependency-free chaining of the passes that the
+//! parallel driver (`spgemm::par::symbolic_plan`) must reproduce
+//! field-for-field (asserted by the pipeline unit suite below and by
+//! `plan_matches_serial_symbolic` in `par.rs`).
+
+pub mod partition;
+pub mod rank;
+pub mod schedule;
+
+pub use partition::{
+    auto_band_cols, partition_rows, BandPartition, BandSpec, BAND_AUTO_TARGET_BYTES,
+};
+pub use schedule::{schedule_loads, schedule_windows, Assignment, SchedPolicy};
+
+use super::accumulator::{AccumSpec, RowAccumulator};
+use crate::formats::Csr;
+
+/// The reusable symbolic result of one A·B product: per-row FMA counts
+/// (window planning), exact per-row output nnz, and the exclusive prefix
+/// sum (`row_ptr`) of the output CSR.
+///
+/// Computing this once and amortizing it across a batch of jobs that
+/// share operands is the serving analogue of the paper's two-step
+/// symbolic/numeric split — the coordinator caches plans per registered
+/// operand pair and hands them to `par_gustavson_with_plan*`. A plan is
+/// independent of thread count, accumulator policy, semiring, *and* band
+/// width: banding partitions the numeric pass only, never the symbolic
+/// row structure.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SymbolicPlan {
+    /// FMA count per output row (window planning input).
+    pub row_flops: Vec<u64>,
+    /// Exact nnz per output row.
+    pub row_nnz: Vec<usize>,
+    /// Exclusive prefix sum of `row_nnz` (`rows + 1` entries) — the
+    /// output's CSR row-pointer array.
+    pub row_ptr: Vec<usize>,
+}
+
+impl SymbolicPlan {
+    /// Exact nnz of the product this plan describes.
+    pub fn nnz(&self) -> usize {
+        *self.row_ptr.last().unwrap_or(&0)
+    }
+
+    /// Approximate heap bytes held by the plan arrays (for cache
+    /// accounting in the serving layer).
+    pub fn resident_bytes(&self) -> usize {
+        self.row_flops.len() * std::mem::size_of::<u64>()
+            + self.row_nnz.len() * std::mem::size_of::<usize>()
+            + self.row_ptr.len() * std::mem::size_of::<usize>()
+    }
+}
+
+/// The reference pipeline composition: rank passes chained serially with
+/// no chunking, pooling, or scheduling. The parallel driver must produce
+/// exactly this plan (integer passes are exact, so chunking may not
+/// change any field) — the contract that makes refactored plans
+/// bit-identical for existing consumers.
+pub fn symbolic_plan_serial(a: &Csr, b: &Csr, spec: AccumSpec) -> SymbolicPlan {
+    assert_eq!(a.cols, b.rows, "dimension mismatch");
+    let mut row_flops = vec![0u64; a.rows];
+    rank::flops_chunk(a, b, 0, &mut row_flops);
+    // Lane choice affects only scratch shape and stats, never the counted
+    // nnz — plans stay policy-independent (same resolution point as the
+    // parallel driver).
+    let policy = spec.resolve(b.cols, &row_flops);
+    let mut racc = RowAccumulator::new(b.cols, policy);
+    let mut row_nnz = vec![0usize; a.rows];
+    rank::symbolic_chunk(a, b, &mut racc, &row_flops, 0, &mut row_nnz);
+    let row_ptr = rank::prefix_sum(&row_nnz);
+    SymbolicPlan {
+        row_flops,
+        row_nnz,
+        row_ptr,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{banded, erdos_renyi, hypersparse, rmat, RmatParams};
+    use crate::spgemm::{flops_per_row, symbolic_row_nnz, AccumMode};
+
+    /// The serial pipeline reproduces the pre-refactor `SymbolicPlan`
+    /// fields exactly: `row_flops` == the standalone FLOP pass,
+    /// `row_nnz` == the standalone symbolic pass, `row_ptr` == their
+    /// serial prefix sum.
+    #[test]
+    fn serial_pipeline_reproduces_pre_refactor_plan_fields() {
+        let inputs: Vec<(&str, Csr, Csr)> = vec![
+            (
+                "rmat",
+                rmat(&RmatParams::new(8, 2_600, 61)),
+                rmat(&RmatParams::new(8, 2_600, 62)),
+            ),
+            (
+                "erdos_renyi",
+                erdos_renyi(128, 1_200, 63),
+                erdos_renyi(128, 1_200, 64),
+            ),
+            ("banded", banded(96, 4, 65), banded(96, 3, 66)),
+            (
+                "hypersparse",
+                hypersparse(14, 2_000, 67),
+                hypersparse(14, 2_000, 68),
+            ),
+        ];
+        for (name, a, b) in &inputs {
+            let plan = symbolic_plan_serial(a, b, AccumSpec::default());
+            assert_eq!(plan.row_flops, flops_per_row(a, b), "{name}: row_flops");
+            assert_eq!(plan.row_nnz, symbolic_row_nnz(a, b), "{name}: row_nnz");
+            let mut acc = 0usize;
+            for (i, &n) in plan.row_nnz.iter().enumerate() {
+                assert_eq!(plan.row_ptr[i], acc, "{name}: row_ptr[{i}]");
+                acc += n;
+            }
+            assert_eq!(plan.nnz(), acc, "{name}: nnz");
+        }
+    }
+
+    /// Plans are accumulator-policy independent: forced-dense, forced-hash
+    /// and adaptive pipelines count the same structure.
+    #[test]
+    fn serial_pipeline_is_policy_independent() {
+        let a = rmat(&RmatParams::new(7, 900, 71));
+        let b = rmat(&RmatParams::new(7, 900, 72));
+        let base = symbolic_plan_serial(&a, &b, AccumSpec::default());
+        for spec in [
+            AccumSpec::Fixed(AccumMode::Dense),
+            AccumSpec::Fixed(AccumMode::Hash),
+            AccumSpec::AdaptiveAt(3),
+            AccumSpec::Auto,
+        ] {
+            assert_eq!(base, symbolic_plan_serial(&a, &b, spec), "{spec:?}");
+        }
+    }
+
+    /// Degenerate shapes flow through the pipeline without special cases.
+    #[test]
+    fn serial_pipeline_degenerate_shapes() {
+        let z = Csr::zero(5, 5);
+        let plan = symbolic_plan_serial(&z, &z, AccumSpec::default());
+        assert_eq!(plan.nnz(), 0);
+        assert_eq!(plan.row_ptr, vec![0; 6]);
+        let empty = Csr::zero(0, 0);
+        let plan = symbolic_plan_serial(&empty, &empty, AccumSpec::default());
+        assert_eq!(plan.row_ptr, vec![0]);
+        assert_eq!(plan.nnz(), 0);
+    }
+}

@@ -1,0 +1,219 @@
+//! Partition pass: slicing the product into work units along either axis.
+//!
+//! * **Rows** — [`partition_rows`] groups output rows into contiguous
+//!   windows of roughly equal FMA volume; the LPT scheduler packs those
+//!   windows onto threads. Every parallel backend partitions rows.
+//! * **Columns** — [`BandSpec`] / [`BandPartition`] slice B's columns
+//!   into fixed-width bands for the propagation-blocking backend
+//!   (`par_gustavson_blocked`). Bounding the band width bounds the dense
+//!   accumulator lane to O(band) instead of O(b.cols) — the Gu et al.
+//!   propagation-blocking move (arXiv:2002.11302) that keeps the
+//!   accumulator scratchpad-resident on wide hypersparse products, with
+//!   SpArch-style (arXiv:2002.08947) in-order merging of the band-local
+//!   partials downstream.
+//!
+//! A [`BandPartition`] is derived O(1) from `(b.cols, spec)` and is never
+//! cached: bands are a *numeric-pass* parameter, so the symbolic plan
+//! stays band-independent.
+
+use crate::kernels::Window;
+
+/// Group rows into contiguous windows of roughly equal FMA volume —
+/// about `4 × threads` of them, so LPT can balance power-law skew by
+/// packing light windows onto the thread stuck with a hub row. A window
+/// is never empty; a single row heavier than the target gets its own.
+/// `out_nnz`/`bins` are not used on this path and stay zero.
+pub fn partition_rows(row_flops: &[u64], threads: usize) -> Vec<Window> {
+    let rows = row_flops.len();
+    let total: u64 = row_flops.iter().sum();
+    let parts = (threads * 4).clamp(1, rows.max(1));
+    let target = (total / parts as u64).max(1);
+    let mut windows = Vec::with_capacity(parts + 4);
+    let mut begin = 0usize;
+    let mut acc = 0u64;
+    for r in 0..rows {
+        acc += row_flops[r];
+        if acc >= target || r + 1 == rows {
+            windows.push(Window {
+                row_begin: begin,
+                row_end: r + 1,
+                flops: acc,
+                out_nnz: 0,
+                bins: 0,
+            });
+            begin = r + 1;
+            acc = 0;
+        }
+    }
+    windows
+}
+
+/// Dense-lane bytes per output column: an 8-byte accumulator value plus a
+/// 1-byte presence flag (`RowAccumulator`'s `acc` + `present`).
+const BAND_BYTES_PER_COL: usize = 9;
+
+/// Scratchpad budget the auto band width targets: the band's dense lane
+/// must fit in 64 KiB — the order of a per-core scratchpad/L1, and the
+/// regime where the accumulator stops generating DRAM traffic.
+pub const BAND_AUTO_TARGET_BYTES: usize = 1 << 16;
+
+/// Widest power-of-two band whose dense accumulator lane
+/// ([`BAND_BYTES_PER_COL`] per column) fits [`BAND_AUTO_TARGET_BYTES`],
+/// clamped to `[1, b_cols]`. Deterministic in `b_cols` alone — 4096
+/// columns for any product at least that wide.
+pub fn auto_band_cols(b_cols: usize) -> usize {
+    let budget_cols = (BAND_AUTO_TARGET_BYTES / BAND_BYTES_PER_COL).max(1);
+    let mut w = 1usize;
+    while w * 2 <= budget_cols {
+        w *= 2;
+    }
+    w.min(b_cols.max(1))
+}
+
+/// How a job *asks for* a column-band width — the serializable, CLI-level
+/// spelling carried on `Dataflow::ParGustavsonBlocked` and resolved to a
+/// concrete width once `b.cols` is known. Bands are a plan-cache key
+/// parameter in the serving layer: blocked and unblocked jobs on one
+/// registered pair never share a slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BandSpec {
+    /// Fixed band width in columns (clamped to `[1, b.cols]` at
+    /// resolution).
+    Cols(usize),
+    /// The [`auto_band_cols`] scratchpad heuristic (`--band-cols auto`).
+    Auto,
+}
+
+impl BandSpec {
+    /// Parse a CLI spelling (`auto` or a positive column count).
+    pub fn parse(s: &str) -> Option<BandSpec> {
+        if s == "auto" {
+            return Some(BandSpec::Auto);
+        }
+        s.parse::<usize>().ok().filter(|&w| w >= 1).map(BandSpec::Cols)
+    }
+
+    /// Display form: `auto` or the column count.
+    pub fn describe(&self) -> String {
+        match self {
+            BandSpec::Cols(w) => w.to_string(),
+            BandSpec::Auto => "auto".to_string(),
+        }
+    }
+
+    /// Resolve to a concrete band width for a `b_cols`-wide product.
+    /// Always at least 1 (degenerate zero-column products get a harmless
+    /// one-column band) and never wider than the product.
+    pub fn resolve(&self, b_cols: usize) -> usize {
+        match self {
+            BandSpec::Cols(w) => (*w).clamp(1, b_cols.max(1)),
+            BandSpec::Auto => auto_band_cols(b_cols),
+        }
+    }
+}
+
+/// The column-band partition of one product: `total_cols` columns cut
+/// into `count()` bands of `band_cols` columns each (the last band may be
+/// narrower). A tiny Copy value, recomputed wherever needed — deriving it
+/// is O(1), so caching it would only create staleness hazards.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BandPartition {
+    /// Width of every band but possibly the last, ≥ 1.
+    pub band_cols: usize,
+    /// Total columns partitioned (`b.cols`); zero means zero bands.
+    pub total_cols: usize,
+}
+
+impl BandPartition {
+    /// Partition `total_cols` columns under `spec`.
+    pub fn new(spec: BandSpec, total_cols: usize) -> Self {
+        Self {
+            band_cols: spec.resolve(total_cols),
+            total_cols,
+        }
+    }
+
+    /// Number of bands (`⌈total_cols / band_cols⌉`).
+    pub fn count(&self) -> usize {
+        self.total_cols.div_ceil(self.band_cols)
+    }
+
+    /// The half-open column ranges `[lo, hi)` of the bands, ascending —
+    /// band `k` covers `[k·w, min((k+1)·w, total_cols))`. Concatenating
+    /// per-band drains in this order yields a full row in ascending
+    /// column order, which is what keeps the blocked backend bitwise
+    /// equal to the unblocked one.
+    pub fn ranges(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        let w = self.band_cols;
+        let n = self.total_cols;
+        (0..self.count()).map(move |k| (k * w, ((k + 1) * w).min(n)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_rows_covers_and_conserves() {
+        let flops = vec![5u64, 0, 1000, 3, 3, 3, 0, 90, 2, 1];
+        let ws = partition_rows(&flops, 3);
+        assert_eq!(ws.first().unwrap().row_begin, 0);
+        assert_eq!(ws.last().unwrap().row_end, flops.len());
+        for w in ws.windows(2) {
+            assert_eq!(w[0].row_end, w[1].row_begin, "windows must tile rows");
+        }
+        assert!(ws.iter().all(|w| w.rows() >= 1));
+        let total: u64 = ws.iter().map(|w| w.flops).sum();
+        assert_eq!(total, flops.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn band_spec_parse_resolve_describe() {
+        assert_eq!(BandSpec::parse("auto"), Some(BandSpec::Auto));
+        assert_eq!(BandSpec::parse("64"), Some(BandSpec::Cols(64)));
+        assert_eq!(BandSpec::parse("0"), None);
+        assert_eq!(BandSpec::parse("x"), None);
+        assert_eq!(BandSpec::Auto.describe(), "auto");
+        assert_eq!(BandSpec::Cols(128).describe(), "128");
+        // Fixed widths clamp to the product.
+        assert_eq!(BandSpec::Cols(64).resolve(1 << 18), 64);
+        assert_eq!(BandSpec::Cols(1 << 20).resolve(100), 100);
+        assert_eq!(BandSpec::Cols(7).resolve(0), 1);
+        // Auto: widest power of two under the scratchpad budget, clamped.
+        let auto = BandSpec::Auto.resolve(1 << 18);
+        assert_eq!(auto, 4096, "64 KiB / 9 B per col rounds down to 4096");
+        assert!(auto * BAND_BYTES_PER_COL <= BAND_AUTO_TARGET_BYTES);
+        assert_eq!(BandSpec::Auto.resolve(100), 100, "auto clamps to b.cols");
+        assert_eq!(BandSpec::Auto.resolve(0), 1);
+    }
+
+    #[test]
+    fn band_partition_tiles_columns_in_order() {
+        for (spec, cols) in [
+            (BandSpec::Cols(64), 1000usize),
+            (BandSpec::Cols(1), 17),
+            (BandSpec::Cols(17), 17),
+            (BandSpec::Cols(1000), 17),
+            (BandSpec::Auto, 1 << 18),
+            (BandSpec::Auto, 5),
+        ] {
+            let p = BandPartition::new(spec, cols);
+            let ranges: Vec<_> = p.ranges().collect();
+            assert_eq!(ranges.len(), p.count());
+            assert_eq!(ranges.first().map(|&(lo, _)| lo), Some(0));
+            assert_eq!(ranges.last().map(|&(_, hi)| hi), Some(cols));
+            for pair in ranges.windows(2) {
+                assert_eq!(pair[0].1, pair[1].0, "bands must tile contiguously");
+            }
+            for &(lo, hi) in &ranges {
+                assert!(hi > lo, "bands are never empty");
+                assert!(hi - lo <= p.band_cols, "no band exceeds the width");
+            }
+        }
+        // Zero columns: zero bands.
+        let p = BandPartition::new(BandSpec::Auto, 0);
+        assert_eq!(p.count(), 0);
+        assert_eq!(p.ranges().count(), 0);
+    }
+}

@@ -1,0 +1,98 @@
+//! Rank pass: per-row symbolic statistics of the product.
+//!
+//! Two statistics rank a row: its FLOPs upper bound
+//! (`Σ_{k ∈ A[i,:]} nnz(B[k,:])` — `flops_of_row`, what the partition and
+//! schedule passes balance on) and its exact output nnz
+//! ([`RowAccumulator::symbolic_row`] — what pre-allocates the product).
+//!
+//! The kernels here are *chunk-shaped*: they rank a contiguous row range
+//! into a caller-provided slice. The serial reference pipeline
+//! ([`super::symbolic_plan_serial`]) runs each over the full row range;
+//! the parallel driver (`spgemm::par`) runs the very same kernels over
+//! disjoint chunks on the worker pool — which is why parallel plans are
+//! bit-identical to serial ones (integer statistics, exact chunked
+//! prefix sum).
+
+use crate::formats::Csr;
+use crate::spgemm::accumulator::RowAccumulator;
+use crate::spgemm::gustavson::flops_of_row;
+use crate::spgemm::semiring::Semiring;
+
+/// FLOPs-upper-bound statistic over rows `begin .. begin + out.len()`.
+pub fn flops_chunk(a: &Csr, b: &Csr, begin: usize, out: &mut [u64]) {
+    for (off, f) in out.iter_mut().enumerate() {
+        *f = flops_of_row(a, b, begin + off);
+    }
+}
+
+/// Exact-output-nnz statistic over rows `begin .. begin + out.len()`,
+/// using a caller-owned accumulator (one per worker — lane scratch is
+/// reused across the chunk's rows). `row_flops` must be the full-length
+/// FLOP statistic; it drives per-row lane selection only and never
+/// changes the counted nnz.
+pub fn symbolic_chunk<S: Semiring>(
+    a: &Csr,
+    b: &Csr,
+    racc: &mut RowAccumulator<S>,
+    row_flops: &[u64],
+    begin: usize,
+    out: &mut [usize],
+) {
+    for (off, slot) in out.iter_mut().enumerate() {
+        let i = begin + off;
+        *slot = racc.symbolic_row(a, b, i, row_flops[i]);
+    }
+}
+
+/// Exclusive prefix sum of the per-row nnz statistic — the output CSR's
+/// row-pointer array (`rows + 1` entries). The serial reference; the
+/// parallel driver's two-pass scan must (and does) produce identical
+/// values, since integer addition is exact.
+pub fn prefix_sum(row_nnz: &[usize]) -> Vec<usize> {
+    let mut row_ptr = vec![0usize; row_nnz.len() + 1];
+    let mut acc = 0usize;
+    for (i, &n) in row_nnz.iter().enumerate() {
+        acc += n;
+        row_ptr[i + 1] = acc;
+    }
+    row_ptr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{rmat, RmatParams};
+    use crate::spgemm::{flops_per_row, symbolic_row_nnz, AccumMode, AccumPolicy};
+
+    /// Chunked execution is invariant: any chunking of the row range
+    /// produces the same statistics as one full-range call.
+    #[test]
+    fn chunked_ranking_equals_full_range() {
+        let a = rmat(&RmatParams::new(7, 900, 81));
+        let b = rmat(&RmatParams::new(7, 900, 82));
+        let full_flops = flops_per_row(&a, &b);
+        let full_nnz = symbolic_row_nnz(&a, &b);
+        for parts in [1usize, 2, 3, 7] {
+            let mut flops = vec![0u64; a.rows];
+            let mut nnz = vec![0usize; a.rows];
+            let chunk = a.rows.div_ceil(parts);
+            let mut racc =
+                RowAccumulator::new(b.cols, AccumPolicy::new(AccumMode::Adaptive, b.cols));
+            let mut begin = 0usize;
+            while begin < a.rows {
+                let end = (begin + chunk).min(a.rows);
+                flops_chunk(&a, &b, begin, &mut flops[begin..end]);
+                symbolic_chunk(&a, &b, &mut racc, &full_flops, begin, &mut nnz[begin..end]);
+                begin = end;
+            }
+            assert_eq!(flops, full_flops, "parts={parts}");
+            assert_eq!(nnz, full_nnz, "parts={parts}");
+        }
+    }
+
+    #[test]
+    fn prefix_sum_is_exclusive_and_totals() {
+        assert_eq!(prefix_sum(&[]), vec![0]);
+        assert_eq!(prefix_sum(&[3, 0, 2, 5]), vec![0, 3, 3, 5, 10]);
+    }
+}

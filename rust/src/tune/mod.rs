@@ -37,8 +37,8 @@ use crate::bench::Bench;
 use crate::formats::Csr;
 use crate::gen::{banded, diagonal_noise, erdos_renyi, hypersparse, rmat, RmatParams};
 use crate::spgemm::{
-    gustavson, par_gustavson_with_plan_policy, symbolic_plan, AccumMode, AccumSpec,
-    HASH_THRESHOLD_DIVISOR,
+    gustavson, par_gustavson_blocked_with_plan_policy, par_gustavson_with_plan_policy,
+    symbolic_plan, AccumMode, AccumSpec, BandSpec, HASH_THRESHOLD_DIVISOR,
 };
 use anyhow::{ensure, Result};
 use std::collections::BTreeSet;
@@ -131,6 +131,41 @@ fn suite(smoke: bool, seed: u64) -> Vec<(String, Csr, Csr)> {
         .collect()
 }
 
+/// The pair the band-sweep leg runs on: the suite's hypersparse
+/// 2^18-column workload — the matrix shape propagation blocking exists
+/// for (same seeds as the threshold leg, so the two legs are directly
+/// comparable in one report).
+fn band_pair(smoke: bool, seed: u64) -> (String, Csr, Csr) {
+    let s = seed;
+    let edges = if smoke { 4_000 } else { 120_000 };
+    (
+        "hypersparse-2^18-blocked".to_string(),
+        hypersparse(18, edges, s + 8),
+        hypersparse(18, edges, s + 9),
+    )
+}
+
+/// Band-width candidates for a `cols`-wide product: the auto heuristic
+/// (widest power of two whose dense lane fits one scratchpad way), a
+/// narrow and a mid fixed width, and the degenerate full-width band (one
+/// band = the unblocked layout, the banding-overhead baseline) —
+/// deduplicated by resolved width on narrow matrices.
+fn band_candidates(cols: usize) -> Vec<(String, BandSpec)> {
+    let mut out: Vec<(String, BandSpec)> = vec![("band=auto".to_string(), BandSpec::Auto)];
+    let mut seen = BTreeSet::new();
+    seen.insert(BandSpec::Auto.resolve(cols));
+    for (label, spec) in [
+        ("band=64", BandSpec::Cols(64)),
+        ("band=1024", BandSpec::Cols(1024)),
+        ("band=cols", BandSpec::Cols(cols.max(1))),
+    ] {
+        if seen.insert(spec.resolve(cols)) {
+            out.push((label.to_string(), spec));
+        }
+    }
+    out
+}
+
 /// Candidate policies for a `cols`-wide product: both forced endpoints,
 /// the auto heuristic, and the powers-of-two-fraction threshold grid
 /// (deduplicated — on narrow matrices the small fractions all collapse
@@ -162,6 +197,11 @@ pub fn run_sweep(opts: &TuneOptions) -> Result<TuneReport> {
     for (workload, a, b) in suite(opts.smoke, opts.seed) {
         pairs.push(sweep_pair(&workload, &a, &b, opts, &mut bench)?);
     }
+    // The blocked-backend band sweep rides the same report: one more
+    // pair whose swept points are band widths, not accumulator
+    // thresholds.
+    let (workload, a, b) = band_pair(opts.smoke, opts.seed);
+    pairs.push(sweep_bands(&workload, &a, &b, opts, &mut bench)?);
     Ok(TuneReport {
         schema: SCHEMA_VERSION,
         smoke: opts.smoke,
@@ -281,6 +321,93 @@ fn sweep_pair(
     })
 }
 
+/// The blocked-backend leg: sweep the BAND WIDTH instead of the
+/// accumulator threshold — [`par_gustavson_blocked_with_plan_policy`] at
+/// several widths over one shared plan, each point gated on bitwise
+/// oracle equality, traffic conservation, and the band-stats contract
+/// (the dense accumulator lane never exceeds the configured band).
+fn sweep_bands(
+    workload: &str,
+    a: &Csr,
+    b: &Csr,
+    opts: &TuneOptions,
+    bench: &mut Bench,
+) -> Result<PairSweep> {
+    let threads = opts.threads.max(1);
+    let (oracle, oracle_t) = gustavson(a, b);
+    let plan = symbolic_plan(a, b, threads);
+    let default_threshold = (b.cols / HASH_THRESHOLD_DIVISOR).max(1) as u64;
+    let auto_policy = AccumSpec::Auto.resolve(b.cols, &plan.row_flops);
+
+    let mut points = Vec::new();
+    for (label, spec) in band_candidates(b.cols) {
+        let band_cols = spec.resolve(b.cols);
+        // Blocked runs resolve the accumulator policy against the BAND
+        // width — the dense lane spans one band, never the full matrix.
+        let policy = AccumSpec::Auto.resolve(band_cols, &plan.row_flops);
+        let (c, t) =
+            par_gustavson_blocked_with_plan_policy(a, b, threads, &plan, policy, band_cols);
+        ensure!(
+            c.row_ptr == oracle.row_ptr && c.col_idx == oracle.col_idx && c.data == oracle.data,
+            "{workload}/{label}: blocked point diverges from the serial oracle (bitwise)"
+        );
+        ensure!(
+            t.flops == oracle_t.flops && t.c_writes == oracle_t.c_writes,
+            "{workload}/{label}: traffic counters diverge from the oracle"
+        );
+        ensure!(
+            t.band.band_cols == band_cols as u64 && t.band.max_dense_lane_cols <= band_cols as u64,
+            "{workload}/{label}: dense lane ({}) exceeds the configured band ({band_cols})",
+            t.band.max_dense_lane_cols
+        );
+        ensure!(
+            t.accum.dense_rows + t.accum.hash_rows == t.band.segments,
+            "{workload}/{label}: every nonempty band segment must route to exactly one lane \
+             ({} dense + {} hash != {} segments)",
+            t.accum.dense_rows,
+            t.accum.hash_rows,
+            t.band.segments
+        );
+
+        let r = bench.run(&format!("tune/{workload}/{label}"), || {
+            par_gustavson_blocked_with_plan_policy(a, b, threads, &plan, policy, band_cols)
+        });
+        let (best_ns, mean_ns) = (r.min.as_nanos() as u64, r.mean.as_nanos() as u64);
+        ensure!(best_ns > 0, "{workload}/{label}: timer measured nothing");
+        points.push(SweepPoint {
+            label,
+            mode: policy.mode,
+            threshold: policy.hash_threshold,
+            best_ns,
+            mean_ns,
+            dense_rows: t.accum.dense_rows,
+            hash_rows: t.accum.hash_rows,
+            mean_probes: t.accum.table.mean_probes(),
+            peak_bytes: t.accum.peak_bytes,
+        });
+    }
+
+    let best = points
+        .iter()
+        .min_by_key(|p| p.best_ns)
+        .expect("band candidate set is never empty")
+        .label
+        .clone();
+    Ok(PairSweep {
+        workload: workload.to_string(),
+        rows: a.rows,
+        cols: b.cols,
+        nnz_a: a.nnz(),
+        nnz_b: b.nnz(),
+        flops: oracle_t.flops,
+        out_nnz: oracle.nnz(),
+        default_threshold,
+        auto_threshold: auto_policy.hash_threshold,
+        best,
+        points,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -297,14 +424,16 @@ mod tests {
     }
 
     /// The CI smoke sweep is green: every point bitwise-equal to the
-    /// oracle, stats sane, all five generator workloads covered.
+    /// oracle, stats sane, all five generator workloads covered, plus
+    /// the blocked band-sweep leg.
     #[test]
     fn smoke_sweep_is_green() {
         let report = run_sweep(&tiny_opts()).expect("smoke sweep must pass its own gates");
         assert_eq!(report.schema, SCHEMA_VERSION);
-        assert_eq!(report.pairs.len(), 5);
+        assert_eq!(report.pairs.len(), 6);
         let names: Vec<&str> = report.pairs.iter().map(|p| p.workload.as_str()).collect();
         assert!(names.contains(&"hypersparse-2^18"), "{names:?}");
+        assert!(names.contains(&"hypersparse-2^18-blocked"), "{names:?}");
         for pair in &report.pairs {
             assert!(pair.points.len() >= 4, "{}: endpoints + auto + grid", pair.workload);
             assert!(
@@ -312,6 +441,16 @@ mod tests {
                 "{}: best label must be a swept point",
                 pair.workload
             );
+            if pair.workload.ends_with("-blocked") {
+                // The band leg sweeps widths, not accumulator modes.
+                assert!(
+                    pair.points.iter().all(|p| p.label.starts_with("band=")),
+                    "{}: band points only",
+                    pair.workload
+                );
+                assert!(pair.points.iter().any(|p| p.label == "band=auto"));
+                continue;
+            }
             // Forced endpoints are always present and exclusive.
             let dense = pair.points.iter().find(|p| p.label == "dense").unwrap();
             assert_eq!(dense.hash_rows, 0);

@@ -66,18 +66,21 @@ fn pinned_cycle_counts() {
     }
     // The write-back conservation fix (PR 1: remainder entries/shifts that
     // the old accounting silently dropped are now charged) moved V1/V2
-    // counts slightly; the goldens below predate it. 2026-08-01 (PR 5):
-    // this environment still has no Rust toolchain and no reach into the
+    // counts slightly; the goldens below predate it. 2026-08-01 (PR 5)
+    // tightened the band from ±0.25% to ±0.05%. 2026-08-07 (PR 6): this
+    // environment STILL has no Rust toolchain and no reach into the
     // `golden-repin-values` CI artifact, so the exact values remain
-    // unmeasured here; per the re-pin plan the band is tightened from
-    // ±0.25% to ±0.05% (the PR-1 drift was documented as ≪0.1%, so this
-    // band still covers it while catching an order of magnitude more
-    // accidental drift). A follow-up with toolchain/artifact access
-    // should paste the SMASH_REPIN values into golden() and set this to
-    // 0.0. Determinism itself is asserted exactly by
-    // `determinism_across_runs` in smash_correctness.rs; this band only
-    // exists because the goldens were pinned before the accounting fix.
-    const REPIN_BAND: f64 = 0.0005;
+    // unmeasured here; the band is tightened one more notch, ±0.05% →
+    // ±0.01%. Five green CI runs at the previous bands mean the real
+    // post-PR-1 values sit well inside ±0.05% of the pins — a 5× tighter
+    // band keeps covering that documented ≪0.1% drift while shrinking
+    // the window for silent timing-model regressions by another 5×. A
+    // follow-up with toolchain/artifact access should paste the
+    // SMASH_REPIN values into golden() and set this to 0.0. Determinism
+    // itself is asserted exactly by `determinism_across_runs` in
+    // smash_correctness.rs; this band only exists because the goldens
+    // were pinned before the accounting fix.
+    const REPIN_BAND: f64 = 0.0001;
     let want = golden();
     for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
         let dev = (g as f64 - w as f64).abs() / w as f64;
