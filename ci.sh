@@ -61,6 +61,8 @@ echo "$serve_out" | grep -q "auto accumulator job: resolved policy" \
     || { echo "FAIL: auto-policy marker missing from serve_spgemm output"; exit 1; }
 echo "$serve_out" | grep -q "blocked job:" \
     || { echo "FAIL: blocked-job marker missing from serve_spgemm output"; exit 1; }
+echo "$serve_out" | grep -q "merge rows:" \
+    || { echo "FAIL: merge-lane marker missing from serve_spgemm output"; exit 1; }
 
 echo "== graph smoke test: graph_serving =="
 # The served graph pipeline end to end: BFS/APSP/closure/triangles as
@@ -77,9 +79,11 @@ echo "$graph_out" | grep -q "plan-cache: 1 symbolic pass" \
 
 echo "== perf smoke sweep: smash tune --smoke (accumulator threshold gate) =="
 # Tiny fixed-seed sweep; asserts bitwise oracle equality + stat sanity at
-# every swept threshold and at every swept band width (the sixth,
-# blocked leg) and exits nonzero on any violation. The JSON report is
-# the machine-readable artifact CI uploads.
+# every swept threshold, at every point of the three-way merge-lane
+# arbitration leg (forced dense/hash/merge endpoints + the merge-k@N
+# fan-in grid), and at every swept band width (the sixth, blocked leg),
+# and exits nonzero on any violation. The JSON report is the
+# machine-readable artifact CI uploads.
 cargo run --release -- tune --smoke --out BENCH_4.json
 test -s BENCH_4.json || { echo "FAIL: tune report BENCH_4.json missing/empty"; exit 1; }
 

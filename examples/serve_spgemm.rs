@@ -131,6 +131,17 @@ fn main() {
         accum_stats.dense_rows, accum_stats.hash_rows, accum_stats.table.mean_probes(),
         accum_stats.peak_bytes
     );
+    // The third lane (k-way sorted-merge, rows fed by few B rows); the
+    // deepest pairwise round any merged row needed = ceil(log2 fan-in).
+    println!(
+        "merge rows: {} across the burst (deepest merge {} pairwise rounds)",
+        accum_stats.merge_rows,
+        accum_stats
+            .merge_depth_hist
+            .iter()
+            .rposition(|&c| c > 0)
+            .unwrap_or(0)
+    );
     println!(
         "persistent pool: {} worker threads served every parallel phase (no spawn-per-call)",
         WorkerPool::global().workers()

@@ -105,7 +105,12 @@ fn main() {
     ];
     for (name, ai, bi) in &accum_inputs {
         let (oracle, _) = gustavson(ai, bi);
-        for mode in [AccumMode::Adaptive, AccumMode::Dense, AccumMode::Hash] {
+        for mode in [
+            AccumMode::Adaptive,
+            AccumMode::Dense,
+            AccumMode::Hash,
+            AccumMode::Merge,
+        ] {
             let (c, t) = par_gustavson_accum(ai, bi, 4, mode);
             assert_eq!(oracle.row_ptr, c.row_ptr, "{name}/{}", mode.name());
             assert_eq!(oracle.col_idx, c.col_idx, "{name}/{}", mode.name());
@@ -168,7 +173,10 @@ fn main() {
             "{}: parallel semiring product must match the serial oracle bitwise",
             kind.name()
         );
-        assert_eq!(t.accum.dense_rows + t.accum.hash_rows, a.rows as u64);
+        assert_eq!(
+            t.accum.dense_rows + t.accum.hash_rows + t.accum.merge_rows,
+            a.rows as u64
+        );
         h.run(&format!("par_gustavson_t4_semiring_{}_2^11", kind.name()), || {
             par_gustavson_kind(&a, &b, 4, AccumSpec::default(), kind)
         });

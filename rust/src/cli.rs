@@ -80,8 +80,8 @@ USAGE: smash <tables|figures|run|gcn|gen|serve|tune|help> [flags]
   gen     --out graph.mtx [--log2n 10] [--edges 10000] [--seed N]
   serve   [--jobs 8] [--workers 4] [--threads 4] [--log2n 10] [--edges 20000] [--smash]
           [--no-batch] [--spawn] [--max-resident-mb N]
-          [--accum adaptive|dense|hash|auto] [--accum-threshold N]
-          [--semiring arith|bool|minplus|maxtimes]
+          [--accum adaptive|dense|hash|merge|auto] [--accum-threshold N]
+          [--merge-max-k N] [--semiring arith|bool|minplus|maxtimes]
           [--blocked] [--band-cols N|auto]
           — register one resident matrix pair, serve a burst of zero-copy
           requests against it (native parallel Gustavson on the persistent
@@ -90,9 +90,12 @@ USAGE: smash <tables|figures|run|gcn|gen|serve|tune|help> [flags]
           spawn-per-call backend (the pre-pool baseline); --max-resident-mb
           bounds the registry + plan caches (LRU eviction past it, 0 =
           unlimited); --accum picks the per-row accumulator policy
-          (adaptive = hash light rows / dense heavy rows, keyed off the
-          symbolic FLOPs bound; auto = per-matrix heuristic threshold);
+          (adaptive = three-way: dense heavy rows, k-way sorted-merge
+          for light rows fed by few B rows, hash otherwise, keyed off
+          the symbolic FLOPs bound and merge fan-in; merge forces the
+          sorted-merge lane; auto = per-matrix heuristic threshold);
           --accum-threshold overrides the adaptive switch point (FLOPs);
+          --merge-max-k caps the merge lane's fan-in (0 disables it);
           --semiring folds products under an algebraic semiring (boolean
           reachability, min-plus shortest paths, max-times reliability) on
           the same parallel backend and shared symbolic plans; --blocked
@@ -103,7 +106,8 @@ USAGE: smash <tables|figures|run|gcn|gen|serve|tune|help> [flags]
           fits one 64 KiB scratchpad way)
   tune    [--smoke] [--out report.json] [--threads 4] [--iters N] [--seed N]
           — sweep the adaptive accumulator threshold (powers-of-two
-          fractions of b.cols, forced dense/hash endpoints, and the auto
+          fractions of b.cols, forced dense/hash/merge endpoints, the
+          merge fan-in grid merge-k@{0,1,2,4,16}, and the auto
           heuristic) over the generator suite, asserting bitwise oracle
           equality at every point; prints a summary table and writes a
           machine-readable JSON report with --out. --smoke runs the tiny
@@ -501,7 +505,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         crate::util::fmt_count(total_nnz as u64),
         served as f64 / wall.as_secs_f64()
     );
-    if !smash && accum_stats.dense_rows + accum_stats.hash_rows > 0 {
+    if !smash && accum_stats.dense_rows + accum_stats.hash_rows + accum_stats.merge_rows > 0 {
         if let Some(p) = resolved_policy {
             // The concrete policy each job's numeric pass ran with — under
             // `--accum auto` this is the per-matrix heuristic pick.
@@ -516,6 +520,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
             accum_stats.table.collision_rate() * 100.0,
             crate::util::fmt_bytes(accum_stats.peak_bytes),
             crate::util::fmt_bytes(9 * (1u64 << log2n)),
+        );
+        // The deepest pairwise round any merge-lane row needed
+        // (ceil(log2 fan-in); the last histogram bucket saturates).
+        let deepest = accum_stats
+            .merge_depth_hist
+            .iter()
+            .rposition(|&c| c > 0)
+            .unwrap_or(0);
+        println!(
+            "merge rows: {} per burst (deepest merge {} pairwise rounds)",
+            crate::util::fmt_count(accum_stats.merge_rows),
+            deepest,
         );
     }
     if bands.is_some() && band_stats.band_cols > 0 {
@@ -555,26 +571,45 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Resolve `--accum` / `--accum-threshold` into an [`AccumSpec`].
-/// `--accum-threshold N` implies (and only combines with) the adaptive
-/// mode; `--accum auto` defers the threshold to the per-matrix heuristic.
+/// Resolve `--accum` / `--accum-threshold` / `--merge-max-k` into an
+/// [`AccumSpec`]. `--accum-threshold N` implies (and only combines with)
+/// the adaptive mode; `--merge-max-k N` caps the adaptive policy's merge
+/// fan-in (0 disables the merge lane) and only combines with the default
+/// adaptive threshold; `--accum auto` defers the threshold to the
+/// per-matrix heuristic.
 fn parse_accum_flags(args: &Args) -> Result<AccumSpec> {
     let spec = match args.get("accum") {
         None => AccumSpec::default(),
         Some(s) => AccumSpec::parse(s)
-            .with_context(|| format!("unknown --accum `{s}` (adaptive|dense|hash|auto)"))?,
+            .with_context(|| format!("unknown --accum `{s}` (adaptive|dense|hash|merge|auto)"))?,
     };
-    match args.get("accum-threshold") {
-        None => Ok(spec),
+    let spec = match args.get("accum-threshold") {
+        None => spec,
         Some(t) => {
             let t: u64 = t
                 .parse()
                 .with_context(|| format!("bad --accum-threshold value `{t}`"))?;
             match spec {
-                AccumSpec::Fixed(AccumMode::Adaptive) => Ok(AccumSpec::AdaptiveAt(t)),
+                AccumSpec::Fixed(AccumMode::Adaptive) => AccumSpec::AdaptiveAt(t),
                 other => bail!(
                     "--accum-threshold only combines with --accum adaptive \
                      (got --accum {})",
+                    other.describe()
+                ),
+            }
+        }
+    };
+    match args.get("merge-max-k") {
+        None => Ok(spec),
+        Some(k) => {
+            let k: u32 = k
+                .parse()
+                .with_context(|| format!("bad --merge-max-k value `{k}`"))?;
+            match spec {
+                AccumSpec::Fixed(AccumMode::Adaptive) => Ok(AccumSpec::MergeAt(k)),
+                other => bail!(
+                    "--merge-max-k only combines with --accum adaptive at the \
+                     default threshold (got --accum {})",
                     other.describe()
                 ),
             }
@@ -842,12 +877,30 @@ mod tests {
             parse_accum_flags(&argv(&["--accum", "adaptive", "--accum-threshold", "64"])).unwrap(),
             AccumSpec::AdaptiveAt(64)
         );
+        assert_eq!(
+            parse_accum_flags(&argv(&["--accum", "merge"])).unwrap(),
+            AccumSpec::Fixed(AccumMode::Merge)
+        );
+        assert_eq!(
+            parse_accum_flags(&argv(&["--merge-max-k", "4"])).unwrap(),
+            AccumSpec::MergeAt(4)
+        );
+        assert_eq!(
+            parse_accum_flags(&argv(&["--accum", "adaptive", "--merge-max-k", "0"])).unwrap(),
+            AccumSpec::MergeAt(0)
+        );
         assert!(parse_accum_flags(&argv(&["--accum", "bogus"])).is_err());
         assert!(
             parse_accum_flags(&argv(&["--accum", "dense", "--accum-threshold", "64"])).is_err()
         );
         assert!(parse_accum_flags(&argv(&["--accum", "auto", "--accum-threshold", "64"])).is_err());
         assert!(parse_accum_flags(&argv(&["--accum-threshold", "not-a-number"])).is_err());
+        assert!(parse_accum_flags(&argv(&["--accum", "merge", "--merge-max-k", "4"])).is_err());
+        assert!(parse_accum_flags(&argv(&["--accum", "hash", "--merge-max-k", "4"])).is_err());
+        assert!(
+            parse_accum_flags(&argv(&["--accum-threshold", "64", "--merge-max-k", "4"])).is_err()
+        );
+        assert!(parse_accum_flags(&argv(&["--merge-max-k", "not-a-number"])).is_err());
     }
 
     #[test]

@@ -209,9 +209,10 @@ pub struct Response {
     /// job reused a cached plan.
     pub symbolic_reused: Option<bool>,
     /// Measured traffic of native jobs (including the accumulator-policy
-    /// stats on `traffic.accum`: dense vs hash rows, probe counts, peak
-    /// per-worker accumulator bytes). `None` for simulated SMASH jobs,
-    /// whose metrics live in the sim report.
+    /// stats on `traffic.accum`: dense vs hash vs merge rows, probe
+    /// counts, merge-depth histogram, peak per-worker accumulator
+    /// bytes). `None` for simulated SMASH jobs, whose metrics live in
+    /// the sim report.
     pub traffic: Option<Traffic>,
     /// The concrete accumulator policy (mode + threshold) the job's
     /// numeric pass ran with — the resolution of the request's
@@ -1185,9 +1186,9 @@ mod tests {
         coord.shutdown();
     }
 
-    /// Accumulator modes plumb end-to-end: forced-hash and forced-dense
-    /// jobs return bitwise-oracle products, and the response's traffic
-    /// carries the per-multiply accumulator stats.
+    /// Accumulator modes plumb end-to-end: forced-hash, forced-dense,
+    /// and forced-merge jobs return bitwise-oracle products, and the
+    /// response's traffic carries the per-multiply accumulator stats.
     #[test]
     fn accum_modes_served_bitwise_with_stats() {
         let mut coord = Coordinator::start(ServerConfig {
@@ -1201,7 +1202,12 @@ mod tests {
         let rows = a.rows as u64;
         let id_a = coord.register("A", a);
         let id_b = coord.register("B", b);
-        for accum in [AccumMode::Adaptive, AccumMode::Dense, AccumMode::Hash] {
+        for accum in [
+            AccumMode::Adaptive,
+            AccumMode::Dense,
+            AccumMode::Hash,
+            AccumMode::Merge,
+        ] {
             coord.submit(Job::NativeSpgemm {
                 a: id_a.into(),
                 b: id_b.into(),
@@ -1216,15 +1222,27 @@ mod tests {
             assert_eq!(r.c.col_idx, oracle.col_idx, "{}", accum.name());
             assert_eq!(r.c.data, oracle.data, "{}", accum.name());
             let t = r.traffic.expect("native jobs report traffic");
-            assert_eq!(t.accum.dense_rows + t.accum.hash_rows, rows, "{}", accum.name());
+            assert_eq!(
+                t.accum.dense_rows + t.accum.hash_rows + t.accum.merge_rows,
+                rows,
+                "{}",
+                accum.name()
+            );
             match accum {
-                AccumMode::Dense => assert_eq!(t.accum.hash_rows, 0),
-                AccumMode::Hash => assert_eq!(t.accum.dense_rows, 0),
+                AccumMode::Dense => {
+                    assert_eq!((t.accum.hash_rows, t.accum.merge_rows), (0, 0));
+                }
+                AccumMode::Hash => {
+                    assert_eq!((t.accum.dense_rows, t.accum.merge_rows), (0, 0));
+                }
+                AccumMode::Merge => {
+                    assert_eq!((t.accum.dense_rows, t.accum.hash_rows), (0, 0));
+                }
                 AccumMode::Adaptive => {}
             }
         }
-        // all three modes shared ONE cached symbolic plan
-        assert_eq!(coord.symbolic_stats(), (1, 2));
+        // all four modes shared ONE cached symbolic plan
+        assert_eq!(coord.symbolic_stats(), (1, 3));
         coord.shutdown();
     }
 
@@ -1269,16 +1287,19 @@ mod tests {
             assert_eq!(r.c.col_idx, oracle.col_idx);
             assert_eq!(r.c.data, oracle.data, "all thresholds must stay bitwise-oracle");
             let t = r.traffic.expect("native jobs report traffic");
-            assert_eq!(t.accum.dense_rows + t.accum.hash_rows, rows);
+            assert_eq!(t.accum.dense_rows + t.accum.hash_rows + t.accum.merge_rows, rows);
         }
         let split = |id: &JobId| {
             let t = responses[id].traffic.unwrap();
-            (t.accum.dense_rows, t.accum.hash_rows)
+            (t.accum.dense_rows, t.accum.hash_rows, t.accum.merge_rows)
         };
-        let (lo_dense, _) = split(&job_lo);
-        let (hi_dense, hi_hash) = split(&job_hi);
-        assert_eq!(hi_dense, 0, "an unreachable threshold must hash every row");
-        assert_eq!(hi_hash, rows);
+        let (lo_dense, _, _) = split(&job_lo);
+        let (hi_dense, hi_hash, hi_merge) = split(&job_hi);
+        assert_eq!(
+            hi_dense, 0,
+            "an unreachable threshold must keep every row off the dense lane"
+        );
+        assert_eq!(hi_hash + hi_merge, rows);
         assert!(
             lo_dense > 0 && lo_dense > hi_dense,
             "threshold=1 must route the non-empty rows dense ({lo_dense} vs {hi_dense})"
@@ -1352,7 +1373,7 @@ mod tests {
             assert!(r.symbolic_reused.is_some(), "batched job reports provenance");
             let t = r.traffic.expect("native jobs report traffic");
             assert_eq!(
-                t.accum.dense_rows + t.accum.hash_rows,
+                t.accum.dense_rows + t.accum.hash_rows + t.accum.merge_rows,
                 r.c.rows as u64,
                 "{}: every row routed",
                 kind.name()

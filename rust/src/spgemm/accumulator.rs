@@ -1,8 +1,8 @@
 //! The unified per-row accumulator behind every row-wise SpGEMM path —
 //! SMASH's hashed scratchpad idea brought to the native serving backend.
 //!
-//! A [`RowAccumulator`] owns two interchangeable lanes and picks one per
-//! output row:
+//! A [`RowAccumulator`] owns three interchangeable lanes and picks one
+//! per output row:
 //!
 //! * **dense** — the classic Gustavson accumulator (`acc`/`present`
 //!   arrays of length `cols` plus a touched-column list). O(cols) memory,
@@ -15,20 +15,35 @@
 //!   — never O(cols). This is what makes hypersparse wide matrices
 //!   (2^20+ columns) servable: the dense lane would pin ~9 bytes × cols
 //!   × workers of cache-hostile scratch.
+//! * **merge** — a k-way sorted merge over the row's B-row slices via a
+//!   binary merge tree (pairwise merge rounds, Du et al. arXiv:2206.06611;
+//!   merge-tree framing per SpArch, arXiv:2002.08947). A row's partial
+//!   products already arrive as k sorted runs (one per selected B row);
+//!   when k is small the low-compression regime makes hashing redundant
+//!   work — no probing, no sort at drain, just O(flops · log k) compares.
 //!
-//! Selection follows Nagasaka et al. (KNL hash SpGEMM, arXiv:1804.01698):
-//! per row, compare the FLOPs upper bound `Σ_{k ∈ A[i,:]} nnz(B[k,:])` —
-//! already computed for window planning — against a threshold (default
-//! `cols / 16`). Light rows hash, heavy rows go dense. Forced
-//! [`AccumMode::Dense`] / [`AccumMode::Hash`] exist for benchmarks, the
-//! serial oracle, and `rowwise_hash`.
+//! Selection follows Nagasaka et al. (KNL hash SpGEMM, arXiv:1804.01698)
+//! extended three-way: per row, compare the FLOPs upper bound
+//! `Σ_{k ∈ A[i,:]} nnz(B[k,:])` — already computed for window planning —
+//! against a threshold (default `cols / 16`); heavy rows go dense. Light
+//! rows then split on the merge fan-in k (B rows with a nonempty slice,
+//! the same per-row stat the plan's rank pass records as
+//! `SymbolicPlan::row_k`): merge when `k <= merge_max_k` and the average
+//! run is at least [`MERGE_MIN_AVG_RUN`] products (or k == 1 — a single
+//! presorted run needs no table at all), hash otherwise. Forced
+//! [`AccumMode::Dense`] / [`AccumMode::Hash`] / [`AccumMode::Merge`]
+//! exist for benchmarks, the serial oracle, and `rowwise_hash`.
 //!
-//! **Bitwise determinism.** Both lanes add partial products in identical
-//! iteration order (A-row order, then B-row order), so a column's final
-//! value is the same floating-point reduction either way; both drain
-//! sorted by column. Serial, parallel, adaptive, forced-dense, and
-//! forced-hash outputs are therefore bitwise identical — the test suite
-//! asserts this against the [`super::gustavson`] oracle on every
+//! **Bitwise determinism.** All three lanes fold a column's partial
+//! products in identical source order (A-row order, then B-row order)
+//! starting from `add(zero, first)`, and drain sorted by column. The
+//! merge lane earns this the subtle way: pairwise merge rounds are
+//! *stable and non-folding* — ties take the left run first, and since
+//! runs are paired in A-row order, duplicates stay adjacent in source
+//! order through every round; the ⊕-fold happens once at final drain,
+//! left-deep exactly like the dense lane. Serial, parallel, adaptive,
+//! and every forced lane are therefore bitwise identical — the test
+//! suite asserts this against the [`super::gustavson`] oracle on every
 //! generator.
 
 use super::semiring::{Arithmetic, Semiring};
@@ -48,11 +63,27 @@ const TAG_BITS: u32 = 32;
 /// Default adaptive threshold divisor: rows whose FLOPs upper bound is at
 /// least `cols / 16` use the dense lane.
 pub const HASH_THRESHOLD_DIVISOR: usize = 16;
+/// Default adaptive merge-lane fan-in cap: light rows touching at most
+/// this many nonempty B rows take the k-way merge lane. Merge compares
+/// cost O(flops · log k) against the hash lane's O(flops) probes, so
+/// only small fan-ins win; 0 disables the merge lane entirely.
+pub const MERGE_MAX_K_DEFAULT: u32 = 8;
+/// Adaptive merge-lane run-length floor: for fan-in k >= 2 the merge
+/// lane requires an average sorted run of at least this many products
+/// (`row_flops >= k * MERGE_MIN_AVG_RUN`) — shorter runs amortize
+/// nothing and hash instead. k == 1 always merges: a single presorted
+/// run needs neither table nor sort.
+pub const MERGE_MIN_AVG_RUN: u64 = 4;
+/// Buckets of [`AccumStats::merge_depth_hist`]: bucket = min(rounds, 7)
+/// where `rounds = ceil(log2 k)` pairwise merge rounds collapsed the
+/// row's k runs (k <= 1 lands in bucket 0).
+pub const MERGE_DEPTH_BUCKETS: usize = 8;
 
 /// Which accumulator lane a multiply uses.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
 pub enum AccumMode {
-    /// Per-row choice off the symbolic FLOPs upper bound (the default).
+    /// Per-row three-way choice off the symbolic FLOPs upper bound and
+    /// the merge fan-in (the default).
     #[default]
     Adaptive,
     /// Every row through the dense lane (the pre-adaptive behaviour and
@@ -60,6 +91,9 @@ pub enum AccumMode {
     Dense,
     /// Every row through the hash lane (the SMASH scratchpad analogue).
     Hash,
+    /// Every row through the k-way sorted-merge lane (binary row
+    /// merging per Du et al., arXiv:2206.06611).
+    Merge,
 }
 
 impl AccumMode {
@@ -68,18 +102,28 @@ impl AccumMode {
             AccumMode::Adaptive => "adaptive",
             AccumMode::Dense => "dense",
             AccumMode::Hash => "hash",
+            AccumMode::Merge => "merge",
         }
     }
 
-    /// Parse a CLI spelling (`adaptive|dense|hash`).
+    /// Parse a CLI spelling (`adaptive|dense|hash|merge`).
     pub fn parse(s: &str) -> Option<AccumMode> {
         match s {
             "adaptive" => Some(AccumMode::Adaptive),
             "dense" => Some(AccumMode::Dense),
             "hash" => Some(AccumMode::Hash),
+            "merge" => Some(AccumMode::Merge),
             _ => None,
         }
     }
+}
+
+/// The lane [`AccumPolicy::lane_for`] resolved for one row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Lane {
+    Dense,
+    Hash,
+    Merge,
 }
 
 /// Largest threshold the [`AccumPolicy::auto_for`] heuristic will pick:
@@ -91,28 +135,43 @@ pub const AUTO_DIVISOR_MIN: usize = 4;
 /// nothing — the §7.2 memory story).
 pub const AUTO_DIVISOR_MAX: usize = 64;
 
-/// Per-row lane-selection policy: a mode plus the adaptive threshold.
+/// Per-row lane-selection policy: a mode plus the adaptive threshold
+/// and merge fan-in cap.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct AccumPolicy {
     pub mode: AccumMode,
     /// Rows with FLOPs upper bound `>=` this go dense under
     /// [`AccumMode::Adaptive`]; ignored by the forced modes.
     pub hash_threshold: u64,
+    /// Under [`AccumMode::Adaptive`], light rows whose merge fan-in is
+    /// at most this (and whose runs average [`MERGE_MIN_AVG_RUN`]+
+    /// products, or k == 1) take the merge lane; 0 disables the merge
+    /// lane (the pre-merge two-way policy). Ignored by the forced modes.
+    pub merge_max_k: u32,
 }
 
 impl AccumPolicy {
     /// Policy for a `cols`-wide output with the default threshold
-    /// (`cols / 16`, min 1).
+    /// (`cols / 16`, min 1) and merge fan-in cap
+    /// ([`MERGE_MAX_K_DEFAULT`]).
     pub fn new(mode: AccumMode, cols: usize) -> Self {
         Self {
             mode,
             hash_threshold: (cols / HASH_THRESHOLD_DIVISOR).max(1) as u64,
+            merge_max_k: MERGE_MAX_K_DEFAULT,
         }
     }
 
     /// Override the adaptive threshold (tuning knob).
     pub fn with_threshold(mut self, threshold: u64) -> Self {
         self.hash_threshold = threshold.max(1);
+        self
+    }
+
+    /// Override the adaptive merge fan-in cap (tuning knob; 0 disables
+    /// the merge lane).
+    pub fn with_merge_max_k(mut self, k: u32) -> Self {
+        self.merge_max_k = k;
         self
     }
 
@@ -153,22 +212,55 @@ impl AccumPolicy {
         policy
     }
 
-    /// Human-readable form, e.g. `adaptive(threshold=1024)` or `dense`.
+    /// Human-readable form, e.g. `adaptive(threshold=1024, merge-k=8)`
+    /// or `dense`.
     pub fn describe(&self) -> String {
         match self.mode {
-            AccumMode::Adaptive => format!("adaptive(threshold={})", self.hash_threshold),
+            AccumMode::Adaptive => format!(
+                "adaptive(threshold={}, merge-k={})",
+                self.hash_threshold, self.merge_max_k
+            ),
             m => m.name().to_string(),
         }
     }
 
+    /// The three-way per-row pick. `fan_in` lazily counts the row's
+    /// merge fan-in (B rows with a nonempty slice) — only evaluated for
+    /// adaptive light rows with the merge lane enabled, so forced modes
+    /// and dense-routed rows pay nothing for it.
     #[inline]
-    fn wants_hash(&self, row_flops: u64) -> bool {
+    fn lane_for(&self, row_flops: u64, fan_in: impl FnOnce() -> u32) -> Lane {
         match self.mode {
-            AccumMode::Dense => false,
-            AccumMode::Hash => true,
-            AccumMode::Adaptive => row_flops < self.hash_threshold,
+            AccumMode::Dense => Lane::Dense,
+            AccumMode::Hash => Lane::Hash,
+            AccumMode::Merge => Lane::Merge,
+            AccumMode::Adaptive => {
+                if row_flops >= self.hash_threshold {
+                    Lane::Dense
+                } else if self.merge_max_k == 0 {
+                    Lane::Hash
+                } else {
+                    let k = fan_in();
+                    if k > 0
+                        && k <= self.merge_max_k
+                        && (k == 1 || row_flops >= k as u64 * MERGE_MIN_AVG_RUN)
+                    {
+                        Lane::Merge
+                    } else {
+                        Lane::Hash
+                    }
+                }
+            }
         }
     }
+}
+
+/// Merge fan-in of a row: how many of its A entries select a nonempty B
+/// row — the number of sorted leaf runs a k-way merge would fuse. The
+/// rank pass records the same quantity per row as `SymbolicPlan::row_k`.
+#[inline]
+fn merge_fan_in(acols: &[Index], b: &Csr) -> u32 {
+    acols.iter().filter(|&&k| !b.row(k as usize).0.is_empty()).count() as u32
 }
 
 /// How a job *asks for* an accumulator policy — the serializable,
@@ -178,11 +270,16 @@ impl AccumPolicy {
 /// [`AccumSpec::Auto`], the symbolic FLOPs distribution) are known.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum AccumSpec {
-    /// A fixed mode with the default adaptive threshold (`cols / 16`).
+    /// A fixed mode with the default adaptive threshold (`cols / 16`)
+    /// and merge fan-in cap ([`MERGE_MAX_K_DEFAULT`]).
     Fixed(AccumMode),
     /// Adaptive with an explicit threshold override — the per-job tuning
     /// knob (`serve --accum-threshold N`, the `tune` sweep driver).
     AdaptiveAt(u64),
+    /// Adaptive at the default threshold with an explicit merge fan-in
+    /// cap — the merge-lane tuning knob (`serve --merge-max-k N`, the
+    /// `tune` arbitration leg; 0 disables the merge lane).
+    MergeAt(u32),
     /// Adaptive with the per-matrix heuristic threshold
     /// ([`AccumPolicy::auto_for`]) picked at serve time from the job's
     /// own symbolic plan (`--accum auto`).
@@ -202,7 +299,7 @@ impl From<AccumMode> for AccumSpec {
 }
 
 impl AccumSpec {
-    /// Parse a CLI spelling (`adaptive|dense|hash|auto`).
+    /// Parse a CLI spelling (`adaptive|dense|hash|merge|auto`).
     pub fn parse(s: &str) -> Option<AccumSpec> {
         match s {
             "auto" => Some(AccumSpec::Auto),
@@ -210,11 +307,13 @@ impl AccumSpec {
         }
     }
 
-    /// Display form: `adaptive`, `dense`, `hash`, `auto`, `adaptive@N`.
+    /// Display form: `adaptive`, `dense`, `hash`, `merge`, `auto`,
+    /// `adaptive@N`, `merge-k@N`.
     pub fn describe(&self) -> String {
         match self {
             AccumSpec::Fixed(m) => m.name().to_string(),
             AccumSpec::AdaptiveAt(t) => format!("adaptive@{t}"),
+            AccumSpec::MergeAt(k) => format!("merge-k@{k}"),
             AccumSpec::Auto => "auto".to_string(),
         }
     }
@@ -229,6 +328,9 @@ impl AccumSpec {
             AccumSpec::AdaptiveAt(t) => {
                 AccumPolicy::new(AccumMode::Adaptive, cols).with_threshold(*t)
             }
+            AccumSpec::MergeAt(k) => {
+                AccumPolicy::new(AccumMode::Adaptive, cols).with_merge_max_k(*k)
+            }
             AccumSpec::Auto => AccumPolicy::auto_for(cols, row_flops),
         }
     }
@@ -236,14 +338,22 @@ impl AccumSpec {
 
 /// Per-multiply accumulator statistics, carried on
 /// [`Traffic::accum`](super::Traffic). Numeric-pass semantics:
-/// `dense_rows + hash_rows` equals the number of output rows the
-/// accumulator processed.
+/// `dense_rows + hash_rows + merge_rows` equals the number of output
+/// rows the accumulator processed (nonempty band segments, under the
+/// blocked backend).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct AccumStats {
     /// Rows routed to the dense lane.
     pub dense_rows: u64,
     /// Rows routed to the hash lane.
     pub hash_rows: u64,
+    /// Rows routed to the k-way sorted-merge lane.
+    pub merge_rows: u64,
+    /// Merge-lane depth histogram: bucket `min(rounds, 7)` counts rows
+    /// whose k runs collapsed in `rounds = ceil(log2 k)` pairwise merge
+    /// rounds (k <= 1 → bucket 0). `merge_depth_hist.iter().sum() ==
+    /// merge_rows`.
+    pub merge_depth_hist: [u64; MERGE_DEPTH_BUCKETS],
     /// Geometric regrowths of the hash table (excludes the first
     /// allocation).
     pub growths: u64,
@@ -260,6 +370,10 @@ impl AccumStats {
     pub fn merge(&mut self, o: &AccumStats) {
         self.dense_rows += o.dense_rows;
         self.hash_rows += o.hash_rows;
+        self.merge_rows += o.merge_rows;
+        for (bucket, &n) in self.merge_depth_hist.iter_mut().zip(&o.merge_depth_hist) {
+            *bucket += n;
+        }
         self.growths += o.growths;
         self.peak_bytes = self.peak_bytes.max(o.peak_bytes);
         self.table.merge(o.table);
@@ -301,6 +415,13 @@ pub struct RowAccumulator<S: Semiring = Arithmetic> {
     /// ([`RowAccumulator::numeric_row_band`] scratch, reused across
     /// calls).
     seg_buf: Vec<(u32, u32)>,
+    /// Merge lane: ping-pong product buffers (leaf runs, then each
+    /// pairwise round's output) plus `[start, end)` run bounds into the
+    /// live buffer. O(live row products), reused across rows.
+    merge_buf: Vec<(Index, Value)>,
+    merge_tmp: Vec<(Index, Value)>,
+    run_buf: Vec<(u32, u32)>,
+    run_tmp: Vec<(u32, u32)>,
     /// Cumulative statistics; snapshot via [`RowAccumulator::finish`].
     pub stats: AccumStats,
 }
@@ -340,6 +461,10 @@ impl<S: Semiring> RowAccumulator<S> {
             used_slots: Vec::new(),
             drain_buf: Vec::new(),
             seg_buf: Vec::new(),
+            merge_buf: Vec::new(),
+            merge_tmp: Vec::new(),
+            run_buf: Vec::new(),
+            run_tmp: Vec::new(),
             stats: AccumStats::default(),
         }
     }
@@ -356,6 +481,10 @@ impl<S: Semiring> RowAccumulator<S> {
             + self.used_slots.capacity() * std::mem::size_of::<u32>()
             + self.drain_buf.capacity() * std::mem::size_of::<(Index, Value)>()
             + self.seg_buf.capacity() * std::mem::size_of::<(u32, u32)>()
+            + self.merge_buf.capacity() * std::mem::size_of::<(Index, Value)>()
+            + self.merge_tmp.capacity() * std::mem::size_of::<(Index, Value)>()
+            + self.run_buf.capacity() * std::mem::size_of::<(u32, u32)>()
+            + self.run_tmp.capacity() * std::mem::size_of::<(u32, u32)>()
     }
 
     /// Snapshot the stats with the current footprint as `peak_bytes` —
@@ -372,34 +501,62 @@ impl<S: Semiring> RowAccumulator<S> {
     /// across all calls on one accumulator (they tag the stamp array).
     pub fn symbolic_row(&mut self, a: &Csr, b: &Csr, i: usize, row_flops: u64) -> usize {
         let (acols, _) = a.row(i);
-        if self.policy.wants_hash(row_flops) {
-            self.stats.hash_rows += 1;
-            for &k in acols {
-                let (bcols, _) = b.row(k as usize);
-                for &j in bcols {
-                    self.hash_upsert(j, 0.0);
-                }
-            }
-            let count = self.used_slots.len();
-            self.clear_hash_row();
-            count
-        } else {
-            self.stats.dense_rows += 1;
-            if self.stamp.is_empty() && self.cols > 0 {
-                self.stamp = vec![u32::MAX; self.cols];
-            }
-            let tag = i as u32;
-            let mut count = 0usize;
-            for &k in acols {
-                let (bcols, _) = b.row(k as usize);
-                for &j in bcols {
-                    if self.stamp[j as usize] != tag {
-                        self.stamp[j as usize] = tag;
-                        count += 1;
+        let policy = self.policy;
+        match policy.lane_for(row_flops, || merge_fan_in(acols, b)) {
+            Lane::Hash => {
+                self.stats.hash_rows += 1;
+                for &k in acols {
+                    let (bcols, _) = b.row(k as usize);
+                    for &j in bcols {
+                        self.hash_upsert(j, 0.0);
                     }
                 }
+                let count = self.used_slots.len();
+                self.clear_hash_row();
+                count
             }
-            count
+            Lane::Merge => {
+                // The numeric merge machinery over zero payloads: run
+                // collapse counts distinct columns exactly like the
+                // stamp/table lanes do.
+                let zero = self.semiring.zero();
+                let mut buf = std::mem::take(&mut self.merge_buf);
+                let mut runs = std::mem::take(&mut self.run_buf);
+                buf.clear();
+                runs.clear();
+                for &k in acols {
+                    let (bcols, _) = b.row(k as usize);
+                    if bcols.is_empty() {
+                        continue;
+                    }
+                    let start = buf.len() as u32;
+                    for &j in bcols {
+                        buf.push((j, zero));
+                    }
+                    runs.push((start, buf.len() as u32));
+                }
+                self.merge_buf = buf;
+                self.run_buf = runs;
+                self.merge_collapse(|_, _| {})
+            }
+            Lane::Dense => {
+                self.stats.dense_rows += 1;
+                if self.stamp.is_empty() && self.cols > 0 {
+                    self.stamp = vec![u32::MAX; self.cols];
+                }
+                let tag = i as u32;
+                let mut count = 0usize;
+                for &k in acols {
+                    let (bcols, _) = b.row(k as usize);
+                    for &j in bcols {
+                        if self.stamp[j as usize] != tag {
+                            self.stamp[j as usize] = tag;
+                            count += 1;
+                        }
+                    }
+                }
+                count
+            }
         }
     }
 
@@ -429,7 +586,7 @@ impl<S: Semiring> RowAccumulator<S> {
 
     /// Accumulate output row `i`, then emit its (column, value) pairs in
     /// strictly increasing column order. Returns the row's nnz. Partial
-    /// products are added in A-row-then-B-row order in both lanes, so the
+    /// products are added in A-row-then-B-row order in every lane, so the
     /// emitted values are bitwise lane-independent.
     pub fn numeric_row_emit(
         &mut self,
@@ -441,68 +598,105 @@ impl<S: Semiring> RowAccumulator<S> {
         mut emit: impl FnMut(Index, Value),
     ) -> usize {
         let (acols, avals) = a.row(i);
-        if self.policy.wants_hash(row_flops) {
-            self.stats.hash_rows += 1;
-            for (&k, &av) in acols.iter().zip(avals) {
-                t.a_reads += 1;
-                let (bcols, bvals) = b.row(k as usize);
-                t.b_reads += bcols.len() as u64;
-                for (&j, &bv) in bcols.iter().zip(bvals) {
-                    let prod = self.semiring.mul(av, bv);
-                    self.hash_upsert(j, prod);
-                    t.flops += 1;
-                }
-            }
-            let n = self.used_slots.len();
-            self.drain_buf.clear();
-            for &s in &self.used_slots {
-                self.drain_buf.push((self.tags[s as usize], self.vals[s as usize]));
-            }
-            self.drain_buf.sort_unstable_by_key(|&(j, _)| j);
-            for idx in 0..self.drain_buf.len() {
-                let (j, v) = self.drain_buf[idx];
-                emit(j, v);
-                t.c_writes += 1;
-            }
-            self.clear_hash_row();
-            t.intermediate_peak = t.intermediate_peak.max(n as u64);
-            n
-        } else {
-            self.stats.dense_rows += 1;
-            let zero = self.semiring.zero();
-            if self.acc.is_empty() && self.cols > 0 {
-                self.acc = vec![zero; self.cols];
-                self.present = vec![false; self.cols];
-            }
-            for (&k, &av) in acols.iter().zip(avals) {
-                t.a_reads += 1;
-                let (bcols, bvals) = b.row(k as usize);
-                t.b_reads += bcols.len() as u64;
-                for (&j, &bv) in bcols.iter().zip(bvals) {
-                    let ju = j as usize;
-                    if !self.present[ju] {
-                        self.present[ju] = true;
-                        self.touched.push(j);
+        let policy = self.policy;
+        match policy.lane_for(row_flops, || merge_fan_in(acols, b)) {
+            Lane::Hash => {
+                self.stats.hash_rows += 1;
+                for (&k, &av) in acols.iter().zip(avals) {
+                    t.a_reads += 1;
+                    let (bcols, bvals) = b.row(k as usize);
+                    t.b_reads += bcols.len() as u64;
+                    for (&j, &bv) in bcols.iter().zip(bvals) {
+                        let prod = self.semiring.mul(av, bv);
+                        self.hash_upsert(j, prod);
+                        t.flops += 1;
                     }
-                    // First touch folds onto the zero left in `acc` —
-                    // `add(zero, prod)` — matching the hash lane's insert.
-                    self.acc[ju] = self.semiring.add(self.acc[ju], self.semiring.mul(av, bv));
-                    t.flops += 1;
                 }
+                let n = self.used_slots.len();
+                self.drain_buf.clear();
+                for &s in &self.used_slots {
+                    self.drain_buf.push((self.tags[s as usize], self.vals[s as usize]));
+                }
+                self.drain_buf.sort_unstable_by_key(|&(j, _)| j);
+                for idx in 0..self.drain_buf.len() {
+                    let (j, v) = self.drain_buf[idx];
+                    emit(j, v);
+                    t.c_writes += 1;
+                }
+                self.clear_hash_row();
+                t.intermediate_peak = t.intermediate_peak.max(n as u64);
+                n
             }
-            self.touched.sort_unstable();
-            let n = self.touched.len();
-            for idx in 0..n {
-                let j = self.touched[idx];
-                let ju = j as usize;
-                emit(j, self.acc[ju]);
-                self.acc[ju] = zero;
-                self.present[ju] = false;
-                t.c_writes += 1;
+            Lane::Merge => {
+                // Leaf runs: each A entry contributes its B-row slice as
+                // one presorted run of partial products, in A-row order.
+                let mut buf = std::mem::take(&mut self.merge_buf);
+                let mut runs = std::mem::take(&mut self.run_buf);
+                buf.clear();
+                runs.clear();
+                for (&k, &av) in acols.iter().zip(avals) {
+                    t.a_reads += 1;
+                    let (bcols, bvals) = b.row(k as usize);
+                    t.b_reads += bcols.len() as u64;
+                    if bcols.is_empty() {
+                        continue;
+                    }
+                    let start = buf.len() as u32;
+                    for (&j, &bv) in bcols.iter().zip(bvals) {
+                        buf.push((j, self.semiring.mul(av, bv)));
+                        t.flops += 1;
+                    }
+                    runs.push((start, buf.len() as u32));
+                }
+                // The merge intermediate holds every product (pre-fold),
+                // unlike the distinct-column tables of the other lanes.
+                t.intermediate_peak = t.intermediate_peak.max(buf.len() as u64);
+                self.merge_buf = buf;
+                self.run_buf = runs;
+                self.merge_collapse(|j, v| {
+                    emit(j, v);
+                    t.c_writes += 1;
+                })
             }
-            self.touched.clear();
-            t.intermediate_peak = t.intermediate_peak.max(n as u64);
-            n
+            Lane::Dense => {
+                self.stats.dense_rows += 1;
+                let zero = self.semiring.zero();
+                if self.acc.is_empty() && self.cols > 0 {
+                    self.acc = vec![zero; self.cols];
+                    self.present = vec![false; self.cols];
+                }
+                for (&k, &av) in acols.iter().zip(avals) {
+                    t.a_reads += 1;
+                    let (bcols, bvals) = b.row(k as usize);
+                    t.b_reads += bcols.len() as u64;
+                    for (&j, &bv) in bcols.iter().zip(bvals) {
+                        let ju = j as usize;
+                        if !self.present[ju] {
+                            self.present[ju] = true;
+                            self.touched.push(j);
+                        }
+                        // First touch folds onto the zero left in `acc` —
+                        // `add(zero, prod)` — matching the hash lane's
+                        // insert.
+                        self.acc[ju] =
+                            self.semiring.add(self.acc[ju], self.semiring.mul(av, bv));
+                        t.flops += 1;
+                    }
+                }
+                self.touched.sort_unstable();
+                let n = self.touched.len();
+                for idx in 0..n {
+                    let j = self.touched[idx];
+                    let ju = j as usize;
+                    emit(j, self.acc[ju]);
+                    self.acc[ju] = zero;
+                    self.present[ju] = false;
+                    t.c_writes += 1;
+                }
+                self.touched.clear();
+                t.intermediate_peak = t.intermediate_peak.max(n as u64);
+                n
+            }
         }
     }
 
@@ -558,64 +752,102 @@ impl<S: Semiring> RowAccumulator<S> {
             return 0;
         }
         t.a_reads += acols.len() as u64;
-        let n = if self.policy.wants_hash(band_flops) {
-            self.stats.hash_rows += 1;
-            for ((&k, &av), &(s, e)) in acols.iter().zip(avals).zip(&seg) {
-                let (bcols, bvals) = b.row(k as usize);
-                t.b_reads += (e - s) as u64;
-                for idx in s as usize..e as usize {
-                    let prod = self.semiring.mul(av, bvals[idx]);
-                    self.hash_upsert(bcols[idx], prod);
-                    t.flops += 1;
-                }
-            }
-            let n = self.used_slots.len();
-            self.drain_buf.clear();
-            for &s in &self.used_slots {
-                self.drain_buf.push((self.tags[s as usize], self.vals[s as usize]));
-            }
-            self.drain_buf.sort_unstable_by_key(|&(j, _)| j);
-            for idx in 0..self.drain_buf.len() {
-                let (j, v) = self.drain_buf[idx];
-                emit(j, v);
-                t.c_writes += 1;
-            }
-            self.clear_hash_row();
-            n
-        } else {
-            self.stats.dense_rows += 1;
-            let zero = self.semiring.zero();
-            if self.acc.is_empty() && self.cols > 0 {
-                self.acc = vec![zero; self.cols];
-                self.present = vec![false; self.cols];
-            }
-            for ((&k, &av), &(s, e)) in acols.iter().zip(avals).zip(&seg) {
-                let (bcols, bvals) = b.row(k as usize);
-                t.b_reads += (e - s) as u64;
-                for idx in s as usize..e as usize {
-                    // Band-local rebase: the dense lane never indexes past
-                    // the band width.
-                    let jl = bcols[idx] as usize - lo;
-                    if !self.present[jl] {
-                        self.present[jl] = true;
-                        self.touched.push(jl as Index);
+        let policy = self.policy;
+        let lane = policy.lane_for(band_flops, || {
+            seg.iter().filter(|&&(s, e)| e > s).count() as u32
+        });
+        let n = match lane {
+            Lane::Hash => {
+                self.stats.hash_rows += 1;
+                for ((&k, &av), &(s, e)) in acols.iter().zip(avals).zip(&seg) {
+                    let (bcols, bvals) = b.row(k as usize);
+                    t.b_reads += (e - s) as u64;
+                    for idx in s as usize..e as usize {
+                        let prod = self.semiring.mul(av, bvals[idx]);
+                        self.hash_upsert(bcols[idx], prod);
+                        t.flops += 1;
                     }
-                    self.acc[jl] =
-                        self.semiring.add(self.acc[jl], self.semiring.mul(av, bvals[idx]));
-                    t.flops += 1;
                 }
+                let n = self.used_slots.len();
+                self.drain_buf.clear();
+                for &s in &self.used_slots {
+                    self.drain_buf.push((self.tags[s as usize], self.vals[s as usize]));
+                }
+                self.drain_buf.sort_unstable_by_key(|&(j, _)| j);
+                for idx in 0..self.drain_buf.len() {
+                    let (j, v) = self.drain_buf[idx];
+                    emit(j, v);
+                    t.c_writes += 1;
+                }
+                self.clear_hash_row();
+                n
             }
-            self.touched.sort_unstable();
-            let n = self.touched.len();
-            for idx in 0..n {
-                let jl = self.touched[idx] as usize;
-                emit((jl + lo) as Index, self.acc[jl]);
-                self.acc[jl] = zero;
-                self.present[jl] = false;
-                t.c_writes += 1;
+            Lane::Merge => {
+                // Leaf runs from the clamped segments. The merge lane
+                // never indexes by column, so no band-local rebase is
+                // needed: segment slices are already sorted and confined
+                // to [lo, hi), and global columns are emitted as-is.
+                let mut buf = std::mem::take(&mut self.merge_buf);
+                let mut runs = std::mem::take(&mut self.run_buf);
+                buf.clear();
+                runs.clear();
+                for ((&k, &av), &(s, e)) in acols.iter().zip(avals).zip(&seg) {
+                    let (bcols, bvals) = b.row(k as usize);
+                    t.b_reads += (e - s) as u64;
+                    if e == s {
+                        continue;
+                    }
+                    let start = buf.len() as u32;
+                    for idx in s as usize..e as usize {
+                        buf.push((bcols[idx], self.semiring.mul(av, bvals[idx])));
+                        t.flops += 1;
+                    }
+                    runs.push((start, buf.len() as u32));
+                }
+                // The merge intermediate holds every segment product.
+                t.intermediate_peak = t.intermediate_peak.max(buf.len() as u64);
+                self.merge_buf = buf;
+                self.run_buf = runs;
+                self.merge_collapse(|j, v| {
+                    emit(j, v);
+                    t.c_writes += 1;
+                })
             }
-            self.touched.clear();
-            n
+            Lane::Dense => {
+                self.stats.dense_rows += 1;
+                let zero = self.semiring.zero();
+                if self.acc.is_empty() && self.cols > 0 {
+                    self.acc = vec![zero; self.cols];
+                    self.present = vec![false; self.cols];
+                }
+                for ((&k, &av), &(s, e)) in acols.iter().zip(avals).zip(&seg) {
+                    let (bcols, bvals) = b.row(k as usize);
+                    t.b_reads += (e - s) as u64;
+                    for idx in s as usize..e as usize {
+                        // Band-local rebase: the dense lane never indexes
+                        // past the band width.
+                        let jl = bcols[idx] as usize - lo;
+                        if !self.present[jl] {
+                            self.present[jl] = true;
+                            self.touched.push(jl as Index);
+                        }
+                        self.acc[jl] =
+                            self.semiring.add(self.acc[jl], self.semiring.mul(av, bvals[idx]));
+                        t.flops += 1;
+                    }
+                }
+                self.touched.sort_unstable();
+                let n = self.touched.len();
+                for idx in 0..n {
+                    let jl = self.touched[idx] as usize;
+                    emit((jl + lo) as Index, self.acc[jl]);
+                    self.acc[jl] = zero;
+                    self.present[jl] = false;
+                    t.c_writes += 1;
+                }
+                self.touched.clear();
+                n
+            }
         };
         t.intermediate_peak = t.intermediate_peak.max(n as u64);
         self.seg_buf = seg;
@@ -706,6 +938,83 @@ impl<S: Semiring> RowAccumulator<S> {
         }
         self.used_slots.clear();
     }
+
+    /// Collapse the leaf runs staged in `merge_buf`/`run_buf` (sorted,
+    /// in A-row order) down to one run via stable pairwise merge rounds,
+    /// then ⊕-fold duplicate columns in source order and emit strictly
+    /// by ascending column. Returns the row's distinct-column count and
+    /// records the merge-lane stats (row count + depth histogram).
+    ///
+    /// Bitwise contract: the rounds never fold — a balanced-tree fold
+    /// would re-associate the float reduction. Ties take the left run
+    /// first, and adjacent runs are always in A-row order, so a column's
+    /// duplicates stay in global source order through every round; the
+    /// single fold at drain is then `add(zero, p₁)`, `add(·, p₂)`, … —
+    /// left-deep, exactly the dense lane's first-touch-then-fold.
+    fn merge_collapse(&mut self, mut emit: impl FnMut(Index, Value)) -> usize {
+        let mut src = std::mem::take(&mut self.merge_buf);
+        let mut dst = std::mem::take(&mut self.merge_tmp);
+        let mut runs = std::mem::take(&mut self.run_buf);
+        let mut runs_next = std::mem::take(&mut self.run_tmp);
+        let mut depth = 0usize;
+        while runs.len() > 1 {
+            depth += 1;
+            dst.clear();
+            runs_next.clear();
+            for pair in runs.chunks(2) {
+                let start = dst.len() as u32;
+                match *pair {
+                    [(ls, le), (rs, re)] => {
+                        let (mut li, le) = (ls as usize, le as usize);
+                        let (mut ri, re) = (rs as usize, re as usize);
+                        while li < le && ri < re {
+                            // `<`, not `<=`: equal columns take the left
+                            // (earlier-source) run first — stability.
+                            if src[ri].0 < src[li].0 {
+                                dst.push(src[ri]);
+                                ri += 1;
+                            } else {
+                                dst.push(src[li]);
+                                li += 1;
+                            }
+                        }
+                        dst.extend_from_slice(&src[li..le]);
+                        dst.extend_from_slice(&src[ri..re]);
+                    }
+                    // Odd run out: carried to the next round verbatim.
+                    [(s, e)] => dst.extend_from_slice(&src[s as usize..e as usize]),
+                    _ => unreachable!("chunks(2) yields 1- or 2-run windows"),
+                }
+                runs_next.push((start, dst.len() as u32));
+            }
+            std::mem::swap(&mut src, &mut dst);
+            std::mem::swap(&mut runs, &mut runs_next);
+        }
+        self.stats.merge_rows += 1;
+        self.stats.merge_depth_hist[depth.min(MERGE_DEPTH_BUCKETS - 1)] += 1;
+        let mut n = 0usize;
+        if let Some(&(s, e)) = runs.first() {
+            let run = &src[s as usize..e as usize];
+            let mut idx = 0usize;
+            while idx < run.len() {
+                let j = run[idx].0;
+                // First touch folds onto zero — matching the other lanes.
+                let mut v = self.semiring.add(self.semiring.zero(), run[idx].1);
+                idx += 1;
+                while idx < run.len() && run[idx].0 == j {
+                    v = self.semiring.add(v, run[idx].1);
+                    idx += 1;
+                }
+                emit(j, v);
+                n += 1;
+            }
+        }
+        self.merge_buf = src;
+        self.merge_tmp = dst;
+        self.run_buf = runs;
+        self.run_tmp = runs_next;
+        n
+    }
 }
 
 #[cfg(test)]
@@ -736,9 +1045,9 @@ mod tests {
         assert_eq!(c.data, oracle.data, "{label}: data");
     }
 
-    /// Forced-hash and forced-dense outputs are bitwise equal to the
-    /// serial oracle on every generator (same per-column accumulation
-    /// order in both lanes).
+    /// Every forced lane's output is bitwise equal to the serial oracle
+    /// on every generator (same per-column accumulation order in all
+    /// three lanes).
     #[test]
     fn forced_lanes_bitwise_equal_oracle_all_generators() {
         let inputs: Vec<(&str, Csr, Csr)> = vec![
@@ -761,13 +1070,18 @@ mod tests {
         ];
         for (name, a, b) in &inputs {
             let (oracle, to) = gustavson(a, b);
-            for mode in [AccumMode::Adaptive, AccumMode::Dense, AccumMode::Hash] {
+            for mode in [
+                AccumMode::Adaptive,
+                AccumMode::Dense,
+                AccumMode::Hash,
+                AccumMode::Merge,
+            ] {
                 let (c, t) = multiply(a, b, mode);
                 assert_bitwise(&c, &oracle, &format!("{name}/{}", mode.name()));
                 assert_eq!(t.flops, to.flops, "{name}/{}", mode.name());
                 assert_eq!(t.c_writes, to.c_writes, "{name}/{}", mode.name());
                 assert_eq!(
-                    t.accum.dense_rows + t.accum.hash_rows,
+                    t.accum.dense_rows + t.accum.hash_rows + t.accum.merge_rows,
                     a.rows as u64,
                     "{name}/{}: every row must pick exactly one lane",
                     mode.name()
@@ -781,56 +1095,81 @@ mod tests {
     fn empty_rows_and_empty_matrix() {
         let a = Csr::from_triplets(4, 4, vec![(2, 1, 3.0)]);
         let b = Csr::from_triplets(4, 4, vec![(1, 0, 2.0)]);
-        for mode in [AccumMode::Adaptive, AccumMode::Dense, AccumMode::Hash] {
+        for mode in [
+            AccumMode::Adaptive,
+            AccumMode::Dense,
+            AccumMode::Hash,
+            AccumMode::Merge,
+        ] {
             let (c, t) = multiply(&a, &b, mode);
             assert_eq!(c.nnz(), 1);
             assert_eq!(c.row(2), (&[0 as Index][..], &[6.0 as Value][..]));
             assert_eq!(t.flops, 1);
         }
         let z = Csr::zero(3, 3);
-        for mode in [AccumMode::Dense, AccumMode::Hash] {
+        for mode in [AccumMode::Dense, AccumMode::Hash, AccumMode::Merge] {
             let (c, t) = multiply(&z, &z, mode);
             assert_eq!(c.nnz(), 0);
             assert_eq!(t.flops, 0);
-            assert_eq!(t.accum.dense_rows + t.accum.hash_rows, 3);
+            assert_eq!(t.accum.dense_rows + t.accum.hash_rows + t.accum.merge_rows, 3);
         }
     }
 
-    /// Single-element rows through both lanes.
+    /// Single-element rows through every lane.
     #[test]
     fn single_element_rows() {
         let a = Csr::from_triplets(1, 1, vec![(0, 0, 3.0)]);
-        for mode in [AccumMode::Dense, AccumMode::Hash] {
+        for mode in [AccumMode::Dense, AccumMode::Hash, AccumMode::Merge] {
             let (c, t) = multiply(&a, &a, mode);
             assert_eq!(c.row(0).1, &[9.0]);
             assert_eq!(t.flops, 1);
         }
     }
 
-    /// A row denser than the threshold on a wide matrix goes dense under
-    /// the adaptive policy; its light siblings hash — and the output
-    /// still matches the oracle bitwise.
+    /// The adaptive three-way split on one crafted wide matrix: the hub
+    /// row goes dense (FLOPs over threshold), single-source rows (k = 1)
+    /// take the merge lane, a 2-source row with runs too short to
+    /// amortize merging hashes, and a row fanning into more than
+    /// `merge_max_k` B rows hashes — and the output still matches the
+    /// oracle bitwise.
     #[test]
     fn adaptive_splits_heavy_and_light_rows_on_wide_matrix() {
         let cols = 4096;
-        // row 0 of A is a hub hitting a dense B row; rows 1..16 are light.
+        // row 0 of A is a hub hitting a dense B row; rows 1..16 are
+        // single-source; row 16 is a short 2-source row; row 17 fans
+        // into 9 single-element B rows.
         let mut tr = vec![(0usize, 0usize, 1.0)];
         for r in 1..16 {
             tr.push((r, r, 1.0));
         }
-        let a = Csr::from_triplets(16, cols, tr);
+        tr.push((16, 100, 1.0));
+        tr.push((16, 101, 1.0));
+        for s in 0..9 {
+            tr.push((17, 100 + s, 1.0));
+        }
+        let a = Csr::from_triplets(18, cols, tr);
         let mut btr: Vec<(usize, usize, f64)> = (0..cols).map(|c| (0usize, c, 0.5)).collect();
         for r in 1..16 {
             btr.push((r, r, 2.0));
         }
+        for s in 0..9 {
+            btr.push((100 + s, 200 + s, 3.0));
+        }
         let b = Csr::from_triplets(cols, cols, btr);
         let flops = flops_per_row(&a, &b);
         assert!(flops[0] >= (cols / HASH_THRESHOLD_DIVISOR) as u64);
+        // Row 16: k=2, flops=2 < 2 * MERGE_MIN_AVG_RUN. Row 17: k=9 >
+        // MERGE_MAX_K_DEFAULT. Both must hash.
+        assert_eq!(flops[16], 2);
+        assert_eq!(flops[17], 9);
         let (oracle, _) = gustavson(&a, &b);
         let (c, t) = multiply(&a, &b, AccumMode::Adaptive);
         assert_bitwise(&c, &oracle, "adaptive wide");
         assert_eq!(t.accum.dense_rows, 1, "only the hub row crosses the threshold");
-        assert_eq!(t.accum.hash_rows, 15);
+        assert_eq!(t.accum.merge_rows, 15, "single-source rows take the merge lane");
+        assert_eq!(t.accum.hash_rows, 2, "short-run and wide-fan-in rows hash");
+        // k=1 rows need zero merge rounds: all 15 land in depth bucket 0.
+        assert_eq!(t.accum.merge_depth_hist[0], 15);
     }
 
     /// The hash table grows geometrically across rows (capacity persists
@@ -906,7 +1245,12 @@ mod tests {
         let b = rmat(&RmatParams::new(7, 800, 32));
         let oracle = symbolic_row_nnz(&a, &b);
         let flops = flops_per_row(&a, &b);
-        for mode in [AccumMode::Adaptive, AccumMode::Dense, AccumMode::Hash] {
+        for mode in [
+            AccumMode::Adaptive,
+            AccumMode::Dense,
+            AccumMode::Hash,
+            AccumMode::Merge,
+        ] {
             let mut racc = RowAccumulator::with_mode(b.cols, mode);
             for i in 0..a.rows {
                 assert_eq!(
@@ -989,10 +1333,12 @@ mod tests {
         );
         assert_eq!(AccumSpec::parse("dense"), Some(AccumSpec::Fixed(AccumMode::Dense)));
         assert_eq!(AccumSpec::parse("hash"), Some(AccumSpec::Fixed(AccumMode::Hash)));
+        assert_eq!(AccumSpec::parse("merge"), Some(AccumSpec::Fixed(AccumMode::Merge)));
         assert_eq!(AccumSpec::parse("auto"), Some(AccumSpec::Auto));
         assert_eq!(AccumSpec::parse("bogus"), None);
         assert_eq!(AccumSpec::default(), AccumMode::Adaptive.into());
         assert_eq!(AccumSpec::AdaptiveAt(512).describe(), "adaptive@512");
+        assert_eq!(AccumSpec::MergeAt(4).describe(), "merge-k@4");
 
         let flops = vec![1u64, 2, 3, 400];
         let fixed = AccumSpec::Fixed(AccumMode::Dense).resolve(1024, &flops);
@@ -1001,6 +1347,13 @@ mod tests {
         let at = AccumSpec::AdaptiveAt(7).resolve(1024, &flops);
         assert_eq!(at.mode, AccumMode::Adaptive);
         assert_eq!(at.hash_threshold, 7);
+        assert_eq!(at.merge_max_k, MERGE_MAX_K_DEFAULT);
+        let mk = AccumSpec::MergeAt(3).resolve(1024, &flops);
+        assert_eq!(mk.mode, AccumMode::Adaptive);
+        assert_eq!(mk.hash_threshold, (1024 / HASH_THRESHOLD_DIVISOR) as u64);
+        assert_eq!(mk.merge_max_k, 3);
+        // merge_max_k = 0 disables the merge lane entirely.
+        assert_eq!(AccumSpec::MergeAt(0).resolve(1024, &flops).merge_max_k, 0);
         assert_eq!(
             AccumSpec::Auto.resolve(1024, &flops),
             AccumPolicy::auto_for(1024, &flops)
@@ -1021,7 +1374,12 @@ mod tests {
         let flops = flops_per_row(&a, &b);
         for kind in SemiringKind::ALL {
             let oracle = spgemm_semiring(&a, &b, kind);
-            for mode in [AccumMode::Adaptive, AccumMode::Dense, AccumMode::Hash] {
+            for mode in [
+                AccumMode::Adaptive,
+                AccumMode::Dense,
+                AccumMode::Hash,
+                AccumMode::Merge,
+            ] {
                 let mut racc =
                     RowAccumulator::with_semiring(b.cols, AccumPolicy::new(mode, b.cols), kind);
                 let mut t = Traffic::default();
@@ -1044,7 +1402,7 @@ mod tests {
                 };
                 assert_bitwise(&c, &oracle, &format!("{}/{}", kind.name(), mode.name()));
                 assert_eq!(
-                    t.accum.dense_rows + t.accum.hash_rows,
+                    t.accum.dense_rows + t.accum.hash_rows + t.accum.merge_rows,
                     a.rows as u64,
                     "{}/{}: every row picks exactly one lane",
                     kind.name(),
@@ -1056,14 +1414,19 @@ mod tests {
 
     /// Band-sliced accumulation: concatenating `numeric_row_band` drains
     /// over any band width reproduces the full-width `numeric_row_emit`
-    /// row bitwise, for both lanes, and the dense scratch stays sized to
-    /// the band.
+    /// row bitwise, for all three lanes, and the dense scratch stays
+    /// sized to the band.
     #[test]
     fn banded_rows_concatenate_to_full_rows_bitwise() {
         let a = rmat(&RmatParams::new(7, 900, 301));
         let b = rmat(&RmatParams::new(7, 900, 302));
         let flops = flops_per_row(&a, &b);
-        for mode in [AccumMode::Adaptive, AccumMode::Dense, AccumMode::Hash] {
+        for mode in [
+            AccumMode::Adaptive,
+            AccumMode::Dense,
+            AccumMode::Hash,
+            AccumMode::Merge,
+        ] {
             // Full-width reference.
             let mut full = RowAccumulator::with_mode(b.cols, mode);
             let mut tf = Traffic::default();
@@ -1137,5 +1500,189 @@ mod tests {
                 }
             }
         });
+    }
+
+    /// Drain one synthetic row (A = 1×k selecting k B-rows of sorted
+    /// runs) through a lane and return the emitted pairs with values as
+    /// raw bits — the exact-equality currency of the parity harness.
+    fn lane_drain<S: Semiring + Copy>(
+        a: &Csr,
+        b: &Csr,
+        mode: AccumMode,
+        semiring: S,
+    ) -> Vec<(Index, u64)> {
+        let flops = flops_per_row(a, b);
+        let mut racc =
+            RowAccumulator::with_semiring(b.cols, AccumPolicy::new(mode, b.cols), semiring);
+        let mut t = Traffic::default();
+        let mut out = Vec::new();
+        racc.numeric_row_emit(a, b, 0, flops[0], &mut t, |j, v| {
+            out.push((j, v.to_bits()));
+        });
+        out
+    }
+
+    /// Map-oracle + three-lane parity property harness: a seeded
+    /// randomized generator builds one row's (col, val) product stream —
+    /// including adversarial shapes (all-duplicate columns, k = 1
+    /// single-source rows, empty rows, growth-ramp run lengths) — and
+    /// every lane under every semiring must produce the identical sorted
+    /// drain, bit-for-bit, equal to a source-order left-deep ⊕-fold.
+    #[test]
+    fn prop_three_lanes_identical_drains_across_semirings() {
+        use crate::spgemm::semiring::{Boolean, MaxTimes, MinPlus};
+        use crate::util::quick::forall;
+
+        fn check<S: Semiring + Copy>(g: &mut crate::util::quick::Gen, semiring: S) {
+            let cols = 1usize << g.usize_in(2, 10);
+            let k = g.usize_in(0, 12); // spans k=0 (empty), k=1, k>MERGE_MAX_K
+            let all_dup = g.usize_in(0, 3) == 0;
+            let dup_col = g.usize_in(0, cols - 1);
+            let mut atr: Vec<(usize, usize, f64)> = Vec::new();
+            let mut btr: Vec<(usize, usize, f64)> = Vec::new();
+            for r in 0..k {
+                atr.push((0, r, g.f64_in(-4.0, 4.0)));
+                if all_dup {
+                    // Adversarial: every run is the same single column, so
+                    // all k products collide on one output entry.
+                    btr.push((r, dup_col, g.f64_in(-4.0, 4.0)));
+                } else {
+                    // Growth-ramp lengths: run r holds up to 3r+1 random
+                    // strictly increasing columns.
+                    let mut c = g.usize_in(0, 7).min(cols - 1);
+                    for _ in 0..g.usize_in(0, 3 * r + 1) {
+                        if c >= cols {
+                            break;
+                        }
+                        btr.push((r, c, g.f64_in(-4.0, 4.0)));
+                        c += g.usize_in(1, 1 + cols / 8);
+                    }
+                }
+            }
+            let a = Csr::from_triplets(1, k.max(1), atr);
+            let b = Csr::from_triplets(k.max(1), cols, btr);
+            // Map-oracle: per column, a left-deep source-order fold
+            // starting from add(zero, first) — the documented contract
+            // of all three lanes.
+            let mut expect: std::collections::BTreeMap<Index, Value> =
+                std::collections::BTreeMap::new();
+            let (acols, avals) = a.row(0);
+            for (&bk, &av) in acols.iter().zip(avals) {
+                let (bcols, bvals) = b.row(bk as usize);
+                for (&j, &bv) in bcols.iter().zip(bvals) {
+                    let prod = semiring.mul(av, bv);
+                    match expect.entry(j) {
+                        std::collections::btree_map::Entry::Vacant(e) => {
+                            e.insert(semiring.add(semiring.zero(), prod));
+                        }
+                        std::collections::btree_map::Entry::Occupied(mut e) => {
+                            let v = *e.get();
+                            e.insert(semiring.add(v, prod));
+                        }
+                    }
+                }
+            }
+            let want: Vec<(Index, u64)> =
+                expect.iter().map(|(&j, &v)| (j, v.to_bits())).collect();
+            for mode in [
+                AccumMode::Dense,
+                AccumMode::Hash,
+                AccumMode::Merge,
+                AccumMode::Adaptive,
+            ] {
+                let got = lane_drain(&a, &b, mode, semiring);
+                assert_eq!(got, want, "{} lane drain diverged from map oracle", mode.name());
+                // The symbolic pass agrees on the distinct-column count.
+                let mut racc = RowAccumulator::with_semiring(
+                    b.cols,
+                    AccumPolicy::new(mode, b.cols),
+                    semiring,
+                );
+                let flops = flops_per_row(&a, &b);
+                assert_eq!(racc.symbolic_row(&a, &b, 0, flops[0]), want.len());
+            }
+        }
+
+        forall(48, |g| {
+            check(g, Arithmetic);
+            check(g, Boolean);
+            check(g, MinPlus);
+            check(g, MaxTimes);
+        });
+    }
+
+    /// `AccumStats` contract: the three lane counters partition the rows
+    /// under every mode, forced modes stay exclusive (including
+    /// [`AccumMode::Merge`]), and the merge-depth histogram is sane —
+    /// it sums to `merge_rows` and forced-merge rows land in the
+    /// `ceil(log2 k)` bucket.
+    #[test]
+    fn stats_contract_three_way_partition_and_depth_hist() {
+        let a = rmat(&RmatParams::new(7, 900, 401));
+        let b = rmat(&RmatParams::new(7, 900, 402));
+        let rows = a.rows as u64;
+        for mode in [
+            AccumMode::Adaptive,
+            AccumMode::Dense,
+            AccumMode::Hash,
+            AccumMode::Merge,
+        ] {
+            let (_, t) = multiply(&a, &b, mode);
+            let s = t.accum;
+            assert_eq!(
+                s.dense_rows + s.hash_rows + s.merge_rows,
+                rows,
+                "{}: lane counters must partition the rows",
+                mode.name()
+            );
+            assert_eq!(
+                s.merge_depth_hist.iter().sum::<u64>(),
+                s.merge_rows,
+                "{}: depth histogram must sum to merge_rows",
+                mode.name()
+            );
+            match mode {
+                AccumMode::Dense => {
+                    assert_eq!((s.hash_rows, s.merge_rows), (0, 0), "forced dense");
+                }
+                AccumMode::Hash => {
+                    assert_eq!((s.dense_rows, s.merge_rows), (0, 0), "forced hash");
+                }
+                AccumMode::Merge => {
+                    assert_eq!((s.dense_rows, s.hash_rows), (0, 0), "forced merge");
+                }
+                AccumMode::Adaptive => {}
+            }
+        }
+        // Depth buckets: a forced-merge row with k sorted runs collapses
+        // in ceil(log2 k) pairwise rounds.
+        for (k, bucket) in [(1usize, 0usize), (2, 1), (3, 2), (5, 3), (8, 3), (9, 4)] {
+            let atr: Vec<(usize, usize, f64)> = (0..k).map(|r| (0, r, 1.0)).collect();
+            let btr: Vec<(usize, usize, f64)> = (0..k).map(|r| (r, 2 * r, 1.5)).collect();
+            let a = Csr::from_triplets(1, k, atr);
+            let b = Csr::from_triplets(k, 2 * k, btr);
+            let (_, t) = multiply(&a, &b, AccumMode::Merge);
+            assert_eq!(t.accum.merge_rows, 1);
+            let mut want = [0u64; MERGE_DEPTH_BUCKETS];
+            want[bucket] = 1;
+            assert_eq!(
+                t.accum.merge_depth_hist, want,
+                "k={k} must collapse in {bucket} rounds"
+            );
+        }
+        // Worker-merge folding: counters add, histograms add bucketwise.
+        let mut acc = AccumStats::default();
+        let mut w1 = AccumStats::default();
+        w1.merge_rows = 2;
+        w1.merge_depth_hist[0] = 1;
+        w1.merge_depth_hist[3] = 1;
+        let mut w2 = AccumStats::default();
+        w2.merge_rows = 1;
+        w2.merge_depth_hist[3] = 1;
+        acc.merge(&w1);
+        acc.merge(&w2);
+        assert_eq!(acc.merge_rows, 3);
+        assert_eq!(acc.merge_depth_hist[0], 1);
+        assert_eq!(acc.merge_depth_hist[3], 2);
     }
 }

@@ -20,7 +20,8 @@ pub mod semiring;
 
 pub use accumulator::{
     AccumMode, AccumPolicy, AccumSpec, AccumStats, RowAccumulator, AUTO_DIVISOR_MAX,
-    AUTO_DIVISOR_MIN, HASH_THRESHOLD_DIVISOR,
+    AUTO_DIVISOR_MIN, HASH_THRESHOLD_DIVISOR, MERGE_DEPTH_BUCKETS, MERGE_MAX_K_DEFAULT,
+    MERGE_MIN_AVG_RUN,
 };
 pub use gustavson::{flops_per_row, gustavson, symbolic_row_nnz, total_flops};
 pub use inner::inner_product;
@@ -62,8 +63,9 @@ pub struct Traffic {
     /// Fused multiply-adds performed.
     pub flops: u64,
     /// Accumulator-policy statistics of the numeric pass (dense vs hash
-    /// rows, probe counts, peak per-worker accumulator bytes) — zero for
-    /// dataflows that do not use the [`RowAccumulator`].
+    /// vs merge rows, probe counts, merge-depth histogram, peak
+    /// per-worker accumulator bytes) — zero for dataflows that do not
+    /// use the [`RowAccumulator`].
     pub accum: AccumStats,
     /// Column-band statistics of the propagation-blocking backend
     /// ([`par_gustavson_blocked`]) — zero for every unblocked dataflow.
@@ -267,7 +269,10 @@ mod tests {
         assert_eq!(t.a_reads, serial_t.a_reads);
         assert_eq!(t.b_reads, serial_t.b_reads);
         // the adaptive policy routed every row through exactly one lane
-        assert_eq!(t.accum.dense_rows + t.accum.hash_rows, a.rows as u64);
+        assert_eq!(
+            t.accum.dense_rows + t.accum.hash_rows + t.accum.merge_rows,
+            a.rows as u64
+        );
     }
 
     /// Table 1.2 qualitative shape: outer product reads inputs once but has

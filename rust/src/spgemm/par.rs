@@ -302,6 +302,27 @@ fn symbolic_plan_exec(
         run_scoped(tasks, exec);
     }
 
+    // ---- Rank pass, merge fan-in statistic: same even-by-row-count
+    // chunking as the FLOPs pass, same `rank::fanin_chunk` kernel as the
+    // serial pipeline — integer counts, so chunking cannot change them.
+    let mut row_k = vec![0u32; rows];
+    if threads == 1 || rows < PAR_FLOPS_MIN_ROWS {
+        rank::fanin_chunk(a, b, 0, &mut row_k);
+    } else {
+        let chunks = even_chunks(rows, threads);
+        let slices = split_disjoint(row_k.as_mut_slice(), chunks.iter().map(|&(s, e)| e - s));
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = chunks
+            .iter()
+            .zip(slices)
+            .map(|(&(begin, _), out)| {
+                Box::new(move || {
+                    rank::fanin_chunk(a, b, begin, out);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        run_scoped(tasks, exec);
+    }
+
     // The FLOPs distribution is known now, so even AccumSpec::Auto can
     // resolve before the symbolic pass. Lane choice here affects only
     // scratch shape and stats, never the counted nnz — plans stay
@@ -396,6 +417,7 @@ fn symbolic_plan_exec(
 
     SymbolicPlan {
         row_flops,
+        row_k,
         row_nnz,
         row_ptr,
     }
@@ -1098,9 +1120,9 @@ mod tests {
         }
     }
 
-    /// Adaptive, forced-dense, and forced-hash backends are bitwise equal
-    /// to the serial oracle on every generator — the tentpole acceptance
-    /// bar.
+    /// Adaptive, forced-dense, forced-hash, and forced-merge backends are
+    /// bitwise equal to the serial oracle on every generator — the
+    /// tentpole acceptance bar.
     #[test]
     fn accum_modes_bitwise_equal_oracle() {
         use crate::gen::banded;
@@ -1119,7 +1141,12 @@ mod tests {
         ];
         for (name, a, b) in &inputs {
             let (c1, t1) = gustavson(a, b);
-            for mode in [AccumMode::Adaptive, AccumMode::Dense, AccumMode::Hash] {
+            for mode in [
+                AccumMode::Adaptive,
+                AccumMode::Dense,
+                AccumMode::Hash,
+                AccumMode::Merge,
+            ] {
                 for threads in [1, 3, 4] {
                     let (cp, tp) = par_gustavson_accum(a, b, threads, mode);
                     let label = format!("{name}/{}/t{threads}", mode.name());
@@ -1129,7 +1156,7 @@ mod tests {
                     assert_eq!(t1.flops, tp.flops, "{label}");
                     assert_eq!(t1.c_writes, tp.c_writes, "{label}");
                     assert_eq!(
-                        tp.accum.dense_rows + tp.accum.hash_rows,
+                        tp.accum.dense_rows + tp.accum.hash_rows + tp.accum.merge_rows,
                         a.rows as u64,
                         "{label}: numeric pass must route every row"
                     );
@@ -1157,7 +1184,7 @@ mod tests {
             assert_eq!(c.data, oracle.data, "t={threshold}");
             assert_eq!(t.flops, to.flops, "t={threshold}");
             assert_eq!(
-                t.accum.dense_rows + t.accum.hash_rows,
+                t.accum.dense_rows + t.accum.hash_rows + t.accum.merge_rows,
                 a.rows as u64,
                 "t={threshold}"
             );
@@ -1196,7 +1223,7 @@ mod tests {
                 assert_eq!(c.col_idx, oracle.col_idx, "{label}");
                 assert_eq!(c.data, oracle.data, "{label}");
                 assert_eq!(
-                    t.accum.dense_rows + t.accum.hash_rows,
+                    t.accum.dense_rows + t.accum.hash_rows + t.accum.merge_rows,
                     a.rows as u64,
                     "{label}: numeric pass must route every row"
                 );

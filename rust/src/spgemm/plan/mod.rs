@@ -3,9 +3,11 @@
 //! A plan answers three questions, each owned by one pass:
 //!
 //! 1. [`rank`] — *how heavy is each row?* Per-row symbolic statistics:
-//!    the FLOPs upper bound (`Σ_{k ∈ A[i,:]} nnz(B[k,:])`) and the exact
-//!    output nnz, computed with the same `flops_of_row` /
-//!    [`RowAccumulator::symbolic_row`] kernels the serial oracle uses.
+//!    the FLOPs upper bound (`Σ_{k ∈ A[i,:]} nnz(B[k,:])`), the merge
+//!    fan-in (contributing B rows — what routes light rows between the
+//!    hash and merge lanes), and the exact output nnz, computed with the
+//!    same `flops_of_row` / [`RowAccumulator::symbolic_row`] kernels the
+//!    serial oracle uses.
 //! 2. [`partition`] — *how is the work sliced?* Row windows of roughly
 //!    equal FMA volume for every parallel backend, and fixed-width column
 //!    bands ([`BandSpec`]) for the propagation-blocking backend.
@@ -48,6 +50,10 @@ use crate::formats::Csr;
 pub struct SymbolicPlan {
     /// FMA count per output row (window planning input).
     pub row_flops: Vec<u64>,
+    /// Merge fan-in per output row: the number of B rows contributing
+    /// partial products (sorted runs a k-way merge would see) — the
+    /// statistic the three-way accumulator policy routes light rows on.
+    pub row_k: Vec<u32>,
     /// Exact nnz per output row.
     pub row_nnz: Vec<usize>,
     /// Exclusive prefix sum of `row_nnz` (`rows + 1` entries) — the
@@ -65,6 +71,7 @@ impl SymbolicPlan {
     /// accounting in the serving layer).
     pub fn resident_bytes(&self) -> usize {
         self.row_flops.len() * std::mem::size_of::<u64>()
+            + self.row_k.len() * std::mem::size_of::<u32>()
             + self.row_nnz.len() * std::mem::size_of::<usize>()
             + self.row_ptr.len() * std::mem::size_of::<usize>()
     }
@@ -79,6 +86,8 @@ pub fn symbolic_plan_serial(a: &Csr, b: &Csr, spec: AccumSpec) -> SymbolicPlan {
     assert_eq!(a.cols, b.rows, "dimension mismatch");
     let mut row_flops = vec![0u64; a.rows];
     rank::flops_chunk(a, b, 0, &mut row_flops);
+    let mut row_k = vec![0u32; a.rows];
+    rank::fanin_chunk(a, b, 0, &mut row_k);
     // Lane choice affects only scratch shape and stats, never the counted
     // nnz — plans stay policy-independent (same resolution point as the
     // parallel driver).
@@ -89,6 +98,7 @@ pub fn symbolic_plan_serial(a: &Csr, b: &Csr, spec: AccumSpec) -> SymbolicPlan {
     let row_ptr = rank::prefix_sum(&row_nnz);
     SymbolicPlan {
         row_flops,
+        row_k,
         row_nnz,
         row_ptr,
     }
@@ -127,6 +137,15 @@ mod tests {
         for (name, a, b) in &inputs {
             let plan = symbolic_plan_serial(a, b, AccumSpec::default());
             assert_eq!(plan.row_flops, flops_per_row(a, b), "{name}: row_flops");
+            let mut row_k = vec![0u32; a.rows];
+            rank::fanin_chunk(a, b, 0, &mut row_k);
+            assert_eq!(plan.row_k, row_k, "{name}: row_k");
+            for i in 0..a.rows {
+                assert!(
+                    u64::from(plan.row_k[i]) <= plan.row_flops[i],
+                    "{name}: fan-in bounded by FLOPs at row {i}"
+                );
+            }
             assert_eq!(plan.row_nnz, symbolic_row_nnz(a, b), "{name}: row_nnz");
             let mut acc = 0usize;
             for (i, &n) in plan.row_nnz.iter().enumerate() {

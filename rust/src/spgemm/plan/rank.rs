@@ -1,8 +1,11 @@
 //! Rank pass: per-row symbolic statistics of the product.
 //!
-//! Two statistics rank a row: its FLOPs upper bound
+//! Three statistics rank a row: its FLOPs upper bound
 //! (`Σ_{k ∈ A[i,:]} nnz(B[k,:])` — `flops_of_row`, what the partition and
-//! schedule passes balance on) and its exact output nnz
+//! schedule passes balance on), its merge fan-in (`fanin_chunk` — the
+//! number of B rows contributing partial products, i.e. how many sorted
+//! runs a k-way merge of the row would see; what the three-way
+//! accumulator policy routes on), and its exact output nnz
 //! ([`RowAccumulator::symbolic_row`] — what pre-allocates the product).
 //!
 //! The kernels here are *chunk-shaped*: they rank a contiguous row range
@@ -22,6 +25,22 @@ use crate::spgemm::semiring::Semiring;
 pub fn flops_chunk(a: &Csr, b: &Csr, begin: usize, out: &mut [u64]) {
     for (off, f) in out.iter_mut().enumerate() {
         *f = flops_of_row(a, b, begin + off);
+    }
+}
+
+/// Merge fan-in statistic over rows `begin .. begin + out.len()`: the
+/// number of A-row entries whose B row is nonempty — the count of sorted
+/// runs the merge lane would collapse, and the `k` the adaptive policy
+/// compares against `merge_max_k`. Kept `u32`: fan-in is bounded by
+/// `nnz(A[i,:])`, and the accumulator's k-way routing saturates far
+/// below that.
+pub fn fanin_chunk(a: &Csr, b: &Csr, begin: usize, out: &mut [u32]) {
+    for (off, k) in out.iter_mut().enumerate() {
+        let (acols, _) = a.row(begin + off);
+        *k = acols
+            .iter()
+            .filter(|&&kk| !b.row(kk as usize).0.is_empty())
+            .count() as u32;
     }
 }
 
@@ -72,8 +91,11 @@ mod tests {
         let b = rmat(&RmatParams::new(7, 900, 82));
         let full_flops = flops_per_row(&a, &b);
         let full_nnz = symbolic_row_nnz(&a, &b);
+        let mut full_k = vec![0u32; a.rows];
+        fanin_chunk(&a, &b, 0, &mut full_k);
         for parts in [1usize, 2, 3, 7] {
             let mut flops = vec![0u64; a.rows];
+            let mut fanin = vec![0u32; a.rows];
             let mut nnz = vec![0usize; a.rows];
             let chunk = a.rows.div_ceil(parts);
             let mut racc =
@@ -82,11 +104,43 @@ mod tests {
             while begin < a.rows {
                 let end = (begin + chunk).min(a.rows);
                 flops_chunk(&a, &b, begin, &mut flops[begin..end]);
+                fanin_chunk(&a, &b, begin, &mut fanin[begin..end]);
                 symbolic_chunk(&a, &b, &mut racc, &full_flops, begin, &mut nnz[begin..end]);
                 begin = end;
             }
             assert_eq!(flops, full_flops, "parts={parts}");
+            assert_eq!(fanin, full_k, "parts={parts}");
             assert_eq!(nnz, full_nnz, "parts={parts}");
+        }
+    }
+
+    /// Fan-in counts nonempty contributing B rows: bounded above by both
+    /// `nnz(A[i,:])` and the row's FLOPs, zero exactly when FLOPs are
+    /// zero, and insensitive to how heavy each contributing row is.
+    #[test]
+    fn fanin_counts_nonempty_contributors() {
+        use crate::formats::Csr;
+        // Row 0: two contributors (one B row empty → not counted).
+        // Row 1: one contributor with many products (k=1, flops=3).
+        // Row 2: only an empty B row → k=0, flops=0.
+        // Row 3: structurally empty.
+        let a = Csr::from_triplets(
+            4,
+            4,
+            vec![(0, 0, 1.0), (0, 1, 1.0), (0, 3, 1.0), (1, 2, 1.0), (2, 3, 1.0)],
+        );
+        let b = Csr::from_triplets(
+            4,
+            8,
+            vec![(0, 0, 1.0), (1, 4, 1.0), (2, 1, 1.0), (2, 5, 1.0), (2, 6, 1.0)],
+        );
+        let mut k = vec![0u32; a.rows];
+        fanin_chunk(&a, &b, 0, &mut k);
+        assert_eq!(k, vec![2, 1, 0, 0]);
+        let flops = flops_per_row(&a, &b);
+        for i in 0..a.rows {
+            assert!(u64::from(k[i]) <= flops[i], "row {i}: fan-in bounded by FLOPs");
+            assert_eq!(k[i] == 0, flops[i] == 0, "row {i}: zero together");
         }
     }
 

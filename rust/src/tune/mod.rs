@@ -10,8 +10,9 @@
 //!   hypersparse 2^18-column wide matrix) it computes one shared
 //!   [`SymbolicPlan`](crate::spgemm::SymbolicPlan), then times the numeric
 //!   pass at every candidate policy: powers-of-two fractions of `b.cols`
-//!   (`cols/4` … `cols/256`), both forced endpoints (`dense`, `hash`), and
-//!   the per-matrix `auto` heuristic
+//!   (`cols/4` … `cols/256`), all three forced endpoints (`dense`,
+//!   `hash`, `merge`), the merge fan-in grid (`merge-k@{0,1,2,4,16}` —
+//!   the three-way arbitration leg), and the per-matrix `auto` heuristic
 //!   ([`AccumPolicy::auto_for`](crate::spgemm::AccumPolicy::auto_for)).
 //! * Every swept point is **gated on bitwise equality** with the serial
 //!   Gustavson oracle and on stat sanity (every row routed to exactly one
@@ -166,14 +167,19 @@ fn band_candidates(cols: usize) -> Vec<(String, BandSpec)> {
     out
 }
 
-/// Candidate policies for a `cols`-wide product: both forced endpoints,
-/// the auto heuristic, and the powers-of-two-fraction threshold grid
-/// (deduplicated — on narrow matrices the small fractions all collapse
-/// to 1).
+/// Candidate policies for a `cols`-wide product: all three forced
+/// endpoints, the auto heuristic, the powers-of-two-fraction threshold
+/// grid (deduplicated — on narrow matrices the small fractions all
+/// collapse to 1), and the merge fan-in grid (`merge-k@<k>` — adaptive
+/// at the default threshold with the merge lane capped at k contributing
+/// B rows; k=0 disables the lane, the default cap 8 already appears as
+/// the `cols/16` grid point). This is the three-way arbitration leg:
+/// every point races under the same bitwise oracle gate.
 fn candidate_specs(cols: usize) -> Vec<(String, AccumSpec)> {
     let mut out: Vec<(String, AccumSpec)> = vec![
         ("dense".to_string(), AccumSpec::Fixed(AccumMode::Dense)),
         ("hash".to_string(), AccumSpec::Fixed(AccumMode::Hash)),
+        ("merge".to_string(), AccumSpec::Fixed(AccumMode::Merge)),
         ("auto".to_string(), AccumSpec::Auto),
     ];
     let mut seen = BTreeSet::new();
@@ -182,6 +188,9 @@ fn candidate_specs(cols: usize) -> Vec<(String, AccumSpec)> {
         if seen.insert(t) {
             out.push((format!("cols/{div}"), AccumSpec::AdaptiveAt(t)));
         }
+    }
+    for k in [0u32, 1, 2, 4, 16] {
+        out.push((format!("merge-k@{k}"), AccumSpec::MergeAt(k)));
     }
     out
 }
@@ -244,21 +253,30 @@ fn sweep_pair(
             "{workload}/{label}: traffic counters diverge from the oracle"
         );
         ensure!(
-            t.accum.dense_rows + t.accum.hash_rows == a.rows as u64,
+            t.accum.dense_rows + t.accum.hash_rows + t.accum.merge_rows == a.rows as u64,
             "{workload}/{label}: every row must be routed to exactly one lane \
-             ({} dense + {} hash != {} rows)",
+             ({} dense + {} hash + {} merge != {} rows)",
             t.accum.dense_rows,
             t.accum.hash_rows,
+            t.accum.merge_rows,
             a.rows
+        );
+        ensure!(
+            t.accum.merge_depth_hist.iter().sum::<u64>() == t.accum.merge_rows,
+            "{workload}/{label}: merge-depth histogram must sum to merge rows"
         );
         match spec {
             AccumSpec::Fixed(AccumMode::Dense) => ensure!(
-                t.accum.hash_rows == 0,
-                "{workload}/{label}: forced dense must never hash"
+                t.accum.hash_rows == 0 && t.accum.merge_rows == 0,
+                "{workload}/{label}: forced dense must never hash or merge"
             ),
             AccumSpec::Fixed(AccumMode::Hash) => ensure!(
-                t.accum.dense_rows == 0,
-                "{workload}/{label}: forced hash must never go dense"
+                t.accum.dense_rows == 0 && t.accum.merge_rows == 0,
+                "{workload}/{label}: forced hash must never go dense or merge"
+            ),
+            AccumSpec::Fixed(AccumMode::Merge) => ensure!(
+                t.accum.dense_rows == 0 && t.accum.hash_rows == 0,
+                "{workload}/{label}: forced merge must never go dense or hash"
             ),
             _ => {}
         }
@@ -276,13 +294,16 @@ fn sweep_pair(
             mean_ns,
             dense_rows: t.accum.dense_rows,
             hash_rows: t.accum.hash_rows,
+            merge_rows: t.accum.merge_rows,
             mean_probes: t.accum.table.mean_probes(),
             peak_bytes: t.accum.peak_bytes,
         });
     }
 
     // Monotonicity across the explicit threshold grid: raising the
-    // threshold can only move rows dense→hash, never the other way.
+    // threshold can only move rows off the dense lane, never onto it
+    // (the hash/merge arbitration below the threshold cannot touch the
+    // dense count).
     let mut grid: Vec<&SweepPoint> = points
         .iter()
         .filter(|p| p.label.starts_with("cols/"))
@@ -297,6 +318,38 @@ fn sweep_pair(
             w[0].threshold,
             w[1].dense_rows,
             w[1].threshold
+        );
+    }
+
+    // Monotonicity across the merge fan-in grid: raising the cap only
+    // widens merge-lane eligibility, so merge-row counts are
+    // non-decreasing in k (and k=0 disables the lane outright).
+    let mut kgrid: Vec<(u32, &SweepPoint)> = points
+        .iter()
+        .filter_map(|p| {
+            p.label
+                .strip_prefix("merge-k@")
+                .and_then(|k| k.parse::<u32>().ok())
+                .map(|k| (k, p))
+        })
+        .collect();
+    kgrid.sort_by_key(|&(k, _)| k);
+    if let Some(&(0, p0)) = kgrid.first() {
+        ensure!(
+            p0.merge_rows == 0,
+            "{workload}: merge-k@0 must disable the merge lane ({} merge rows)",
+            p0.merge_rows
+        );
+    }
+    for w in kgrid.windows(2) {
+        ensure!(
+            w[0].1.merge_rows <= w[1].1.merge_rows,
+            "{workload}: merge-row count must be non-decreasing in the fan-in cap \
+             ({} @ k={} vs {} @ k={})",
+            w[0].1.merge_rows,
+            w[0].0,
+            w[1].1.merge_rows,
+            w[1].0
         );
     }
 
@@ -361,11 +414,12 @@ fn sweep_bands(
             t.band.max_dense_lane_cols
         );
         ensure!(
-            t.accum.dense_rows + t.accum.hash_rows == t.band.segments,
+            t.accum.dense_rows + t.accum.hash_rows + t.accum.merge_rows == t.band.segments,
             "{workload}/{label}: every nonempty band segment must route to exactly one lane \
-             ({} dense + {} hash != {} segments)",
+             ({} dense + {} hash + {} merge != {} segments)",
             t.accum.dense_rows,
             t.accum.hash_rows,
+            t.accum.merge_rows,
             t.band.segments
         );
 
@@ -382,6 +436,7 @@ fn sweep_bands(
             mean_ns,
             dense_rows: t.accum.dense_rows,
             hash_rows: t.accum.hash_rows,
+            merge_rows: t.accum.merge_rows,
             mean_probes: t.accum.table.mean_probes(),
             peak_bytes: t.accum.peak_bytes,
         });
@@ -453,24 +508,48 @@ mod tests {
             }
             // Forced endpoints are always present and exclusive.
             let dense = pair.points.iter().find(|p| p.label == "dense").unwrap();
-            assert_eq!(dense.hash_rows, 0);
+            assert_eq!((dense.hash_rows, dense.merge_rows), (0, 0));
             let hash = pair.points.iter().find(|p| p.label == "hash").unwrap();
-            assert_eq!(hash.dense_rows, 0);
-            assert_eq!(hash.dense_rows + hash.hash_rows, pair.rows as u64);
+            assert_eq!((hash.dense_rows, hash.merge_rows), (0, 0));
+            assert_eq!(hash.hash_rows, pair.rows as u64);
+            let merge = pair.points.iter().find(|p| p.label == "merge").unwrap();
+            assert_eq!((merge.dense_rows, merge.hash_rows), (0, 0));
+            assert_eq!(merge.merge_rows, pair.rows as u64);
+            // The three-way arbitration leg sweeps the fan-in cap, with
+            // the disabled endpoint included.
+            let k0 = pair.points.iter().find(|p| p.label == "merge-k@0").unwrap();
+            assert_eq!(k0.merge_rows, 0, "{}: k=0 disables the lane", pair.workload);
+            assert!(
+                pair.points.iter().any(|p| p.label == "merge-k@16"),
+                "{}: fan-in grid swept",
+                pair.workload
+            );
             // The auto point sits on the clamped heuristic grid.
             let auto = pair.points.iter().find(|p| p.label == "auto").unwrap();
             assert_eq!(auto.threshold, pair.auto_threshold);
         }
+        // The acceptance bar for the merge lane: the auto policy's
+        // three-way arbitration actually selects it somewhere in the
+        // suite (low fan-in shapes exist in every smoke run).
+        assert!(
+            report
+                .pairs
+                .iter()
+                .filter(|p| !p.workload.ends_with("-blocked"))
+                .filter_map(|p| p.points.iter().find(|pt| pt.label == "auto"))
+                .any(|pt| pt.merge_rows > 0),
+            "at least one workload must route rows to the merge lane under auto"
+        );
         // Fixed seed ⇒ the sweep's structural outputs are reproducible.
         let again = run_sweep(&tiny_opts()).unwrap();
         for (x, y) in report.pairs.iter().zip(&again.pairs) {
             assert_eq!(x.flops, y.flops);
             assert_eq!(x.out_nnz, y.out_nnz);
             assert_eq!(x.auto_threshold, y.auto_threshold);
-            let splits = |p: &PairSweep| -> Vec<(String, u64, u64)> {
+            let splits = |p: &PairSweep| -> Vec<(String, u64, u64, u64)> {
                 p.points
                     .iter()
-                    .map(|pt| (pt.label.clone(), pt.dense_rows, pt.hash_rows))
+                    .map(|pt| (pt.label.clone(), pt.dense_rows, pt.hash_rows, pt.merge_rows))
                     .collect()
             };
             assert_eq!(splits(x), splits(y), "{}: lane splits must be deterministic", x.workload);

@@ -12,12 +12,14 @@ use anyhow::{Context, Result};
 use std::time::Duration;
 
 /// Bump when a field is added/renamed/retyped; parsers reject mismatches.
-pub const SCHEMA_VERSION: u64 = 1;
+/// v2: `merge_rows` per point (three-lane accumulator arbitration).
+pub const SCHEMA_VERSION: u64 = 2;
 
 /// One swept accumulator policy on one workload pair.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SweepPoint {
-    /// Sweep label: `dense`, `hash`, `auto`, or `cols/<div>`.
+    /// Sweep label: `dense`, `hash`, `merge`, `auto`, `cols/<div>`, or
+    /// `merge-k@<k>`.
     pub label: String,
     /// Resolved accumulator mode the numeric pass ran with.
     pub mode: AccumMode,
@@ -31,6 +33,8 @@ pub struct SweepPoint {
     pub dense_rows: u64,
     /// Rows routed to the hash lane.
     pub hash_rows: u64,
+    /// Rows routed to the k-way sorted-merge lane.
+    pub merge_rows: u64,
     /// Mean hash-lane probes per upsert (0 when no row hashed).
     pub mean_probes: f64,
     /// Peak per-worker accumulator heap bytes.
@@ -79,6 +83,7 @@ impl SweepPoint {
             ("mean_ns".into(), Json::u64(self.mean_ns)),
             ("dense_rows".into(), Json::u64(self.dense_rows)),
             ("hash_rows".into(), Json::u64(self.hash_rows)),
+            ("merge_rows".into(), Json::u64(self.merge_rows)),
             ("mean_probes".into(), Json::Num(self.mean_probes)),
             ("peak_bytes".into(), Json::u64(self.peak_bytes)),
         ])
@@ -95,6 +100,7 @@ impl SweepPoint {
             mean_ns: j.field("mean_ns")?.as_u64()?,
             dense_rows: j.field("dense_rows")?.as_u64()?,
             hash_rows: j.field("hash_rows")?.as_u64()?,
+            merge_rows: j.field("merge_rows")?.as_u64()?,
             mean_probes: j.field("mean_probes")?.as_f64()?,
             peak_bytes: j.field("peak_bytes")?.as_u64()?,
         })
@@ -190,7 +196,7 @@ impl TuneReport {
             ),
             &[
                 "workload", "point", "mode", "threshold", "best", "mean", "dense rows",
-                "hash rows", "probes/upsert", "peak accum",
+                "hash rows", "merge rows", "probes/upsert", "peak accum",
             ],
         );
         for pair in &self.pairs {
@@ -205,6 +211,7 @@ impl TuneReport {
                     fmt_ns(p.mean_ns),
                     crate::util::fmt_count(p.dense_rows),
                     crate::util::fmt_count(p.hash_rows),
+                    crate::util::fmt_count(p.merge_rows),
                     format!("{:.2}", p.mean_probes),
                     crate::util::fmt_bytes(p.peak_bytes),
                 ]);
@@ -213,15 +220,22 @@ impl TuneReport {
         t
     }
 
-    /// One-line-per-workload conclusions (fastest point, default vs auto).
+    /// One-line-per-workload conclusions (fastest point, default vs auto,
+    /// and how many rows the auto policy's three-way arbitration sent to
+    /// the merge lane).
     pub fn summary_lines(&self) -> Vec<String> {
         self.pairs
             .iter()
             .map(|p| {
+                let auto_merge = p
+                    .points
+                    .iter()
+                    .find(|pt| pt.label == "auto")
+                    .map_or(0, |pt| pt.merge_rows);
                 format!(
                     "{}: fastest = {} (* above); default cols/16 -> threshold {}, \
-                     auto heuristic -> {}",
-                    p.workload, p.best, p.default_threshold, p.auto_threshold
+                     auto heuristic -> {} ({} merge rows under auto)",
+                    p.workload, p.best, p.default_threshold, p.auto_threshold, auto_merge
                 )
             })
             .collect()

@@ -67,7 +67,12 @@ fn blocked_every_semiring_every_mode_bitwise_equals_serial_oracle() {
     for (name, a, b) in suite() {
         for kind in SemiringKind::ALL {
             let oracle = spgemm_semiring(&a, &b, kind);
-            for mode in [AccumMode::Adaptive, AccumMode::Dense, AccumMode::Hash] {
+            for mode in [
+                AccumMode::Adaptive,
+                AccumMode::Dense,
+                AccumMode::Hash,
+                AccumMode::Merge,
+            ] {
                 let spec = AccumSpec::Fixed(mode);
                 let (c, t, _) = par_gustavson_blocked_kind(&a, &b, 3, spec, BandSpec::Auto, kind);
                 let label = format!("{name}/{}/{}/blocked-auto", kind.name(), mode.name());
@@ -87,13 +92,20 @@ fn blocked_every_semiring_every_mode_bitwise_equals_serial_oracle() {
                 // Lane routing is per nonempty band segment, and forced
                 // modes stay exclusive even under banding.
                 assert_eq!(
-                    t.accum.dense_rows + t.accum.hash_rows,
+                    t.accum.dense_rows + t.accum.hash_rows + t.accum.merge_rows,
                     t.band.segments,
                     "{label}: every segment routed to exactly one lane"
                 );
                 match mode {
-                    AccumMode::Dense => assert_eq!(t.accum.hash_rows, 0, "{label}"),
-                    AccumMode::Hash => assert_eq!(t.accum.dense_rows, 0, "{label}"),
+                    AccumMode::Dense => {
+                        assert_eq!((t.accum.hash_rows, t.accum.merge_rows), (0, 0), "{label}");
+                    }
+                    AccumMode::Hash => {
+                        assert_eq!((t.accum.dense_rows, t.accum.merge_rows), (0, 0), "{label}");
+                    }
+                    AccumMode::Merge => {
+                        assert_eq!((t.accum.dense_rows, t.accum.hash_rows), (0, 0), "{label}");
+                    }
                     AccumMode::Adaptive => {}
                 }
             }
@@ -190,6 +202,18 @@ fn pass_pipeline_reproduces_pre_refactor_plan_fields() {
         let serial = symbolic_plan_serial(&a, &b, AccumSpec::default());
         assert_eq!(par, serial, "{name}: parallel and serial pipelines agree");
         assert_eq!(par.row_flops, flops_per_row(&a, &b), "{name}: rank pass");
+        assert_eq!(par.row_k.len(), a.rows, "{name}: fan-in pass covers every row");
+        for i in 0..a.rows {
+            assert!(
+                u64::from(par.row_k[i]) <= par.row_flops[i],
+                "{name}: fan-in bounded by FLOPs at row {i}"
+            );
+            assert_eq!(
+                par.row_k[i] == 0,
+                par.row_flops[i] == 0,
+                "{name}: fan-in and FLOPs vanish together at row {i}"
+            );
+        }
         assert_eq!(par.row_nnz, symbolic_row_nnz(&a, &b), "{name}: symbolic pass");
         let mut ptr = vec![0usize; a.rows + 1];
         for (i, nnz) in par.row_nnz.iter().enumerate() {

@@ -74,13 +74,18 @@ fn pinned_cycle_counts() {
     // ±0.01%. Five green CI runs at the previous bands mean the real
     // post-PR-1 values sit well inside ±0.05% of the pins — a 5× tighter
     // band keeps covering that documented ≪0.1% drift while shrinking
-    // the window for silent timing-model regressions by another 5×. A
-    // follow-up with toolchain/artifact access should paste the
+    // the window for silent timing-model regressions by another 5×.
+    // 2026-08-08 (PR 7): the `golden-repin-values` artifact is STILL
+    // unreachable from this environment, so the pins stay unmeasured;
+    // tightened once more, ±0.01% → ±0.002% — six green runs at ±0.01%
+    // bound the true drift well inside that, and the SMASH simulator is
+    // untouched by this PR (accumulator-lane work is native-side only).
+    // A follow-up with toolchain/artifact access should paste the
     // SMASH_REPIN values into golden() and set this to 0.0. Determinism
     // itself is asserted exactly by `determinism_across_runs` in
     // smash_correctness.rs; this band only exists because the goldens
     // were pinned before the accounting fix.
-    const REPIN_BAND: f64 = 0.0001;
+    const REPIN_BAND: f64 = 0.00002;
     let want = golden();
     for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
         let dev = (g as f64 - w as f64).abs() / w as f64;

@@ -1,0 +1,203 @@
+//! Merge-lane parity suite — the tentpole acceptance bar for the third
+//! accumulator lane (k-way sorted-merge rows, Du et al. binary row
+//! merging / SpArch merge-tree framing).
+//!
+//! The contract under test:
+//!
+//! * **Bitwise equality.** The forced-merge lane — for every semiring ×
+//!   backend (pooled, spawn-per-call, propagation-blocking banded) ×
+//!   generator shape, including the hypersparse 2^18-column pair — is
+//!   bitwise equal to the serial [`spgemm_semiring`] oracle. The merge
+//!   tree keeps duplicate columns in source order through its pairwise
+//!   rounds and folds them once at drain time, so this is an equality,
+//!   not an approximation.
+//! * **Thread-count independence.** Merging is row-local; the row
+//!   partition cannot change any fold.
+//! * **Band-width independence.** Under banding the merge lane collapses
+//!   each row's clamped B-row segments per band; bands partition output
+//!   columns disjointly, so any width produces the identical product.
+//! * **The stats contract.** Forced merge routes every row (every
+//!   nonempty segment, under banding) through the merge lane exclusively,
+//!   and the merge-depth histogram accounts for each of them.
+
+use smash::formats::Csr;
+use smash::gen::{banded, diagonal_noise, erdos_renyi, hypersparse, rmat, RmatParams};
+use smash::spgemm::{
+    par_gustavson_blocked_kind, par_gustavson_kind, par_gustavson_spawning_kind, spgemm_semiring,
+    AccumMode, AccumSpec, BandSpec, SemiringKind,
+};
+
+/// The generator suite (the same shapes the tune sweep gates on),
+/// including the hypersparse wide pair.
+fn suite() -> Vec<(&'static str, Csr, Csr)> {
+    vec![
+        (
+            "rmat",
+            rmat(&RmatParams::new(7, 900, 31)),
+            rmat(&RmatParams::new(7, 900, 32)),
+        ),
+        (
+            "erdos_renyi",
+            erdos_renyi(96, 700, 33),
+            erdos_renyi(96, 700, 34),
+        ),
+        ("banded", banded(64, 3, 35), banded(64, 2, 36)),
+        (
+            "diagonal_noise",
+            diagonal_noise(80, 240, 37),
+            diagonal_noise(80, 240, 38),
+        ),
+        (
+            "hypersparse_2^18",
+            hypersparse(18, 3_000, 39),
+            hypersparse(18, 3_000, 40),
+        ),
+    ]
+}
+
+fn assert_bitwise(c: &Csr, oracle: &Csr, label: &str) {
+    assert_eq!(c.row_ptr, oracle.row_ptr, "{label}: row_ptr");
+    assert_eq!(c.col_idx, oracle.col_idx, "{label}: col_idx");
+    assert_eq!(c.data, oracle.data, "{label}: data");
+}
+
+#[test]
+fn merge_lane_every_semiring_every_backend_bitwise_equals_serial_oracle() {
+    let spec = AccumSpec::Fixed(AccumMode::Merge);
+    for (name, a, b) in suite() {
+        for kind in SemiringKind::ALL {
+            let oracle = spgemm_semiring(&a, &b, kind);
+            let rows = a.rows as u64;
+
+            let (cp, tp, _) = par_gustavson_kind(&a, &b, 3, spec, kind);
+            let (cs, ts, _) = par_gustavson_spawning_kind(&a, &b, 3, spec, kind);
+            let label = format!("{name}/{}", kind.name());
+            assert_bitwise(&cp, &oracle, &format!("{label}/pooled"));
+            assert_bitwise(&cs, &oracle, &format!("{label}/spawning"));
+            for (backend, t) in [("pooled", &tp), ("spawning", &ts)] {
+                assert_eq!(
+                    t.accum.merge_rows, rows,
+                    "{label}/{backend}: forced merge routes every row"
+                );
+                assert_eq!(
+                    (t.accum.dense_rows, t.accum.hash_rows),
+                    (0, 0),
+                    "{label}/{backend}: forced merge is exclusive"
+                );
+                assert_eq!(
+                    t.accum.merge_depth_hist.iter().sum::<u64>(),
+                    t.accum.merge_rows,
+                    "{label}/{backend}: depth histogram sums to merge rows"
+                );
+            }
+
+            let (cb, tb, _) = par_gustavson_blocked_kind(&a, &b, 3, spec, BandSpec::Auto, kind);
+            assert_bitwise(&cb, &oracle, &format!("{label}/blocked-auto"));
+            assert_eq!(
+                tb.accum.merge_rows, tb.band.segments,
+                "{label}/blocked: forced merge routes every nonempty segment"
+            );
+            assert_eq!(
+                (tb.accum.dense_rows, tb.accum.hash_rows),
+                (0, 0),
+                "{label}/blocked: forced merge is exclusive under banding"
+            );
+            assert_eq!(
+                tb.accum.merge_depth_hist.iter().sum::<u64>(),
+                tb.accum.merge_rows,
+                "{label}/blocked: depth histogram sums to merge segments"
+            );
+        }
+    }
+}
+
+/// Thread-count independence: merging is row-local, so the merge lane's
+/// output cannot depend on how rows are partitioned over workers.
+#[test]
+fn merge_lane_is_thread_count_independent() {
+    let spec = AccumSpec::Fixed(AccumMode::Merge);
+    let a = rmat(&RmatParams::new(7, 800, 41));
+    let b = rmat(&RmatParams::new(7, 800, 42));
+    for kind in SemiringKind::ALL {
+        let oracle = spgemm_semiring(&a, &b, kind);
+        for threads in [1, 2, 5, 8] {
+            let (c, t, _) = par_gustavson_kind(&a, &b, threads, spec, kind);
+            let label = format!("{}/t{threads}", kind.name());
+            assert_bitwise(&c, &oracle, &label);
+            assert_eq!(t.accum.merge_rows, a.rows as u64, "{label}");
+        }
+    }
+}
+
+/// Band-width independence: the merge lane emits global column indices
+/// directly from each band's clamped segments, so any width — including
+/// the pathological one-column band and the degenerate full-width band —
+/// produces the identical product.
+#[test]
+fn merge_lane_is_band_width_independent() {
+    let spec = AccumSpec::Fixed(AccumMode::Merge);
+    let inputs: Vec<(&'static str, Csr, Csr)> = vec![
+        (
+            "rmat",
+            rmat(&RmatParams::new(7, 900, 43)),
+            rmat(&RmatParams::new(7, 900, 44)),
+        ),
+        ("banded", banded(72, 3, 45), banded(72, 2, 46)),
+    ];
+    for (name, a, b) in &inputs {
+        for kind in [SemiringKind::Arithmetic, SemiringKind::MinPlus] {
+            let oracle = spgemm_semiring(a, b, kind);
+            for bands in [
+                BandSpec::Cols(1),
+                BandSpec::Cols(7),
+                BandSpec::Cols(64),
+                BandSpec::Cols(b.cols),
+                BandSpec::Auto,
+            ] {
+                for threads in [1, 4] {
+                    let (c, t, _) = par_gustavson_blocked_kind(a, b, threads, spec, bands, kind);
+                    let label = format!("{name}/{}/{}/t{threads}", kind.name(), bands.describe());
+                    assert_bitwise(&c, &oracle, &label);
+                    assert_eq!(t.accum.merge_rows, t.band.segments, "{label}");
+                    assert_eq!((t.accum.dense_rows, t.accum.hash_rows), (0, 0), "{label}");
+                }
+            }
+        }
+    }
+}
+
+/// The adaptive three-way policy stays bitwise-oracle while actually
+/// exercising the merge lane on low fan-in shapes — the arbitration the
+/// tune sweep measures, asserted here structurally.
+#[test]
+fn adaptive_three_way_routes_and_stays_bitwise() {
+    for (name, a, b) in suite() {
+        let oracle = spgemm_semiring(&a, &b, SemiringKind::Arithmetic);
+        let (c, t, _) = par_gustavson_kind(
+            &a,
+            &b,
+            3,
+            AccumSpec::default(),
+            SemiringKind::Arithmetic,
+        );
+        assert_bitwise(&c, &oracle, name);
+        assert_eq!(
+            t.accum.dense_rows + t.accum.hash_rows + t.accum.merge_rows,
+            a.rows as u64,
+            "{name}: every row routed to exactly one lane"
+        );
+        assert_eq!(
+            t.accum.merge_depth_hist.iter().sum::<u64>(),
+            t.accum.merge_rows,
+            "{name}: depth histogram sums to merge rows"
+        );
+    }
+    // The hypersparse pair is dominated by single-source rows: the
+    // default adaptive policy must send some of them to the merge lane.
+    let (_, a, b) = suite().pop().expect("suite is nonempty");
+    let (_, t, _) = par_gustavson_kind(&a, &b, 3, AccumSpec::default(), SemiringKind::Arithmetic);
+    assert!(
+        t.accum.merge_rows > 0,
+        "hypersparse rows with small fan-in must route to the merge lane"
+    );
+}

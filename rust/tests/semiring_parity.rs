@@ -4,7 +4,7 @@
 //! For each of the four semirings (arithmetic, boolean, min-plus,
 //! max-times), both parallel executors (persistent pool and
 //! spawn-per-call) under every accumulator mode (adaptive, forced dense,
-//! forced hash) must be **bitwise** equal to the serial
+//! forced hash, forced merge) must be **bitwise** equal to the serial
 //! [`spgemm_semiring`] oracle across the generator suite, including the
 //! hypersparse 2^18-column shape where the hash lane is what keeps the
 //! products servable.
@@ -55,7 +55,12 @@ fn every_semiring_every_backend_every_mode_bitwise_equals_serial_oracle() {
     for (name, a, b) in suite() {
         for kind in SemiringKind::ALL {
             let oracle = spgemm_semiring(&a, &b, kind);
-            for mode in [AccumMode::Adaptive, AccumMode::Dense, AccumMode::Hash] {
+            for mode in [
+                AccumMode::Adaptive,
+                AccumMode::Dense,
+                AccumMode::Hash,
+                AccumMode::Merge,
+            ] {
                 let spec = AccumSpec::Fixed(mode);
                 let (cp, tp, _) = par_gustavson_kind(&a, &b, 3, spec, kind);
                 let (cs, ts, _) = par_gustavson_spawning_kind(&a, &b, 3, spec, kind);
@@ -64,13 +69,26 @@ fn every_semiring_every_backend_every_mode_bitwise_equals_serial_oracle() {
                 assert_bitwise(&cs, &oracle, &format!("{label}/spawning"));
                 for (backend, t) in [("pooled", &tp), ("spawning", &ts)] {
                     assert_eq!(
-                        t.accum.dense_rows + t.accum.hash_rows,
+                        t.accum.dense_rows + t.accum.hash_rows + t.accum.merge_rows,
                         a.rows as u64,
                         "{label}/{backend}: every row must be routed to exactly one lane"
                     );
                     match mode {
-                        AccumMode::Dense => assert_eq!(t.accum.hash_rows, 0, "{label}/{backend}"),
-                        AccumMode::Hash => assert_eq!(t.accum.dense_rows, 0, "{label}/{backend}"),
+                        AccumMode::Dense => assert_eq!(
+                            (t.accum.hash_rows, t.accum.merge_rows),
+                            (0, 0),
+                            "{label}/{backend}"
+                        ),
+                        AccumMode::Hash => assert_eq!(
+                            (t.accum.dense_rows, t.accum.merge_rows),
+                            (0, 0),
+                            "{label}/{backend}"
+                        ),
+                        AccumMode::Merge => assert_eq!(
+                            (t.accum.dense_rows, t.accum.hash_rows),
+                            (0, 0),
+                            "{label}/{backend}"
+                        ),
                         AccumMode::Adaptive => {}
                     }
                 }
