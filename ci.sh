@@ -63,6 +63,23 @@ echo "$serve_out" | grep -q "blocked job:" \
     || { echo "FAIL: blocked-job marker missing from serve_spgemm output"; exit 1; }
 echo "$serve_out" | grep -q "merge rows:" \
     || { echo "FAIL: merge-lane marker missing from serve_spgemm output"; exit 1; }
+echo "$serve_out" | grep -q "failed jobs: 0 (" \
+    || { echo "FAIL: clean serve_spgemm run must report zero failed jobs"; exit 1; }
+
+echo "== chaos smoke test: serve_spgemm under fault injection =="
+# The same example with the deterministic fault plane armed: the first
+# numeric row task panics, the coordinator quarantines it as ONE typed
+# failed response, and every cohabitant job (plus the follow-up auto and
+# blocked jobs) still completes — the example's own asserts all hold. The
+# greps prove the fault actually fired and was contained to exactly one
+# job.
+chaos_out=$(SMASH_INJECT=numeric_row:panic:1 cargo run --release --example serve_spgemm)
+echo "$chaos_out" | grep -q "fault injection armed: numeric_row:panic:1" \
+    || { echo "FAIL: fault plane was not armed for the chaos smoke run"; exit 1; }
+echo "$chaos_out" | grep -q "failed jobs: 1 (" \
+    || { echo "FAIL: injected panic must fail exactly one job"; exit 1; }
+echo "$chaos_out" | grep -q ", 1 injected" \
+    || { echo "FAIL: faults-observed marker missing the injection count"; exit 1; }
 
 echo "== graph smoke test: graph_serving =="
 # The served graph pipeline end to end: BFS/APSP/closure/triangles as

@@ -10,6 +10,7 @@
 
 use smash::config::{KernelConfig, SimConfig};
 use smash::coordinator::{schedule_windows, Coordinator, Job, SchedPolicy, ServerConfig};
+use smash::faults::{self, FaultPlan, FaultSpec};
 use smash::gen::{rmat, RmatParams};
 use smash::kernels::plan_windows;
 use smash::spgemm::{
@@ -18,6 +19,24 @@ use smash::spgemm::{
 use std::time::Instant;
 
 fn main() {
+    // Optional deterministic fault injection, driven by the environment
+    // so the CI chaos-smoke leg exercises containment through this very
+    // example: SMASH_INJECT=site:kind[:nth][,spec...] [SMASH_FAULT_SEED=N].
+    // Injected panics/delays are contained as typed failed responses;
+    // the `failed jobs:` / `faults observed:` lines below print on clean
+    // runs too.
+    let fault_seed: u64 = std::env::var("SMASH_FAULT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    if let Ok(specs) = std::env::var("SMASH_INJECT") {
+        let mut plan = FaultPlan::seeded(fault_seed);
+        for spec in specs.split(',') {
+            plan = plan.with(FaultSpec::parse(spec, fault_seed).expect("bad SMASH_INJECT spec"));
+        }
+        println!("fault injection armed: {}", plan.describe());
+        faults::install(plan);
+    }
     // ---- Part 1: window scheduling across a 4-block die (§5.1.1) ----
     let a = rmat(&RmatParams::new(11, 30_000, 1));
     let b = rmat(&RmatParams::new(11, 30_000, 2));
@@ -97,6 +116,11 @@ fn main() {
     for r in responses.values() {
         *by_worker.entry(r.worker).or_insert(0usize) += 1;
         sim_ms_total += r.sim_ms.unwrap_or(0.0);
+        // An injected fault (panic or blown deadline) is contained as a
+        // typed failed response; the pool and its cohabitant jobs survive.
+        if let Some(e) = &r.error {
+            println!("  job {} failed (contained): {e}", r.id.0);
+        }
         match r.symbolic_reused {
             Some(false) => plans_computed += 1,
             Some(true) => plans_reused += 1,
@@ -209,6 +233,16 @@ fn main() {
         bt.band.max_dense_lane_cols,
         blocked_resp.symbolic_reused == Some(false)
     );
+    // Fault observability — printed on clean runs too (all zeros), so the
+    // CI smoke greps the same markers with and without SMASH_INJECT.
+    let fstats = coord.fault_stats();
+    let (injected, observed) = faults::stats();
+    println!(
+        "failed jobs: {} ({} shed at admission, {} deadline-expired)",
+        fstats.failed, fstats.shed, fstats.expired
+    );
+    println!("faults observed: {observed} armed site checks, {injected} injected");
+    faults::clear();
     coord.shutdown();
 
     // ---- Part 3: registry lifecycle under a byte budget ----

@@ -13,6 +13,7 @@
 use crate::bench::{self, Scale};
 use crate::config::{KernelConfig, SimConfig};
 use crate::coordinator::{Coordinator, Job, ServerConfig};
+use crate::faults::{self, FaultPlan, FaultSpec};
 use crate::formats::mm;
 use crate::gen::{rmat, RmatParams};
 use crate::kernels::{run_all_versions, run_smash};
@@ -83,6 +84,7 @@ USAGE: smash <tables|figures|run|gcn|gen|serve|tune|help> [flags]
           [--accum adaptive|dense|hash|merge|auto] [--accum-threshold N]
           [--merge-max-k N] [--semiring arith|bool|minplus|maxtimes]
           [--blocked] [--band-cols N|auto]
+          [--inject site:kind[:nth][,spec...]] [--fault-seed N]
           — register one resident matrix pair, serve a burst of zero-copy
           requests against it (native parallel Gustavson on the persistent
           worker pool, or --smash sim). Jobs sharing the registered pair
@@ -103,7 +105,12 @@ USAGE: smash <tables|figures|run|gcn|gen|serve|tune|help> [flags]
           split into bands so the dense accumulator lane never exceeds
           the band width — bitwise-identical output); --band-cols sets
           the band width (auto = widest power of two whose dense lane
-          fits one 64 KiB scratchpad way)
+          fits one 64 KiB scratchpad way); --inject arms the
+          deterministic fault plane for the burst (sites symbolic|
+          numeric_row|drain|schedule; kinds panic|delay|delay<ms>; an
+          omitted nth is derived from --fault-seed) — injected failures
+          are contained as typed failed responses and summarized in the
+          `failed jobs:` / `faults observed:` lines
   tune    [--smoke] [--out report.json] [--threads 4] [--iters N] [--seed N]
           — sweep the adaptive accumulator threshold (powers-of-two
           fractions of b.cols, forced dense/hash/merge endpoints, the
@@ -373,6 +380,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let batch = args.get("no-batch").is_none();
     let accum = parse_accum_flags(args)?;
     let bands = parse_band_flags(args)?;
+    let fault_plan = parse_fault_flags(args)?;
     let semiring = match args.get("semiring") {
         None => SemiringKind::Arithmetic,
         Some(s) => SemiringKind::parse(s)
@@ -409,11 +417,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         0 => usize::MAX,
         mb => mb << 20,
     };
+    // Arm the deterministic fault plane for this burst: injected panics
+    // and delays are contained as typed failed responses, proving the
+    // chaos path in the same binary CI runs.
+    if let Some(plan) = &fault_plan {
+        faults::install(plan.clone());
+        println!("fault injection armed: {}", plan.describe());
+    }
     let mut coord = Coordinator::start(ServerConfig {
         workers,
         queue_depth: 16,
         max_resident_bytes,
         symbolic_cache: batch,
+        ..ServerConfig::default()
     });
     // One resident dataset serves the whole burst: the registry stores the
     // pair once as Arc<Csr>; every job below clones pointers, not CSR
@@ -435,6 +451,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let t0 = std::time::Instant::now();
     let mut served = 0usize;
+    let mut failed = 0usize;
     let mut total_nnz = 0usize;
     let mut reused = 0usize;
     let mut accum_stats = crate::spgemm::AccumStats::default();
@@ -443,6 +460,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut drain = |r: crate::coordinator::Response| {
         total_nnz += r.c.nnz();
         served += 1;
+        if let Some(e) = &r.error {
+            failed += 1;
+            println!("job {} failed (contained): {e}", r.id.0);
+        }
         if r.symbolic_reused == Some(true) {
             reused += 1;
         }
@@ -567,6 +588,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
              ({reused} responses reused a plan)"
         );
     }
+    // Containment summary — printed on clean runs too, so harnesses can
+    // grep for both markers unconditionally. Process-wide plane counters
+    // are read before disarming (they survive `clear` until the next
+    // install).
+    let fstats = coord.fault_stats();
+    let (injected, observed) = faults::stats();
+    println!(
+        "failed jobs: {failed} ({} shed at admission, {} deadline-expired)",
+        fstats.shed, fstats.expired
+    );
+    println!("faults observed: {observed} armed site checks, {injected} injected");
+    if fault_plan.is_some() {
+        faults::clear();
+    }
     coord.shutdown();
     Ok(())
 }
@@ -630,6 +665,28 @@ fn parse_band_flags(args: &Args) -> Result<Option<BandSpec>> {
             .map(Some)
             .with_context(|| format!("bad --band-cols value `{s}` (positive integer or `auto`)")),
     }
+}
+
+/// Resolve `--inject` / `--fault-seed` into an optional [`FaultPlan`]:
+/// `None` means the fault plane stays disarmed (the production default).
+/// `--inject` takes one or more comma-separated `site:kind[:nth]` specs;
+/// an omitted `nth` is derived deterministically from `--fault-seed`, so
+/// the seed alone varies which hit fires without losing reproducibility.
+fn parse_fault_flags(args: &Args) -> Result<Option<FaultPlan>> {
+    let seed = args.get_u64("fault-seed", 0)?;
+    let Some(specs) = args.get("inject") else {
+        if args.get("fault-seed").is_some() {
+            bail!("--fault-seed only combines with --inject");
+        }
+        return Ok(None);
+    };
+    let mut plan = FaultPlan::seeded(seed);
+    for spec in specs.split(',') {
+        plan = plan.with(
+            FaultSpec::parse(spec, seed).with_context(|| format!("bad --inject spec `{spec}`"))?,
+        );
+    }
+    Ok(Some(plan))
 }
 
 fn cmd_tune(args: &Args) -> Result<()> {
@@ -924,6 +981,39 @@ mod tests {
         assert!(parse_band_flags(&argv(&["--band-cols", "256"])).is_err());
         assert!(parse_band_flags(&argv(&["--blocked", "--band-cols", "0"])).is_err());
         assert!(parse_band_flags(&argv(&["--blocked", "--band-cols", "wide"])).is_err());
+    }
+
+    #[test]
+    fn fault_flag_parsing() {
+        use crate::faults::{FaultKind, FaultSite};
+        let argv = |s: &[&str]| -> Args {
+            Args::parse(&s.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+        };
+        assert_eq!(parse_fault_flags(&argv(&[])).unwrap(), None);
+        let plan = parse_fault_flags(&argv(&["--inject", "numeric_row:panic:1"]))
+            .unwrap()
+            .expect("armed plan");
+        assert_eq!(plan.specs.len(), 1);
+        assert_eq!(plan.specs[0].site, FaultSite::NumericRow);
+        assert_eq!(plan.specs[0].kind, FaultKind::Panic);
+        assert_eq!(plan.specs[0].nth, 1);
+
+        // Comma-separated multi-spec plans; the seed stamps provenance
+        // and resolves any omitted nth deterministically.
+        let multi = ["--inject", "symbolic:delay250:2,drain:panic", "--fault-seed", "9"];
+        let plan = parse_fault_flags(&argv(&multi)).unwrap().expect("armed plan");
+        assert_eq!(plan.seed, 9);
+        assert_eq!(plan.specs.len(), 2);
+        assert_eq!(
+            plan.specs[0].kind,
+            FaultKind::Delay(std::time::Duration::from_millis(250))
+        );
+        assert_eq!(plan.specs[1].site, FaultSite::Drain);
+        assert!((1..=4).contains(&plan.specs[1].nth));
+
+        assert!(parse_fault_flags(&argv(&["--inject", "nowhere:panic:1"])).is_err());
+        assert!(parse_fault_flags(&argv(&["--inject", "symbolic:explode"])).is_err());
+        assert!(parse_fault_flags(&argv(&["--fault-seed", "3"])).is_err());
     }
 
     #[test]

@@ -13,4 +13,6 @@ pub mod server;
 
 pub use die::{run_die, DieReport};
 pub use scheduler::{schedule_loads, schedule_windows, Assignment, SchedPolicy};
-pub use server::{Coordinator, Job, JobId, MatrixId, MatrixRef, Response, ServerConfig};
+pub use server::{
+    Coordinator, Job, JobId, JobSpec, MatrixId, MatrixRef, Response, ServeError, ServerConfig,
+};

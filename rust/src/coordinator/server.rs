@@ -7,6 +7,24 @@
 //! metadata. Submitting past the queue bound blocks the caller —
 //! backpressure, not unbounded buffering.
 //!
+//! ## Fault containment
+//!
+//! Every job's lifecycle is a typed, contained result. [`try_submit`]
+//! (Coordinator::try_submit) rejects bad requests at admission with a
+//! [`ServeError`] (unknown id, shape mismatch, invalid CSR, queue full
+//! with a retry-after hint); [`submit`](Coordinator::submit) keeps the
+//! historical panic contract as a thin wrapper. In flight, a worker
+//! panic — its own code or a pool task under it — is quarantined into a
+//! failed [`Response`] (`error: Some(WorkerPanicked)`) instead of
+//! unwinding; a panic inside a shared plan build marks the slot
+//! *poisoned* so batched waiters fail fast with [`ServeError::PlanPoisoned`]
+//! (the next submit against the pair heals the slot and retries the
+//! pass). Per-job deadlines ([`Job::deadline`]) are checked at dequeue,
+//! between the symbolic and numeric phases, and inside the numeric row
+//! loop; expired jobs complete as failed responses without serving a
+//! late result. The deterministic fault-injection plane driving the
+//! chaos tests lives in [`crate::faults`].
+//!
 //! ## Zero-copy shared matrices
 //!
 //! Operands are [`MatrixRef`]s: either a one-shot inline matrix or an id
@@ -43,18 +61,21 @@
 //! drains.
 
 use crate::config::{KernelConfig, SimConfig, TablePlacement};
+use crate::faults::{self, FaultStats};
 use crate::formats::Csr;
 use crate::kernels::{plan_windows, run_smash_with_plan, WindowPlan};
 use crate::spgemm::{
-    par_gustavson_blocked_kind, par_gustavson_blocked_with_plan_kind, par_gustavson_kind,
-    par_gustavson_with_plan_kind, symbolic_plan, AccumPolicy, BandSpec, Dataflow, SemiringKind,
-    SymbolicPlan, Traffic,
+    panic_message, par_gustavson_blocked_kind, par_gustavson_blocked_with_plan_kind,
+    par_gustavson_kind, par_gustavson_with_plan_checked, symbolic_plan, AccumPolicy, BandSpec,
+    Dataflow, ParError, SemiringKind, SymbolicPlan, Traffic,
 };
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 /// Monotonic job identifier.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -91,6 +112,86 @@ impl From<Csr> for MatrixRef {
     }
 }
 
+/// Why a job was rejected at admission or completed as a failed
+/// [`Response`] — the typed error taxonomy of the serving layer. Every
+/// variant is a *contained* outcome: the coordinator, its workers, the
+/// pool, and the plan cache all stay serviceable after any of these.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeError {
+    /// The job referenced a [`MatrixId`] that is not (or no longer)
+    /// registered — evicted, superseded, or never valid.
+    UnknownMatrix(MatrixId),
+    /// The operands cannot be multiplied: `a.cols != b.rows`.
+    ShapeMismatch { a_cols: usize, b_rows: usize },
+    /// An operand failed [`Csr::validate_canonical`] at the boundary
+    /// (register or submit) — caught before any kernel could misread it.
+    InvalidCsr { reason: String },
+    /// Admission control: [`ServerConfig::max_queued_jobs`] jobs are
+    /// already pending. Collect `retry_after_jobs` responses, then
+    /// resubmit.
+    QueueFull { retry_after_jobs: usize },
+    /// The job's [`Job::deadline`] budget expired — in the queue, between
+    /// the symbolic and numeric phases, or at a checkpoint inside the
+    /// numeric row loop. The partial result was discarded.
+    DeadlineExceeded,
+    /// The job's execution panicked (serving code or a pool task under
+    /// it). `stage` names where (an injected fault's site, or the serving
+    /// phase); `message` is the panic payload. The worker and pool
+    /// survive.
+    WorkerPanicked { stage: String, message: String },
+    /// The job waited on a shared plan-cache slot whose builder panicked:
+    /// it fails fast instead of deadlocking or recomputing behind a lock.
+    /// The next job submitted against the pair heals the slot and
+    /// retries the pass.
+    PlanPoisoned,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::UnknownMatrix(id) => write!(f, "matrix {id:?} is not registered"),
+            ServeError::ShapeMismatch { a_cols, b_rows } => {
+                write!(f, "shape mismatch: a.cols = {a_cols} but b.rows = {b_rows}")
+            }
+            ServeError::InvalidCsr { reason } => write!(f, "invalid CSR operand: {reason}"),
+            ServeError::QueueFull { retry_after_jobs } => write!(
+                f,
+                "admission queue full; retry after {retry_after_jobs} job(s) drain"
+            ),
+            ServeError::DeadlineExceeded => write!(f, "deadline exceeded"),
+            ServeError::WorkerPanicked { stage, message } => {
+                write!(f, "worker panicked at {stage}: {message}")
+            }
+            ServeError::PlanPoisoned => write!(
+                f,
+                "shared plan slot is poisoned (its builder panicked); resubmit to retry the pass"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// A [`Job`] plus its per-job serving constraints. [`Coordinator::submit`]
+/// and [`Coordinator::try_submit`] accept `impl Into<JobSpec>`, so plain
+/// `Job` values keep working unchanged; [`Job::deadline`] is the ergonomic
+/// way to attach a budget.
+pub struct JobSpec {
+    pub job: Job,
+    /// Wall-clock budget measured from submit. `None` (the default) never
+    /// expires.
+    pub deadline: Option<Duration>,
+}
+
+impl From<Job> for JobSpec {
+    fn from(job: Job) -> Self {
+        JobSpec {
+            job,
+            deadline: None,
+        }
+    }
+}
+
 /// A unit of work routed to the pool.
 pub enum Job {
     /// Multiply on the simulated PIUMA block with a SMASH version.
@@ -115,15 +216,43 @@ pub enum Job {
     },
 }
 
+impl Job {
+    /// Attach a wall-clock budget, measured from submit time: if it
+    /// expires before the job finishes — in the queue, between phases,
+    /// or mid-numeric — the job completes as a failed [`Response`] with
+    /// [`ServeError::DeadlineExceeded`] instead of serving late.
+    pub fn deadline(self, budget: Duration) -> JobSpec {
+        JobSpec {
+            job: self,
+            deadline: Some(budget),
+        }
+    }
+}
+
+/// State of a shared plan-cache slot. The `Poisoned` arm is the panic
+/// quarantine for plan builds: the build runs inside `catch_unwind`
+/// *under* the slot lock, so the std `Mutex` itself is never poisoned —
+/// a builder panic publishes `Poisoned`, batched waiters observe it and
+/// fail fast with [`ServeError::PlanPoisoned`], and the next submit
+/// against the pair resets the slot to `Empty` (the heal).
+enum SlotState<T> {
+    /// No plan published yet; the next worker to lock the slot builds.
+    Empty,
+    /// A published plan every later job in the burst reuses.
+    Ready(Arc<T>),
+    /// The builder panicked; waiters fail fast until a submit heals it.
+    Poisoned,
+}
+
 /// One symbolic-plan cache slot: the once-computed plan for a registered
 /// (A, B) pair. Workers lock the slot; the first computes and publishes,
 /// later jobs reuse — the inner mutex is what guarantees *exactly one*
 /// symbolic pass per pair even when a burst lands on many workers at once.
-type PlanSlot = Arc<Mutex<Option<Arc<SymbolicPlan>>>>;
+type PlanSlot = Arc<Mutex<SlotState<SymbolicPlan>>>;
 
 /// Same slot machinery for SMASH-sim window plans (`plan_windows` is the
 /// simulator's symbolic pass — §5.1.1 FMA counting + exact row sizes).
-type WindowSlot = Arc<Mutex<Option<Arc<WindowPlan>>>>;
+type WindowSlot = Arc<Mutex<SlotState<WindowPlan>>>;
 
 /// Cache key for a SMASH window plan: the registered pair plus every
 /// config knob `plan_windows` actually reads — jobs that differ in any of
@@ -176,6 +305,8 @@ enum Work {
         registered: Vec<MatrixId>,
         /// Shared window-plan slot when batching applies to this job.
         plan: Option<WindowSlot>,
+        /// Absolute expiry resolved at submit time (`None` = no budget).
+        deadline: Option<Instant>,
     },
     Native {
         a: Arc<Csr>,
@@ -184,7 +315,35 @@ enum Work {
         registered: Vec<MatrixId>,
         /// Shared symbolic-plan slot when batching applies to this job.
         plan: Option<PlanSlot>,
+        /// Absolute expiry resolved at submit time (`None` = no budget).
+        deadline: Option<Instant>,
     },
+}
+
+impl Work {
+    /// The registered operands, extracted before execution so a failed
+    /// response can still report them.
+    fn registered(&self) -> &[MatrixId] {
+        match self {
+            Work::Smash { registered, .. } | Work::Native { registered, .. } => registered,
+        }
+    }
+
+    /// The absolute deadline resolved at submit time.
+    fn deadline(&self) -> Option<Instant> {
+        match self {
+            Work::Smash { deadline, .. } | Work::Native { deadline, .. } => *deadline,
+        }
+    }
+}
+
+/// `Err(DeadlineExceeded)` when a job's budget has expired — the shared
+/// checkpoint used at dequeue and between serving phases.
+fn check_deadline(deadline: Option<Instant>) -> Result<(), ServeError> {
+    match deadline {
+        Some(dl) if Instant::now() >= dl => Err(ServeError::DeadlineExceeded),
+        _ => Ok(()),
+    }
 }
 
 /// Worker answer.
@@ -227,6 +386,42 @@ pub struct Response {
     /// `None` for SMASH-sim jobs and the arithmetic-only reference
     /// dataflows. Makes mixed-semiring bursts auditable per response.
     pub semiring: Option<SemiringKind>,
+    /// `None` — the job succeeded and `c` is the product. `Some(e)` — the
+    /// job failed with the typed reason `e` (deadline, quarantined panic,
+    /// poisoned plan); `c` is an empty 0×0 placeholder and `traffic` /
+    /// `accum_policy` / `semiring` are `None`. `registered` is still
+    /// populated, so callers can attribute the failure to its operands.
+    pub error: Option<ServeError>,
+}
+
+impl Response {
+    /// A failed response: typed error, empty product, metadata intact.
+    fn failed(
+        id: JobId,
+        wall: std::time::Duration,
+        worker: usize,
+        registered: Vec<MatrixId>,
+        error: ServeError,
+    ) -> Self {
+        Response {
+            id,
+            c: Csr::zero(0, 0),
+            sim_ms: None,
+            wall,
+            worker,
+            registered,
+            symbolic_reused: None,
+            traffic: None,
+            accum_policy: None,
+            semiring: None,
+            error: Some(error),
+        }
+    }
+
+    /// True when the job completed with a product (`error.is_none()`).
+    pub fn is_ok(&self) -> bool {
+        self.error.is_none()
+    }
 }
 
 /// Knobs for [`Coordinator::start`].
@@ -245,6 +440,13 @@ pub struct ServerConfig {
     /// serve every job independently (the PR-1 behaviour, kept for the
     /// batched-vs-independent benchmark).
     pub symbolic_cache: bool,
+    /// Admission bound: [`Coordinator::try_submit`] rejects with
+    /// [`ServeError::QueueFull`] while this many jobs are already
+    /// pending (submitted but uncollected), instead of buffering or
+    /// blocking. `usize::MAX` (the default) never rejects. To guarantee
+    /// `try_submit` also never *blocks* on the job channel, keep this at
+    /// or below `queue_depth`.
+    pub max_queued_jobs: usize,
 }
 
 impl Default for ServerConfig {
@@ -256,6 +458,7 @@ impl Default for ServerConfig {
             queue_depth: 32,
             max_resident_bytes: usize::MAX,
             symbolic_cache: true,
+            max_queued_jobs: usize::MAX,
         }
     }
 }
@@ -301,6 +504,11 @@ pub struct Coordinator {
     window_plans: HashMap<WindowPlanKey, WindowSlot>,
     stats: Arc<SymbolicStats>,
     evictions: u64,
+    /// Admission bound ([`ServerConfig::max_queued_jobs`]).
+    max_queued_jobs: usize,
+    /// Aggregate fault/overload observability, folded from shed submits
+    /// and collected responses ([`Coordinator::fault_stats`]).
+    faults: FaultStats,
 }
 
 impl Coordinator {
@@ -323,19 +531,47 @@ impl Coordinator {
                 match msg {
                     Ok(Envelope::Work(id, work)) => {
                         let t0 = std::time::Instant::now();
-                        let served = serve_work(work, &stats);
-                        let _ = tx_done.send(Response {
-                            id,
-                            c: served.c,
-                            sim_ms: served.sim_ms,
-                            wall: t0.elapsed(),
-                            worker,
-                            registered: served.registered,
-                            symbolic_reused: served.symbolic_reused,
-                            traffic: served.traffic,
-                            accum_policy: served.accum_policy,
-                            semiring: served.semiring,
-                        });
+                        // Metadata a failed response still needs, pulled
+                        // out before `work` moves into execution.
+                        let registered = work.registered().to_vec();
+                        let deadline = work.deadline();
+                        // Deadline checkpoint 1 (dequeue): a job that
+                        // waited out its budget in the queue fails here
+                        // without running either phase.
+                        let served = match check_deadline(deadline) {
+                            Err(e) => Err(e),
+                            // Panic quarantine: any panic below — the
+                            // serving code itself, a plan build observed
+                            // through a slot, or a pool-task panic
+                            // re-raised by an uncheck kernel path —
+                            // becomes a typed failed response instead of
+                            // killing this worker and stranding the job.
+                            Ok(()) => catch_unwind(AssertUnwindSafe(|| serve_work(work, &stats)))
+                                .unwrap_or_else(|payload| {
+                                    let message = panic_message(payload.as_ref());
+                                    let stage = faults::injected_site(&message)
+                                        .unwrap_or("serve")
+                                        .to_string();
+                                    Err(ServeError::WorkerPanicked { stage, message })
+                                }),
+                        };
+                        let response = match served {
+                            Ok(sj) => Response {
+                                id,
+                                c: sj.c,
+                                sim_ms: sj.sim_ms,
+                                wall: t0.elapsed(),
+                                worker,
+                                registered,
+                                symbolic_reused: sj.symbolic_reused,
+                                traffic: sj.traffic,
+                                accum_policy: sj.accum_policy,
+                                semiring: sj.semiring,
+                                error: None,
+                            },
+                            Err(e) => Response::failed(id, t0.elapsed(), worker, registered, e),
+                        };
+                        let _ = tx_done.send(response);
                     }
                     Ok(Envelope::Stop) | Err(_) => break,
                 }
@@ -358,6 +594,8 @@ impl Coordinator {
             window_plans: HashMap::new(),
             stats,
             evictions: 0,
+            max_queued_jobs: cfg.max_queued_jobs,
+            faults: FaultStats::default(),
         }
     }
 
@@ -367,6 +605,8 @@ impl Coordinator {
     /// evicts the old one from the registry (it stays alive only until
     /// its in-flight jobs finish). Registering past
     /// `max_resident_bytes` evicts least-recently-used residents.
+    /// Panics on a malformed matrix — use [`Coordinator::try_register`]
+    /// for the typed rejection.
     pub fn register(&mut self, name: impl Into<String>, m: Csr) -> MatrixId {
         self.register_arc(name, Arc::new(m))
     }
@@ -377,6 +617,28 @@ impl Coordinator {
     /// frees once they drain; submitting with the stale id afterwards
     /// panics like any unregistered id.
     pub fn register_arc(&mut self, name: impl Into<String>, m: Arc<Csr>) -> MatrixId {
+        self.try_register_arc(name, m)
+            .unwrap_or_else(|e| panic!("register failed: {e}"))
+    }
+
+    /// Fallible [`Coordinator::register`]: rejects a matrix that fails
+    /// [`Csr::validate_canonical`] with [`ServeError::InvalidCsr`] instead
+    /// of letting a malformed operand reach a kernel (where a
+    /// release-build kernel would silently misread it).
+    pub fn try_register(&mut self, name: impl Into<String>, m: Csr) -> Result<MatrixId, ServeError> {
+        self.try_register_arc(name, Arc::new(m))
+    }
+
+    /// Fallible [`Coordinator::register_arc`] — the one place every
+    /// registered matrix passes through, so the canonical-form check here
+    /// covers all registration paths.
+    pub fn try_register_arc(
+        &mut self,
+        name: impl Into<String>,
+        m: Arc<Csr>,
+    ) -> Result<MatrixId, ServeError> {
+        m.validate_canonical()
+            .map_err(|reason| ServeError::InvalidCsr { reason })?;
         let name = name.into();
         let id = MatrixId(self.next_matrix);
         self.next_matrix += 1;
@@ -396,7 +658,7 @@ impl Coordinator {
             self.evict_id(old);
         }
         self.enforce_budget(&[id]);
-        id
+        Ok(id)
     }
 
     /// Look up a registered matrix id by name.
@@ -528,22 +790,28 @@ impl Coordinator {
     }
 
     /// Resolve an operand to the shared pointer it stands for, recording
-    /// registered ids in `used` and touching their LRU timestamps.
-    /// Panics on an unregistered id — that is a caller bug, not a
-    /// recoverable serving condition.
-    fn resolve(&mut self, r: MatrixRef, used: &mut Vec<MatrixId>) -> Arc<Csr> {
+    /// registered ids in `used` and touching their LRU timestamps. An
+    /// unregistered id is [`ServeError::UnknownMatrix`]; an inline
+    /// operand is checked against the canonical-form invariants here
+    /// (registered ones were checked at register time), so every operand
+    /// a kernel sees has passed the boundary check exactly once.
+    fn resolve(&mut self, r: MatrixRef, used: &mut Vec<MatrixId>) -> Result<Arc<Csr>, ServeError> {
         match r {
-            MatrixRef::Inline(m) => m,
+            MatrixRef::Inline(m) => {
+                m.validate_canonical()
+                    .map_err(|reason| ServeError::InvalidCsr { reason })?;
+                Ok(m)
+            }
             MatrixRef::Registered(id) => {
                 self.clock += 1;
                 let clock = self.clock;
                 let res = self
                     .registry
                     .get_mut(&id.0)
-                    .unwrap_or_else(|| panic!("matrix {:?} is not registered", id));
+                    .ok_or(ServeError::UnknownMatrix(id))?;
                 res.last_use = clock;
                 used.push(id);
-                Arc::clone(&res.m)
+                Ok(Arc::clone(&res.m))
             }
         }
     }
@@ -563,11 +831,15 @@ impl Coordinator {
             _ => return None,
         };
         match used {
-            [a, b] => Some(Arc::clone(
-                self.plans
-                    .entry((a.0, b.0, bands))
-                    .or_insert_with(|| Arc::new(Mutex::new(None))),
-            )),
+            [a, b] => {
+                let slot = Arc::clone(
+                    self.plans
+                        .entry((a.0, b.0, bands))
+                        .or_insert_with(|| Arc::new(Mutex::new(SlotState::Empty))),
+                );
+                heal_poisoned(&slot);
+                Some(slot)
+            }
             _ => None,
         }
     }
@@ -585,22 +857,51 @@ impl Coordinator {
             return None;
         }
         match used {
-            [a, b] => Some(Arc::clone(
-                self.window_plans
-                    .entry(WindowPlanKey::new(a.0, b.0, kernel, sim))
-                    .or_insert_with(|| Arc::new(Mutex::new(None))),
-            )),
+            [a, b] => {
+                let slot = Arc::clone(
+                    self.window_plans
+                        .entry(WindowPlanKey::new(a.0, b.0, kernel, sim))
+                        .or_insert_with(|| Arc::new(Mutex::new(SlotState::Empty))),
+                );
+                heal_poisoned(&slot);
+                Some(slot)
+            }
             _ => None,
         }
     }
 
     /// Submit a job (blocks when the queue is full — backpressure).
-    pub fn submit(&mut self, job: Job) -> JobId {
+    /// Keeps the historical panic contract for bad requests; use
+    /// [`Coordinator::try_submit`] for the typed admission path.
+    pub fn submit(&mut self, job: impl Into<JobSpec>) -> JobId {
+        self.try_submit(job)
+            .unwrap_or_else(|e| panic!("submit failed: {e}"))
+    }
+
+    /// Submit a job with typed admission control. Rejections —
+    /// [`ServeError::QueueFull`] (with a retry-after hint),
+    /// [`ServeError::UnknownMatrix`], [`ServeError::ShapeMismatch`],
+    /// [`ServeError::InvalidCsr`] — happen *here*, synchronously, before
+    /// the job consumes a queue slot or a worker; the coordinator stays
+    /// fully serviceable after any of them. Accepts plain [`Job`] values
+    /// or a [`JobSpec`] carrying a deadline budget.
+    pub fn try_submit(&mut self, job: impl Into<JobSpec>) -> Result<JobId, ServeError> {
+        let JobSpec { job, deadline } = job.into();
+        if self.pending >= self.max_queued_jobs {
+            self.faults.shed += 1;
+            return Err(ServeError::QueueFull {
+                retry_after_jobs: self.pending + 1 - self.max_queued_jobs,
+            });
+        }
+        // The budget is a wall-clock promise to the caller, so it starts
+        // now — queueing time counts against it.
+        let deadline = deadline.map(|budget| Instant::now() + budget);
         let (work, used) = match job {
             Job::SmashSpgemm { a, b, kernel, sim } => {
                 let mut used = Vec::new();
-                let a = self.resolve(a, &mut used);
-                let b = self.resolve(b, &mut used);
+                let a = self.resolve(a, &mut used)?;
+                let b = self.resolve(b, &mut used)?;
+                check_shapes(&a, &b)?;
                 let plan = self.window_plan_slot(&used, &kernel, &sim);
                 (
                     Work::Smash {
@@ -610,14 +911,16 @@ impl Coordinator {
                         sim,
                         registered: used.clone(),
                         plan,
+                        deadline,
                     },
                     used,
                 )
             }
             Job::NativeSpgemm { a, b, dataflow } => {
                 let mut used = Vec::new();
-                let a = self.resolve(a, &mut used);
-                let b = self.resolve(b, &mut used);
+                let a = self.resolve(a, &mut used)?;
+                let b = self.resolve(b, &mut used)?;
+                check_shapes(&a, &b)?;
                 let plan = self.plan_slot(&used, dataflow);
                 (
                     Work::Native {
@@ -626,6 +929,7 @@ impl Coordinator {
                         dataflow,
                         registered: used.clone(),
                         plan,
+                        deadline,
                     },
                     used,
                 )
@@ -641,7 +945,7 @@ impl Coordinator {
         self.tx
             .send(Envelope::Work(id, work))
             .expect("worker pool hung up");
-        id
+        Ok(id)
     }
 
     /// Number of submitted-but-uncollected jobs.
@@ -651,14 +955,33 @@ impl Coordinator {
 
     /// Collect one response, blocking while a job is outstanding. Returns
     /// `None` when nothing is outstanding — the old version blocked forever
-    /// on `recv()` and could underflow `pending`.
+    /// on `recv()` and could underflow `pending`. Folds the response's
+    /// fault/failure accounting into [`Coordinator::fault_stats`].
     pub fn collect_one(&mut self) -> Option<Response> {
         if self.pending == 0 {
             return None;
         }
         let r = self.rx_done.recv().expect("worker pool hung up");
         self.pending -= 1;
+        if let Some(e) = &r.error {
+            self.faults.failed += 1;
+            if *e == ServeError::DeadlineExceeded {
+                self.faults.expired += 1;
+            }
+        }
+        if let Some(t) = &r.traffic {
+            self.faults.observed += t.faults.observed;
+            self.faults.injected += t.faults.injected;
+        }
         Some(r)
+    }
+
+    /// Aggregate fault/overload counters for this coordinator's lifetime:
+    /// submits shed at admission, jobs completed failed, deadline
+    /// expiries, and the fault-plane site hits / injections its jobs
+    /// observed (folded from each collected response's traffic).
+    pub fn fault_stats(&self) -> FaultStats {
+        self.faults
     }
 
     /// Collect all outstanding responses, keyed by id.
@@ -681,18 +1004,40 @@ impl Coordinator {
     }
 }
 
+/// `Err(ShapeMismatch)` unless the operands can be multiplied.
+fn check_shapes(a: &Csr, b: &Csr) -> Result<(), ServeError> {
+    if a.cols != b.rows {
+        return Err(ServeError::ShapeMismatch {
+            a_cols: a.cols,
+            b_rows: b.rows,
+        });
+    }
+    Ok(())
+}
+
+/// Reset a poisoned plan slot to `Empty` so the next worker retries the
+/// build. Called at submit time: the heal is driven by new work arriving
+/// for the pair, never by the waiters that observed the failure.
+fn heal_poisoned<T>(slot: &Mutex<SlotState<T>>) {
+    let mut guard = slot.lock().unwrap();
+    if matches!(*guard, SlotState::Poisoned) {
+        *guard = SlotState::Empty;
+    }
+}
+
 /// Sum `bytes(plan)` over the published entries of a plan-slot map,
 /// skipping slots currently locked by a computing worker (they are
-/// counted once they publish).
+/// counted once they publish) and poisoned slots (nothing resident).
 fn published_bytes<'s, T: 's>(
-    slots: impl Iterator<Item = &'s Arc<Mutex<Option<Arc<T>>>>>,
+    slots: impl Iterator<Item = &'s Arc<Mutex<SlotState<T>>>>,
     bytes: impl Fn(&T) -> usize,
 ) -> usize {
     slots
         .filter_map(|slot| {
-            slot.try_lock()
-                .ok()
-                .and_then(|g| g.as_ref().map(|p| bytes(p)))
+            slot.try_lock().ok().and_then(|g| match &*g {
+                SlotState::Ready(p) => Some(bytes(p)),
+                SlotState::Empty | SlotState::Poisoned => None,
+            })
         })
         .sum()
 }
@@ -700,24 +1045,55 @@ fn published_bytes<'s, T: 's>(
 /// Fetch-or-compute the shared plan in `slot`, bumping `hits`/`passes`.
 /// `build` runs under the slot lock, so the rest of a burst blocks here
 /// and reuses rather than racing a duplicate pass — this mutex is what
-/// makes "exactly one pass per pair" a guarantee. Returns the plan and
+/// makes "exactly one pass per pair" a guarantee. The build runs inside
+/// `catch_unwind` (still under the lock): a panicking builder publishes
+/// `Poisoned` instead of poisoning the std `Mutex`, the builder's own
+/// job fails with `WorkerPanicked`, and every waiter blocked on the slot
+/// fails fast with [`ServeError::PlanPoisoned`] — nobody deadlocks and
+/// nobody recomputes behind a corrupted slot. Returns the plan and
 /// whether it was reused.
 fn cached_or_compute<T>(
-    slot: &Mutex<Option<Arc<T>>>,
+    slot: &Mutex<SlotState<T>>,
     passes: &AtomicU64,
     hits: &AtomicU64,
     build: impl FnOnce() -> T,
-) -> (Arc<T>, bool) {
+) -> Result<(Arc<T>, bool), ServeError> {
     let mut guard = slot.lock().unwrap();
-    if let Some(p) = (*guard).clone() {
-        hits.fetch_add(1, Ordering::Relaxed);
-        (p, true)
-    } else {
-        let p = Arc::new(build());
-        passes.fetch_add(1, Ordering::Relaxed);
-        *guard = Some(Arc::clone(&p));
-        (p, false)
+    match &*guard {
+        SlotState::Ready(p) => {
+            hits.fetch_add(1, Ordering::Relaxed);
+            Ok((Arc::clone(p), true))
+        }
+        SlotState::Poisoned => Err(ServeError::PlanPoisoned),
+        SlotState::Empty => match catch_unwind(AssertUnwindSafe(build)) {
+            Ok(p) => {
+                let p = Arc::new(p);
+                passes.fetch_add(1, Ordering::Relaxed);
+                *guard = SlotState::Ready(Arc::clone(&p));
+                Ok((p, false))
+            }
+            Err(payload) => {
+                *guard = SlotState::Poisoned;
+                let message = panic_message(payload.as_ref());
+                let stage = faults::injected_site(&message)
+                    .unwrap_or("symbolic")
+                    .to_string();
+                Err(ServeError::WorkerPanicked { stage, message })
+            }
+        },
     }
+}
+
+/// Fold the fault plane's counter movement since `before` (an
+/// [`faults::stats`] snapshot) into this job's traffic. The counters are
+/// process-wide, so concurrent jobs can cross-attribute hits — this is
+/// burst-level observability for the chaos harness, not an exact per-job
+/// ledger. `saturating_sub` guards against a counter reset (re-`install`)
+/// landing mid-job.
+fn fault_delta(t: &mut Traffic, before: (u64, u64)) {
+    let (injected, observed) = faults::stats();
+    t.faults.injected += injected.saturating_sub(before.0);
+    t.faults.observed += observed.saturating_sub(before.1);
 }
 
 /// What executing one work item produced — everything a [`Response`]
@@ -725,7 +1101,6 @@ fn cached_or_compute<T>(
 struct ServedJob {
     c: Csr,
     sim_ms: Option<f64>,
-    registered: Vec<MatrixId>,
     symbolic_reused: Option<bool>,
     traffic: Option<Traffic>,
     accum_policy: Option<AccumPolicy>,
@@ -735,11 +1110,10 @@ struct ServedJob {
 impl ServedJob {
     /// A SMASH-sim result: no native traffic, no accumulator policy, no
     /// semiring (the simulator is arithmetic-only).
-    fn sim(c: Csr, ms: f64, registered: Vec<MatrixId>, reused: Option<bool>) -> Self {
+    fn sim(c: Csr, ms: f64, reused: Option<bool>) -> Self {
         Self {
             c,
             sim_ms: Some(ms),
-            registered,
             symbolic_reused: reused,
             traffic: None,
             accum_policy: None,
@@ -749,67 +1123,102 @@ impl ServedJob {
 }
 
 /// Execute one resolved work item on the calling worker thread.
-fn serve_work(work: Work, stats: &SymbolicStats) -> ServedJob {
+///
+/// Failure semantics: a poisoned or panicking plan build surfaces from
+/// `cached_or_compute` as a typed error; the deadline is re-checked
+/// between the planning and numeric phases and after the numeric pass
+/// (the checked [`par_gustavson_with_plan_checked`] path also polls it
+/// *inside* the row loop); anything that still panics is quarantined by
+/// the worker loop's `catch_unwind` above.
+fn serve_work(work: Work, stats: &SymbolicStats) -> Result<ServedJob, ServeError> {
+    let fault_base = faults::stats();
     match work {
         Work::Smash {
             a,
             b,
             kernel,
             sim,
-            registered,
+            registered: _,
             plan,
+            deadline,
         } => match plan {
             Some(slot) => {
                 let (plan, reused) =
                     cached_or_compute(&slot, &stats.window_passes, &stats.window_hits, || {
                         plan_windows(&a, &b, &kernel, &sim)
-                    });
+                    })?;
+                // Deadline checkpoint 2: between the (possibly shared)
+                // planning pass and the numeric run.
+                check_deadline(deadline)?;
                 let run = run_smash_with_plan(&a, &b, &kernel, &sim, &plan);
-                ServedJob::sim(run.c, run.report.ms, registered, Some(reused))
+                check_deadline(deadline)?;
+                Ok(ServedJob::sim(run.c, run.report.ms, Some(reused)))
             }
             None => {
                 let run = crate::kernels::run_smash(&a, &b, &kernel, &sim);
-                ServedJob::sim(run.c, run.report.ms, registered, None)
+                check_deadline(deadline)?;
+                Ok(ServedJob::sim(run.c, run.report.ms, None))
             }
         },
         Work::Native {
             a,
             b,
             dataflow,
-            registered,
+            registered: _,
             plan,
+            deadline,
         } => match (dataflow, plan) {
             (Dataflow::ParGustavson { threads, accum, semiring }, Some(slot)) => {
                 let (plan, reused) = cached_or_compute(&slot, &stats.passes, &stats.hits, || {
                     symbolic_plan(&a, &b, threads)
-                });
+                })?;
+                check_deadline(deadline)?;
                 // Per-job resolution against the (shared) plan: jobs that
                 // differ only in accumulator spec — mode, threshold, or
                 // auto — or in *semiring* reuse one symbolic pass and
                 // diverge here (the plan is value-free, so it is valid
                 // for every semiring).
                 let policy = accum.resolve(b.cols, &plan.row_flops);
-                let (c, t) = par_gustavson_with_plan_kind(&a, &b, threads, &plan, policy, semiring);
-                ServedJob {
+                // The checked numeric path: pool-task panics come back as
+                // per-task errors (not a re-raised unwind) and the row
+                // loop polls the deadline — the fully contained lane.
+                let (c, mut t) = par_gustavson_with_plan_checked(
+                    &a, &b, threads, &plan, policy, semiring, deadline,
+                )
+                .map_err(|e| match e {
+                    ParError::DeadlineExceeded => ServeError::DeadlineExceeded,
+                    ParError::Panicked(panics) => {
+                        let p = &panics[0];
+                        let stage = faults::injected_site(&p.message)
+                            .unwrap_or("numeric")
+                            .to_string();
+                        ServeError::WorkerPanicked {
+                            stage,
+                            message: p.message.clone(),
+                        }
+                    }
+                })?;
+                fault_delta(&mut t, fault_base);
+                Ok(ServedJob {
                     c,
                     sim_ms: None,
-                    registered,
                     symbolic_reused: Some(reused),
                     traffic: Some(t),
                     accum_policy: Some(policy),
                     semiring: Some(semiring),
-                }
+                })
             }
             (Dataflow::ParGustavsonBlocked { threads, accum, semiring, bands }, Some(slot)) => {
                 let (plan, reused) = cached_or_compute(&slot, &stats.passes, &stats.hits, || {
                     symbolic_plan(&a, &b, threads)
-                });
+                })?;
+                check_deadline(deadline)?;
                 // Blocked jobs resolve their accumulator policy against
                 // the BAND width, not the full column count — that is the
                 // point of banding: the dense lane never exceeds the band.
                 let band_cols = bands.resolve(b.cols);
                 let policy = accum.resolve(band_cols, &plan.row_flops);
-                let (c, t) = par_gustavson_blocked_with_plan_kind(
+                let (c, mut t) = par_gustavson_blocked_with_plan_kind(
                     &a,
                     &b,
                     threads,
@@ -818,52 +1227,56 @@ fn serve_work(work: Work, stats: &SymbolicStats) -> ServedJob {
                     band_cols,
                     semiring,
                 );
-                ServedJob {
+                check_deadline(deadline)?;
+                fault_delta(&mut t, fault_base);
+                Ok(ServedJob {
                     c,
                     sim_ms: None,
-                    registered,
                     symbolic_reused: Some(reused),
                     traffic: Some(t),
                     accum_policy: Some(policy),
                     semiring: Some(semiring),
-                }
+                })
             }
             (Dataflow::ParGustavsonBlocked { threads, accum, semiring, bands }, None) => {
-                let (c, t, policy) =
+                let (c, mut t, policy) =
                     par_gustavson_blocked_kind(&a, &b, threads, accum, bands, semiring);
-                ServedJob {
+                check_deadline(deadline)?;
+                fault_delta(&mut t, fault_base);
+                Ok(ServedJob {
                     c,
                     sim_ms: None,
-                    registered,
                     symbolic_reused: None,
                     traffic: Some(t),
                     accum_policy: Some(policy),
                     semiring: Some(semiring),
-                }
+                })
             }
             (Dataflow::ParGustavson { threads, accum, semiring }, None) => {
-                let (c, t, policy) = par_gustavson_kind(&a, &b, threads, accum, semiring);
-                ServedJob {
+                let (c, mut t, policy) = par_gustavson_kind(&a, &b, threads, accum, semiring);
+                check_deadline(deadline)?;
+                fault_delta(&mut t, fault_base);
+                Ok(ServedJob {
                     c,
                     sim_ms: None,
-                    registered,
                     symbolic_reused: None,
                     traffic: Some(t),
                     accum_policy: Some(policy),
                     semiring: Some(semiring),
-                }
+                })
             }
             (df, _) => {
-                let (c, t) = df.multiply(&a, &b);
-                ServedJob {
+                let (c, mut t) = df.multiply(&a, &b);
+                check_deadline(deadline)?;
+                fault_delta(&mut t, fault_base);
+                Ok(ServedJob {
                     c,
                     sim_ms: None,
-                    registered,
                     symbolic_reused: None,
                     traffic: Some(t),
                     accum_policy: None,
                     semiring: None,
-                }
+                })
             }
         },
     }
@@ -1617,4 +2030,149 @@ mod tests {
             dataflow: Dataflow::RowWiseHash,
         });
     }
+
+    /// Admission rejects bad requests synchronously with typed errors —
+    /// unknown id, shape mismatch, malformed inline CSR — and the
+    /// coordinator keeps serving afterwards.
+    #[test]
+    fn try_submit_rejects_bad_requests_typed() {
+        let mut coord = Coordinator::start(ServerConfig {
+            workers: 1,
+            queue_depth: 4,
+            ..ServerConfig::default()
+        });
+        let id = coord.register("A", erdos_renyi(8, 20, 31));
+
+        let err = coord
+            .try_submit(Job::NativeSpgemm {
+                a: MatrixId(999).into(),
+                b: id.into(),
+                dataflow: Dataflow::RowWiseHash,
+            })
+            .unwrap_err();
+        assert_eq!(err, ServeError::UnknownMatrix(MatrixId(999)));
+
+        let err = coord
+            .try_submit(Job::NativeSpgemm {
+                a: id.into(),
+                b: erdos_renyi(9, 20, 32).into(),
+                dataflow: Dataflow::RowWiseHash,
+            })
+            .unwrap_err();
+        assert_eq!(err, ServeError::ShapeMismatch { a_cols: 8, b_rows: 9 });
+
+        // Unsorted columns within a row: passes shape checks, fails the
+        // canonical-form boundary check.
+        let bad = Csr {
+            rows: 8,
+            cols: 8,
+            row_ptr: vec![0, 2, 2, 2, 2, 2, 2, 2, 2],
+            col_idx: vec![3, 1],
+            data: vec![1.0, 2.0],
+        };
+        assert!(matches!(
+            coord.try_submit(Job::NativeSpgemm {
+                a: bad.clone().into(),
+                b: id.into(),
+                dataflow: Dataflow::RowWiseHash,
+            }),
+            Err(ServeError::InvalidCsr { .. })
+        ));
+        assert!(matches!(
+            coord.try_register("bad", bad),
+            Err(ServeError::InvalidCsr { .. })
+        ));
+
+        // None of the rejections consumed a queue slot or wedged a worker.
+        assert_eq!(coord.pending(), 0);
+        let ok = coord.try_submit(Job::NativeSpgemm {
+            a: id.into(),
+            b: id.into(),
+            dataflow: Dataflow::RowWiseHash,
+        });
+        assert!(ok.is_ok());
+        assert!(coord.collect_one().unwrap().is_ok());
+        coord.shutdown();
+    }
+
+    /// Bounded admission: past `max_queued_jobs` pending jobs,
+    /// `try_submit` sheds with a retry-after hint instead of blocking;
+    /// draining responses reopens admission.
+    #[test]
+    fn queue_full_sheds_with_retry_after_hint() {
+        let mut coord = Coordinator::start(ServerConfig {
+            workers: 1,
+            queue_depth: 8,
+            max_queued_jobs: 2,
+            ..ServerConfig::default()
+        });
+        let id = coord.register("A", erdos_renyi(16, 40, 33));
+        let job = |coord: &mut Coordinator| {
+            coord.try_submit(Job::NativeSpgemm {
+                a: id.into(),
+                b: id.into(),
+                dataflow: Dataflow::RowWiseHash,
+            })
+        };
+        assert!(job(&mut coord).is_ok());
+        assert!(job(&mut coord).is_ok());
+        assert_eq!(
+            job(&mut coord).unwrap_err(),
+            ServeError::QueueFull { retry_after_jobs: 1 }
+        );
+        assert_eq!(coord.fault_stats().shed, 1);
+        assert!(coord.collect_one().is_some());
+        assert!(job(&mut coord).is_ok(), "draining reopens admission");
+        assert_eq!(coord.collect_all().len(), 2);
+        assert_eq!(coord.fault_stats().failed, 0);
+        coord.shutdown();
+    }
+
+    /// A job whose budget expired in the queue completes as a typed
+    /// failed response — empty placeholder product, operands still
+    /// attributed — while an unbudgeted co-submitted job is unaffected.
+    #[test]
+    fn expired_deadline_fails_typed_without_serving_late() {
+        let mut coord = Coordinator::start(ServerConfig {
+            workers: 1,
+            queue_depth: 8,
+            ..ServerConfig::default()
+        });
+        let a = erdos_renyi(24, 80, 34);
+        let (oracle, _) = gustavson(&a, &a);
+        let id = coord.register("A", a);
+        let doomed = coord
+            .try_submit(
+                Job::NativeSpgemm {
+                    a: id.into(),
+                    b: id.into(),
+                    dataflow: Dataflow::RowWiseHash,
+                }
+                .deadline(Duration::ZERO),
+            )
+            .unwrap();
+        let fine = coord
+            .try_submit(Job::NativeSpgemm {
+                a: id.into(),
+                b: id.into(),
+                dataflow: Dataflow::RowWiseHash,
+            })
+            .unwrap();
+        let responses = coord.collect_all();
+        let r = &responses[&doomed];
+        assert_eq!(r.error, Some(ServeError::DeadlineExceeded));
+        assert!(!r.is_ok());
+        assert_eq!(r.c.rows, 0, "no late product");
+        assert_eq!(r.registered, vec![id, id], "failure still attributed");
+        assert!(responses[&fine].c.approx_same(&oracle));
+        assert_eq!(coord.fault_stats().failed, 1);
+        assert_eq!(coord.fault_stats().expired, 1);
+        coord.shutdown();
+    }
+
+    // Tests that arm the process-wide fault plane (poison/heal of the
+    // shared plan slots, panic quarantine under injection, the site ×
+    // kind chaos matrix) live in `tests/chaos.rs`: they need a process
+    // where no unrelated kernel test is concurrently evaluating the
+    // global fault sites.
 }

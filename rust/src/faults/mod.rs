@@ -1,0 +1,422 @@
+//! Deterministic process-wide fault injection — the test plane behind the
+//! coordinator's containment guarantees.
+//!
+//! A serving process that promises "a worker panic costs one job, never
+//! the process" needs a way to *make* workers panic on demand, in the
+//! same binary CI runs, at a reproducible point. This module is that
+//! plane: a single installed [`FaultPlan`] names sites on the serving
+//! path ([`FaultSite`]), what happens there ([`FaultKind::Panic`] or
+//! [`FaultKind::Delay`]), and exactly which evaluation fires (the
+//! `nth`-hit selector, optionally restricted to one pool worker). The
+//! kernels call [`hit`] at each site unconditionally; with no plan
+//! installed the call is one relaxed atomic load — compiled in always,
+//! zero-cost when empty, so the code CI chaos-tests is the code
+//! production runs.
+//!
+//! Determinism: firing is driven by per-site hit counters and the plan's
+//! seed (which resolves an omitted `nth`), never by wall-clock or OS
+//! scheduling, so a chaos test that injects `numeric_row:panic:3` fails
+//! the same logical row on every run. The plane is process-wide; tests
+//! that install plans serialize on their own lock ([`install`] replaces
+//! any previous plan wholesale).
+//!
+//! Surfaced as `smash serve --inject site:kind[:nth] --fault-seed N` and
+//! consumed by `rust/tests/chaos.rs`.
+
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// A named point on the serving path where a fault can be injected. All
+/// sites sit *below* the accumulator-lane boundary (they wrap the row
+/// loop and the phase seams, not any one lane), so dense, hash, and merge
+/// rows share exactly the same containment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Start of a symbolic plan computation (`symbolic_plan`): a panic
+    /// here dies inside the coordinator's plan-cache slot and must poison
+    /// the slot, not wedge the burst.
+    Symbolic,
+    /// Per output row of the plan-backed numeric pass, on the pool worker
+    /// that owns the row's window.
+    NumericRow,
+    /// End of a numeric worker's window chunk, just before its
+    /// accumulator stats drain.
+    Drain,
+    /// The window partition/schedule step between the symbolic and
+    /// numeric phases.
+    Schedule,
+}
+
+impl FaultSite {
+    /// Every site, in counter-index order.
+    pub const ALL: [FaultSite; 4] = [
+        FaultSite::Symbolic,
+        FaultSite::NumericRow,
+        FaultSite::Drain,
+        FaultSite::Schedule,
+    ];
+
+    /// The CLI/display token of the site.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::Symbolic => "symbolic",
+            FaultSite::NumericRow => "numeric_row",
+            FaultSite::Drain => "drain",
+            FaultSite::Schedule => "schedule",
+        }
+    }
+
+    /// Parse a CLI token back to a site.
+    pub fn parse(s: &str) -> Result<FaultSite> {
+        match s {
+            "symbolic" => Ok(FaultSite::Symbolic),
+            "numeric_row" => Ok(FaultSite::NumericRow),
+            "drain" => Ok(FaultSite::Drain),
+            "schedule" => Ok(FaultSite::Schedule),
+            other => bail!(
+                "unknown fault site `{other}` (expected one of: symbolic, numeric_row, drain, schedule)"
+            ),
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            FaultSite::Symbolic => 0,
+            FaultSite::NumericRow => 1,
+            FaultSite::Drain => 2,
+            FaultSite::Schedule => 3,
+        }
+    }
+}
+
+/// What an injected fault does when it fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Panic with a recognizable `"injected fault: <site>"` payload — the
+    /// containment layer must convert it into exactly one failed
+    /// `Response`.
+    Panic,
+    /// Sleep for the given duration — long enough past a job's deadline,
+    /// the next deadline checkpoint must convert the job into
+    /// `DeadlineExceeded` instead of serving a late result.
+    Delay(Duration),
+}
+
+/// One injected fault: a site, a kind, and a deterministic selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub site: FaultSite,
+    pub kind: FaultKind,
+    /// Fires on the `nth` evaluation of `site` since [`install`]
+    /// (1-based). Hit counters are per-site and process-wide, so `nth` is
+    /// a deterministic coordinate, not a probability.
+    pub nth: u64,
+    /// Restrict firing to one pool-worker index (`None` matches any
+    /// worker; sites evaluated off the pool — `symbolic`, `schedule` —
+    /// only match `None`-selector specs).
+    pub worker: Option<usize>,
+}
+
+impl FaultSpec {
+    /// A spec firing on the `nth` hit of `site` on any worker.
+    pub fn new(site: FaultSite, kind: FaultKind, nth: u64) -> Self {
+        Self {
+            site,
+            kind,
+            nth: nth.max(1),
+            worker: None,
+        }
+    }
+
+    /// Restrict this spec to one pool-worker index.
+    pub fn on_worker(mut self, worker: usize) -> Self {
+        self.worker = Some(worker);
+        self
+    }
+
+    /// Parse the CLI form `site:kind[:nth]` — kind is `panic`, `delay`
+    /// (50 ms), or `delay<ms>`. An omitted `nth` is derived
+    /// deterministically from `seed`, so `--fault-seed` alone varies
+    /// which hit dies without giving up reproducibility.
+    pub fn parse(text: &str, seed: u64) -> Result<FaultSpec> {
+        let mut parts = text.split(':');
+        let site = FaultSite::parse(parts.next().unwrap_or_default())?;
+        let kind = match parts.next() {
+            Some("panic") => FaultKind::Panic,
+            Some("delay") => FaultKind::Delay(Duration::from_millis(50)),
+            Some(d) if d.starts_with("delay") => {
+                let ms: u64 = d["delay".len()..]
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad delay milliseconds in `{text}`"))?;
+                FaultKind::Delay(Duration::from_millis(ms))
+            }
+            _ => bail!("bad fault kind in `{text}` (expected panic, delay, or delay<ms>)"),
+        };
+        let nth = match parts.next() {
+            Some(n) => n
+                .parse::<u64>()
+                .map_err(|_| anyhow::anyhow!("bad nth-hit selector in `{text}`"))?
+                .max(1),
+            None => seed_nth(seed),
+        };
+        if parts.next().is_some() {
+            bail!("trailing garbage in fault spec `{text}` (expected site:kind[:nth])");
+        }
+        Ok(FaultSpec::new(site, kind, nth))
+    }
+
+    /// The canonical CLI spelling of this spec.
+    pub fn describe(&self) -> String {
+        let kind = match self.kind {
+            FaultKind::Panic => "panic".to_string(),
+            FaultKind::Delay(d) => format!("delay{}", d.as_millis()),
+        };
+        match self.worker {
+            Some(w) => format!("{}:{kind}:{}@w{w}", self.site.name(), self.nth),
+            None => format!("{}:{kind}:{}", self.site.name(), self.nth),
+        }
+    }
+}
+
+/// A full injection plan: what to break, where, and when.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Resolves omitted `nth` selectors and stamps provenance.
+    pub seed: u64,
+    pub specs: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    pub fn seeded(seed: u64) -> Self {
+        Self {
+            seed,
+            specs: Vec::new(),
+        }
+    }
+
+    pub fn with(mut self, spec: FaultSpec) -> Self {
+        self.specs.push(spec);
+        self
+    }
+
+    /// Human/provenance form: `none` for an empty plan, else the specs
+    /// plus the seed.
+    pub fn describe(&self) -> String {
+        if self.specs.is_empty() {
+            return "none".to_string();
+        }
+        let specs: Vec<String> = self.specs.iter().map(FaultSpec::describe).collect();
+        format!("{} (seed {})", specs.join(","), self.seed)
+    }
+}
+
+/// Fault observability counters, carried per job on
+/// [`Traffic::faults`](crate::spgemm::Traffic) and aggregated by the
+/// coordinator ([`Coordinator::fault_stats`]
+/// (crate::coordinator::Coordinator::fault_stats)). `Copy` because
+/// `Traffic` is.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultStats {
+    /// Armed fault-site checks evaluated.
+    pub observed: u64,
+    /// Faults that actually fired (panicked or delayed).
+    pub injected: u64,
+    /// Jobs that completed as failed responses (any `ServeError`).
+    pub failed: u64,
+    /// Jobs rejected at admission (`QueueFull`) — shed before any work.
+    pub shed: u64,
+    /// Jobs failed on a deadline checkpoint (`DeadlineExceeded`).
+    pub expired: u64,
+}
+
+impl FaultStats {
+    /// Fold another share in (coordinator aggregation / worker merge).
+    pub fn merge(&mut self, o: &FaultStats) {
+        self.observed += o.observed;
+        self.injected += o.injected;
+        self.failed += o.failed;
+        self.shed += o.shed;
+        self.expired += o.expired;
+    }
+}
+
+// ---- the process-wide plane ----------------------------------------
+
+/// Fast-path gate: one relaxed load per site check when no plan is
+/// installed — the "zero-cost when empty" contract.
+static ARMED: AtomicBool = AtomicBool::new(false);
+static OBSERVED: AtomicU64 = AtomicU64::new(0);
+static INJECTED: AtomicU64 = AtomicU64::new(0);
+static SITE_HITS: [AtomicU64; 4] = [
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+];
+static PLAN: Mutex<Option<FaultPlan>> = Mutex::new(None);
+
+/// Install `plan` process-wide, replacing any previous plan and resetting
+/// every hit counter (so `nth` selectors are relative to this install).
+pub fn install(plan: FaultPlan) {
+    let mut guard = PLAN.lock().unwrap();
+    OBSERVED.store(0, Ordering::SeqCst);
+    INJECTED.store(0, Ordering::SeqCst);
+    for h in &SITE_HITS {
+        h.store(0, Ordering::SeqCst);
+    }
+    ARMED.store(!plan.specs.is_empty(), Ordering::SeqCst);
+    *guard = Some(plan);
+}
+
+/// Disarm the plane. Counters keep their final values until the next
+/// [`install`], so a harness can read [`stats`] after clearing.
+pub fn clear() {
+    let mut guard = PLAN.lock().unwrap();
+    ARMED.store(false, Ordering::SeqCst);
+    *guard = None;
+}
+
+/// Whether a non-empty plan is currently armed.
+pub fn armed() -> bool {
+    ARMED.load(Ordering::SeqCst)
+}
+
+/// `(injected, observed)` since the last [`install`].
+pub fn stats() -> (u64, u64) {
+    (
+        INJECTED.load(Ordering::SeqCst),
+        OBSERVED.load(Ordering::SeqCst),
+    )
+}
+
+/// Provenance string of the active plan (`none` when disarmed) — what
+/// `smash tune` records so a report can prove its numbers were measured
+/// fault-free.
+pub fn active_description() -> String {
+    let guard = PLAN.lock().unwrap();
+    match guard.as_ref() {
+        Some(p) if armed() => p.describe(),
+        _ => "none".to_string(),
+    }
+}
+
+/// Evaluate a fault site. The kernels call this unconditionally at each
+/// [`FaultSite`]; with nothing armed it is one relaxed load. `worker` is
+/// the pool-worker index for numeric sites, `None` off the pool.
+#[inline]
+pub fn hit(site: FaultSite, worker: Option<usize>) {
+    if !ARMED.load(Ordering::Relaxed) {
+        return;
+    }
+    hit_armed(site, worker);
+}
+
+#[cold]
+fn hit_armed(site: FaultSite, worker: Option<usize>) {
+    OBSERVED.fetch_add(1, Ordering::SeqCst);
+    let n = SITE_HITS[site.index()].fetch_add(1, Ordering::SeqCst) + 1;
+    // Decide under the lock, act after releasing it: a panic must not
+    // poison the plane's own mutex.
+    let fire = {
+        let guard = PLAN.lock().unwrap();
+        guard.as_ref().and_then(|p| {
+            p.specs
+                .iter()
+                .find(|s| s.site == site && s.nth == n && (s.worker.is_none() || s.worker == worker))
+                .map(|s| s.kind)
+        })
+    };
+    match fire {
+        None => {}
+        Some(FaultKind::Delay(d)) => {
+            INJECTED.fetch_add(1, Ordering::SeqCst);
+            std::thread::sleep(d);
+        }
+        Some(FaultKind::Panic) => {
+            INJECTED.fetch_add(1, Ordering::SeqCst);
+            panic!("injected fault: {} (hit {n})", site.name());
+        }
+    }
+}
+
+/// If `message` is an injected-fault panic payload, the site it names —
+/// lets the containment layer label `WorkerPanicked::stage` with the
+/// injection site instead of a generic phase name.
+pub fn injected_site(message: &str) -> Option<&str> {
+    let rest = message.strip_prefix("injected fault: ")?;
+    Some(rest.split_whitespace().next().unwrap_or(rest))
+}
+
+/// Serialize tests that arm the process-wide plane: `cargo test` runs
+/// the lib suite multi-threaded, so every test that calls [`install`]
+/// (here, in the coordinator, anywhere in the lib test binary) must hold
+/// this guard for its whole body. Recovers from a poisoned lock so one
+/// failing test does not cascade. Not part of the serving API.
+#[doc(hidden)]
+pub fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Deterministic default `nth` from a seed (splitmix64 finalizer): in
+/// 1..=4, so an unqualified `--inject site:kind --fault-seed N` still
+/// fires on an early, reproducible hit.
+fn seed_nth(seed: u64) -> u64 {
+    let mut z = seed.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^= z >> 31;
+    1 + (z % 4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parsing_round_trips() {
+        let s = FaultSpec::parse("numeric_row:panic:3", 0).unwrap();
+        assert_eq!(s.site, FaultSite::NumericRow);
+        assert_eq!(s.kind, FaultKind::Panic);
+        assert_eq!(s.nth, 3);
+        assert_eq!(s.describe(), "numeric_row:panic:3");
+
+        let d = FaultSpec::parse("drain:delay250:1", 0).unwrap();
+        assert_eq!(d.kind, FaultKind::Delay(Duration::from_millis(250)));
+        assert_eq!(d.describe(), "drain:delay250:1");
+
+        // Bare `delay` defaults to 50 ms; omitted nth comes from the seed
+        // and is deterministic.
+        let bare = FaultSpec::parse("symbolic:delay", 9).unwrap();
+        assert_eq!(bare.kind, FaultKind::Delay(Duration::from_millis(50)));
+        assert_eq!(bare.nth, FaultSpec::parse("symbolic:delay", 9).unwrap().nth);
+        assert!((1..=4).contains(&bare.nth));
+
+        for bad in [
+            "nowhere:panic:1",
+            "symbolic:explode:1",
+            "symbolic:panic:zero",
+            "symbolic:panic:1:extra",
+            "symbolic:delayx:1",
+        ] {
+            assert!(FaultSpec::parse(bad, 0).is_err(), "{bad} must not parse");
+        }
+    }
+
+    // Tests that *arm* the plane live in `tests/chaos.rs`: the lib test
+    // binary runs kernel tests concurrently, and every kernel evaluates
+    // the process-wide sites — an armed plan here could fire into an
+    // unrelated test (and their hits would scramble counter assertions).
+    // The chaos binary is its own process and serializes on `test_lock`.
+
+    #[test]
+    fn injected_site_parses_payloads() {
+        assert_eq!(
+            injected_site("injected fault: schedule (hit 1)"),
+            Some("schedule")
+        );
+        assert_eq!(injected_site("some organic panic"), None);
+    }
+}

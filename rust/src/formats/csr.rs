@@ -171,6 +171,29 @@ impl Csr {
         })
     }
 
+    /// [`Csr::validate`] plus the canonical-form requirement: columns
+    /// strictly increase within every row (sorted, duplicate-free). This
+    /// is the *ingest boundary* check — the coordinator registry and the
+    /// file loaders call it so malformed operands fail typed at
+    /// admission, never deep inside a kernel (the merge accumulator lane
+    /// k-way-merges B's rows and silently produces garbage on unsorted
+    /// input). Kernel-internal debug asserts keep using [`Csr::validate`]
+    /// alone: SMASH V2/V3 legitimately emit unsorted-but-merged rows
+    /// (§5.2) that only `canonicalize` restores.
+    pub fn validate_canonical(&self) -> Result<(), String> {
+        self.validate()?;
+        for r in 0..self.rows {
+            let (cols, _) = self.row(r);
+            if let Some(w) = cols.windows(2).find(|w| w[0] >= w[1]) {
+                return Err(format!(
+                    "row {r} columns not strictly increasing ({} then {})",
+                    w[0], w[1]
+                ));
+            }
+        }
+        Ok(())
+    }
+
     /// Sort columns within each row and merge duplicates (SMASH V2/V3
     /// produce unsorted-but-merged rows — §5.2; canonicalize for compare).
     pub fn canonicalize(&self) -> Csr {
@@ -463,5 +486,36 @@ mod tests {
         let mut m2 = small();
         m2.row_ptr[1] = 100;
         assert!(m2.validate().is_err());
+    }
+
+    /// The ingest-boundary check rejects unsorted and duplicated columns
+    /// that plain `validate` (by design) lets through.
+    #[test]
+    fn validate_canonical_requires_sorted_rows() {
+        let m = small();
+        m.validate_canonical().unwrap();
+
+        let unsorted = Csr {
+            rows: 1,
+            cols: 4,
+            row_ptr: vec![0, 2],
+            col_idx: vec![2, 0],
+            data: vec![1.0, 5.0],
+        };
+        assert!(unsorted.validate().is_ok(), "structurally fine");
+        let err = unsorted.validate_canonical().unwrap_err();
+        assert!(err.contains("not strictly increasing"), "{err}");
+
+        let duplicated = Csr {
+            rows: 1,
+            cols: 4,
+            row_ptr: vec![0, 2],
+            col_idx: vec![1, 1],
+            data: vec![1.0, 2.0],
+        };
+        assert!(duplicated.validate_canonical().is_err());
+        // canonicalize repairs both forms
+        unsorted.canonicalize().validate_canonical().unwrap();
+        duplicated.canonicalize().validate_canonical().unwrap();
     }
 }

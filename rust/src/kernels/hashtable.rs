@@ -112,6 +112,29 @@ pub fn hash_tag(tag: u64, bins: usize, tag_bits: u32, mode: HashBits) -> usize {
     }
 }
 
+/// A fixed-capacity [`TagTable`] has no room for a new tag — the typed
+/// outcome of [`TagTable::try_upsert`] on a [`TagTable::fixed`] table
+/// (growable tables never report this: they double instead).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TableFull {
+    /// Capacity of the table when the insert failed.
+    pub bins: usize,
+    /// Live entries at failure (== `bins` — no empty slot remained).
+    pub live: usize,
+}
+
+impl std::fmt::Display for TableFull {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "hashtable full: {} live entries in {} fixed bins",
+            self.live, self.bins
+        )
+    }
+}
+
+impl std::error::Error for TableFull {}
+
 /// V1/V2 tag-data table.
 pub struct TagTable {
     tags: Vec<u64>,
@@ -122,11 +145,33 @@ pub struct TagTable {
     /// Entries currently occupied (reset by [`TagTable::clear`], unlike the
     /// cumulative `stats`).
     live: usize,
+    /// Double past half load ([`TagTable::new`]) vs. report [`TableFull`]
+    /// at capacity ([`TagTable::fixed`]).
+    growable: bool,
+    /// Geometric regrowths performed (growable tables only).
+    growths: u64,
     pub stats: TableStats,
 }
 
 impl TagTable {
+    /// A growable table: `bins` is the starting capacity; crossing half
+    /// load doubles it (the same geometric policy as the row
+    /// accumulator's hash lane), so an overcommitted window degrades to a
+    /// rehash instead of dying. The simulator charges only the probes the
+    /// walk actually performed — growth is a host-side reallocation, not
+    /// a kernel atomic.
     pub fn new(bins: usize, tag_bits: u32, mode: HashBits) -> Self {
+        Self::with_growth(bins, tag_bits, mode, true)
+    }
+
+    /// A fixed-capacity table (the strict SPAD model): [`TagTable::upsert`]
+    /// past capacity panics, [`TagTable::try_upsert`] reports
+    /// [`TableFull`] typed.
+    pub fn fixed(bins: usize, tag_bits: u32, mode: HashBits) -> Self {
+        Self::with_growth(bins, tag_bits, mode, false)
+    }
+
+    fn with_growth(bins: usize, tag_bits: u32, mode: HashBits, growable: bool) -> Self {
         assert!(bins.is_power_of_two() && bins >= 2);
         Self {
             tags: vec![EMPTY; bins],
@@ -135,6 +180,8 @@ impl TagTable {
             tag_bits,
             mode,
             live: 0,
+            growable,
+            growths: 0,
             stats: TableStats::default(),
         }
     }
@@ -143,41 +190,94 @@ impl TagTable {
         self.bins
     }
 
-    /// Merge `val` under `tag`, walking on collision (Fig 5.2).
-    /// Panics if the table is full — the window planner guarantees spare
-    /// capacity, mirroring the real kernel's invariant.
+    /// Geometric regrowths performed so far (0 for fixed tables).
+    pub fn growths(&self) -> u64 {
+        self.growths
+    }
+
+    /// Merge `val` under `tag`, walking on collision (Fig 5.2). Growable
+    /// tables double instead of filling; a fixed table past capacity
+    /// panics — use [`TagTable::try_upsert`] for the typed outcome.
     pub fn upsert(&mut self, tag: u64, val: Value) -> Upsert {
-        let mut slot = hash_tag(tag, self.bins, self.tag_bits, self.mode);
-        let mut probes = 1u32;
-        loop {
-            if self.tags[slot] == EMPTY {
-                self.tags[slot] = tag;
-                self.vals[slot] = val;
-                self.live += 1;
-                let u = Upsert {
-                    probes,
-                    inserted: true,
-                    slot,
-                };
-                self.stats.note(u);
-                return u;
+        match self.try_upsert(tag, val) {
+            Ok(u) => u,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// [`TagTable::upsert`] with a typed full-table outcome. `Err` is
+    /// only reachable on a [`TagTable::fixed`] table whose walk finds
+    /// neither the tag nor an empty slot; growable tables stay at most
+    /// half full and always succeed.
+    pub fn try_upsert(&mut self, tag: u64, val: Value) -> Result<Upsert, TableFull> {
+        'table: loop {
+            let mut slot = hash_tag(tag, self.bins, self.tag_bits, self.mode);
+            let mut probes = 1u32;
+            loop {
+                if self.tags[slot] == EMPTY {
+                    if self.growable && (self.live + 1) * 2 > self.bins {
+                        // This insert would cross half load: double and
+                        // re-probe in the grown table (the accumulator
+                        // hash lane's policy — one restart suffices, the
+                        // doubled table is at most quarter full).
+                        self.grow();
+                        continue 'table;
+                    }
+                    self.tags[slot] = tag;
+                    self.vals[slot] = val;
+                    self.live += 1;
+                    let u = Upsert {
+                        probes,
+                        inserted: true,
+                        slot,
+                    };
+                    self.stats.note(u);
+                    return Ok(u);
+                }
+                if self.tags[slot] == tag {
+                    self.vals[slot] += val;
+                    let u = Upsert {
+                        probes,
+                        inserted: false,
+                        slot,
+                    };
+                    self.stats.note(u);
+                    return Ok(u);
+                }
+                slot = (slot + 1) & (self.bins - 1);
+                probes += 1;
+                if probes as usize > self.bins {
+                    // Every slot probed: full fixed table, and the tag is
+                    // not present. (Unreachable when growable.)
+                    return Err(TableFull {
+                        bins: self.bins,
+                        live: self.live,
+                    });
+                }
             }
-            if self.tags[slot] == tag {
-                self.vals[slot] += val;
-                let u = Upsert {
-                    probes,
-                    inserted: false,
-                    slot,
-                };
-                self.stats.note(u);
-                return u;
+        }
+    }
+
+    /// Double the table and rehash the live entries. Cumulative probe
+    /// statistics are untouched: the rehash models a host-side
+    /// reallocation, not metered kernel work.
+    #[cold]
+    fn grow(&mut self) {
+        self.growths += 1;
+        let new_bins = self.bins * 2;
+        let old_tags = std::mem::replace(&mut self.tags, vec![EMPTY; new_bins]);
+        let old_vals = std::mem::replace(&mut self.vals, vec![0.0; new_bins]);
+        self.bins = new_bins;
+        for (s, &tag) in old_tags.iter().enumerate() {
+            if tag == EMPTY {
+                continue;
             }
-            slot = (slot + 1) & (self.bins - 1);
-            probes += 1;
-            assert!(
-                probes as usize <= self.bins,
-                "hashtable full: window planner overcommitted"
-            );
+            let mut slot = hash_tag(tag, new_bins, self.tag_bits, self.mode);
+            while self.tags[slot] != EMPTY {
+                slot = (slot + 1) & (new_bins - 1);
+            }
+            self.tags[slot] = tag;
+            self.vals[slot] = old_vals[s];
         }
     }
 
@@ -417,13 +517,45 @@ mod tests {
         assert!(t.stats.mean_probes() > 1.0);
     }
 
+    /// A fixed-capacity table reports exhaustion typed — no panic, no
+    /// unwinding through kernel state — and keeps serving merges into
+    /// existing tags at capacity.
     #[test]
-    #[should_panic(expected = "hashtable full")]
-    fn full_table_panics() {
-        let mut t = TagTable::new(2, 8, HashBits::Low);
-        t.upsert(0, 1.0);
-        t.upsert(1, 1.0);
-        t.upsert(2, 1.0);
+    fn fixed_table_full_is_typed_not_a_panic() {
+        let mut t = TagTable::fixed(2, 8, HashBits::Low);
+        assert!(t.try_upsert(0, 1.0).is_ok());
+        assert!(t.try_upsert(1, 1.0).is_ok());
+        let err = t.try_upsert(2, 1.0).unwrap_err();
+        assert_eq!(err, TableFull { bins: 2, live: 2 });
+        assert!(err.to_string().contains("hashtable full"));
+        // merges need no empty slot — still fine at capacity
+        let u = t.try_upsert(1, 2.0).unwrap();
+        assert!(!u.inserted);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.growths(), 0, "fixed tables never grow");
+    }
+
+    /// A growable table doubles past half load (the accumulator hash
+    /// lane's geometric policy) instead of dying: every entry survives
+    /// the rehashes and occupancy never exceeds half.
+    #[test]
+    fn growable_table_doubles_past_half_load() {
+        let mut t = TagTable::new(4, 16, HashBits::Low);
+        for tag in 0..64u64 {
+            t.upsert(tag, 1.0);
+            assert!(t.len() * 2 <= t.bins(), "load factor capped at half");
+        }
+        assert_eq!(t.len(), 64);
+        assert_eq!(t.bins(), 128, "4 -> 128 is five doublings");
+        assert_eq!(t.growths(), 5);
+        let mut items = t.drain();
+        items.sort_unstable_by_key(|(tag, _)| *tag);
+        assert_eq!(items.len(), 64);
+        assert!(items.iter().map(|i| i.0).eq(0..64), "all tags survive");
+        assert!(items.iter().all(|&(_, v)| v == 1.0));
+        // merges after growth still find their (rehashed) entries
+        let u = t.upsert(17, 2.0);
+        assert!(!u.inserted);
     }
 
     #[test]

@@ -11,8 +11,8 @@ pub mod spmv;
 pub mod window;
 
 pub use hashtable::{
-    hash_tag, insertion_sort_cost, insertion_sort_cost_quadratic, OffsetTable, TableStats,
-    TagTable, EMPTY,
+    hash_tag, insertion_sort_cost, insertion_sort_cost_quadratic, OffsetTable, TableFull,
+    TableStats, TagTable, EMPTY,
 };
 pub use smash::{run_smash, run_smash_with_plan, RunReport, SmashRun};
 pub use spmv::{pagerank, run_spmv, SpmvReport};

@@ -616,8 +616,11 @@ impl HashTarget<'_> {
     fn upsert(&mut self, s: &mut Sim, tid: usize, tag: u64, val: Value) {
         match self {
             HashTarget::Spad(table, base, remote_blocks) => {
-                let bins = table.bins();
                 let u = table.upsert(tag, val);
+                // Read bins AFTER the upsert: a growable table may have
+                // doubled during it, and the probe-replay below must use
+                // the capacity `u.slot` is valid in.
+                let bins = table.bins();
                 // Distributed-hashtable ablation (§4.1.2.2 remote atomics):
                 // a slot owned by another block is updated via a network
                 // instruction instead of a local SPAD atomic.

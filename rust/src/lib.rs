@@ -41,6 +41,7 @@
 
 pub mod util;
 pub mod config;
+pub mod faults;
 pub mod formats;
 pub mod gen;
 pub mod spgemm;

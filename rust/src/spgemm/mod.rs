@@ -28,19 +28,22 @@ pub use inner::inner_product;
 pub use intensity::{arithmetic_intensity, compression_factor, IntensityReport};
 pub use outer::outer_product;
 pub use par::{
-    par_gustavson, par_gustavson_accum, par_gustavson_blocked, par_gustavson_blocked_kind,
-    par_gustavson_blocked_semiring, par_gustavson_blocked_with_plan_kind,
-    par_gustavson_blocked_with_plan_policy, par_gustavson_kind, par_gustavson_semiring,
-    par_gustavson_spawning, par_gustavson_spawning_kind, par_gustavson_spawning_semiring,
-    par_gustavson_spec, par_gustavson_with_plan, par_gustavson_with_plan_accum,
-    par_gustavson_with_plan_kind, par_gustavson_with_plan_policy, par_gustavson_with_plan_semiring,
-    symbolic_plan, WorkerPool,
+    panic_message, par_gustavson, par_gustavson_accum, par_gustavson_blocked,
+    par_gustavson_blocked_kind, par_gustavson_blocked_semiring,
+    par_gustavson_blocked_with_plan_kind, par_gustavson_blocked_with_plan_policy,
+    par_gustavson_kind, par_gustavson_semiring, par_gustavson_spawning,
+    par_gustavson_spawning_kind, par_gustavson_spawning_semiring, par_gustavson_spec,
+    par_gustavson_with_plan, par_gustavson_with_plan_accum, par_gustavson_with_plan_checked,
+    par_gustavson_with_plan_kind, par_gustavson_with_plan_policy,
+    par_gustavson_with_plan_semiring, symbolic_plan, ParError, TaskPanic, WorkerPool,
 };
 pub use plan::{symbolic_plan_serial, BandPartition, BandSpec, SymbolicPlan};
 pub use rowwise::{rowwise_hash, rowwise_heap};
 pub use semiring::{
     ewise_add, spgemm_semiring, Arithmetic, Boolean, MaxTimes, MinPlus, Semiring, SemiringKind,
 };
+
+pub use crate::faults::FaultStats;
 
 use crate::formats::Csr;
 
@@ -70,6 +73,12 @@ pub struct Traffic {
     /// Column-band statistics of the propagation-blocking backend
     /// ([`par_gustavson_blocked`]) — zero for every unblocked dataflow.
     pub band: BandStats,
+    /// Fault-plane observability for this execution: injection-site
+    /// evaluations observed / faults fired while the job ran, plus the
+    /// failed/shed/expired job counters the coordinator folds in at the
+    /// aggregate level. All-zero whenever the fault plane is disarmed
+    /// (the production case).
+    pub faults: FaultStats,
 }
 
 /// Column-band counters of one blocked multiply, carried on
@@ -117,6 +126,7 @@ impl Traffic {
         self.flops += o.flops;
         self.accum.merge(&o.accum);
         self.band.merge(&o.band);
+        self.faults.merge(&o.faults);
     }
 
     /// Input reuse factor: useful input elements / total input reads.

@@ -197,7 +197,15 @@ fn candidate_specs(cols: usize) -> Vec<(String, AccumSpec)> {
 
 /// Run the sweep. Returns `Err` — and therefore a nonzero `smash tune`
 /// exit — on any oracle-equality or stat-sanity violation at any point.
+/// Also refuses to run with the fault plane armed: injected delays would
+/// corrupt every timing and injected panics would abort the sweep
+/// uncontained, so a perf artifact is only produced from a clean process.
 pub fn run_sweep(opts: &TuneOptions) -> Result<TuneReport> {
+    ensure!(
+        !crate::faults::armed(),
+        "refusing to time a sweep with the fault plane armed ({})",
+        crate::faults::active_description()
+    );
     let mut bench = Bench::new().with_iters(1, opts.iters.max(1));
     if opts.quiet {
         bench = bench.silent();
@@ -217,6 +225,7 @@ pub fn run_sweep(opts: &TuneOptions) -> Result<TuneReport> {
         threads: opts.threads,
         iters: opts.iters.max(1),
         seed: opts.seed,
+        fault_injection: crate::faults::active_description(),
         pairs,
     })
 }
@@ -485,6 +494,7 @@ mod tests {
     fn smoke_sweep_is_green() {
         let report = run_sweep(&tiny_opts()).expect("smoke sweep must pass its own gates");
         assert_eq!(report.schema, SCHEMA_VERSION);
+        assert_eq!(report.fault_injection, "none", "perf artifacts come from a clean plane");
         assert_eq!(report.pairs.len(), 6);
         let names: Vec<&str> = report.pairs.iter().map(|p| p.workload.as_str()).collect();
         assert!(names.contains(&"hypersparse-2^18"), "{names:?}");

@@ -13,7 +13,10 @@ use std::time::Duration;
 
 /// Bump when a field is added/renamed/retyped; parsers reject mismatches.
 /// v2: `merge_rows` per point (three-lane accumulator arbitration).
-pub const SCHEMA_VERSION: u64 = 2;
+/// v3: `fault_injection` provenance — sweeps refuse to time under an
+/// armed fault plane, and the report records the plane state so a perf
+/// artifact can never silently hide injected delays.
+pub const SCHEMA_VERSION: u64 = 3;
 
 /// One swept accumulator policy on one workload pair.
 #[derive(Clone, Debug, PartialEq)]
@@ -70,6 +73,11 @@ pub struct TuneReport {
     pub threads: usize,
     pub iters: usize,
     pub seed: u64,
+    /// Fault-plane state at sweep time ([`crate::faults::active_description`]).
+    /// Always `"none"` for a valid perf artifact — [`crate::tune::run_sweep`]
+    /// refuses to time with the plane armed — but recorded so any future
+    /// relaxation stays visible in the JSON.
+    pub fault_injection: String,
     pub pairs: Vec<PairSweep>,
 }
 
@@ -157,6 +165,7 @@ impl TuneReport {
             ("threads".into(), Json::u64(self.threads as u64)),
             ("iters".into(), Json::u64(self.iters as u64)),
             ("seed".into(), Json::u64(self.seed)),
+            ("fault_injection".into(), Json::Str(self.fault_injection.clone())),
             (
                 "pairs".into(),
                 Json::Arr(self.pairs.iter().map(PairSweep::to_json).collect()),
@@ -176,6 +185,7 @@ impl TuneReport {
             threads: j.field("threads")?.as_u64()? as usize,
             iters: j.field("iters")?.as_u64()? as usize,
             seed: j.field("seed")?.as_u64()?,
+            fault_injection: j.field("fault_injection")?.as_str()?.to_string(),
             pairs: j
                 .field("pairs")?
                 .as_arr()?

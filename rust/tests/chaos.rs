@@ -1,0 +1,389 @@
+//! Chaos suite — the acceptance bar for fault-contained serving.
+//!
+//! Everything here arms the process-wide fault plane ([`smash::faults`]),
+//! so every test serializes on `faults::test_lock()` and the suite lives
+//! in its own test binary: the lib test binary runs kernel tests
+//! concurrently, and an armed plan there could fire into an unrelated
+//! test.
+//!
+//! The contract under test:
+//!
+//! * **Plane semantics.** Disarmed hits are free and uncounted; armed
+//!   hits count per site; the `nth` and `worker` selectors pick exactly
+//!   one firing; an injected panic's payload names its site.
+//! * **The matrix.** Every [`FaultSite`] × {panic, delay-past-deadline}
+//!   yields the *matching* [`ServeError`] on the faulted job — and only
+//!   on it: co-submitted jobs drain bitwise-equal to the serial
+//!   [`gustavson`] oracle, and a follow-up clean burst on the same
+//!   coordinator succeeds with its `symbolic_reused` provenance intact.
+//! * **Poison/heal.** A panicking symbolic pass fails its own job
+//!   `WorkerPanicked`, fails batched waiters fast with `PlanPoisoned`
+//!   (no deadlock, no recompute behind a corrupt slot), and the next
+//!   submit against the pair heals the slot.
+
+use smash::coordinator::{Coordinator, Job, JobId, MatrixId, Response, ServeError, ServerConfig};
+use smash::faults::{self, FaultKind, FaultPlan, FaultSite, FaultSpec};
+use smash::formats::Csr;
+use smash::gen::{rmat, RmatParams};
+use smash::spgemm::{gustavson, AccumSpec, Dataflow, SemiringKind};
+use std::time::Duration;
+
+/// The batchable parallel job every chaos case serves: registered
+/// operands + `ParGustavson`, so the shared symbolic slot, the schedule
+/// seam, and the pool's row/drain sites are all on the faulted path.
+fn par_job(a: MatrixId, b: MatrixId) -> Job {
+    Job::NativeSpgemm {
+        a: a.into(),
+        b: b.into(),
+        dataflow: Dataflow::ParGustavson {
+            threads: 2,
+            accum: AccumSpec::default(),
+            semiring: SemiringKind::Arithmetic,
+        },
+    }
+}
+
+/// A plan firing on the very first evaluation of `site`.
+fn single_spec(site: FaultSite, kind: FaultKind) -> FaultPlan {
+    FaultPlan::seeded(1).with(FaultSpec::new(site, kind, 1))
+}
+
+fn assert_bitwise(r: &Response, oracle: &Csr) {
+    assert!(r.is_ok(), "job {:?} failed: {:?}", r.id, r.error);
+    assert_eq!(r.c.row_ptr, oracle.row_ptr);
+    assert_eq!(r.c.col_idx, oracle.col_idx);
+    assert_eq!(r.c.data, oracle.data);
+}
+
+// ---- plane semantics (relocated from `faults::tests`) ---------------
+
+#[test]
+fn empty_plane_is_inert_and_counters_track_hits() {
+    let _g = faults::test_lock();
+    faults::clear();
+    assert!(!faults::armed());
+    assert_eq!(faults::active_description(), "none");
+    let before = faults::stats();
+    faults::hit(FaultSite::NumericRow, Some(0));
+    assert_eq!(faults::stats(), before, "disarmed hits are not even counted");
+
+    // A zero-length delay on the 2nd numeric-row hit: observable firing
+    // with no side effect on the caller.
+    faults::install(FaultPlan::seeded(7).with(FaultSpec::new(
+        FaultSite::NumericRow,
+        FaultKind::Delay(Duration::ZERO),
+        2,
+    )));
+    assert!(faults::armed());
+    assert!(faults::active_description().contains("numeric_row:delay0:2"));
+    faults::hit(FaultSite::NumericRow, Some(0)); // hit 1: selector misses
+    faults::hit(FaultSite::Symbolic, None); // other site: per-site counters
+    faults::hit(FaultSite::NumericRow, Some(1)); // hit 2: fires
+    faults::hit(FaultSite::NumericRow, Some(0)); // hit 3: spent
+    assert_eq!(faults::stats(), (1, 4), "(injected, observed)");
+
+    // Counters survive `clear` so a harness can read them post-run.
+    faults::clear();
+    assert!(!faults::armed());
+    assert_eq!(faults::stats(), (1, 4));
+    assert_eq!(faults::active_description(), "none");
+}
+
+#[test]
+fn worker_selector_restricts_firing() {
+    let _g = faults::test_lock();
+    let spec = FaultSpec::new(FaultSite::Drain, FaultKind::Delay(Duration::ZERO), 1).on_worker(3);
+
+    // The nth hit lands on the wrong worker: observed, never injected.
+    faults::install(FaultPlan::seeded(1).with(spec));
+    faults::hit(FaultSite::Drain, Some(2));
+    assert_eq!(faults::stats(), (0, 1));
+
+    // Reinstall (hit counters reset) and land it on the right worker.
+    faults::install(FaultPlan::seeded(1).with(spec));
+    faults::hit(FaultSite::Drain, Some(3));
+    assert_eq!(faults::stats(), (1, 1));
+
+    // Off-pool evaluations (`worker: None`) never match a restricted spec.
+    faults::install(FaultPlan::seeded(1).with(spec));
+    faults::hit(FaultSite::Drain, None);
+    assert_eq!(faults::stats(), (0, 1));
+    faults::clear();
+}
+
+#[test]
+fn injected_panic_payload_names_its_site() {
+    let _g = faults::test_lock();
+    faults::install(single_spec(FaultSite::Schedule, FaultKind::Panic));
+    let payload = std::panic::catch_unwind(|| faults::hit(FaultSite::Schedule, None))
+        .expect_err("the armed hit must panic");
+    let message = payload
+        .downcast_ref::<String>()
+        .expect("injected panics carry a String payload")
+        .clone();
+    assert_eq!(faults::injected_site(&message), Some("schedule"));
+    assert!(message.contains("hit 1"), "payload: {message}");
+    assert_eq!(faults::stats(), (1, 1));
+    faults::clear();
+}
+
+// ---- the site × kind acceptance matrix ------------------------------
+
+/// One matrix case. A single-worker coordinator executes jobs in FIFO
+/// order, so the faulted job — submitted first — deterministically takes
+/// hit 1 of its site; co-submitted clean jobs (a different registered
+/// pair) and the follow-up burst see a spent plan.
+fn chaos_case(site: FaultSite, kind: FaultKind) {
+    let mut coord = Coordinator::start(ServerConfig {
+        workers: 1,
+        queue_depth: 16,
+        ..ServerConfig::default()
+    });
+    let fa = rmat(&RmatParams::new(6, 300, 101));
+    let fb = rmat(&RmatParams::new(6, 300, 102));
+    let ca = rmat(&RmatParams::new(6, 300, 103));
+    let cb = rmat(&RmatParams::new(6, 300, 104));
+    let (oracle_f, _) = gustavson(&fa, &fb);
+    let (oracle_c, _) = gustavson(&ca, &cb);
+    let id_fa = coord.register("FA", fa);
+    let id_fb = coord.register("FB", fb);
+    let id_ca = coord.register("CA", ca);
+    let id_cb = coord.register("CB", cb);
+
+    faults::install(single_spec(site, kind));
+    // Delay cases attach a budget far under the injected sleep, so the
+    // next deadline checkpoint must expire the job instead of serving
+    // late; panic cases run unbudgeted.
+    let faulted = match kind {
+        FaultKind::Panic => coord.try_submit(par_job(id_fa, id_fb)),
+        FaultKind::Delay(_) => {
+            coord.try_submit(par_job(id_fa, id_fb).deadline(Duration::from_millis(25)))
+        }
+    }
+    .expect("admission is clean");
+    let clean: Vec<JobId> = (0..2)
+        .map(|_| coord.try_submit(par_job(id_ca, id_cb)).expect("admission"))
+        .collect();
+    let responses = coord.collect_all();
+    faults::clear();
+
+    // 1. The faulted job fails with exactly the matching typed error.
+    let err = responses[&faulted]
+        .error
+        .clone()
+        .unwrap_or_else(|| panic!("{}:{kind:?}: the faulted job must fail", site.name()));
+    match kind {
+        FaultKind::Panic => match err {
+            ServeError::WorkerPanicked { stage, message } => {
+                assert_eq!(stage, site.name(), "stage must name the injection site");
+                assert!(message.contains("injected fault"), "payload: {message}");
+            }
+            other => panic!("{}:panic must quarantine, got {other:?}", site.name()),
+        },
+        FaultKind::Delay(_) => assert_eq!(
+            err,
+            ServeError::DeadlineExceeded,
+            "{}: a delay past the budget must expire the job",
+            site.name()
+        ),
+    }
+    assert_eq!(responses[&faulted].registered, vec![id_fa, id_fb]);
+    assert!(coord.fault_stats().failed >= 1);
+
+    // 2. Co-submitted jobs drain bitwise-equal to the serial oracle.
+    for id in &clean {
+        assert_bitwise(&responses[id], &oracle_c);
+    }
+
+    // 3. A follow-up clean burst on the SAME coordinator succeeds with
+    //    its plan provenance intact: only a symbolic panic (slot
+    //    poisoned, healed at the next submit) recomputes the pass —
+    //    every other case left the faulted pair's published plan
+    //    resident.
+    let burst: Vec<JobId> = (0..3)
+        .map(|_| coord.try_submit(par_job(id_fa, id_fb)).expect("healed admission"))
+        .collect();
+    let responses = coord.collect_all();
+    let mut computed = 0;
+    for id in &burst {
+        let r = &responses[id];
+        assert_bitwise(r, &oracle_f);
+        match r.symbolic_reused {
+            Some(false) => computed += 1,
+            Some(true) => {}
+            None => panic!("batched job must report plan provenance"),
+        }
+    }
+    let expect_computed = usize::from(site == FaultSite::Symbolic && kind == FaultKind::Panic);
+    assert_eq!(computed, expect_computed, "{}:{kind:?}", site.name());
+    coord.shutdown();
+}
+
+#[test]
+fn panic_at_every_site_yields_worker_panicked_and_spares_cohabitants() {
+    let _g = faults::test_lock();
+    for site in FaultSite::ALL {
+        chaos_case(site, FaultKind::Panic);
+    }
+}
+
+#[test]
+fn delay_past_deadline_at_every_site_yields_deadline_exceeded() {
+    let _g = faults::test_lock();
+    for site in FaultSite::ALL {
+        chaos_case(site, FaultKind::Delay(Duration::from_millis(250)));
+    }
+}
+
+// ---- poison/heal and quarantine (coordinator-level) -----------------
+
+/// Regression: a panicking symbolic pass used to unwind the worker with
+/// the slot's std `Mutex` held, wedging (or panicking) every batched
+/// waiter blocked on the pair. Now the builder's job fails quarantined,
+/// waiters fail fast with `PlanPoisoned`, and the next submit heals.
+#[test]
+fn poisoned_plan_slot_fails_waiters_fast_then_heals() {
+    let _g = faults::test_lock();
+    let mut coord = Coordinator::start(ServerConfig {
+        workers: 1,
+        queue_depth: 8,
+        ..ServerConfig::default()
+    });
+    let a = rmat(&RmatParams::new(6, 300, 41));
+    let b = rmat(&RmatParams::new(6, 300, 42));
+    let (oracle, _) = gustavson(&a, &b);
+    let id_a = coord.register("A", a);
+    let id_b = coord.register("B", b);
+
+    // Stall the single worker on a site-free serial job so all three
+    // batched jobs are queued before the builder runs — submitting
+    // *after* the slot poisons would heal it and hide the waiters'
+    // fail-fast path.
+    let stall = rmat(&RmatParams::new(9, 20_000, 43));
+    let stall_id = coord.submit(Job::NativeSpgemm {
+        a: stall.clone().into(),
+        b: stall.into(),
+        dataflow: Dataflow::RowWiseHash,
+    });
+    faults::install(single_spec(FaultSite::Symbolic, FaultKind::Panic));
+    let ids: Vec<JobId> = (0..3)
+        .map(|_| coord.try_submit(par_job(id_a, id_b)).expect("admission"))
+        .collect();
+    let responses = coord.collect_all();
+    faults::clear();
+
+    assert!(responses[&stall_id].is_ok());
+    match &responses[&ids[0]].error {
+        Some(ServeError::WorkerPanicked { stage, message }) => {
+            assert_eq!(stage, "symbolic");
+            assert!(message.contains("injected fault: symbolic"), "{message}");
+        }
+        other => panic!("the builder must fail quarantined, got {other:?}"),
+    }
+    for id in &ids[1..] {
+        assert_eq!(
+            responses[id].error,
+            Some(ServeError::PlanPoisoned),
+            "waiters must fail fast, not deadlock or recompute"
+        );
+    }
+    assert_eq!(coord.fault_stats().failed, 3);
+    assert_eq!(coord.symbolic_stats(), (0, 0), "nothing published, nothing reused");
+
+    // The next submit heals the slot: a fresh burst recomputes exactly
+    // one pass and serves bitwise against the oracle.
+    let burst: Vec<JobId> = (0..2)
+        .map(|_| coord.try_submit(par_job(id_a, id_b)).expect("healed admission"))
+        .collect();
+    let responses = coord.collect_all();
+    let mut computed = 0;
+    for id in &burst {
+        assert_bitwise(&responses[id], &oracle);
+        if responses[id].symbolic_reused == Some(false) {
+            computed += 1;
+        }
+    }
+    assert_eq!(computed, 1);
+    assert_eq!(coord.symbolic_stats(), (1, 1));
+    coord.shutdown();
+}
+
+/// A pool-task panic mid-numeric costs exactly one failed response; the
+/// pool, the published plan, and the coordinator all survive it.
+#[test]
+fn numeric_panic_quarantined_and_pool_survives() {
+    let _g = faults::test_lock();
+    let mut coord = Coordinator::start(ServerConfig {
+        workers: 1,
+        queue_depth: 8,
+        ..ServerConfig::default()
+    });
+    let a = rmat(&RmatParams::new(6, 300, 61));
+    let b = rmat(&RmatParams::new(6, 300, 62));
+    let (oracle, _) = gustavson(&a, &b);
+    let id_a = coord.register("A", a);
+    let id_b = coord.register("B", b);
+
+    faults::install(single_spec(FaultSite::NumericRow, FaultKind::Panic));
+    let hurt = coord.try_submit(par_job(id_a, id_b)).expect("admission");
+    let r = coord.collect_one().expect("one outstanding");
+    assert_eq!(r.id, hurt);
+    match &r.error {
+        Some(ServeError::WorkerPanicked { stage, message }) => {
+            assert_eq!(stage, "numeric_row");
+            assert!(message.contains("injected fault"), "{message}");
+        }
+        other => panic!("a numeric panic must quarantine, got {other:?}"),
+    }
+    assert_eq!(r.registered, vec![id_a, id_b]);
+    // The plane really fired. Failed responses carry no traffic, so read
+    // the process counters before disarming.
+    assert!(faults::stats().0 >= 1, "the injection must be counted");
+    faults::clear();
+
+    // Same coordinator, same pair: the plan published before the panic
+    // is still resident and the clean retry reuses it, bitwise.
+    let retry = coord.try_submit(par_job(id_a, id_b)).expect("pool alive");
+    let r = coord.collect_one().expect("retry outstanding");
+    assert_eq!(r.id, retry);
+    assert_bitwise(&r, &oracle);
+    assert_eq!(r.symbolic_reused, Some(true), "published plan survives the panic");
+    assert_eq!(coord.fault_stats().failed, 1);
+    assert_eq!(coord.symbolic_stats(), (1, 1));
+    coord.shutdown();
+}
+
+/// `Traffic::faults` carries the plane's counter movement for a served
+/// job, and the coordinator folds it into `fault_stats` at collect.
+#[test]
+fn traffic_and_coordinator_carry_fault_observability() {
+    let _g = faults::test_lock();
+    let mut coord = Coordinator::start(ServerConfig {
+        workers: 1,
+        queue_depth: 4,
+        ..ServerConfig::default()
+    });
+    let a = rmat(&RmatParams::new(6, 300, 71));
+    let b = rmat(&RmatParams::new(6, 300, 72));
+    let id_a = coord.register("A", a);
+    let id_b = coord.register("B", b);
+
+    // A zero-length delay: an injection that fires without failing the
+    // job — pure observability.
+    faults::install(single_spec(FaultSite::NumericRow, FaultKind::Delay(Duration::ZERO)));
+    coord.submit(par_job(id_a, id_b));
+    let r = coord.collect_one().expect("one outstanding");
+    faults::clear();
+
+    assert!(r.is_ok());
+    let t = r.traffic.expect("native jobs carry traffic");
+    assert_eq!(t.faults.injected, 1, "the delay fired exactly once");
+    assert!(t.faults.observed >= 1, "armed site checks are counted");
+    let agg = coord.fault_stats();
+    assert_eq!(agg.injected, 1);
+    assert_eq!(agg.observed, t.faults.observed);
+    assert_eq!(agg.failed, 0);
+    assert_eq!(agg.shed, 0);
+    assert_eq!(agg.expired, 0);
+    coord.shutdown();
+}
