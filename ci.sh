@@ -104,4 +104,68 @@ echo "== perf smoke sweep: smash tune --smoke (accumulator threshold gate) =="
 cargo run --release -- tune --smoke --out BENCH_4.json
 test -s BENCH_4.json || { echo "FAIL: tune report BENCH_4.json missing/empty"; exit 1; }
 
+echo "== loopback smoke test: serve --listen + client + spray =="
+# The coordinator on the wire, end to end over real TCP: a background
+# server on an OS-picked port, a client burst checked bitwise against the
+# serial oracle, and a short spray run emitting the schema-versioned
+# BENCH_9.json latency artifact. The smash binary is invoked directly
+# (not via `cargo run`) so killing the background pid actually kills the
+# server.
+SMASH_BIN=target/release/smash
+rm -f serve_listen.log BENCH_9.json
+"$SMASH_BIN" serve --listen 127.0.0.1:0 --workers 2 > serve_listen.log 2>&1 &
+serve_pid=$!
+trap 'kill "$serve_pid" 2>/dev/null || true' EXIT
+for _ in $(seq 1 100); do
+    grep -q "listening on" serve_listen.log && break
+    sleep 0.1
+done
+grep -q "listening on" serve_listen.log \
+    || { echo "FAIL: server never printed its bound address"; cat serve_listen.log; exit 1; }
+addr=$(sed -n 's/^listening on //p' serve_listen.log | head -n1)
+
+client_out=$("$SMASH_BIN" client --addr "$addr" --jobs 6)
+echo "$client_out" | grep -q "registered pair over wire" \
+    || { echo "FAIL: wire-registration marker missing from client output"; exit 1; }
+echo "$client_out" | grep -q "bitwise-equal to serial oracle: 6/6" \
+    || { echo "FAIL: served burst must be bitwise-equal to the serial oracle"; exit 1; }
+
+spray_out=$("$SMASH_BIN" spray --addr "$addr" --count 40 --out BENCH_9.json)
+echo "$spray_out" | grep -q "p99" \
+    || { echo "FAIL: latency percentile marker missing from spray output"; exit 1; }
+echo "$spray_out" | grep -q "shed: " \
+    || { echo "FAIL: shed-count marker missing from spray output"; exit 1; }
+test -s BENCH_9.json || { echo "FAIL: spray report BENCH_9.json missing/empty"; exit 1; }
+grep -q '"schema"' BENCH_9.json \
+    || { echo "FAIL: spray report must be schema-versioned"; exit 1; }
+grep -q '"sent": 40' BENCH_9.json \
+    || { echo "FAIL: spray report must count all 40 offered jobs"; exit 1; }
+kill "$serve_pid" 2>/dev/null || true
+
+echo "== loopback chaos smoke test: wire-injected fault containment =="
+# A second server armed through its environment (SMASH_INJECT — the only
+# control CI has over a background process): the first numeric row task
+# panics inside the server's worker pool, the client sees exactly ONE
+# typed wire error, and the cohabitant jobs on the same connection still
+# serve bitwise-equal.
+rm -f serve_fault.log
+SMASH_INJECT=numeric_row:panic:1 "$SMASH_BIN" serve --listen 127.0.0.1:0 --workers 1 \
+    > serve_fault.log 2>&1 &
+fault_pid=$!
+trap 'kill "$serve_pid" "$fault_pid" 2>/dev/null || true' EXIT
+for _ in $(seq 1 100); do
+    grep -q "listening on" serve_fault.log && break
+    sleep 0.1
+done
+grep -q "fault injection armed: numeric_row:panic:1" serve_fault.log \
+    || { echo "FAIL: fault plane was not armed for the wire chaos run"; cat serve_fault.log; exit 1; }
+fault_addr=$(sed -n 's/^listening on //p' serve_fault.log | head -n1)
+fault_out=$("$SMASH_BIN" client --addr "$fault_addr" --jobs 4)
+contained=$(echo "$fault_out" | grep -c "failed (contained over wire)")
+[ "$contained" = "1" ] \
+    || { echo "FAIL: injected panic must surface as exactly one wire error (got $contained)"; exit 1; }
+echo "$fault_out" | grep -q "bitwise-equal to serial oracle: 3/3" \
+    || { echo "FAIL: cohabitant jobs must survive the injected fault bitwise"; exit 1; }
+kill "$fault_pid" 2>/dev/null || true
+
 echo "CI green ✓"

@@ -238,7 +238,7 @@ fn main() {
     let fstats = coord.fault_stats();
     let (injected, observed) = faults::stats();
     println!(
-        "failed jobs: {} ({} shed at admission, {} deadline-expired)",
+        "failed jobs: {} (shed: {} at admission, expired: {} past deadline)",
         fstats.failed, fstats.shed, fstats.expired
     );
     println!("faults observed: {observed} armed site checks, {injected} injected");

@@ -17,10 +17,14 @@ use crate::faults::{self, FaultPlan, FaultSpec};
 use crate::formats::mm;
 use crate::gen::{rmat, RmatParams};
 use crate::kernels::{run_all_versions, run_smash};
+use crate::net::frame::{self, Reply, WireJob, WireOperand};
+use crate::net::{spray, Client, NetServer, NetServerConfig, SprayConfig, SPRAY_SCHEMA_VERSION};
 use crate::report::bar_chart;
-use crate::spgemm::{AccumMode, AccumSpec, BandSpec, Dataflow, SemiringKind};
+use crate::spgemm::{spgemm_semiring, AccumMode, AccumSpec, BandSpec, Dataflow, SemiringKind};
+use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
+use std::time::Duration;
 
 /// Parsed flag map: `--key value` and bare `--flag` both supported.
 pub struct Args {
@@ -72,7 +76,7 @@ impl Args {
 pub const USAGE: &str = "\
 smash — SMASH SpGEMM reproduction (PIUMA simulator + JAX/Pallas AOT runtime)
 
-USAGE: smash <tables|figures|run|gcn|gen|serve|tune|help> [flags]
+USAGE: smash <tables|figures|run|gcn|gen|serve|client|spray|tune|help> [flags]
 
   tables  [--id 1.1|1.2|6.1|6.2|6.4|6.5|6.6|6.7] [--scale small|full|full-mild] [--seed N]
   figures [--id 1.1|6.1|6.3|6.4] [--scale small|full|full-mild]
@@ -110,7 +114,35 @@ USAGE: smash <tables|figures|run|gcn|gen|serve|tune|help> [flags]
           numeric_row|drain|schedule; kinds panic|delay|delay<ms>; an
           omitted nth is derived from --fault-seed) — injected failures
           are contained as typed failed responses and summarized in the
-          `failed jobs:` / `faults observed:` lines
+          `failed jobs:` / `faults observed:` lines; --listen HOST:PORT
+          skips the demo burst and serves the coordinator over TCP
+          instead — length-prefixed binary frames carrying inline CSR
+          payloads or registered-pair ids, every ServeError crossing the
+          wire typed and lossless (extra listen flags: [--queue-depth 16]
+          [--max-queued N] [--read-timeout-ms 30000] [--max-frame-mb 64];
+          SMASH_INJECT / SMASH_FAULT_SEED in the environment arm the
+          fault plane with the same specs as --inject)
+  client  --addr HOST:PORT [--jobs 4] [--threads 2] [--log2n 8]
+          [--edges 4000] [--seed N] [--inline] [--deadline-ms N]
+          [--accum adaptive|dense|hash|merge|auto] [--semiring arith|
+          bool|minplus|maxtimes] [--json]
+          — register an R-MAT pair over the wire (or --inline to ship
+          full CSR payloads with every job), submit a burst, harvest
+          replies in completion order, and check every served product
+          bitwise against the in-process serial oracle; exits nonzero
+          on divergence or protocol error (typed contained job failures
+          are reported but do not fail the run)
+  spray   --addr HOST:PORT [--count 50] [--duration-ms 5000] [--rate R]
+          [--window 8] [--reuse-pct 80] [--semirings arith,bool,...]
+          [--accums adaptive,dense,...] [--threads 2] [--deadline-ms N]
+          [--log2n 7] [--edges 1500] [--seed N] [--out report.json]
+          — load generator: replay a deterministic synthetic traffic mix
+          (semiring mix, accum-spec mix, registered-pair reuse ratio,
+          offered --rate or closed-loop at --window) against a listening
+          server and report p50/p90/p99 latency, throughput, and
+          ok/shed/expired/failed counts; --out writes the
+          schema-versioned JSON report CI archives; --count 0 switches
+          to --duration-ms pacing
   tune    [--smoke] [--out report.json] [--threads 4] [--iters N] [--seed N]
           — sweep the adaptive accumulator threshold (powers-of-two
           fractions of b.cols, forced dense/hash/merge endpoints, the
@@ -140,6 +172,8 @@ pub fn dispatch(argv: Vec<String>) -> Result<()> {
         "gcn" => cmd_gcn(&args),
         "gen" => cmd_gen(&args),
         "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
+        "spray" => cmd_spray(&args),
         "tune" => cmd_tune(&args),
         "graph" => cmd_graph(&args),
         "die" => cmd_die(&args),
@@ -370,6 +404,9 @@ fn cmd_gen(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    if let Some(addr) = args.get("listen") {
+        return cmd_serve_listen(args, addr);
+    }
     let jobs = args.get_u64("jobs", 8)? as usize;
     let workers = args.get_u64("workers", 4)? as usize;
     let threads = args.get_u64("threads", 4)? as usize;
@@ -594,8 +631,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // install).
     let fstats = coord.fault_stats();
     let (injected, observed) = faults::stats();
+    // "shed: " / "expired: " is the one observable vocabulary shared with
+    // the example summary and the spray report, so every CI leg greps the
+    // same markers.
     println!(
-        "failed jobs: {failed} ({} shed at admission, {} deadline-expired)",
+        "failed jobs: {failed} (shed: {} at admission, expired: {} past deadline)",
         fstats.shed, fstats.expired
     );
     println!("faults observed: {observed} armed site checks, {injected} injected");
@@ -687,6 +727,325 @@ fn parse_fault_flags(args: &Args) -> Result<Option<FaultPlan>> {
         );
     }
     Ok(Some(plan))
+}
+
+/// `serve --listen ADDR`: put the coordinator on the wire. Binds a TCP
+/// listener (port 0 lets the OS pick; the bound address is printed on the
+/// load-bearing "listening on" line harnesses parse), arms the fault
+/// plane from `--inject` or the `SMASH_INJECT` environment, and serves
+/// until killed.
+fn cmd_serve_listen(args: &Args, addr: &str) -> Result<()> {
+    let workers = args.get_u64("workers", 4)? as usize;
+    let queue_depth = args.get_u64("queue-depth", 16)? as usize;
+    let max_queued = args.get_u64("max-queued", 0)? as usize;
+    let read_timeout_ms = args.get_u64("read-timeout-ms", 30_000)?;
+    let max_frame_mb = args.get_u64("max-frame-mb", 64)? as usize;
+    let max_resident_bytes = match args.get_u64("max-resident-mb", 0)? as usize {
+        0 => usize::MAX,
+        mb => mb << 20,
+    };
+    // Fault plane: --inject flags, or SMASH_INJECT / SMASH_FAULT_SEED in
+    // the environment — the latter is how the CI loopback chaos leg arms
+    // a background server it only controls through its environment.
+    let mut fault_plan = parse_fault_flags(args)?;
+    if fault_plan.is_none() {
+        let fault_seed: u64 = std::env::var("SMASH_FAULT_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0);
+        if let Ok(specs) = std::env::var("SMASH_INJECT") {
+            let mut plan = FaultPlan::seeded(fault_seed);
+            for spec in specs.split(',') {
+                plan = plan.with(
+                    FaultSpec::parse(spec, fault_seed)
+                        .with_context(|| format!("bad SMASH_INJECT spec `{spec}`"))?,
+                );
+            }
+            fault_plan = Some(plan);
+        }
+    }
+    if let Some(plan) = fault_plan {
+        println!("fault injection armed: {}", plan.describe());
+        faults::install(plan);
+    }
+    let server = NetServer::start(
+        addr,
+        NetServerConfig {
+            server: ServerConfig {
+                workers,
+                queue_depth,
+                max_resident_bytes,
+                max_queued_jobs: if max_queued == 0 { usize::MAX } else { max_queued },
+                ..ServerConfig::default()
+            },
+            read_timeout: Duration::from_millis(read_timeout_ms),
+            max_frame_bytes: max_frame_mb << 20,
+        },
+    )
+    .with_context(|| format!("cannot bind --listen {addr}"))?;
+    println!("listening on {}", server.local_addr());
+    println!(
+        "serving with {workers} workers (queue depth {queue_depth}, admission bound {}, \
+         read timeout {read_timeout_ms} ms, max frame {max_frame_mb} MiB); ^C to stop",
+        if max_queued == 0 {
+            "unbounded".to_string()
+        } else {
+            max_queued.to_string()
+        },
+    );
+    // Serve until the process is killed; `server` must stay alive or its
+    // threads would be shut down.
+    loop {
+        std::thread::park();
+    }
+}
+
+/// `client --addr HOST:PORT`: one scripted session covering the three
+/// wire verbs — register (ship the pair once, keep ids), submit (burst),
+/// get (harvest completions) — with every served product checked bitwise
+/// against the in-process serial oracle.
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr = args.get("addr").context("--addr host:port is required")?;
+    let jobs = args.get_u64("jobs", 4)? as usize;
+    let threads = args.get_u64("threads", 2)? as usize;
+    let log2n = args.get_u64("log2n", 8)? as u32;
+    let edges = args.get_u64("edges", 4_000)? as usize;
+    let seed = args.get_u64("seed", 0xC11E)?;
+    let inline = args.get("inline").is_some();
+    let deadline_ms = match args.get("deadline-ms") {
+        None => None,
+        Some(_) => Some(args.get_u64("deadline-ms", 0)?),
+    };
+    let accum = parse_accum_flags(args)?;
+    let semiring = match args.get("semiring") {
+        None => SemiringKind::Arithmetic,
+        Some(s) => SemiringKind::parse(s)
+            .with_context(|| format!("unknown --semiring `{s}` (arith|bool|minplus|maxtimes)"))?,
+    };
+    let json_out = args.get("json").is_some();
+
+    let a = rmat(&RmatParams::new(log2n, edges, seed ^ 0xA));
+    let b = rmat(&RmatParams::new(log2n, edges, seed ^ 0xB));
+    let mut client = Client::connect(addr).with_context(|| format!("cannot connect to {addr}"))?;
+    client.ping().context("ping failed")?;
+    println!("ping ok: {addr} speaks wire protocol v{}", frame::VERSION);
+    let (op_a, op_b) = if inline {
+        println!(
+            "shipping inline CSR payloads with every job ({} input nnz per submit)",
+            a.nnz() + b.nnz()
+        );
+        (WireOperand::Inline(a.clone()), WireOperand::Inline(b.clone()))
+    } else {
+        let id_a = client.register("client-A", &a).context("register A failed")?;
+        let id_b = client.register("client-B", &b).context("register B failed")?;
+        println!(
+            "registered pair over wire: A={id_a} B={id_b} ({} input nnz resident server-side; \
+             the burst ships ids only)",
+            a.nnz() + b.nnz()
+        );
+        (
+            WireOperand::Registered(id_a),
+            WireOperand::Registered(id_b),
+        )
+    };
+    for _ in 0..jobs {
+        client
+            .submit(WireJob {
+                a: op_a.clone(),
+                b: op_b.clone(),
+                dataflow: Dataflow::ParGustavson {
+                    threads,
+                    accum,
+                    semiring,
+                },
+                deadline_ms,
+            })
+            .context("submit failed")?;
+    }
+    // The "get" phase: harvest every reply in completion order; check
+    // each product bitwise against the serial oracle under the same
+    // semiring.
+    let oracle = spgemm_semiring(&a, &b, semiring);
+    let mut ok = 0usize;
+    let mut matched = 0usize;
+    let mut failed = 0usize;
+    let mut plans_computed = 0usize;
+    let mut plans_reused = 0usize;
+    let mut detail: Vec<(u64, u64, bool)> = Vec::new();
+    for _ in 0..jobs {
+        match client.recv().context("receive failed")? {
+            Reply::JobOk {
+                job,
+                wall_us,
+                symbolic_reused,
+                c,
+                ..
+            } => {
+                ok += 1;
+                if c == oracle {
+                    matched += 1;
+                }
+                match symbolic_reused {
+                    Some(false) => plans_computed += 1,
+                    Some(true) => plans_reused += 1,
+                    None => {}
+                }
+                detail.push((job, wall_us, true));
+            }
+            Reply::JobErr {
+                job,
+                wall_us,
+                error,
+                ..
+            } => {
+                failed += 1;
+                println!("job {job} failed (contained over wire): {error}");
+                detail.push((job, wall_us, false));
+            }
+            Reply::Rejected { error, .. } => {
+                failed += 1;
+                println!("job rejected at admission: {error}");
+            }
+            Reply::Error { detail } => bail!("protocol error from server: {detail}"),
+            other => bail!("unexpected reply while draining: {other:?}"),
+        }
+    }
+    println!("bitwise-equal to serial oracle: {matched}/{ok}");
+    println!(
+        "wire burst: {ok} ok, {failed} failed; plan provenance: {plans_computed} computed, \
+         {plans_reused} reused"
+    );
+    if json_out {
+        let json = Json::Obj(vec![
+            ("schema".into(), Json::u64(1)),
+            ("kind".into(), Json::Str("client_burst".into())),
+            ("addr".into(), Json::Str(addr.to_string())),
+            ("jobs".into(), Json::u64(jobs as u64)),
+            ("ok".into(), Json::u64(ok as u64)),
+            ("failed".into(), Json::u64(failed as u64)),
+            ("oracle_matched".into(), Json::u64(matched as u64)),
+            ("plans_computed".into(), Json::u64(plans_computed as u64)),
+            ("plans_reused".into(), Json::u64(plans_reused as u64)),
+            ("semiring".into(), Json::Str(semiring.name().into())),
+            ("accum".into(), Json::Str(accum.describe())),
+            (
+                "jobs_detail".into(),
+                Json::Arr(
+                    detail
+                        .iter()
+                        .map(|(job, wall_us, job_ok)| {
+                            Json::Obj(vec![
+                                ("job".into(), Json::u64(*job)),
+                                ("wall_us".into(), Json::u64(*wall_us)),
+                                ("ok".into(), Json::Bool(*job_ok)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        println!("{}", json.to_string_pretty());
+    }
+    if matched != ok {
+        bail!(
+            "{} served product(s) diverged from the serial oracle",
+            ok - matched
+        );
+    }
+    Ok(())
+}
+
+/// `spray --addr HOST:PORT`: the load generator. Parses the traffic-mix
+/// flags into a [`SprayConfig`], runs one session, prints the
+/// percentile/outcome report, and optionally writes the schema-versioned
+/// JSON artifact.
+fn cmd_spray(args: &Args) -> Result<()> {
+    let addr = args.get("addr").context("--addr host:port is required")?;
+    let count = args.get_u64("count", 50)? as usize;
+    let duration_ms = args.get_u64("duration-ms", 5_000)?;
+    let rate: f64 = match args.get("rate") {
+        None => 0.0,
+        Some(r) => r
+            .parse()
+            .with_context(|| format!("bad --rate value `{r}`"))?,
+    };
+    let window = args.get_u64("window", 8)? as usize;
+    let log2n = args.get_u64("log2n", 7)? as u32;
+    let edges = args.get_u64("edges", 1_500)? as usize;
+    let seed = args.get_u64("seed", 0x5EED)?;
+    let reuse_pct = args.get_u64("reuse-pct", 80)? as u32;
+    if reuse_pct > 100 {
+        bail!("--reuse-pct must be in 0..=100 (got {reuse_pct})");
+    }
+    let threads = args.get_u64("threads", 2)? as usize;
+    let deadline_ms = match args.get("deadline-ms") {
+        None => None,
+        Some(_) => Some(args.get_u64("deadline-ms", 0)?),
+    };
+    let semirings = match args.get("semirings") {
+        None => vec![SemiringKind::Arithmetic],
+        Some(list) => list
+            .split(',')
+            .map(|s| {
+                SemiringKind::parse(s.trim()).with_context(|| {
+                    format!("unknown semiring `{s}` in --semirings (arith|bool|minplus|maxtimes)")
+                })
+            })
+            .collect::<Result<Vec<_>>>()?,
+    };
+    let accums = match args.get("accums") {
+        None => vec![AccumSpec::default()],
+        Some(list) => list
+            .split(',')
+            .map(|s| {
+                AccumSpec::parse(s.trim()).with_context(|| {
+                    format!("unknown accum `{s}` in --accums (adaptive|dense|hash|merge|auto)")
+                })
+            })
+            .collect::<Result<Vec<_>>>()?,
+    };
+    let cfg = SprayConfig {
+        addr: addr.to_string(),
+        count,
+        duration: Duration::from_millis(duration_ms),
+        rate,
+        window,
+        log2n,
+        edges,
+        seed,
+        reuse_pct,
+        semirings,
+        accums,
+        threads,
+        deadline_ms,
+    };
+    println!(
+        "spraying {addr}: {}, window {window}, {reuse_pct}% pair reuse, {} semiring(s), \
+         {} accum spec(s){}",
+        if count > 0 {
+            format!("{count} jobs")
+        } else {
+            format!("{duration_ms} ms of traffic")
+        },
+        cfg.semirings.len(),
+        cfg.accums.len(),
+        if rate > 0.0 {
+            format!(", offered rate {rate:.1}/s")
+        } else {
+            ", closed-loop".to_string()
+        },
+    );
+    let report = spray(&cfg).context("spray run failed")?;
+    println!("{}", report.render());
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, report.to_json().to_string_pretty())
+            .with_context(|| format!("cannot write --out {out}"))?;
+        println!("wrote spray report {out} (schema v{SPRAY_SCHEMA_VERSION})");
+    }
+    if report.counts.completed() == 0 {
+        bail!("no requests completed — is the server reachable?");
+    }
+    Ok(())
 }
 
 fn cmd_tune(args: &Args) -> Result<()> {

@@ -72,7 +72,7 @@ use crate::spgemm::{
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -962,6 +962,44 @@ impl Coordinator {
             return None;
         }
         let r = self.rx_done.recv().expect("worker pool hung up");
+        Some(self.note_collected(r))
+    }
+
+    /// Non-blocking [`Coordinator::collect_one`]: `None` when nothing is
+    /// outstanding *or* when jobs are outstanding but none has completed
+    /// yet. The drain primitive for callers that interleave collection
+    /// with other work — the network pump alternates between accepting
+    /// commands and draining completions in completion order.
+    pub fn try_collect_one(&mut self) -> Option<Response> {
+        if self.pending == 0 {
+            return None;
+        }
+        match self.rx_done.try_recv() {
+            Ok(r) => Some(self.note_collected(r)),
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => panic!("worker pool hung up"),
+        }
+    }
+
+    /// [`Coordinator::collect_one`] with a bounded wait: blocks up to
+    /// `timeout` for the next completion, then gives up with `None`
+    /// (which also covers "nothing outstanding", as in `collect_one`).
+    pub fn collect_timeout(&mut self, timeout: Duration) -> Option<Response> {
+        if self.pending == 0 {
+            return None;
+        }
+        match self.rx_done.recv_timeout(timeout) {
+            Ok(r) => Some(self.note_collected(r)),
+            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Disconnected) => panic!("worker pool hung up"),
+        }
+    }
+
+    /// Fold one completed response into the pending count and the
+    /// aggregate fault/failure accounting — the one bookkeeping path
+    /// shared by every collect flavor, so the counters cannot diverge by
+    /// collection strategy.
+    fn note_collected(&mut self, r: Response) -> Response {
         self.pending -= 1;
         if let Some(e) = &r.error {
             self.faults.failed += 1;
@@ -973,7 +1011,7 @@ impl Coordinator {
             self.faults.observed += t.faults.observed;
             self.faults.injected += t.faults.injected;
         }
-        Some(r)
+        r
     }
 
     /// Aggregate fault/overload counters for this coordinator's lifetime:

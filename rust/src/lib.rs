@@ -48,6 +48,7 @@ pub mod spgemm;
 pub mod sim;
 pub mod kernels;
 pub mod coordinator;
+pub mod net;
 pub mod runtime;
 pub mod bench;
 pub mod report;

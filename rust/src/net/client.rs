@@ -1,0 +1,186 @@
+//! Blocking TCP client for the network serving layer — the library under
+//! `smash client` and `smash spray`.
+//!
+//! A [`Client`] is a single framed connection with a monotonically
+//! increasing correlation tag. Replies arrive in *completion* order, not
+//! submission order, so callers either use the lock-step helpers
+//! ([`Client::ping`], [`Client::register`]) while nothing else is in
+//! flight, or [`Client::split`] into an independent sender/receiver pair
+//! for pipelined load (the spray driver).
+
+use std::io::{self, BufReader, BufWriter};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::coordinator::ServeError;
+use crate::formats::Csr;
+use crate::net::frame::{self, FrameError, Reply, Request, WireJob};
+
+/// Client-side failure: transport, protocol, or a typed serving
+/// rejection surfaced by a lock-step helper.
+#[derive(Clone, Debug, PartialEq)]
+pub enum NetError {
+    /// Transport-level I/O failure, stringified.
+    Io(String),
+    /// Typed protocol failure from the framing layer.
+    Frame(FrameError),
+    /// The server closed the connection.
+    Closed,
+    /// The server rejected the request with its own typed error.
+    Rejected(ServeError),
+    /// The server answered with a reply kind the request does not admit.
+    Unexpected(String),
+}
+
+impl std::fmt::Display for NetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NetError::Io(e) => write!(f, "i/o error: {e}"),
+            NetError::Frame(e) => write!(f, "protocol error: {e}"),
+            NetError::Closed => write!(f, "server closed the connection"),
+            NetError::Rejected(e) => write!(f, "rejected by server: {e}"),
+            NetError::Unexpected(what) => write!(f, "unexpected reply: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
+
+impl From<io::Error> for NetError {
+    fn from(e: io::Error) -> Self {
+        NetError::Io(e.to_string())
+    }
+}
+
+impl From<FrameError> for NetError {
+    fn from(e: FrameError) -> Self {
+        NetError::Frame(e)
+    }
+}
+
+/// Write half: owns the socket's send buffer and the tag counter.
+pub struct ClientSender {
+    writer: BufWriter<TcpStream>,
+    next_tag: u64,
+}
+
+/// Read half: owns the socket's receive buffer.
+pub struct ClientReceiver {
+    reader: BufReader<TcpStream>,
+    max_frame_bytes: usize,
+}
+
+/// One framed connection to a `smash serve --listen` server.
+pub struct Client {
+    tx: ClientSender,
+    rx: ClientReceiver,
+}
+
+impl Client {
+    /// Connect and disable Nagle (requests are small; latency matters).
+    pub fn connect(addr: &str) -> io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        let writer = BufWriter::new(stream.try_clone()?);
+        Ok(Client {
+            tx: ClientSender {
+                writer,
+                next_tag: 0,
+            },
+            rx: ClientReceiver {
+                reader: BufReader::new(stream),
+                max_frame_bytes: frame::DEFAULT_MAX_FRAME_BYTES,
+            },
+        })
+    }
+
+    /// Bound every receive; `None` blocks forever (the default).
+    pub fn set_read_timeout(&self, timeout: Option<Duration>) -> io::Result<()> {
+        self.rx.reader.get_ref().set_read_timeout(timeout)
+    }
+
+    /// Liveness + version probe (a [`FrameError::BadVersion`] from a
+    /// mismatched server surfaces here).
+    pub fn ping(&mut self) -> Result<(), NetError> {
+        let tag = self.tx.send(|tag| Request::Ping { tag })?;
+        match self.rx.recv()? {
+            Reply::Pong { tag: t } if t == tag => Ok(()),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    /// Register an inline CSR; returns the server-resident matrix id for
+    /// later registered-reference submits (a resident burst then ships
+    /// only ids, never payloads).
+    pub fn register(&mut self, name: &str, csr: &Csr) -> Result<u64, NetError> {
+        let tag = self.tx.send(|tag| Request::Register {
+            tag,
+            name: name.to_string(),
+            csr: csr.clone(),
+        })?;
+        match self.rx.recv()? {
+            Reply::Registered { tag: t, id } if t == tag => Ok(id),
+            Reply::Rejected { tag: t, error } if t == tag => Err(NetError::Rejected(error)),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    /// Fire one job without waiting; returns its correlation tag. Harvest
+    /// with [`Client::recv`] — replies come back in completion order.
+    pub fn submit(&mut self, job: WireJob) -> Result<u64, NetError> {
+        self.tx.send(|tag| Request::Submit { tag, job })
+    }
+
+    /// Next reply in completion order.
+    pub fn recv(&mut self) -> Result<Reply, NetError> {
+        self.rx.recv()
+    }
+
+    /// Split into independent halves so one thread can keep submitting
+    /// while another harvests completions.
+    pub fn split(self) -> (ClientSender, ClientReceiver) {
+        (self.tx, self.rx)
+    }
+}
+
+impl ClientSender {
+    fn send(&mut self, build: impl FnOnce(u64) -> Request) -> Result<u64, NetError> {
+        self.next_tag += 1;
+        let tag = self.next_tag;
+        frame::write_request(&mut self.writer, &build(tag))?;
+        Ok(tag)
+    }
+
+    /// Fire one job without waiting; returns its correlation tag.
+    pub fn submit(&mut self, job: WireJob) -> Result<u64, NetError> {
+        self.send(|tag| Request::Submit { tag, job })
+    }
+}
+
+impl ClientReceiver {
+    /// Bound every receive — a timed-out receive surfaces as
+    /// [`NetError::Frame`]`(`[`FrameError::IdleTimeout`]`)`, which pollers
+    /// treat as "check stop conditions, then retry".
+    pub fn set_read_timeout(&self, timeout: Option<Duration>) -> io::Result<()> {
+        self.reader.get_ref().set_read_timeout(timeout)
+    }
+
+    /// Next reply in completion order. [`NetError::Closed`] on clean EOF.
+    pub fn recv(&mut self) -> Result<Reply, NetError> {
+        match frame::read_reply(&mut self.reader, self.max_frame_bytes)? {
+            Some(reply) => Ok(reply),
+            None => Err(NetError::Closed),
+        }
+    }
+}
+
+fn unexpected(reply: &Reply) -> NetError {
+    NetError::Unexpected(match reply {
+        Reply::Pong { .. } => "Pong".to_string(),
+        Reply::Registered { .. } => "Registered".to_string(),
+        Reply::Rejected { .. } => "Rejected".to_string(),
+        Reply::JobOk { .. } => "JobOk".to_string(),
+        Reply::JobErr { .. } => "JobErr".to_string(),
+        Reply::Error { detail } => format!("protocol report: {detail}"),
+    })
+}

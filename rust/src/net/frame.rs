@@ -1,0 +1,1107 @@
+//! Length-prefixed binary wire protocol for the network serving layer.
+//!
+//! Every frame on the socket is `MAGIC (4) | VERSION (u16 LE) | payload
+//! length (u32 LE) | payload`, and every payload is one [`Request`] or one
+//! [`Reply`] whose first byte is a message-kind tag. All integers are
+//! little-endian; strings are `u32` length + UTF-8 bytes; a CSR matrix is
+//! `rows, cols, nnz` as `u64` followed by `row_ptr` (`u64 × rows+1`),
+//! `col_idx` (`u32 × nnz`), and `data` (`f64 × nnz`).
+//!
+//! The failure vocabulary is split in two, deliberately:
+//!
+//! * **Serving failures** are the coordinator's own [`ServeError`] taxonomy,
+//!   carried losslessly on the wire (every variant round-trips, including
+//!   `QueueFull.retry_after_jobs` — the retry-after contract survives the
+//!   network hop). They ride in [`Reply::Rejected`] (admission-time, the job
+//!   never ran) and [`Reply::JobErr`] (the job ran and failed contained).
+//! * **Protocol failures** are [`FrameError`]s: garbage headers, version
+//!   skew, oversized or truncated frames, and malformed payloads. Only
+//!   [`FrameError::Malformed`] is recoverable — the frame was fully consumed
+//!   so the stream is still aligned and the connection survives; everything
+//!   else desynchronizes the stream and the peer closes after reporting
+//!   [`Reply::Error`].
+
+use std::io::{self, Read, Write};
+
+use crate::coordinator::{MatrixId, ServeError};
+use crate::formats::Csr;
+use crate::spgemm::{AccumMode, AccumSpec, BandSpec, Dataflow, SemiringKind};
+
+/// Frame preamble: `b"SMSH"`.
+pub const MAGIC: [u8; 4] = *b"SMSH";
+/// Wire-protocol version carried in every frame header. Peers reject
+/// mismatches with [`FrameError::BadVersion`] instead of misparsing.
+pub const VERSION: u16 = 1;
+/// Bytes in the fixed frame header (magic + version + payload length).
+pub const HEADER_LEN: usize = 10;
+/// Default per-frame size guard. Large enough for the CSR payloads the
+/// examples and CI legs ship, small enough that a hostile length field
+/// cannot make the server allocate unbounded memory.
+pub const DEFAULT_MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// Typed protocol-level failure. Everything a peer can get wrong *below*
+/// the serving layer decodes to one of these instead of a panic or a
+/// silent desync.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FrameError {
+    /// The first four header bytes were not [`MAGIC`].
+    BadMagic([u8; 4]),
+    /// The header's version field does not match [`VERSION`].
+    BadVersion(u16),
+    /// The header announced a payload larger than the configured guard.
+    Oversized { len: u64, max: u64 },
+    /// The stream ended (or timed out) mid-frame.
+    Truncated,
+    /// The frame arrived whole but its payload failed to decode. The
+    /// stream is still frame-aligned, so this is the one recoverable
+    /// variant: the peer answers [`Reply::Error`] and keeps the
+    /// connection.
+    Malformed(String),
+    /// A read timed out with no bytes consumed — an idle connection, not
+    /// a protocol violation. Servers use this to reap idle connections
+    /// that have no jobs in flight.
+    IdleTimeout,
+    /// Any other I/O failure, stringified.
+    Io(String),
+}
+
+impl FrameError {
+    /// True when the stream is still frame-aligned and the connection can
+    /// keep serving after reporting the error.
+    pub fn recoverable(&self) -> bool {
+        matches!(self, FrameError::Malformed(_))
+    }
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::BadMagic(m) => write!(f, "bad frame magic {m:?}"),
+            FrameError::BadVersion(v) => {
+                write!(f, "unsupported protocol version {v} (want {VERSION})")
+            }
+            FrameError::Oversized { len, max } => {
+                write!(f, "frame of {len} bytes exceeds the {max}-byte guard")
+            }
+            FrameError::Truncated => write!(f, "stream ended mid-frame"),
+            FrameError::Malformed(why) => write!(f, "malformed payload: {why}"),
+            FrameError::IdleTimeout => write!(f, "idle read timeout"),
+            FrameError::Io(e) => write!(f, "i/o error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+fn malformed(why: impl Into<String>) -> FrameError {
+    FrameError::Malformed(why.into())
+}
+
+// ---------------------------------------------------------------------------
+// Messages
+// ---------------------------------------------------------------------------
+
+/// A job operand on the wire: either a [`MatrixId`] the server already
+/// holds (a resident-pair burst ships only ids — the SpArch framing
+/// contract) or a full inline CSR payload.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireOperand {
+    Registered(u64),
+    Inline(Csr),
+}
+
+/// One multiply request as it crosses the wire: two operands, the full
+/// [`Dataflow`] (including per-job [`AccumSpec`] / [`SemiringKind`] /
+/// [`BandSpec`] knobs), and an optional deadline budget in milliseconds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireJob {
+    pub a: WireOperand,
+    pub b: WireOperand,
+    pub dataflow: Dataflow,
+    pub deadline_ms: Option<u64>,
+}
+
+/// Client → server messages. Every request carries a client-chosen `tag`
+/// echoed in the matching reply, so a client can correlate out-of-order
+/// completions without trusting server job ids.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Liveness / version probe.
+    Ping { tag: u64 },
+    /// Register an inline CSR under a client-side name; the reply carries
+    /// the server's [`MatrixId`] for later [`WireOperand::Registered`]
+    /// submits.
+    Register { tag: u64, name: String, csr: Csr },
+    /// Submit one multiply job.
+    Submit { tag: u64, job: WireJob },
+}
+
+/// Server → client messages.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Reply {
+    Pong { tag: u64 },
+    /// The registration succeeded; `id` is the resident [`MatrixId`].
+    Registered { tag: u64, id: u64 },
+    /// The request was rejected before any job ran (admission control,
+    /// validation, unknown ids). Carries the coordinator's own error,
+    /// losslessly — `QueueFull.retry_after_jobs` tells the client exactly
+    /// how many completions to await before resubmitting.
+    Rejected { tag: u64, error: ServeError },
+    /// A submitted job completed successfully.
+    JobOk {
+        tag: u64,
+        /// Server-side [`JobId`](crate::coordinator::JobId), for log
+        /// correlation against the server.
+        job: u64,
+        /// Worker wall time in microseconds.
+        wall_us: u64,
+        /// Index of the worker thread that served the job.
+        worker: u64,
+        /// Plan-cache provenance, verbatim from
+        /// [`Response`](crate::coordinator::Response)`.symbolic_reused`.
+        symbolic_reused: Option<bool>,
+        /// Registered operands the job resolved, in (a, b) order.
+        registered: Vec<u64>,
+        /// The product.
+        c: Csr,
+    },
+    /// A submitted job ran and failed contained — deadline, panic
+    /// quarantine, poisoned plan. The error is the typed [`ServeError`].
+    JobErr {
+        tag: u64,
+        job: u64,
+        wall_us: u64,
+        error: ServeError,
+    },
+    /// Protocol-level report (no tag: the offending frame may not have
+    /// decoded far enough to have one). Sent before the server closes a
+    /// desynchronized connection, or in place of a reply when a
+    /// well-formed frame held a malformed payload (connection survives).
+    Error { detail: String },
+}
+
+// ---------------------------------------------------------------------------
+// Primitive encoder / decoder
+// ---------------------------------------------------------------------------
+
+/// Append-only little-endian payload builder.
+#[derive(Default)]
+pub struct Enc {
+    pub buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new() -> Self {
+        Enc::default()
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    fn opt_u64(&mut self, v: Option<u64>) {
+        match v {
+            None => self.u8(0),
+            Some(x) => {
+                self.u8(1);
+                self.u64(x);
+            }
+        }
+    }
+
+    fn opt_bool(&mut self, v: Option<bool>) {
+        self.u8(match v {
+            None => 0,
+            Some(false) => 1,
+            Some(true) => 2,
+        });
+    }
+
+    fn csr(&mut self, c: &Csr) {
+        self.u64(c.rows as u64);
+        self.u64(c.cols as u64);
+        self.u64(c.nnz() as u64);
+        for &p in &c.row_ptr {
+            self.u64(p as u64);
+        }
+        for &j in &c.col_idx {
+            self.u32(j);
+        }
+        for &v in &c.data {
+            self.f64(v);
+        }
+    }
+}
+
+/// Bounds-checked little-endian payload reader. Every failure is a
+/// [`FrameError::Malformed`] (recoverable: the frame itself arrived whole).
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Dec { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], FrameError> {
+        if self.remaining() < n {
+            return Err(malformed(format!(
+                "wanted {n} more bytes, frame has {}",
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, FrameError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, FrameError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, FrameError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn f64(&mut self) -> Result<f64, FrameError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn str(&mut self) -> Result<String, FrameError> {
+        let n = self.u32()? as usize;
+        let b = self.take(n)?;
+        String::from_utf8(b.to_vec()).map_err(|_| malformed("string is not UTF-8"))
+    }
+
+    fn opt_u64(&mut self) -> Result<Option<u64>, FrameError> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.u64()?)),
+            t => Err(malformed(format!("bad Option<u64> tag {t}"))),
+        }
+    }
+
+    fn opt_bool(&mut self) -> Result<Option<bool>, FrameError> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(false)),
+            2 => Ok(Some(true)),
+            t => Err(malformed(format!("bad Option<bool> tag {t}"))),
+        }
+    }
+
+    fn csr(&mut self) -> Result<Csr, FrameError> {
+        let rows = self.u64()? as usize;
+        let cols = self.u64()? as usize;
+        let nnz = self.u64()? as usize;
+        // Bound every allocation by bytes actually present in the frame:
+        // a hostile header cannot make us reserve memory we never received.
+        let need = rows
+            .checked_add(1)
+            .and_then(|r| r.checked_mul(8))
+            .and_then(|a| nnz.checked_mul(12).map(|b| (a, b)))
+            .and_then(|(a, b)| a.checked_add(b))
+            .ok_or_else(|| malformed("CSR dimensions overflow"))?;
+        if need > self.remaining() {
+            return Err(malformed(format!(
+                "CSR body claims {need} bytes but frame has {}",
+                self.remaining()
+            )));
+        }
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        for _ in 0..=rows {
+            row_ptr.push(self.u64()? as usize);
+        }
+        let mut col_idx = Vec::with_capacity(nnz);
+        for _ in 0..nnz {
+            col_idx.push(self.u32()?);
+        }
+        let mut data = Vec::with_capacity(nnz);
+        for _ in 0..nnz {
+            data.push(self.f64()?);
+        }
+        if row_ptr.last().copied() != Some(nnz) {
+            return Err(malformed("CSR row_ptr does not end at nnz"));
+        }
+        Ok(Csr {
+            rows,
+            cols,
+            row_ptr,
+            col_idx,
+            data,
+        })
+    }
+
+    /// Reject trailing bytes — a decoded message must consume its whole
+    /// frame, otherwise the peers disagree about the encoding.
+    fn finish(self) -> Result<(), FrameError> {
+        if self.remaining() != 0 {
+            return Err(malformed(format!(
+                "{} trailing bytes after message",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Enum codecs
+// ---------------------------------------------------------------------------
+
+fn enc_serve_error(e: &mut Enc, err: &ServeError) {
+    match err {
+        ServeError::UnknownMatrix(id) => {
+            e.u8(0);
+            e.u64(id.0);
+        }
+        ServeError::ShapeMismatch { a_cols, b_rows } => {
+            e.u8(1);
+            e.u64(*a_cols as u64);
+            e.u64(*b_rows as u64);
+        }
+        ServeError::InvalidCsr { reason } => {
+            e.u8(2);
+            e.str(reason);
+        }
+        ServeError::QueueFull { retry_after_jobs } => {
+            e.u8(3);
+            e.u64(*retry_after_jobs as u64);
+        }
+        ServeError::DeadlineExceeded => e.u8(4),
+        ServeError::WorkerPanicked { stage, message } => {
+            e.u8(5);
+            e.str(stage);
+            e.str(message);
+        }
+        ServeError::PlanPoisoned => e.u8(6),
+    }
+}
+
+fn dec_serve_error(d: &mut Dec) -> Result<ServeError, FrameError> {
+    Ok(match d.u8()? {
+        0 => ServeError::UnknownMatrix(MatrixId(d.u64()?)),
+        1 => ServeError::ShapeMismatch {
+            a_cols: d.u64()? as usize,
+            b_rows: d.u64()? as usize,
+        },
+        2 => ServeError::InvalidCsr { reason: d.str()? },
+        3 => ServeError::QueueFull {
+            retry_after_jobs: d.u64()? as usize,
+        },
+        4 => ServeError::DeadlineExceeded,
+        5 => ServeError::WorkerPanicked {
+            stage: d.str()?,
+            message: d.str()?,
+        },
+        6 => ServeError::PlanPoisoned,
+        t => return Err(malformed(format!("unknown ServeError tag {t}"))),
+    })
+}
+
+fn enc_accum_mode(e: &mut Enc, m: AccumMode) {
+    e.u8(match m {
+        AccumMode::Adaptive => 0,
+        AccumMode::Dense => 1,
+        AccumMode::Hash => 2,
+        AccumMode::Merge => 3,
+    });
+}
+
+fn dec_accum_mode(d: &mut Dec) -> Result<AccumMode, FrameError> {
+    Ok(match d.u8()? {
+        0 => AccumMode::Adaptive,
+        1 => AccumMode::Dense,
+        2 => AccumMode::Hash,
+        3 => AccumMode::Merge,
+        t => return Err(malformed(format!("unknown AccumMode tag {t}"))),
+    })
+}
+
+fn enc_accum_spec(e: &mut Enc, s: &AccumSpec) {
+    match s {
+        AccumSpec::Fixed(m) => {
+            e.u8(0);
+            enc_accum_mode(e, *m);
+        }
+        AccumSpec::AdaptiveAt(t) => {
+            e.u8(1);
+            e.u64(*t);
+        }
+        AccumSpec::MergeAt(k) => {
+            e.u8(2);
+            e.u32(*k);
+        }
+        AccumSpec::Auto => e.u8(3),
+    }
+}
+
+fn dec_accum_spec(d: &mut Dec) -> Result<AccumSpec, FrameError> {
+    Ok(match d.u8()? {
+        0 => AccumSpec::Fixed(dec_accum_mode(d)?),
+        1 => AccumSpec::AdaptiveAt(d.u64()?),
+        2 => AccumSpec::MergeAt(d.u32()?),
+        3 => AccumSpec::Auto,
+        t => return Err(malformed(format!("unknown AccumSpec tag {t}"))),
+    })
+}
+
+fn enc_semiring(e: &mut Enc, s: SemiringKind) {
+    e.u8(match s {
+        SemiringKind::Arithmetic => 0,
+        SemiringKind::Boolean => 1,
+        SemiringKind::MinPlus => 2,
+        SemiringKind::MaxTimes => 3,
+    });
+}
+
+fn dec_semiring(d: &mut Dec) -> Result<SemiringKind, FrameError> {
+    Ok(match d.u8()? {
+        0 => SemiringKind::Arithmetic,
+        1 => SemiringKind::Boolean,
+        2 => SemiringKind::MinPlus,
+        3 => SemiringKind::MaxTimes,
+        t => return Err(malformed(format!("unknown SemiringKind tag {t}"))),
+    })
+}
+
+fn enc_band_spec(e: &mut Enc, b: &BandSpec) {
+    match b {
+        BandSpec::Cols(c) => {
+            e.u8(0);
+            e.u64(*c as u64);
+        }
+        BandSpec::Auto => e.u8(1),
+    }
+}
+
+fn dec_band_spec(d: &mut Dec) -> Result<BandSpec, FrameError> {
+    Ok(match d.u8()? {
+        0 => BandSpec::Cols(d.u64()? as usize),
+        1 => BandSpec::Auto,
+        t => return Err(malformed(format!("unknown BandSpec tag {t}"))),
+    })
+}
+
+fn enc_dataflow(e: &mut Enc, df: &Dataflow) {
+    match df {
+        Dataflow::Inner => e.u8(0),
+        Dataflow::Outer => e.u8(1),
+        Dataflow::RowWiseHeap => e.u8(2),
+        Dataflow::RowWiseHash => e.u8(3),
+        Dataflow::ParGustavson {
+            threads,
+            accum,
+            semiring,
+        } => {
+            e.u8(4);
+            e.u64(*threads as u64);
+            enc_accum_spec(e, accum);
+            enc_semiring(e, *semiring);
+        }
+        Dataflow::ParGustavsonBlocked {
+            threads,
+            accum,
+            semiring,
+            bands,
+        } => {
+            e.u8(5);
+            e.u64(*threads as u64);
+            enc_accum_spec(e, accum);
+            enc_semiring(e, *semiring);
+            enc_band_spec(e, bands);
+        }
+        Dataflow::ParGustavsonSpawn { threads } => {
+            e.u8(6);
+            e.u64(*threads as u64);
+        }
+    }
+}
+
+fn dec_dataflow(d: &mut Dec) -> Result<Dataflow, FrameError> {
+    Ok(match d.u8()? {
+        0 => Dataflow::Inner,
+        1 => Dataflow::Outer,
+        2 => Dataflow::RowWiseHeap,
+        3 => Dataflow::RowWiseHash,
+        4 => Dataflow::ParGustavson {
+            threads: d.u64()? as usize,
+            accum: dec_accum_spec(d)?,
+            semiring: dec_semiring(d)?,
+        },
+        5 => Dataflow::ParGustavsonBlocked {
+            threads: d.u64()? as usize,
+            accum: dec_accum_spec(d)?,
+            semiring: dec_semiring(d)?,
+            bands: dec_band_spec(d)?,
+        },
+        6 => Dataflow::ParGustavsonSpawn {
+            threads: d.u64()? as usize,
+        },
+        t => return Err(malformed(format!("unknown Dataflow tag {t}"))),
+    })
+}
+
+fn enc_operand(e: &mut Enc, op: &WireOperand) {
+    match op {
+        WireOperand::Registered(id) => {
+            e.u8(0);
+            e.u64(*id);
+        }
+        WireOperand::Inline(c) => {
+            e.u8(1);
+            e.csr(c);
+        }
+    }
+}
+
+fn dec_operand(d: &mut Dec) -> Result<WireOperand, FrameError> {
+    Ok(match d.u8()? {
+        0 => WireOperand::Registered(d.u64()?),
+        1 => WireOperand::Inline(d.csr()?),
+        t => return Err(malformed(format!("unknown operand tag {t}"))),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Message codecs
+// ---------------------------------------------------------------------------
+
+impl Request {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        match self {
+            Request::Ping { tag } => {
+                e.u8(0);
+                e.u64(*tag);
+            }
+            Request::Register { tag, name, csr } => {
+                e.u8(1);
+                e.u64(*tag);
+                e.str(name);
+                e.csr(csr);
+            }
+            Request::Submit { tag, job } => {
+                e.u8(2);
+                e.u64(*tag);
+                enc_operand(&mut e, &job.a);
+                enc_operand(&mut e, &job.b);
+                enc_dataflow(&mut e, &job.dataflow);
+                e.opt_u64(job.deadline_ms);
+            }
+        }
+        e.buf
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Request, FrameError> {
+        let mut d = Dec::new(buf);
+        let req = match d.u8()? {
+            0 => Request::Ping { tag: d.u64()? },
+            1 => Request::Register {
+                tag: d.u64()?,
+                name: d.str()?,
+                csr: d.csr()?,
+            },
+            2 => Request::Submit {
+                tag: d.u64()?,
+                job: WireJob {
+                    a: dec_operand(&mut d)?,
+                    b: dec_operand(&mut d)?,
+                    dataflow: dec_dataflow(&mut d)?,
+                    deadline_ms: d.opt_u64()?,
+                },
+            },
+            t => return Err(malformed(format!("unknown request kind {t}"))),
+        };
+        d.finish()?;
+        Ok(req)
+    }
+}
+
+impl Reply {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        match self {
+            Reply::Pong { tag } => {
+                e.u8(0);
+                e.u64(*tag);
+            }
+            Reply::Registered { tag, id } => {
+                e.u8(1);
+                e.u64(*tag);
+                e.u64(*id);
+            }
+            Reply::Rejected { tag, error } => {
+                e.u8(2);
+                e.u64(*tag);
+                enc_serve_error(&mut e, error);
+            }
+            Reply::JobOk {
+                tag,
+                job,
+                wall_us,
+                worker,
+                symbolic_reused,
+                registered,
+                c,
+            } => {
+                e.u8(3);
+                e.u64(*tag);
+                e.u64(*job);
+                e.u64(*wall_us);
+                e.u64(*worker);
+                e.opt_bool(*symbolic_reused);
+                e.u32(registered.len() as u32);
+                for id in registered {
+                    e.u64(*id);
+                }
+                e.csr(c);
+            }
+            Reply::JobErr {
+                tag,
+                job,
+                wall_us,
+                error,
+            } => {
+                e.u8(4);
+                e.u64(*tag);
+                e.u64(*job);
+                e.u64(*wall_us);
+                enc_serve_error(&mut e, error);
+            }
+            Reply::Error { detail } => {
+                e.u8(5);
+                e.str(detail);
+            }
+        }
+        e.buf
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Reply, FrameError> {
+        let mut d = Dec::new(buf);
+        let reply = match d.u8()? {
+            0 => Reply::Pong { tag: d.u64()? },
+            1 => Reply::Registered {
+                tag: d.u64()?,
+                id: d.u64()?,
+            },
+            2 => Reply::Rejected {
+                tag: d.u64()?,
+                error: dec_serve_error(&mut d)?,
+            },
+            3 => {
+                let tag = d.u64()?;
+                let job = d.u64()?;
+                let wall_us = d.u64()?;
+                let worker = d.u64()?;
+                let symbolic_reused = d.opt_bool()?;
+                let n = d.u32()? as usize;
+                let mut registered = Vec::with_capacity(n.min(1024));
+                for _ in 0..n {
+                    registered.push(d.u64()?);
+                }
+                Reply::JobOk {
+                    tag,
+                    job,
+                    wall_us,
+                    worker,
+                    symbolic_reused,
+                    registered,
+                    c: d.csr()?,
+                }
+            }
+            4 => Reply::JobErr {
+                tag: d.u64()?,
+                job: d.u64()?,
+                wall_us: d.u64()?,
+                error: dec_serve_error(&mut d)?,
+            },
+            5 => Reply::Error { detail: d.str()? },
+            t => return Err(malformed(format!("unknown reply kind {t}"))),
+        };
+        d.finish()?;
+        Ok(reply)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Frame I/O
+// ---------------------------------------------------------------------------
+
+/// Write one frame (header + payload) and flush.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
+    if payload.len() > u32::MAX as usize {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            "frame payload exceeds u32 length field",
+        ));
+    }
+    w.write_all(&MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one frame's payload. `Ok(None)` is a clean close (EOF before any
+/// header byte); [`FrameError::IdleTimeout`] is a read timeout before any
+/// header byte (distinguished from [`FrameError::Truncated`], a timeout or
+/// EOF *mid*-frame, which desynchronizes the stream).
+pub fn read_frame(r: &mut impl Read, max_bytes: usize) -> Result<Option<Vec<u8>>, FrameError> {
+    let mut header = [0u8; HEADER_LEN];
+    let mut got = 0usize;
+    while got < HEADER_LEN {
+        match r.read(&mut header[got..]) {
+            Ok(0) => {
+                return if got == 0 {
+                    Ok(None)
+                } else {
+                    Err(FrameError::Truncated)
+                };
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
+                return if got == 0 {
+                    Err(FrameError::IdleTimeout)
+                } else {
+                    Err(FrameError::Truncated)
+                };
+            }
+            Err(e) => return Err(FrameError::Io(e.to_string())),
+        }
+    }
+    let magic = [header[0], header[1], header[2], header[3]];
+    if magic != MAGIC {
+        return Err(FrameError::BadMagic(magic));
+    }
+    let version = u16::from_le_bytes([header[4], header[5]]);
+    if version != VERSION {
+        return Err(FrameError::BadVersion(version));
+    }
+    let len = u32::from_le_bytes([header[6], header[7], header[8], header[9]]) as usize;
+    if len > max_bytes {
+        return Err(FrameError::Oversized {
+            len: len as u64,
+            max: max_bytes as u64,
+        });
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).map_err(|e| match e.kind() {
+        io::ErrorKind::UnexpectedEof | io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut => {
+            FrameError::Truncated
+        }
+        _ => FrameError::Io(e.to_string()),
+    })?;
+    Ok(Some(payload))
+}
+
+/// [`write_frame`] of an encoded [`Request`].
+pub fn write_request(w: &mut impl Write, req: &Request) -> io::Result<()> {
+    write_frame(w, &req.encode())
+}
+
+/// [`write_frame`] of an encoded [`Reply`].
+pub fn write_reply(w: &mut impl Write, reply: &Reply) -> io::Result<()> {
+    write_frame(w, &reply.encode())
+}
+
+/// [`read_frame`] + [`Request::decode`]. `Ok(None)` is a clean close.
+pub fn read_request(r: &mut impl Read, max_bytes: usize) -> Result<Option<Request>, FrameError> {
+    match read_frame(r, max_bytes)? {
+        None => Ok(None),
+        Some(p) => Request::decode(&p).map(Some),
+    }
+}
+
+/// [`read_frame`] + [`Reply::decode`]. `Ok(None)` is a clean close.
+pub fn read_reply(r: &mut impl Read, max_bytes: usize) -> Result<Option<Reply>, FrameError> {
+    match read_frame(r, max_bytes)? {
+        None => Ok(None),
+        Some(p) => Reply::decode(&p).map(Some),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn tiny_csr() -> Csr {
+        Csr {
+            rows: 2,
+            cols: 3,
+            row_ptr: vec![0, 2, 3],
+            col_idx: vec![0, 2, 1],
+            data: vec![1.5, -2.0, 0.25],
+        }
+    }
+
+    fn every_serve_error() -> Vec<ServeError> {
+        vec![
+            ServeError::UnknownMatrix(MatrixId(42)),
+            ServeError::ShapeMismatch {
+                a_cols: 7,
+                b_rows: 9,
+            },
+            ServeError::InvalidCsr {
+                reason: "row_ptr not monotone".into(),
+            },
+            ServeError::QueueFull {
+                retry_after_jobs: 11,
+            },
+            ServeError::DeadlineExceeded,
+            ServeError::WorkerPanicked {
+                stage: "numeric_row".into(),
+                message: "injected fault at numeric_row".into(),
+            },
+            ServeError::PlanPoisoned,
+        ]
+    }
+
+    #[test]
+    fn serve_error_round_trips_every_variant() {
+        for err in every_serve_error() {
+            let reply = Reply::Rejected {
+                tag: 3,
+                error: err.clone(),
+            };
+            let decoded = Reply::decode(&reply.encode()).expect("decode");
+            assert_eq!(decoded, reply, "variant {err:?} must round-trip losslessly");
+            // And through the JobErr path too.
+            let reply = Reply::JobErr {
+                tag: 4,
+                job: 17,
+                wall_us: 1234,
+                error: err.clone(),
+            };
+            assert_eq!(Reply::decode(&reply.encode()).expect("decode"), reply);
+        }
+    }
+
+    #[test]
+    fn queue_full_retry_after_survives_the_wire() {
+        let reply = Reply::Rejected {
+            tag: 9,
+            error: ServeError::QueueFull {
+                retry_after_jobs: 123_456,
+            },
+        };
+        match Reply::decode(&reply.encode()).expect("decode") {
+            Reply::Rejected {
+                error: ServeError::QueueFull { retry_after_jobs },
+                ..
+            } => assert_eq!(retry_after_jobs, 123_456),
+            other => panic!("wrong decode: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn request_round_trips_every_shape() {
+        let dataflows = vec![
+            Dataflow::Inner,
+            Dataflow::Outer,
+            Dataflow::RowWiseHeap,
+            Dataflow::RowWiseHash,
+            Dataflow::ParGustavson {
+                threads: 4,
+                accum: AccumSpec::Auto,
+                semiring: SemiringKind::MinPlus,
+            },
+            Dataflow::ParGustavson {
+                threads: 2,
+                accum: AccumSpec::AdaptiveAt(64),
+                semiring: SemiringKind::Boolean,
+            },
+            Dataflow::ParGustavson {
+                threads: 1,
+                accum: AccumSpec::MergeAt(8),
+                semiring: SemiringKind::MaxTimes,
+            },
+            Dataflow::ParGustavsonBlocked {
+                threads: 3,
+                accum: AccumSpec::Fixed(AccumMode::Merge),
+                semiring: SemiringKind::Arithmetic,
+                bands: BandSpec::Cols(128),
+            },
+            Dataflow::ParGustavsonBlocked {
+                threads: 3,
+                accum: AccumSpec::Fixed(AccumMode::Hash),
+                semiring: SemiringKind::Arithmetic,
+                bands: BandSpec::Auto,
+            },
+            Dataflow::ParGustavsonSpawn { threads: 5 },
+        ];
+        let mut reqs = vec![
+            Request::Ping { tag: 1 },
+            Request::Register {
+                tag: 2,
+                name: "A".into(),
+                csr: tiny_csr(),
+            },
+        ];
+        for (i, df) in dataflows.into_iter().enumerate() {
+            reqs.push(Request::Submit {
+                tag: 10 + i as u64,
+                job: WireJob {
+                    a: WireOperand::Registered(i as u64),
+                    b: WireOperand::Inline(tiny_csr()),
+                    dataflow: df,
+                    deadline_ms: if i % 2 == 0 { Some(250) } else { None },
+                },
+            });
+        }
+        for req in reqs {
+            let decoded = Request::decode(&req.encode()).expect("decode");
+            assert_eq!(decoded, req);
+        }
+    }
+
+    #[test]
+    fn reply_round_trips_job_ok_with_provenance() {
+        for reused in [None, Some(false), Some(true)] {
+            let reply = Reply::JobOk {
+                tag: 7,
+                job: 99,
+                wall_us: 4242,
+                worker: 3,
+                symbolic_reused: reused,
+                registered: vec![1, 2],
+                c: tiny_csr(),
+            };
+            assert_eq!(Reply::decode(&reply.encode()).expect("decode"), reply);
+        }
+    }
+
+    #[test]
+    fn malformed_payloads_are_typed_and_recoverable() {
+        // Unknown message kind.
+        let err = Request::decode(&[0xFF]).unwrap_err();
+        assert!(err.recoverable(), "unknown kind: {err}");
+        // Truncated payload inside a whole frame.
+        let mut bytes = Request::Ping { tag: 5 }.encode();
+        bytes.truncate(4);
+        assert!(Request::decode(&bytes).unwrap_err().recoverable());
+        // Trailing garbage after a valid message.
+        let mut bytes = Request::Ping { tag: 5 }.encode();
+        bytes.push(0);
+        assert!(Request::decode(&bytes).unwrap_err().recoverable());
+        // CSR whose announced nnz exceeds the frame.
+        let mut e = Enc::new();
+        e.u8(1); // Register
+        e.u64(1);
+        e.str("A");
+        e.u64(2);
+        e.u64(2);
+        e.u64(1 << 40); // absurd nnz
+        let err = Request::decode(&e.buf).unwrap_err();
+        assert!(err.recoverable(), "oversized CSR claim: {err}");
+    }
+
+    #[test]
+    fn frame_header_violations_are_fatal_and_typed() {
+        // Garbage magic.
+        let mut c = Cursor::new(b"XXXXxxxxxxxxxx".to_vec());
+        assert_eq!(
+            read_frame(&mut c, 1024).unwrap_err(),
+            FrameError::BadMagic(*b"XXXX")
+        );
+        // Version skew.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC);
+        bytes.extend_from_slice(&99u16.to_le_bytes());
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        assert_eq!(
+            read_frame(&mut Cursor::new(bytes), 1024).unwrap_err(),
+            FrameError::BadVersion(99)
+        );
+        // Oversized payload claim.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&(2048u32).to_le_bytes());
+        assert_eq!(
+            read_frame(&mut Cursor::new(bytes), 1024).unwrap_err(),
+            FrameError::Oversized {
+                len: 2048,
+                max: 1024
+            }
+        );
+        // Truncated: header promises more payload than the stream holds.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&(16u32).to_le_bytes());
+        bytes.extend_from_slice(&[1, 2, 3]);
+        assert_eq!(
+            read_frame(&mut Cursor::new(bytes), 1024).unwrap_err(),
+            FrameError::Truncated
+        );
+        // Clean close: EOF before any header byte.
+        assert_eq!(read_frame(&mut Cursor::new(Vec::new()), 1024).unwrap(), None);
+        // None of the fatal variants claim recoverability.
+        for err in [
+            FrameError::BadMagic(*b"XXXX"),
+            FrameError::BadVersion(99),
+            FrameError::Oversized { len: 1, max: 0 },
+            FrameError::Truncated,
+            FrameError::Io("x".into()),
+        ] {
+            assert!(!err.recoverable(), "{err} must be fatal");
+        }
+    }
+
+    #[test]
+    fn frame_round_trip_through_a_stream() {
+        let req = Request::Submit {
+            tag: 77,
+            job: WireJob {
+                a: WireOperand::Inline(tiny_csr()),
+                b: WireOperand::Registered(5),
+                dataflow: Dataflow::ParGustavson {
+                    threads: 2,
+                    accum: AccumSpec::default(),
+                    semiring: SemiringKind::Arithmetic,
+                },
+                deadline_ms: Some(100),
+            },
+        };
+        let mut wire = Vec::new();
+        write_request(&mut wire, &req).expect("write");
+        let got = read_request(&mut Cursor::new(wire), DEFAULT_MAX_FRAME_BYTES)
+            .expect("read")
+            .expect("not EOF");
+        assert_eq!(got, req);
+    }
+}

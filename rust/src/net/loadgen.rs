@@ -1,0 +1,402 @@
+//! Synthetic traffic load generator — the library under `smash spray`.
+//!
+//! Replays a configurable traffic mix (semiring mix, accumulator-spec
+//! mix, registered-pair reuse ratio, offered rate or closed-loop window)
+//! against a listening server and reports latency percentiles,
+//! throughput, and shed / failed / expired counts. The report goes out
+//! both human-readable ([`SprayReport::render`]) and as schema-versioned
+//! [`Json`] ([`SprayReport::to_json`]) — the payload CI archives as
+//! `BENCH_9.json`, the repo's first network perf-trajectory artifact.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::ServeError;
+use crate::gen::{rmat, RmatParams};
+use crate::net::client::{Client, ClientReceiver, NetError};
+use crate::net::frame::{FrameError, Reply, WireJob, WireOperand};
+use crate::spgemm::{AccumSpec, Dataflow, SemiringKind};
+use crate::util::json::Json;
+use crate::util::prng::Xoshiro256;
+
+/// Schema version stamped into every [`SprayReport::to_json`]; bump on
+/// any field change so downstream tooling can refuse reports it does not
+/// understand.
+pub const SPRAY_SCHEMA_VERSION: u64 = 1;
+
+/// Traffic-mix and pacing knobs for [`spray`].
+pub struct SprayConfig {
+    /// Server address (`host:port`).
+    pub addr: String,
+    /// Total submits. `0` means "run for [`SprayConfig::duration`]".
+    pub count: usize,
+    /// Wall-clock budget when `count == 0`.
+    pub duration: Duration,
+    /// Offered rate in submits/second; `0.0` runs closed-loop at the
+    /// window limit.
+    pub rate: f64,
+    /// Max jobs in flight (closed-loop concurrency and the open-loop
+    /// safety cap).
+    pub window: usize,
+    /// R-MAT scale of the generated operand pair (dimension `2^log2n`).
+    pub log2n: u32,
+    /// R-MAT edge-placement attempts per operand.
+    pub edges: usize,
+    /// Generator + mix-picker seed: the traffic sequence is
+    /// deterministic per seed.
+    pub seed: u64,
+    /// Percent (0–100) of submits that reference the registered pair by
+    /// id; the rest ship full inline CSR payloads.
+    pub reuse_pct: u32,
+    /// Semiring mix, picked uniformly per submit.
+    pub semirings: Vec<SemiringKind>,
+    /// Accumulator-spec mix, picked uniformly per submit.
+    pub accums: Vec<AccumSpec>,
+    /// Worker threads requested per job.
+    pub threads: usize,
+    /// Optional per-job deadline budget, milliseconds.
+    pub deadline_ms: Option<u64>,
+}
+
+impl Default for SprayConfig {
+    fn default() -> Self {
+        SprayConfig {
+            addr: String::new(),
+            count: 50,
+            duration: Duration::from_secs(5),
+            rate: 0.0,
+            window: 8,
+            log2n: 7,
+            edges: 1500,
+            seed: 0x5EED,
+            reuse_pct: 80,
+            semirings: vec![SemiringKind::Arithmetic],
+            accums: vec![AccumSpec::Fixed(Default::default())],
+            threads: 2,
+            deadline_ms: None,
+        }
+    }
+}
+
+/// Outcome counters, classified from the typed wire replies.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SprayCounts {
+    /// Submits written to the socket.
+    pub sent: u64,
+    /// Jobs that completed with a product.
+    pub ok: u64,
+    /// Admission rejections (`ServeError::QueueFull`).
+    pub shed: u64,
+    /// Deadline expiries (`ServeError::DeadlineExceeded`).
+    pub expired: u64,
+    /// Every other typed serving failure.
+    pub failed: u64,
+    /// Protocol-level reports from the server.
+    pub protocol: u64,
+}
+
+impl SprayCounts {
+    /// Submits that got a terminal reply (everything but protocol noise).
+    pub fn completed(&self) -> u64 {
+        self.ok + self.shed + self.expired + self.failed
+    }
+}
+
+/// Aggregate result of one [`spray`] run.
+#[derive(Clone, Debug)]
+pub struct SprayReport {
+    pub addr: String,
+    pub counts: SprayCounts,
+    pub elapsed: Duration,
+    /// Completions per second over the whole run.
+    pub throughput_rps: f64,
+    pub p50_us: u64,
+    pub p90_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+    pub mean_us: f64,
+    /// Echo of the mix that produced these numbers, for the archive.
+    pub reuse_pct: u32,
+    pub window: usize,
+    pub offered_rate: f64,
+    pub semirings: Vec<SemiringKind>,
+    pub accums: Vec<AccumSpec>,
+}
+
+impl SprayReport {
+    /// Schema-versioned JSON for the CI artifact.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("schema".into(), Json::u64(SPRAY_SCHEMA_VERSION)),
+            ("kind".into(), Json::Str("spray_report".into())),
+            ("addr".into(), Json::Str(self.addr.clone())),
+            ("sent".into(), Json::u64(self.counts.sent)),
+            ("completed".into(), Json::u64(self.counts.completed())),
+            ("ok".into(), Json::u64(self.counts.ok)),
+            ("shed".into(), Json::u64(self.counts.shed)),
+            ("expired".into(), Json::u64(self.counts.expired)),
+            ("failed".into(), Json::u64(self.counts.failed)),
+            ("protocol_errors".into(), Json::u64(self.counts.protocol)),
+            ("elapsed_s".into(), Json::Num(self.elapsed.as_secs_f64())),
+            ("throughput_rps".into(), Json::Num(self.throughput_rps)),
+            ("p50_us".into(), Json::u64(self.p50_us)),
+            ("p90_us".into(), Json::u64(self.p90_us)),
+            ("p99_us".into(), Json::u64(self.p99_us)),
+            ("max_us".into(), Json::u64(self.max_us)),
+            ("mean_us".into(), Json::Num(self.mean_us)),
+            ("reuse_pct".into(), Json::u64(self.reuse_pct as u64)),
+            ("window".into(), Json::u64(self.window as u64)),
+            ("offered_rate".into(), Json::Num(self.offered_rate)),
+            (
+                "semirings".into(),
+                Json::Arr(
+                    self.semirings
+                        .iter()
+                        .map(|s| Json::Str(s.name().to_string()))
+                        .collect(),
+                ),
+            ),
+            (
+                "accums".into(),
+                Json::Arr(
+                    self.accums
+                        .iter()
+                        .map(|a| Json::Str(a.describe()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Human-readable summary. The "p99" and "shed: " vocabulary here is
+    /// load-bearing: the CI loopback leg greps for it.
+    pub fn render(&self) -> String {
+        let c = &self.counts;
+        format!(
+            "spray: {} sent / {} completed in {:.2}s ({:.1} jobs/s)\n\
+             latency: p50 {}us  p90 {}us  p99 {}us  max {}us  mean {:.0}us\n\
+             outcomes: ok: {}  shed: {}  expired: {}  failed: {}  protocol: {}",
+            c.sent,
+            c.completed(),
+            self.elapsed.as_secs_f64(),
+            self.throughput_rps,
+            self.p50_us,
+            self.p90_us,
+            self.p99_us,
+            self.max_us,
+            self.mean_us,
+            c.ok,
+            c.shed,
+            c.expired,
+            c.failed,
+            c.protocol,
+        )
+    }
+}
+
+/// Shared between the submit loop and the harvest thread. The `inflight`
+/// mutex does double duty: it carries the send timestamps *and*
+/// serializes "submit then record" against "receive then classify", so a
+/// reply can never be harvested before its timestamp exists.
+struct Shared {
+    inflight: Mutex<HashMap<u64, Instant>>,
+    results: Mutex<(SprayCounts, Vec<u64>)>,
+    done_sending: AtomicBool,
+}
+
+/// How long the harvester keeps draining after the last submit before
+/// giving up on stragglers.
+const DRAIN_BUDGET: Duration = Duration::from_secs(15);
+
+/// Run one load-generation session against `cfg.addr`.
+pub fn spray(cfg: &SprayConfig) -> Result<SprayReport, NetError> {
+    if cfg.semirings.is_empty() || cfg.accums.is_empty() {
+        return Err(NetError::Unexpected(
+            "spray needs a non-empty semiring and accum mix".into(),
+        ));
+    }
+    let a = rmat(&RmatParams::new(cfg.log2n, cfg.edges, cfg.seed ^ 0xA));
+    let b = rmat(&RmatParams::new(cfg.log2n, cfg.edges, cfg.seed ^ 0xB));
+    let mut client = Client::connect(&cfg.addr)?;
+    client.ping()?;
+    let id_a = client.register("spray-A", &a)?;
+    let id_b = client.register("spray-B", &b)?;
+    let (mut tx, rx) = client.split();
+    rx.set_read_timeout(Some(Duration::from_millis(100)))?;
+
+    let shared = Arc::new(Shared {
+        inflight: Mutex::new(HashMap::new()),
+        results: Mutex::new((SprayCounts::default(), Vec::new())),
+        done_sending: AtomicBool::new(false),
+    });
+    let harvester = {
+        let shared = Arc::clone(&shared);
+        thread::spawn(move || harvest(rx, &shared))
+    };
+
+    let mut mix = Xoshiro256::seed_from_u64(cfg.seed);
+    let start = Instant::now();
+    let mut sent = 0u64;
+    loop {
+        if cfg.count > 0 {
+            if sent as usize >= cfg.count {
+                break;
+            }
+        } else if start.elapsed() >= cfg.duration {
+            break;
+        }
+        // Pacing: offered rate when set, otherwise closed-loop on window.
+        if cfg.rate > 0.0 {
+            let due = start + Duration::from_secs_f64(sent as f64 / cfg.rate);
+            let now = Instant::now();
+            if due > now {
+                thread::sleep(due - now);
+            }
+        }
+        let window_wait = Instant::now();
+        loop {
+            let inflight = shared.inflight.lock().unwrap().len();
+            if inflight < cfg.window.max(1) {
+                break;
+            }
+            if window_wait.elapsed() > DRAIN_BUDGET {
+                // Server stalled with a full window: stop offering.
+                shared.done_sending.store(true, Ordering::SeqCst);
+                let _ = harvester.join();
+                return Err(NetError::Unexpected(
+                    "window stayed full past the drain budget; server stalled?".into(),
+                ));
+            }
+            thread::sleep(Duration::from_micros(200));
+        }
+        let reuse = mix.next_below(100) < cfg.reuse_pct as u64;
+        let semiring = cfg.semirings[mix.next_below(cfg.semirings.len() as u64) as usize];
+        let accum = cfg.accums[mix.next_below(cfg.accums.len() as u64) as usize];
+        let (op_a, op_b) = if reuse {
+            (WireOperand::Registered(id_a), WireOperand::Registered(id_b))
+        } else {
+            (
+                WireOperand::Inline(a.clone()),
+                WireOperand::Inline(b.clone()),
+            )
+        };
+        let job = WireJob {
+            a: op_a,
+            b: op_b,
+            dataflow: Dataflow::ParGustavson {
+                threads: cfg.threads.max(1),
+                accum,
+                semiring,
+            },
+            deadline_ms: cfg.deadline_ms,
+        };
+        // Hold the inflight lock across the send so the harvester cannot
+        // observe this tag's reply before its timestamp is recorded.
+        {
+            let mut inflight = shared.inflight.lock().unwrap();
+            let tag = tx.submit(job)?;
+            inflight.insert(tag, Instant::now());
+        }
+        sent += 1;
+        shared.results.lock().unwrap().0.sent = sent;
+    }
+    shared.done_sending.store(true, Ordering::SeqCst);
+    harvester
+        .join()
+        .map_err(|_| NetError::Unexpected("harvest thread panicked".into()))?;
+
+    let elapsed = start.elapsed();
+    let (counts, mut lat) = {
+        let guard = shared.results.lock().unwrap();
+        (guard.0, guard.1.clone())
+    };
+    lat.sort_unstable();
+    let pct = |q: f64| -> u64 {
+        if lat.is_empty() {
+            return 0;
+        }
+        let idx = ((q * lat.len() as f64).ceil() as usize).clamp(1, lat.len()) - 1;
+        lat[idx]
+    };
+    let mean = if lat.is_empty() {
+        0.0
+    } else {
+        lat.iter().sum::<u64>() as f64 / lat.len() as f64
+    };
+    Ok(SprayReport {
+        addr: cfg.addr.clone(),
+        counts,
+        elapsed,
+        throughput_rps: counts.completed() as f64 / elapsed.as_secs_f64().max(1e-9),
+        p50_us: pct(0.50),
+        p90_us: pct(0.90),
+        p99_us: pct(0.99),
+        max_us: lat.last().copied().unwrap_or(0),
+        mean_us: mean,
+        reuse_pct: cfg.reuse_pct,
+        window: cfg.window,
+        offered_rate: cfg.rate,
+        semirings: cfg.semirings.clone(),
+        accums: cfg.accums.clone(),
+    })
+}
+
+/// Harvest loop: classify every reply, record its latency, and exit once
+/// the sender is done and nothing is in flight (or the drain budget is
+/// spent).
+fn harvest(mut rx: ClientReceiver, shared: &Shared) {
+    let mut done_seen: Option<Instant> = None;
+    loop {
+        let done = shared.done_sending.load(Ordering::SeqCst);
+        if done {
+            let seen = *done_seen.get_or_insert_with(Instant::now);
+            let drained = shared.inflight.lock().unwrap().is_empty();
+            if drained || seen.elapsed() > DRAIN_BUDGET {
+                break;
+            }
+        }
+        match rx.recv() {
+            Ok(reply) => {
+                let tag = match &reply {
+                    Reply::Pong { tag }
+                    | Reply::Registered { tag, .. }
+                    | Reply::Rejected { tag, .. }
+                    | Reply::JobOk { tag, .. }
+                    | Reply::JobErr { tag, .. } => Some(*tag),
+                    Reply::Error { .. } => None,
+                };
+                let latency = tag.and_then(|t| {
+                    shared
+                        .inflight
+                        .lock()
+                        .unwrap()
+                        .remove(&t)
+                        .map(|sent_at| sent_at.elapsed())
+                });
+                let mut results = shared.results.lock().unwrap();
+                let (counts, lat) = &mut *results;
+                if let Some(d) = latency {
+                    lat.push(d.as_micros() as u64);
+                }
+                match reply {
+                    Reply::JobOk { .. } => counts.ok += 1,
+                    Reply::Rejected { error, .. } => match error {
+                        ServeError::QueueFull { .. } => counts.shed += 1,
+                        _ => counts.failed += 1,
+                    },
+                    Reply::JobErr { error, .. } => match error {
+                        ServeError::DeadlineExceeded => counts.expired += 1,
+                        _ => counts.failed += 1,
+                    },
+                    Reply::Error { .. } => counts.protocol += 1,
+                    Reply::Pong { .. } | Reply::Registered { .. } => {}
+                }
+            }
+            Err(NetError::Frame(FrameError::IdleTimeout)) => continue,
+            Err(_) => break,
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! Network serving layer: the coordinator on the wire.
+//!
+//! Four pieces, layered bottom-up:
+//!
+//! * [`frame`] — the length-prefixed binary wire protocol. Versioned
+//!   header, inline-CSR or registered-pair-reference requests, responses
+//!   carrying either a result CSR or the coordinator's own typed
+//!   [`ServeError`](crate::coordinator::ServeError) — every variant
+//!   round-trips losslessly, so the network boundary adds *no new failure
+//!   vocabulary* of its own (protocol-level violations are the separate,
+//!   typed [`FrameError`]).
+//! * [`server`] — `smash serve --listen`: a threaded TCP accept loop and
+//!   a pump thread feeding
+//!   [`Coordinator::try_submit`](crate::coordinator::Coordinator::try_submit),
+//!   draining completions in completion order with job-id correlation
+//!   back to the owning connection.
+//! * [`client`] — the blocking framed client under `smash client`.
+//! * [`loadgen`] — the `smash spray` traffic generator and its
+//!   schema-versioned latency/outcome report.
+
+pub mod client;
+pub mod frame;
+pub mod loadgen;
+pub mod server;
+
+pub use client::{Client, ClientReceiver, ClientSender, NetError};
+pub use frame::{FrameError, Reply, Request, WireJob, WireOperand};
+pub use loadgen::{spray, SprayConfig, SprayCounts, SprayReport, SPRAY_SCHEMA_VERSION};
+pub use server::{NetServer, NetServerConfig};

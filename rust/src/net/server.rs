@@ -1,0 +1,392 @@
+//! Threaded TCP front end for the [`Coordinator`] — `smash serve --listen`.
+//!
+//! Thread shape:
+//!
+//! * one **accept loop** spawning a reader + writer thread pair per
+//!   connection;
+//! * one **pump thread** that owns the `Coordinator` (it is a single-owner
+//!   `&mut self` object) and alternates between two feeds: commands from
+//!   connection readers (register / submit) and completed responses from
+//!   the worker pool, drained in completion order via
+//!   [`Coordinator::try_collect_one`] and routed back to the owning
+//!   connection by job-id correlation.
+//!
+//! Per-connection robustness: reads carry a timeout (an idle connection
+//! with no jobs in flight is reaped; one *with* jobs in flight is kept so
+//! a slow client can still harvest its results), frames are size-guarded,
+//! and a malformed payload inside a well-formed frame answers
+//! [`Reply::Error`] without dropping the connection — the stream is still
+//! frame-aligned. Header-level violations (bad magic, version skew,
+//! oversize, truncation) desynchronize the stream: the server reports and
+//! closes. Serving failures never touch the connection at all; they ride
+//! back as the coordinator's own typed [`ServeError`] inside
+//! [`Reply::Rejected`] / [`Reply::JobErr`].
+
+use std::collections::HashMap;
+use std::io::{self, BufReader, BufWriter};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use crate::coordinator::{Coordinator, Job, MatrixId, MatrixRef, Response, ServerConfig};
+use crate::formats::Csr;
+use crate::net::frame::{self, FrameError, Reply, Request, WireJob, WireOperand};
+
+/// Knobs for [`NetServer::start`], wrapping the coordinator's own
+/// [`ServerConfig`].
+pub struct NetServerConfig {
+    /// Coordinator knobs (workers, queue depth, admission bound, caches).
+    pub server: ServerConfig,
+    /// Per-connection read timeout. A connection idle past it with zero
+    /// jobs in flight is closed; with jobs in flight it keeps waiting.
+    pub read_timeout: Duration,
+    /// Per-frame payload guard, bytes.
+    pub max_frame_bytes: usize,
+}
+
+impl Default for NetServerConfig {
+    fn default() -> Self {
+        NetServerConfig {
+            server: ServerConfig::default(),
+            read_timeout: Duration::from_secs(30),
+            max_frame_bytes: frame::DEFAULT_MAX_FRAME_BYTES,
+        }
+    }
+}
+
+/// Commands from connection readers to the pump thread.
+enum Cmd {
+    Register {
+        tag: u64,
+        name: String,
+        csr: Csr,
+        out: ConnHandle,
+    },
+    Submit {
+        tag: u64,
+        job: WireJob,
+        out: ConnHandle,
+    },
+}
+
+/// A connection's reply sink plus its in-flight counter. Readers bump the
+/// counter before handing a command to the pump; the pump drops it after
+/// sending the terminal reply — so the reader's idle-timeout check never
+/// races a command that is queued but not yet admitted.
+#[derive(Clone)]
+struct ConnHandle {
+    tx: mpsc::Sender<Reply>,
+    inflight: Arc<AtomicUsize>,
+}
+
+impl ConnHandle {
+    fn reply(&self, reply: Reply) {
+        let _ = self.tx.send(reply);
+        self.inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Handle to a running network server. [`NetServer::shutdown`] stops the
+/// accept loop and joins the pump once every connection has drained; the
+/// `serve --listen` CLI instead holds the handle forever and dies with the
+/// process.
+pub struct NetServer {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    pump: Option<JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (use port 0 to let the OS pick), spawn the pump and
+    /// accept threads, and return immediately.
+    pub fn start(addr: &str, cfg: NetServerConfig) -> io::Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local_addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let coord = Coordinator::start(cfg.server);
+        let (cmd_tx, cmd_rx) = mpsc::channel::<Cmd>();
+        let pump = thread::spawn(move || pump_loop(coord, cmd_rx));
+        let accept = {
+            let stop = Arc::clone(&stop);
+            let read_timeout = cfg.read_timeout;
+            let max_frame_bytes = cfg.max_frame_bytes;
+            thread::spawn(move || {
+                for conn in listener.incoming() {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let stream = match conn {
+                        Ok(s) => s,
+                        Err(_) => continue,
+                    };
+                    let cmd_tx = cmd_tx.clone();
+                    let stop = Arc::clone(&stop);
+                    thread::spawn(move || {
+                        serve_conn(stream, cmd_tx, stop, read_timeout, max_frame_bytes)
+                    });
+                }
+                // Dropping the master cmd_tx here lets the pump exit once
+                // every connection reader has also hung up.
+            })
+        };
+        Ok(NetServer {
+            local_addr,
+            stop,
+            accept: Some(accept),
+            pump: Some(pump),
+        })
+    }
+
+    /// The actually-bound address — the one to print for `--listen :0`.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop accepting, then join the accept and pump threads. Connection
+    /// readers notice the stop flag within one read timeout (immediately
+    /// if the client already closed); in-flight jobs finish and their
+    /// replies are routed before the pump exits.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Poke the blocking accept() so the loop observes the flag.
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.pump.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The pump: sole owner of the coordinator. Routes every admitted job id
+/// to the connection that submitted it and forwards completions in the
+/// order the pool finishes them.
+fn pump_loop(mut coord: Coordinator, cmd_rx: mpsc::Receiver<Cmd>) {
+    // JobId.0 -> (reply sink, client correlation tag)
+    let mut routes: HashMap<u64, (ConnHandle, u64)> = HashMap::new();
+    let mut alive = true;
+    while alive || !routes.is_empty() {
+        let cmd = if !alive {
+            None
+        } else if routes.is_empty() {
+            // Nothing in flight: block on the command feed.
+            match cmd_rx.recv() {
+                Ok(c) => Some(c),
+                Err(_) => {
+                    alive = false;
+                    None
+                }
+            }
+        } else {
+            // Jobs in flight: poll commands with a short bound so
+            // completions are drained with at most that much added
+            // latency.
+            match cmd_rx.recv_timeout(Duration::from_millis(1)) {
+                Ok(c) => Some(c),
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => {
+                    alive = false;
+                    None
+                }
+            }
+        };
+        if let Some(cmd) = cmd {
+            handle_cmd(&mut coord, &mut routes, cmd);
+        }
+        if !alive && !routes.is_empty() {
+            // Command feed is gone: block (boundedly) for stragglers so
+            // their replies still get routed before shutdown.
+            if let Some(r) = coord.collect_timeout(Duration::from_millis(50)) {
+                route_response(&mut routes, r);
+            }
+        }
+        while let Some(r) = coord.try_collect_one() {
+            route_response(&mut routes, r);
+        }
+    }
+    coord.shutdown();
+}
+
+fn handle_cmd(coord: &mut Coordinator, routes: &mut HashMap<u64, (ConnHandle, u64)>, cmd: Cmd) {
+    match cmd {
+        Cmd::Register {
+            tag,
+            name,
+            csr,
+            out,
+        } => match coord.try_register(name, csr) {
+            Ok(id) => out.reply(Reply::Registered { tag, id: id.0 }),
+            Err(error) => out.reply(Reply::Rejected { tag, error }),
+        },
+        Cmd::Submit { tag, job, out } => {
+            let WireJob {
+                a,
+                b,
+                dataflow,
+                deadline_ms,
+            } = job;
+            let native = Job::NativeSpgemm {
+                a: wire_operand(a),
+                b: wire_operand(b),
+                dataflow,
+            };
+            let admitted = match deadline_ms {
+                Some(ms) => coord.try_submit(native.deadline(Duration::from_millis(ms))),
+                None => coord.try_submit(native),
+            };
+            match admitted {
+                Ok(id) => {
+                    routes.insert(id.0, (out, tag));
+                }
+                Err(error) => out.reply(Reply::Rejected { tag, error }),
+            }
+        }
+    }
+}
+
+fn wire_operand(op: WireOperand) -> MatrixRef {
+    match op {
+        WireOperand::Registered(id) => MatrixRef::Registered(MatrixId(id)),
+        WireOperand::Inline(c) => MatrixRef::from(c),
+    }
+}
+
+fn route_response(routes: &mut HashMap<u64, (ConnHandle, u64)>, r: Response) {
+    let Response {
+        id,
+        c,
+        wall,
+        worker,
+        registered,
+        symbolic_reused,
+        error,
+        ..
+    } = r;
+    if let Some((out, tag)) = routes.remove(&id.0) {
+        let wall_us = wall.as_micros() as u64;
+        let reply = match error {
+            Some(error) => Reply::JobErr {
+                tag,
+                job: id.0,
+                wall_us,
+                error,
+            },
+            None => Reply::JobOk {
+                tag,
+                job: id.0,
+                wall_us,
+                worker: worker as u64,
+                symbolic_reused,
+                registered: registered.into_iter().map(|m| m.0).collect(),
+                c,
+            },
+        };
+        out.reply(reply);
+    }
+}
+
+/// Per-connection reader. Spawns the paired writer thread, then decodes
+/// frames until close / fatal protocol error / idle timeout with nothing
+/// in flight.
+fn serve_conn(
+    stream: TcpStream,
+    cmd_tx: mpsc::Sender<Cmd>,
+    stop: Arc<AtomicBool>,
+    read_timeout: Duration,
+    max_frame_bytes: usize,
+) {
+    if stream.set_read_timeout(Some(read_timeout)).is_err() {
+        return;
+    }
+    let _ = stream.set_nodelay(true);
+    let writer_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let (out_tx, out_rx) = mpsc::channel::<Reply>();
+    // Writer: serializes replies from both the reader (pongs, protocol
+    // errors) and the pump (registrations, completions) onto the socket.
+    // Exits when every sender — reader handle + any pump routes — is gone.
+    thread::spawn(move || {
+        let mut w = BufWriter::new(writer_stream);
+        while let Ok(reply) = out_rx.recv() {
+            if frame::write_reply(&mut w, &reply).is_err() {
+                break;
+            }
+        }
+    });
+    let handle = ConnHandle {
+        tx: out_tx,
+        inflight: Arc::new(AtomicUsize::new(0)),
+    };
+    let mut reader = BufReader::new(stream);
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        match frame::read_frame(&mut reader, max_frame_bytes) {
+            Ok(None) => break, // clean close
+            Ok(Some(payload)) => match Request::decode(&payload) {
+                Ok(Request::Ping { tag }) => {
+                    let _ = handle.tx.send(Reply::Pong { tag });
+                }
+                Ok(Request::Register { tag, name, csr }) => {
+                    handle.inflight.fetch_add(1, Ordering::SeqCst);
+                    let cmd = Cmd::Register {
+                        tag,
+                        name,
+                        csr,
+                        out: handle.clone(),
+                    };
+                    if cmd_tx.send(cmd).is_err() {
+                        break;
+                    }
+                }
+                Ok(Request::Submit { tag, job }) => {
+                    handle.inflight.fetch_add(1, Ordering::SeqCst);
+                    let cmd = Cmd::Submit {
+                        tag,
+                        job,
+                        out: handle.clone(),
+                    };
+                    if cmd_tx.send(cmd).is_err() {
+                        break;
+                    }
+                }
+                Err(e) => {
+                    // The frame arrived whole, so the stream is still
+                    // aligned: report the typed protocol error and keep
+                    // serving this connection.
+                    debug_assert!(e.recoverable());
+                    let _ = handle.tx.send(Reply::Error {
+                        detail: e.to_string(),
+                    });
+                }
+            },
+            Err(FrameError::IdleTimeout) => {
+                if handle.inflight.load(Ordering::SeqCst) > 0 {
+                    continue; // results still owed; keep the connection
+                }
+                let _ = handle.tx.send(Reply::Error {
+                    detail: FrameError::IdleTimeout.to_string(),
+                });
+                break;
+            }
+            Err(e) => {
+                // Header-level violation or mid-frame loss: the stream is
+                // desynchronized. Report and close.
+                let _ = handle.tx.send(Reply::Error {
+                    detail: e.to_string(),
+                });
+                break;
+            }
+        }
+    }
+    // Dropping `handle` releases the reader's sender; the writer lingers
+    // only while the pump still owes this connection replies.
+}

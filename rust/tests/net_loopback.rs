@@ -1,0 +1,531 @@
+//! Loopback integration suite for the network serving layer — the
+//! acceptance bar for "the coordinator on the wire".
+//!
+//! Every test binds a real `NetServer` on `127.0.0.1:0` and talks to it
+//! over TCP. The contract under test:
+//!
+//! * **Fidelity.** A burst served over the wire is *bitwise* equal to the
+//!   same burst served by an in-process [`Coordinator`] and to the serial
+//!   semiring oracle — and the `symbolic_reused` plan provenance survives
+//!   the hop intact (one computed pass, the rest reused).
+//! * **Typed failure, two tiers.** Serving failures arrive as the
+//!   coordinator's own [`ServeError`] inside `Rejected`/`JobErr` —
+//!   including `QueueFull.retry_after_jobs`. Protocol violations arrive
+//!   as [`Reply::Error`]; a malformed payload keeps the connection, a
+//!   header-level violation closes it.
+//! * **Containment.** A fault injected inside the server's worker pool
+//!   costs exactly one typed `JobErr`; cohabitant jobs on the same
+//!   connection still serve bitwise-equal.
+//!
+//! One test arms the process-wide fault plane, so every test serializes
+//! on `faults::test_lock()` and the suite runs as its own test binary
+//! (see the `[[test]]` note in Cargo.toml).
+
+use smash::coordinator::{Coordinator, ServeError, ServerConfig};
+use smash::faults::{self, FaultKind, FaultPlan, FaultSpec};
+use smash::formats::Csr;
+use smash::gen::{rmat, RmatParams};
+use smash::net::frame::{self, Reply, Request, WireJob, WireOperand};
+use smash::net::{Client, NetError, NetServer, NetServerConfig};
+use smash::spgemm::{spgemm_semiring, AccumSpec, Dataflow, SemiringKind};
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{Shutdown, TcpStream};
+use std::time::Duration;
+
+fn start(cfg: NetServerConfig) -> NetServer {
+    NetServer::start("127.0.0.1:0", cfg).expect("bind loopback")
+}
+
+fn par_job(a: WireOperand, b: WireOperand, semiring: SemiringKind) -> WireJob {
+    WireJob {
+        a,
+        b,
+        dataflow: Dataflow::ParGustavson {
+            threads: 2,
+            accum: AccumSpec::default(),
+            semiring,
+        },
+        deadline_ms: None,
+    }
+}
+
+/// The headline acceptance test: a registered-pair burst served over TCP
+/// is bitwise equal to the same burst on an in-process coordinator and to
+/// the serial oracle, with plan provenance (`symbolic_reused`) intact
+/// across the wire.
+#[test]
+fn served_burst_is_bitwise_equal_to_in_process_coordinator() {
+    let _g = faults::test_lock();
+    faults::clear();
+    let a = rmat(&RmatParams::new(6, 400, 11));
+    let b = rmat(&RmatParams::new(6, 400, 12));
+    let semiring = SemiringKind::Arithmetic;
+    let oracle = spgemm_semiring(&a, &b, semiring);
+
+    // In-process reference run: same operands, same dataflow, same burst.
+    let mut coord = Coordinator::start(ServerConfig {
+        workers: 2,
+        ..ServerConfig::default()
+    });
+    let ra = coord.register("A", a.clone());
+    let rb = coord.register("B", b.clone());
+    let mut in_process = Vec::new();
+    for _ in 0..6 {
+        coord
+            .try_submit(smash::coordinator::Job::NativeSpgemm {
+                a: ra.into(),
+                b: rb.into(),
+                dataflow: Dataflow::ParGustavson {
+                    threads: 2,
+                    accum: AccumSpec::default(),
+                    semiring,
+                },
+            })
+            .expect("in-process admission");
+    }
+    for _ in 0..6 {
+        in_process.push(coord.collect_one().expect("in-process response"));
+    }
+    coord.shutdown();
+
+    // Served run, over real TCP.
+    let server = start(NetServerConfig {
+        server: ServerConfig {
+            workers: 2,
+            ..ServerConfig::default()
+        },
+        ..NetServerConfig::default()
+    });
+    let mut client = Client::connect(&server.local_addr().to_string()).expect("connect");
+    client.ping().expect("ping");
+    let id_a = client.register("A", &a).expect("register A");
+    let id_b = client.register("B", &b).expect("register B");
+    for _ in 0..6 {
+        client
+            .submit(par_job(
+                WireOperand::Registered(id_a),
+                WireOperand::Registered(id_b),
+                semiring,
+            ))
+            .expect("submit");
+    }
+    let mut served = Vec::new();
+    let mut computed = 0;
+    let mut reused = 0;
+    for _ in 0..6 {
+        match client.recv().expect("recv") {
+            Reply::JobOk {
+                symbolic_reused,
+                registered,
+                c,
+                ..
+            } => {
+                assert_eq!(registered, vec![id_a, id_b], "operand ids survive the hop");
+                match symbolic_reused {
+                    Some(false) => computed += 1,
+                    Some(true) => reused += 1,
+                    None => panic!("a registered-pair job must report plan provenance"),
+                }
+                served.push(c);
+            }
+            other => panic!("burst job must succeed, got {other:?}"),
+        }
+    }
+    assert_eq!((computed, reused), (1, 5), "one symbolic pass, five reuses");
+    for c in &served {
+        assert_eq!(c, &oracle, "served product must be bitwise the oracle");
+    }
+    for r in &in_process {
+        assert!(r.is_ok());
+        assert_eq!(&r.c, &oracle, "in-process product must match the oracle too");
+    }
+    // Transitivity spelled out: wire == in-process, bitwise.
+    assert_eq!(served[0], in_process[0].c);
+    server.shutdown();
+}
+
+/// Inline operands ship the payload with every job: no registration, no
+/// provenance (nothing resident to cache against), same bitwise product —
+/// across every semiring the wire can spell.
+#[test]
+fn inline_jobs_serve_every_semiring_bitwise() {
+    let _g = faults::test_lock();
+    faults::clear();
+    let a = rmat(&RmatParams::new(5, 200, 21));
+    let b = rmat(&RmatParams::new(5, 200, 22));
+    let server = start(NetServerConfig::default());
+    let mut client = Client::connect(&server.local_addr().to_string()).expect("connect");
+    for semiring in [
+        SemiringKind::Arithmetic,
+        SemiringKind::Boolean,
+        SemiringKind::MinPlus,
+        SemiringKind::MaxTimes,
+    ] {
+        let oracle = spgemm_semiring(&a, &b, semiring);
+        client
+            .submit(par_job(
+                WireOperand::Inline(a.clone()),
+                WireOperand::Inline(b.clone()),
+                semiring,
+            ))
+            .expect("submit");
+        match client.recv().expect("recv") {
+            Reply::JobOk {
+                symbolic_reused,
+                registered,
+                c,
+                ..
+            } => {
+                assert_eq!(c, oracle, "{semiring:?}: bitwise against the oracle");
+                assert!(registered.is_empty(), "inline jobs touch no residents");
+                assert_eq!(symbolic_reused, None, "nothing resident, no provenance");
+            }
+            other => panic!("{semiring:?}: inline job must succeed, got {other:?}"),
+        }
+    }
+    server.shutdown();
+}
+
+/// Every admission-time rejection crosses the wire as the coordinator's
+/// own typed error — payload fields intact — and the connection keeps
+/// serving after each one.
+#[test]
+fn typed_rejections_round_trip_and_connection_survives() {
+    let _g = faults::test_lock();
+    faults::clear();
+    let server = start(NetServerConfig::default());
+    let mut client = Client::connect(&server.local_addr().to_string()).expect("connect");
+
+    // UnknownMatrix: an id the server never issued.
+    client
+        .submit(par_job(
+            WireOperand::Registered(999),
+            WireOperand::Registered(999),
+            SemiringKind::Arithmetic,
+        ))
+        .expect("submit");
+    match client.recv().expect("recv") {
+        Reply::Rejected { error, .. } => {
+            assert!(
+                matches!(error, ServeError::UnknownMatrix(id) if id.0 == 999),
+                "got {error:?}"
+            );
+        }
+        other => panic!("expected Rejected, got {other:?}"),
+    }
+
+    // InvalidCsr: passes the wire codec's structural checks (row_ptr
+    // length and total), fails the coordinator's canonical validation
+    // (column index out of range) — so the rejection is the *serving*
+    // tier's, not the protocol tier's.
+    let bad = Csr {
+        rows: 2,
+        cols: 2,
+        row_ptr: vec![0, 1, 2],
+        col_idx: vec![0, 7],
+        data: vec![1.0, 2.0],
+    };
+    match client.register("bad", &bad) {
+        Err(NetError::Rejected(ServeError::InvalidCsr { .. })) => {}
+        other => panic!("expected InvalidCsr rejection, got {other:?}"),
+    }
+
+    // ShapeMismatch: 32x32 times 64x64, fields carried exactly.
+    let a32 = client
+        .register("a32", &rmat(&RmatParams::new(5, 100, 31)))
+        .expect("register");
+    let b64 = client
+        .register("b64", &rmat(&RmatParams::new(6, 100, 32)))
+        .expect("register");
+    client
+        .submit(par_job(
+            WireOperand::Registered(a32),
+            WireOperand::Registered(b64),
+            SemiringKind::Arithmetic,
+        ))
+        .expect("submit");
+    match client.recv().expect("recv") {
+        Reply::Rejected { error, .. } => assert_eq!(
+            error,
+            ServeError::ShapeMismatch {
+                a_cols: 32,
+                b_rows: 64
+            }
+        ),
+        other => panic!("expected Rejected, got {other:?}"),
+    }
+
+    // DeadlineExceeded: a zero budget expires at the first checkpoint —
+    // the job *ran*, so this tier is JobErr, not Rejected.
+    client
+        .submit(WireJob {
+            a: WireOperand::Registered(a32),
+            b: WireOperand::Registered(a32),
+            dataflow: Dataflow::ParGustavson {
+                threads: 2,
+                accum: AccumSpec::default(),
+                semiring: SemiringKind::Arithmetic,
+            },
+            deadline_ms: Some(0),
+        })
+        .expect("submit");
+    match client.recv().expect("recv") {
+        Reply::JobErr { error, .. } => assert_eq!(error, ServeError::DeadlineExceeded),
+        other => panic!("expected JobErr, got {other:?}"),
+    }
+
+    // The connection survived all four rejections.
+    client.ping().expect("still serving");
+    server.shutdown();
+}
+
+/// Backpressure crosses the wire: a single-worker server with a one-job
+/// admission bound sheds the overflow of a burst as `QueueFull`, and the
+/// retry-after hint survives the hop.
+#[test]
+fn queue_full_sheds_over_the_wire_with_retry_after() {
+    let _g = faults::test_lock();
+    faults::clear();
+    let a = rmat(&RmatParams::new(9, 20_000, 41));
+    let b = rmat(&RmatParams::new(9, 20_000, 42));
+    let oracle = spgemm_semiring(&a, &b, SemiringKind::Arithmetic);
+    let server = start(NetServerConfig {
+        server: ServerConfig {
+            workers: 1,
+            max_queued_jobs: 1,
+            ..ServerConfig::default()
+        },
+        ..NetServerConfig::default()
+    });
+    let mut client = Client::connect(&server.local_addr().to_string()).expect("connect");
+    let id_a = client.register("A", &a).expect("register A");
+    let id_b = client.register("B", &b).expect("register B");
+    let total = 6;
+    for _ in 0..total {
+        client
+            .submit(par_job(
+                WireOperand::Registered(id_a),
+                WireOperand::Registered(id_b),
+                SemiringKind::Arithmetic,
+            ))
+            .expect("submit");
+    }
+    let mut ok = 0;
+    let mut shed = 0;
+    for _ in 0..total {
+        match client.recv().expect("recv") {
+            Reply::JobOk { c, .. } => {
+                assert_eq!(c, oracle, "admitted jobs still serve bitwise");
+                ok += 1;
+            }
+            Reply::Rejected {
+                error: ServeError::QueueFull { retry_after_jobs },
+                ..
+            } => {
+                assert!(retry_after_jobs >= 1, "retry-after hint survives the hop");
+                shed += 1;
+            }
+            other => panic!("expected JobOk or QueueFull, got {other:?}"),
+        }
+    }
+    assert_eq!(ok + shed, total, "every submit gets exactly one reply");
+    assert!(ok >= 1, "the first job is always admitted");
+    assert!(shed >= 1, "a 1-deep bound must shed a 6-job burst");
+    server.shutdown();
+}
+
+/// A fault injected inside the server's worker pool (the `SMASH_INJECT`
+/// path CI drives through the environment) surfaces as exactly one typed
+/// `JobErr` on the wire while cohabitant jobs on the same connection
+/// serve bitwise-equal.
+#[test]
+fn injected_fault_is_contained_to_one_wire_error() {
+    let _g = faults::test_lock();
+    faults::clear();
+    let a = rmat(&RmatParams::new(6, 300, 51));
+    let b = rmat(&RmatParams::new(6, 300, 52));
+    let oracle = spgemm_semiring(&a, &b, SemiringKind::Arithmetic);
+    // One worker: jobs execute FIFO, so the first job deterministically
+    // takes hit 1 of the armed site.
+    let server = start(NetServerConfig {
+        server: ServerConfig {
+            workers: 1,
+            ..ServerConfig::default()
+        },
+        ..NetServerConfig::default()
+    });
+    let mut client = Client::connect(&server.local_addr().to_string()).expect("connect");
+    let id_a = client.register("A", &a).expect("register A");
+    let id_b = client.register("B", &b).expect("register B");
+    faults::install(FaultPlan::seeded(1).with(FaultSpec::parse("numeric_row:panic:1", 1).unwrap()));
+    for _ in 0..3 {
+        client
+            .submit(par_job(
+                WireOperand::Registered(id_a),
+                WireOperand::Registered(id_b),
+                SemiringKind::Arithmetic,
+            ))
+            .expect("submit");
+    }
+    let mut ok = 0;
+    let mut contained = 0;
+    for _ in 0..3 {
+        match client.recv().expect("recv") {
+            Reply::JobOk { c, .. } => {
+                assert_eq!(c, oracle, "cohabitants serve bitwise despite the panic");
+                ok += 1;
+            }
+            Reply::JobErr {
+                error: ServeError::WorkerPanicked { stage, message },
+                ..
+            } => {
+                assert_eq!(stage, "numeric_row", "the stage names the injection site");
+                assert!(message.contains("injected fault"), "payload: {message}");
+                contained += 1;
+            }
+            other => panic!("expected JobOk or contained JobErr, got {other:?}"),
+        }
+    }
+    faults::clear();
+    assert_eq!(
+        (contained, ok),
+        (1, 2),
+        "exactly one job absorbs the fault; the pool and connection survive"
+    );
+    // Same connection, after the panic: still serving, plan still resident.
+    client
+        .submit(par_job(
+            WireOperand::Registered(id_a),
+            WireOperand::Registered(id_b),
+            SemiringKind::Arithmetic,
+        ))
+        .expect("submit after panic");
+    match client.recv().expect("recv") {
+        Reply::JobOk {
+            symbolic_reused, c, ..
+        } => {
+            assert_eq!(c, oracle);
+            assert_eq!(
+                symbolic_reused,
+                Some(true),
+                "the published plan survives the quarantined panic"
+            );
+        }
+        other => panic!("post-panic job must succeed, got {other:?}"),
+    }
+    server.shutdown();
+}
+
+/// A malformed payload inside a well-formed frame is the one recoverable
+/// protocol violation: the server answers `Reply::Error` and the very
+/// same connection keeps serving.
+#[test]
+fn malformed_payload_is_reported_and_connection_survives() {
+    let _g = faults::test_lock();
+    faults::clear();
+    let server = start(NetServerConfig::default());
+    let stream = TcpStream::connect(server.local_addr()).expect("connect");
+    let mut w = BufWriter::new(stream.try_clone().expect("clone"));
+    let mut r = BufReader::new(stream);
+
+    // Unknown request-kind byte: frame-aligned, payload garbage.
+    frame::write_frame(&mut w, &[0xFF, 1, 2, 3]).expect("write");
+    match frame::read_reply(&mut r, frame::DEFAULT_MAX_FRAME_BYTES).expect("read") {
+        Some(Reply::Error { detail }) => {
+            assert!(detail.contains("malformed payload"), "detail: {detail}");
+        }
+        other => panic!("expected Reply::Error, got {other:?}"),
+    }
+
+    // The stream is still aligned: a valid ping on the same connection.
+    frame::write_request(&mut w, &Request::Ping { tag: 7 }).expect("write");
+    match frame::read_reply(&mut r, frame::DEFAULT_MAX_FRAME_BYTES).expect("read") {
+        Some(Reply::Pong { tag }) => assert_eq!(tag, 7),
+        other => panic!("connection must survive a malformed payload, got {other:?}"),
+    }
+    server.shutdown();
+}
+
+/// Header-level violations desynchronize the stream: the server reports a
+/// typed `Reply::Error` and closes. Three ways to get it wrong — garbage
+/// magic, an oversized length claim, a frame truncated mid-payload.
+#[test]
+fn header_violations_are_reported_then_closed() {
+    let _g = faults::test_lock();
+    faults::clear();
+    let server = start(NetServerConfig {
+        max_frame_bytes: 1024,
+        ..NetServerConfig::default()
+    });
+    let addr = server.local_addr();
+    let expect_error_then_close = |stream: TcpStream, what: &str, needle: &str| {
+        let mut r = BufReader::new(stream);
+        match frame::read_reply(&mut r, frame::DEFAULT_MAX_FRAME_BYTES).expect(what) {
+            Some(Reply::Error { detail }) => {
+                assert!(detail.contains(needle), "{what}: detail `{detail}`");
+            }
+            other => panic!("{what}: expected Reply::Error, got {other:?}"),
+        }
+        match frame::read_reply(&mut r, frame::DEFAULT_MAX_FRAME_BYTES).expect(what) {
+            None => {} // server closed: clean EOF
+            other => panic!("{what}: server must close after reporting, got {other:?}"),
+        }
+    };
+
+    // Garbage magic.
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.write_all(b"XXXXXXXXXX").expect("write");
+    expect_error_then_close(s, "bad magic", "bad frame magic");
+
+    // Oversized length claim (2048 > the server's 1024-byte guard).
+    let mut s = TcpStream::connect(addr).expect("connect");
+    let mut header = Vec::new();
+    header.extend_from_slice(&frame::MAGIC);
+    header.extend_from_slice(&frame::VERSION.to_le_bytes());
+    header.extend_from_slice(&2048u32.to_le_bytes());
+    s.write_all(&header).expect("write");
+    expect_error_then_close(s, "oversized", "exceeds");
+
+    // Truncated: announce 100 payload bytes, send 10, hang up the write
+    // half.
+    let mut s = TcpStream::connect(addr).expect("connect");
+    let mut partial = Vec::new();
+    partial.extend_from_slice(&frame::MAGIC);
+    partial.extend_from_slice(&frame::VERSION.to_le_bytes());
+    partial.extend_from_slice(&100u32.to_le_bytes());
+    partial.extend_from_slice(&[0u8; 10]);
+    s.write_all(&partial).expect("write");
+    s.shutdown(Shutdown::Write).expect("half-close");
+    expect_error_then_close(s, "truncated", "mid-frame");
+
+    server.shutdown();
+}
+
+/// An idle connection with nothing in flight is reaped after the read
+/// timeout; the reap is reported as a typed `Reply::Error` first.
+#[test]
+fn idle_connection_is_reaped_after_timeout() {
+    let _g = faults::test_lock();
+    faults::clear();
+    let server = start(NetServerConfig {
+        read_timeout: Duration::from_millis(50),
+        ..NetServerConfig::default()
+    });
+    let stream = TcpStream::connect(server.local_addr()).expect("connect");
+    let mut r = BufReader::new(stream);
+    // Send nothing. Within a few timeout periods the server reports the
+    // idle reap and closes.
+    match frame::read_reply(&mut r, frame::DEFAULT_MAX_FRAME_BYTES).expect("read") {
+        Some(Reply::Error { detail }) => {
+            assert!(detail.contains("idle read timeout"), "detail: {detail}");
+        }
+        other => panic!("expected idle-reap report, got {other:?}"),
+    }
+    assert!(
+        frame::read_reply(&mut r, frame::DEFAULT_MAX_FRAME_BYTES)
+            .expect("read")
+            .is_none(),
+        "server must close after the reap"
+    );
+    server.shutdown();
+}
