@@ -168,4 +168,39 @@ echo "$fault_out" | grep -q "bitwise-equal to serial oracle: 3/3" \
     || { echo "FAIL: cohabitant jobs must survive the injected fault bitwise"; exit 1; }
 kill "$fault_pid" 2>/dev/null || true
 
+echo "== QoS smoke test: spray traffic classes against a loopback server =="
+# The multi-tenant scheduler on the wire: a two-class spray run
+# (interactive at weight 3 with a 2 s deadline, batch at weight 1 with
+# none) against a fresh loopback server. Class names ride the wire as
+# tenants and weights as priorities, so the server's weighted-fair
+# scheduler sees real QoS traffic. `spray` itself exits nonzero if any
+# class misses its p99 SLO; the greps additionally pin the per-class
+# verdict markers and the schema-versioned BENCH_10.json artifact. The
+# 5000 ms SLOs are deliberately generous — this gate catches stalls and
+# starvation, not millisecond-level regressions on shared CI runners.
+rm -f serve_qos.log BENCH_10.json
+"$SMASH_BIN" serve --listen 127.0.0.1:0 --workers 2 > serve_qos.log 2>&1 &
+qos_pid=$!
+trap 'kill "$serve_pid" "$fault_pid" "$qos_pid" 2>/dev/null || true' EXIT
+for _ in $(seq 1 100); do
+    grep -q "listening on" serve_qos.log && break
+    sleep 0.1
+done
+grep -q "listening on" serve_qos.log \
+    || { echo "FAIL: QoS server never printed its bound address"; cat serve_qos.log; exit 1; }
+qos_addr=$(sed -n 's/^listening on //p' serve_qos.log | head -n1)
+
+qos_out=$("$SMASH_BIN" spray --addr "$qos_addr" --count 40 \
+    --class "interactive:3:2000:0:5000,batch:1:0:0:5000" --out BENCH_10.json)
+echo "$qos_out"
+class_passes=$(echo "$qos_out" | grep -c -- "-> PASS" || true)
+[ "$class_passes" = "2" ] \
+    || { echo "FAIL: both traffic classes must report a p99 SLO PASS (got $class_passes)"; exit 1; }
+test -s BENCH_10.json || { echo "FAIL: QoS report BENCH_10.json missing/empty"; exit 1; }
+grep -q '"schema": 2' BENCH_10.json \
+    || { echo "FAIL: QoS report must carry spray schema v2"; exit 1; }
+grep -q '"classes"' BENCH_10.json \
+    || { echo "FAIL: QoS report must carry the per-class breakdown"; exit 1; }
+kill "$qos_pid" 2>/dev/null || true
+
 echo "CI green ✓"

@@ -10,14 +10,14 @@
 //!
 //! Run: `cargo run --release --example graph_serving`
 
-use smash::coordinator::{Coordinator, Job, ServerConfig};
 use smash::formats::Csr;
 use smash::gen::{rmat, undirected, RmatParams};
+use smash::prelude::*;
 use smash::spgemm::graph::{
     apsp_minplus, apsp_minplus_served, bfs_levels, bfs_levels_served, transitive_closure,
     transitive_closure_served, triangles, triangles_served,
 };
-use smash::spgemm::{spgemm_semiring, AccumSpec, Dataflow, SemiringKind};
+use smash::spgemm::spgemm_semiring;
 
 /// Full structural + value equality — `.data` alone degenerates to a
 /// count check on all-ones boolean matrices.
@@ -96,15 +96,9 @@ fn main() {
     for kind in SemiringKind::ALL {
         ids.push((
             kind,
-            coord.submit(Job::NativeSpgemm {
-                a: id.into(),
-                b: id.into(),
-                dataflow: Dataflow::ParGustavson {
-                    threads,
-                    accum: AccumSpec::default(),
-                    semiring: kind,
-                },
-            }),
+            coord
+                .try_submit(Job::pair(id, id).threads(threads).semiring(kind))
+                .expect("admission is unbounded here"),
         ));
     }
     let responses = coord.collect_all();

@@ -9,13 +9,12 @@
 //! Run: `cargo run --release --example serve_spgemm`
 
 use smash::config::{KernelConfig, SimConfig};
-use smash::coordinator::{schedule_windows, Coordinator, Job, SchedPolicy, ServerConfig};
+use smash::coordinator::{schedule_windows, SchedPolicy};
 use smash::faults::{self, FaultPlan, FaultSpec};
 use smash::gen::{rmat, RmatParams};
 use smash::kernels::plan_windows;
-use smash::spgemm::{
-    AccumMode, AccumSpec, AccumStats, BandSpec, Dataflow, SemiringKind, WorkerPool,
-};
+use smash::prelude::*;
+use smash::spgemm::{AccumStats, WorkerPool};
 use std::time::Instant;
 
 fn main() {
@@ -78,12 +77,9 @@ fn main() {
     let mut submitted = 0usize;
     // SMASH jobs on the simulator — same shared operands
     for _ in 0..4 {
-        coord.submit(Job::SmashSpgemm {
-            a: id_a.into(),
-            b: id_b.into(),
-            kernel: KernelConfig::v3(),
-            sim: SimConfig::piuma_block(),
-        });
+        coord
+            .try_submit(Job::pair(id_a, id_b).simulate(KernelConfig::v3(), SimConfig::piuma_block()))
+            .expect("admission is unbounded here");
         submitted += 1;
     }
     // native parallel-Gustavson jobs on the persistent worker pool: all
@@ -93,15 +89,9 @@ fn main() {
     // The adaptive accumulator hashes light rows and goes dense on heavy
     // ones, keyed off the (cached) symbolic FLOPs bound.
     for _ in 0..8 {
-        coord.submit(Job::NativeSpgemm {
-            a: id_a.into(),
-            b: id_b.into(),
-            dataflow: Dataflow::ParGustavson {
-                threads: 4,
-                accum: AccumMode::Adaptive.into(),
-                semiring: SemiringKind::Arithmetic,
-            },
-        });
+        coord
+            .try_submit(Job::pair(id_a, id_b).threads(4).accum(AccumMode::Adaptive))
+            .expect("admission is unbounded here");
         submitted += 1;
     }
     println!("submitted {submitted} jobs (queue bound 8 exerts backpressure)");
@@ -184,15 +174,9 @@ fn main() {
     // One more job with `--accum auto` semantics: the coordinator resolves
     // the per-matrix heuristic threshold from the pair's (already cached)
     // symbolic FLOPs distribution and records the pick on the response.
-    coord.submit(Job::NativeSpgemm {
-        a: id_a.into(),
-        b: id_b.into(),
-        dataflow: Dataflow::ParGustavson {
-            threads: 4,
-            accum: AccumSpec::Auto,
-            semiring: SemiringKind::Arithmetic,
-        },
-    });
+    coord
+        .try_submit(Job::pair(id_a, id_b).threads(4).accum(AccumSpec::Auto))
+        .expect("admission is unbounded here");
     let auto_resp = coord.collect_one().expect("auto job outstanding");
     println!(
         "auto accumulator job: resolved policy {}, symbolic plan reused: {}",
@@ -208,16 +192,14 @@ fn main() {
     // dense accumulator lane never exceeds the band width. Blocked jobs
     // key their plan-cache slot separately from the unblocked burst
     // above, so this computes its own symbolic pass.
-    coord.submit(Job::NativeSpgemm {
-        a: id_a.into(),
-        b: id_b.into(),
-        dataflow: Dataflow::ParGustavsonBlocked {
-            threads: 4,
-            accum: AccumSpec::Auto,
-            semiring: SemiringKind::Arithmetic,
-            bands: BandSpec::Auto,
-        },
-    });
+    coord
+        .try_submit(
+            Job::pair(id_a, id_b)
+                .threads(4)
+                .accum(AccumSpec::Auto)
+                .bands(BandSpec::Auto),
+        )
+        .expect("admission is unbounded here");
     let blocked_resp = coord.collect_one().expect("blocked job outstanding");
     let bt = blocked_resp.traffic.expect("native jobs report traffic");
     assert!(bt.band.band_cols > 0, "blocked jobs record band stats");
@@ -242,6 +224,27 @@ fn main() {
         fstats.failed, fstats.shed, fstats.expired
     );
     println!("faults observed: {observed} armed site checks, {injected} injected");
+    // The consolidated observability surface: one snapshot carries what
+    // the individual getters above expose, plus per-tenant queue depths
+    // and log-bucketed latency histograms — and it round-trips as JSON.
+    let metrics = coord.metrics();
+    println!(
+        "metrics snapshot (schema v{}): {} symbolic passes / {} hits, \
+         default-tenant p99 {} us over {} completions",
+        metrics.schema,
+        metrics.symbolic_passes,
+        metrics.symbolic_hits,
+        metrics
+            .tenants
+            .first()
+            .map(|t| t.quantile_us(0.99))
+            .unwrap_or(0),
+        metrics.tenants.first().map(|t| t.completed).unwrap_or(0),
+    );
+    assert_eq!(
+        MetricsSnapshot::from_json(&metrics.to_json()).expect("snapshot round-trips"),
+        metrics
+    );
     faults::clear();
     coord.shutdown();
 
@@ -262,15 +265,9 @@ fn main() {
     let id0 = coord.register("G0", m0);
     let id1 = coord.register("G1", rmat(&RmatParams::new(9, 5_000, 8)));
     // A job against G0 resolves its Arc now...
-    coord.submit(Job::NativeSpgemm {
-        a: id0.into(),
-        b: id0.into(),
-        dataflow: Dataflow::ParGustavson {
-            threads: 2,
-            accum: AccumMode::Adaptive.into(),
-            semiring: SemiringKind::Arithmetic,
-        },
-    });
+    coord
+        .try_submit(Job::pair(id0, id0).threads(2))
+        .expect("admission is unbounded here");
     // ...then a third registration pushes past the budget. G0 was touched
     // by that submit, so G1 is now the least-recently-used victim.
     let id2 = coord.register("G2", rmat(&RmatParams::new(9, 5_000, 9)));

@@ -17,7 +17,7 @@ use smash::spgemm::{
     gustavson, par_gustavson, par_gustavson_accum, par_gustavson_blocked_with_plan_policy,
     par_gustavson_kind, par_gustavson_spawning, par_gustavson_spec, par_gustavson_with_plan,
     par_gustavson_with_plan_policy, rowwise_hash, spgemm_semiring, symbolic_plan, AccumMode,
-    AccumSpec, BandSpec, Dataflow, SemiringKind,
+    AccumSpec, BandSpec, SemiringKind,
 };
 use smash::util::prng::Xoshiro256;
 use std::sync::Arc;
@@ -240,15 +240,9 @@ fn main() {
         let id_a = coord.register_arc("A", Arc::clone(&a_shared));
         let id_b = coord.register_arc("B", Arc::clone(&b_shared));
         for _ in 0..16 {
-            coord.submit(Job::NativeSpgemm {
-                a: id_a.into(),
-                b: id_b.into(),
-                dataflow: Dataflow::ParGustavson {
-                    threads: 2,
-                    accum: AccumSpec::default(),
-                    semiring: SemiringKind::Arithmetic,
-                },
-            });
+            coord
+                .try_submit(Job::pair(id_a, id_b).threads(2))
+                .expect("burst admission is unbounded");
         }
         let responses = coord.collect_all();
         let nnz: usize = responses.values().map(|r| r.c.nnz()).sum();

@@ -12,13 +12,15 @@
 
 use crate::bench::{self, Scale};
 use crate::config::{KernelConfig, SimConfig};
-use crate::coordinator::{Coordinator, Job, ServerConfig};
+use crate::coordinator::{Coordinator, Job, ServerConfig, METRICS_SCHEMA_VERSION};
 use crate::faults::{self, FaultPlan, FaultSpec};
 use crate::formats::mm;
 use crate::gen::{rmat, RmatParams};
 use crate::kernels::{run_all_versions, run_smash};
 use crate::net::frame::{self, Reply, WireJob, WireOperand};
-use crate::net::{spray, Client, NetServer, NetServerConfig, SprayConfig, SPRAY_SCHEMA_VERSION};
+use crate::net::{
+    spray, Client, NetServer, NetServerConfig, SprayConfig, TrafficClass, SPRAY_SCHEMA_VERSION,
+};
 use crate::report::bar_chart;
 use crate::spgemm::{spgemm_semiring, AccumMode, AccumSpec, BandSpec, Dataflow, SemiringKind};
 use crate::util::json::Json;
@@ -121,7 +123,10 @@ USAGE: smash <tables|figures|run|gcn|gen|serve|client|spray|tune|help> [flags]
           wire typed and lossless (extra listen flags: [--queue-depth 16]
           [--max-queued N] [--read-timeout-ms 30000] [--max-frame-mb 64];
           SMASH_INJECT / SMASH_FAULT_SEED in the environment arm the
-          fault plane with the same specs as --inject)
+          fault plane with the same specs as --inject); --metrics-out
+          FILE writes the consolidated Coordinator::metrics() snapshot
+          as schema-versioned JSON — once after an in-process burst,
+          refreshed ~1/s by a --listen server
   client  --addr HOST:PORT [--jobs 4] [--threads 2] [--log2n 8]
           [--edges 4000] [--seed N] [--inline] [--deadline-ms N]
           [--accum adaptive|dense|hash|merge|auto] [--semiring arith|
@@ -142,7 +147,13 @@ USAGE: smash <tables|figures|run|gcn|gen|serve|client|spray|tune|help> [flags]
           server and report p50/p90/p99 latency, throughput, and
           ok/shed/expired/failed counts; --out writes the
           schema-versioned JSON report CI archives; --count 0 switches
-          to --duration-ms pacing
+          to --duration-ms pacing; --class "name:weight:deadline_ms:rate
+          [:slo_ms],..." (ONE comma-separated flag) splits the traffic
+          into QoS classes — each submit carries its class name as the
+          tenant and its weight as the scheduler priority, the report
+          gains per-class latency lines asserting each p99 SLO (exit
+          nonzero on violation), and a mid-run metrics scrape of the
+          server is embedded in the JSON report
   tune    [--smoke] [--out report.json] [--threads 4] [--iters N] [--seed N]
           — sweep the adaptive accumulator threshold (powers-of-two
           fractions of b.cols, forced dense/hash/merge endpoints, the
@@ -520,19 +531,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let r = coord.collect_one().expect("pending jobs outstanding");
             drain(r);
         }
+        // Admission is unbounded in the demo burst (no --max-queued), so
+        // try_submit can only fail on a bug — surface it loudly.
         if smash {
-            coord.submit(Job::SmashSpgemm {
-                a: id_a.into(),
-                b: id_b.into(),
-                kernel: KernelConfig::v3(),
-                sim: SimConfig::piuma_block(),
-            });
+            coord
+                .try_submit(
+                    Job::pair(id_a, id_b).simulate(KernelConfig::v3(), SimConfig::piuma_block()),
+                )
+                .expect("demo burst admission is unbounded");
         } else {
-            coord.submit(Job::NativeSpgemm {
-                a: id_a.into(),
-                b: id_b.into(),
-                dataflow,
-            });
+            coord
+                .try_submit(Job::pair(id_a, id_b).dataflow(dataflow))
+                .expect("demo burst admission is unbounded");
         }
     }
     while let Some(r) = coord.collect_one() {
@@ -641,6 +651,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("faults observed: {observed} armed site checks, {injected} injected");
     if fault_plan.is_some() {
         faults::clear();
+    }
+    if let Some(path) = args.get("metrics-out") {
+        std::fs::write(path, coord.metrics().to_json().to_string_pretty())
+            .with_context(|| format!("cannot write --metrics-out {path}"))?;
+        println!("wrote metrics snapshot {path} (schema v{METRICS_SCHEMA_VERSION})");
     }
     coord.shutdown();
     Ok(())
@@ -780,6 +795,7 @@ fn cmd_serve_listen(args: &Args, addr: &str) -> Result<()> {
             },
             read_timeout: Duration::from_millis(read_timeout_ms),
             max_frame_bytes: max_frame_mb << 20,
+            metrics_out: args.get("metrics-out").map(std::path::PathBuf::from),
         },
     )
     .with_context(|| format!("cannot bind --listen {addr}"))?;
@@ -859,6 +875,8 @@ fn cmd_client(args: &Args) -> Result<()> {
                     semiring,
                 },
                 deadline_ms,
+                tenant: String::new(),
+                priority: 1,
             })
             .context("submit failed")?;
     }
@@ -1004,6 +1022,7 @@ fn cmd_spray(args: &Args) -> Result<()> {
             })
             .collect::<Result<Vec<_>>>()?,
     };
+    let classes = parse_class_flags(args)?;
     let cfg = SprayConfig {
         addr: addr.to_string(),
         count,
@@ -1018,10 +1037,11 @@ fn cmd_spray(args: &Args) -> Result<()> {
         accums,
         threads,
         deadline_ms,
+        classes,
     };
     println!(
         "spraying {addr}: {}, window {window}, {reuse_pct}% pair reuse, {} semiring(s), \
-         {} accum spec(s){}",
+         {} accum spec(s){}{}",
         if count > 0 {
             format!("{count} jobs")
         } else {
@@ -1034,6 +1054,19 @@ fn cmd_spray(args: &Args) -> Result<()> {
         } else {
             ", closed-loop".to_string()
         },
+        if cfg.classes.is_empty() {
+            String::new()
+        } else {
+            format!(
+                ", {} QoS class(es): {}",
+                cfg.classes.len(),
+                cfg.classes
+                    .iter()
+                    .map(|c| format!("{}(w{})", c.name, c.weight))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            )
+        },
     );
     let report = spray(&cfg).context("spray run failed")?;
     println!("{}", report.render());
@@ -1045,7 +1078,27 @@ fn cmd_spray(args: &Args) -> Result<()> {
     if report.counts.completed() == 0 {
         bail!("no requests completed — is the server reachable?");
     }
+    if !report.slo_ok() {
+        bail!("per-class p99 SLO violated (see the FAIL class lines above)");
+    }
     Ok(())
+}
+
+/// Resolve the single `--class` flag into QoS [`TrafficClass`]es. The
+/// flag map keeps one value per key, so repeated `--class` flags would
+/// collapse — one comma-separated flag carries the whole list instead.
+/// Absent = legacy class-less spray.
+fn parse_class_flags(args: &Args) -> Result<Vec<TrafficClass>> {
+    match args.get("class") {
+        None => Ok(Vec::new()),
+        Some(specs) => match TrafficClass::parse_list(specs) {
+            Ok(classes) if classes.is_empty() => {
+                bail!("--class got no class specs (want name:weight:deadline_ms:rate[:slo_ms],...)")
+            }
+            Ok(classes) => Ok(classes),
+            Err(e) => bail!("{e}"),
+        },
+    }
 }
 
 fn cmd_tune(args: &Args) -> Result<()> {
@@ -1373,6 +1426,30 @@ mod tests {
         assert!(parse_fault_flags(&argv(&["--inject", "nowhere:panic:1"])).is_err());
         assert!(parse_fault_flags(&argv(&["--inject", "symbolic:explode"])).is_err());
         assert!(parse_fault_flags(&argv(&["--fault-seed", "3"])).is_err());
+    }
+
+    #[test]
+    fn class_flag_parsing() {
+        let argv = |s: &[&str]| -> Args {
+            Args::parse(&s.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+        };
+        assert_eq!(parse_class_flags(&argv(&[])).unwrap(), Vec::new());
+        let classes = parse_class_flags(&argv(&[
+            "--class",
+            "interactive:3:2000:0:5000,batch:1:0:0",
+        ]))
+        .unwrap();
+        assert_eq!(classes.len(), 2);
+        assert_eq!(classes[0].name, "interactive");
+        assert_eq!(classes[0].weight, 3);
+        assert_eq!(classes[0].deadline_ms, Some(2000));
+        assert_eq!(classes[0].slo_p99_ms, 5000);
+        assert_eq!(classes[1].name, "batch");
+        assert_eq!(classes[1].deadline_ms, None);
+        // bare `--class` parses as "true" in the flag map -> a bad spec
+        assert!(parse_class_flags(&argv(&["--class"])).is_err());
+        assert!(parse_class_flags(&argv(&["--class", ","])).is_err());
+        assert!(parse_class_flags(&argv(&["--class", "x:bogus:0:0"])).is_err());
     }
 
     #[test]

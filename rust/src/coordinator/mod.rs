@@ -5,14 +5,19 @@
 //!   containing largely sparse rows can be oversubscribed").
 //! * [`server`] — a std::thread worker pool with a bounded job queue
 //!   (backpressure), routing SpGEMM / GCN requests to workers and
-//!   collecting responses.
+//!   collecting responses under the multi-tenant weighted-fair
+//!   scheduler ([`scheduler::JobScheduler`]).
 
 pub mod die;
 pub mod scheduler;
 pub mod server;
 
 pub use die::{run_die, DieReport};
-pub use scheduler::{schedule_loads, schedule_windows, Assignment, SchedPolicy};
+pub use scheduler::{
+    schedule_loads, schedule_windows, Assignment, JobScheduler, SchedPolicy, AGING_PERIOD,
+};
 pub use server::{
-    Coordinator, Job, JobId, JobSpec, MatrixId, MatrixRef, Response, ServeError, ServerConfig,
+    Coordinator, Job, JobBuilder, JobId, JobSpec, MatrixId, MatrixRef, MetricsSnapshot, Priority,
+    Response, ServeError, ServerConfig, TenantId, TenantMetrics, TenantQuota,
+    METRICS_SCHEMA_VERSION,
 };

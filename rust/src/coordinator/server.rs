@@ -59,17 +59,37 @@
 //! safe mid-flight: jobs hold `Arc` clones resolved at submit time, so
 //! an evicted matrix stays alive exactly until its last in-flight job
 //! drains.
+//!
+//! ## Multi-tenancy
+//!
+//! Every [`JobSpec`] carries a [`TenantId`] and a [`Priority`]; jobs
+//! built from a plain [`Job`] run as the default tenant at the default
+//! priority and behave exactly as before tenancy existed. Dequeue is a
+//! weighted-fair, deadline-aware [`JobScheduler`]
+//! (crate::coordinator::scheduler::JobScheduler) in front of the pool:
+//! each tenant has a virtual-time queue charged `1/priority` per served
+//! job, ties break to the earliest head deadline and then submission
+//! order, and every `AGING_PERIOD`-th dequeue serves the globally oldest
+//! job — the starvation bound that also drains priority-0 background
+//! tenants. [`Coordinator::set_tenant_quota`] bounds a tenant's queued
+//! jobs (admission) and resident bytes (a tenant's own LRU eviction —
+//! it can never evict another tenant's residents). All observability is
+//! one surface: [`Coordinator::metrics`] returns a serializable
+//! [`MetricsSnapshot`] that the legacy stat getters now delegate to.
 
 use crate::config::{KernelConfig, SimConfig, TablePlacement};
+use crate::coordinator::scheduler::JobScheduler;
 use crate::faults::{self, FaultStats};
 use crate::formats::Csr;
 use crate::kernels::{plan_windows, run_smash_with_plan, WindowPlan};
 use crate::spgemm::{
     panic_message, par_gustavson_blocked_kind, par_gustavson_blocked_with_plan_kind,
-    par_gustavson_kind, par_gustavson_with_plan_checked, symbolic_plan, AccumPolicy, BandSpec,
-    Dataflow, ParError, SemiringKind, SymbolicPlan, Traffic,
+    par_gustavson_kind, par_gustavson_with_plan_checked, symbolic_plan, AccumPolicy, AccumSpec,
+    BandSpec, Dataflow, ParError, SemiringKind, SymbolicPlan, Traffic,
 };
-use std::collections::HashMap;
+use crate::util::json::Json;
+use anyhow::bail;
+use std::collections::{HashMap, HashSet};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError};
@@ -109,6 +129,78 @@ impl From<Arc<Csr>> for MatrixRef {
 impl From<Csr> for MatrixRef {
     fn from(m: Csr) -> Self {
         MatrixRef::Inline(Arc::new(m))
+    }
+}
+
+/// Identity of the client a job (or registered matrix) belongs to.
+/// Jobs submitted without one run as [`TenantId::default`] — the
+/// `"default"` tenant — which preserves every pre-tenancy behavior:
+/// unlimited quota, weight-1 scheduling, and (alone on a coordinator)
+/// exact FIFO dequeue order.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TenantId(pub String);
+
+impl Default for TenantId {
+    fn default() -> Self {
+        TenantId("default".to_string())
+    }
+}
+
+impl From<&str> for TenantId {
+    fn from(s: &str) -> Self {
+        TenantId(s.to_string())
+    }
+}
+
+impl From<String> for TenantId {
+    fn from(s: String) -> Self {
+        TenantId(s)
+    }
+}
+
+impl std::fmt::Display for TenantId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+/// Scheduling weight of a job's tenant queue: a tenant at priority `w`
+/// is served ~`w`× as often as a priority-1 tenant under saturation.
+/// Priority 0 is *background*: served only by the scheduler's aging
+/// pops, so it still completes (the starvation bound) but never
+/// competes for weighted slots.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Priority(pub u32);
+
+impl Default for Priority {
+    fn default() -> Self {
+        Priority(1)
+    }
+}
+
+/// Per-tenant resource bounds, installed via
+/// [`Coordinator::set_tenant_quota`]. The default is unlimited on both
+/// axes — tenants without a quota behave exactly like the pre-tenancy
+/// coordinator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TenantQuota {
+    /// Admission bound on this tenant's submitted-but-uncollected jobs;
+    /// past it, `try_submit` sheds with [`ServeError::QueueFull`]
+    /// regardless of global headroom.
+    pub max_queued_jobs: usize,
+    /// Byte budget over the tenant's own registered matrices plus the
+    /// published plans keyed entirely on them. Past it, the tenant's
+    /// least-recently-used resident is evicted — never another
+    /// tenant's.
+    pub max_resident_bytes: usize,
+}
+
+impl Default for TenantQuota {
+    fn default() -> Self {
+        TenantQuota {
+            max_queued_jobs: usize::MAX,
+            max_resident_bytes: usize::MAX,
+        }
     }
 }
 
@@ -172,15 +264,33 @@ impl std::fmt::Display for ServeError {
 
 impl std::error::Error for ServeError {}
 
-/// A [`Job`] plus its per-job serving constraints. [`Coordinator::submit`]
-/// and [`Coordinator::try_submit`] accept `impl Into<JobSpec>`, so plain
-/// `Job` values keep working unchanged; [`Job::deadline`] is the ergonomic
-/// way to attach a budget.
+/// A [`Job`] plus its per-job serving constraints.
+/// [`Coordinator::try_submit`] accepts `impl Into<JobSpec>`, so plain
+/// `Job` values keep working unchanged; [`Job::pair`] is the fluent
+/// front door and [`Job::deadline`] the shortcut for just a budget.
 pub struct JobSpec {
     pub job: Job,
     /// Wall-clock budget measured from submit. `None` (the default) never
     /// expires.
     pub deadline: Option<Duration>,
+    /// The tenant whose queue, quota, and metrics this job lands in.
+    pub tenant: TenantId,
+    /// Scheduling weight of the job within its tenant queue.
+    pub priority: Priority,
+}
+
+impl JobSpec {
+    /// Re-tag this spec with a tenant.
+    pub fn tenant(mut self, tenant: impl Into<TenantId>) -> Self {
+        self.tenant = tenant.into();
+        self
+    }
+
+    /// Re-tag this spec with a scheduling priority.
+    pub fn priority(mut self, priority: u32) -> Self {
+        self.priority = Priority(priority);
+        self
+    }
 }
 
 impl From<Job> for JobSpec {
@@ -188,6 +298,8 @@ impl From<Job> for JobSpec {
         JobSpec {
             job,
             deadline: None,
+            tenant: TenantId::default(),
+            priority: Priority::default(),
         }
     }
 }
@@ -225,6 +337,165 @@ impl Job {
         JobSpec {
             job: self,
             deadline: Some(budget),
+            tenant: TenantId::default(),
+            priority: Priority::default(),
+        }
+    }
+
+    /// Fluent job construction — the one front door that replaces the
+    /// scattered `Dataflow` struct literals:
+    ///
+    /// ```ignore
+    /// let spec = Job::pair(id_a, id_b)
+    ///     .semiring(SemiringKind::MinPlus)
+    ///     .accum(AccumSpec::Auto)
+    ///     .deadline(Duration::from_millis(250))
+    ///     .tenant("interactive")
+    ///     .priority(3);
+    /// coord.try_submit(spec)?;
+    /// ```
+    ///
+    /// With no overrides the builder yields a 2-thread
+    /// [`Dataflow::ParGustavson`] arithmetic job; [`JobBuilder::bands`]
+    /// switches to the blocked backend, [`JobBuilder::dataflow`] forces
+    /// any reference dataflow verbatim, and [`JobBuilder::simulate`]
+    /// routes to the SMASH simulator.
+    pub fn pair(a: impl Into<MatrixRef>, b: impl Into<MatrixRef>) -> JobBuilder {
+        JobBuilder {
+            a: a.into(),
+            b: b.into(),
+            threads: 2,
+            accum: AccumSpec::default(),
+            semiring: SemiringKind::Arithmetic,
+            bands: None,
+            dataflow: None,
+            sim: None,
+            deadline: None,
+            tenant: TenantId::default(),
+            priority: Priority::default(),
+        }
+    }
+}
+
+/// Builder returned by [`Job::pair`]. Converts into a [`JobSpec`] (and
+/// therefore into anything `try_submit` accepts) via `Into`.
+pub struct JobBuilder {
+    a: MatrixRef,
+    b: MatrixRef,
+    threads: usize,
+    accum: AccumSpec,
+    semiring: SemiringKind,
+    bands: Option<BandSpec>,
+    dataflow: Option<Dataflow>,
+    sim: Option<(KernelConfig, SimConfig)>,
+    deadline: Option<Duration>,
+    tenant: TenantId,
+    priority: Priority,
+}
+
+impl JobBuilder {
+    /// Worker threads for the pool-backed dataflows (default 2).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Per-job accumulator spec (default [`AccumSpec::default`]).
+    pub fn accum(mut self, accum: impl Into<AccumSpec>) -> Self {
+        self.accum = accum.into();
+        self
+    }
+
+    /// Semiring to fold the product under (default arithmetic).
+    pub fn semiring(mut self, semiring: SemiringKind) -> Self {
+        self.semiring = semiring;
+        self
+    }
+
+    /// Band B's columns and run the propagation-blocked backend.
+    pub fn bands(mut self, bands: BandSpec) -> Self {
+        self.bands = Some(bands);
+        self
+    }
+
+    /// Force an exact [`Dataflow`], overriding the threads/accum/
+    /// semiring/bands knobs — for the serial reference flows.
+    pub fn dataflow(mut self, dataflow: Dataflow) -> Self {
+        self.dataflow = Some(dataflow);
+        self
+    }
+
+    /// Run on the simulated PIUMA block instead of natively.
+    pub fn simulate(mut self, kernel: KernelConfig, sim: SimConfig) -> Self {
+        self.sim = Some((kernel, sim));
+        self
+    }
+
+    /// Wall-clock budget, measured from submit (see [`Job::deadline`]).
+    pub fn deadline(mut self, budget: Duration) -> Self {
+        self.deadline = Some(budget);
+        self
+    }
+
+    /// The tenant whose queue, quota, and metrics the job lands in.
+    pub fn tenant(mut self, tenant: impl Into<TenantId>) -> Self {
+        self.tenant = tenant.into();
+        self
+    }
+
+    /// Scheduling weight (see [`Priority`]; 0 = background).
+    pub fn priority(mut self, priority: u32) -> Self {
+        self.priority = Priority(priority);
+        self
+    }
+}
+
+impl From<JobBuilder> for JobSpec {
+    fn from(builder: JobBuilder) -> JobSpec {
+        let JobBuilder {
+            a,
+            b,
+            threads,
+            accum,
+            semiring,
+            bands,
+            dataflow,
+            sim,
+            deadline,
+            tenant,
+            priority,
+        } = builder;
+        let job = if let Some((kernel, sim)) = sim {
+            Job::SmashSpgemm { a, b, kernel, sim }
+        } else if let Some(dataflow) = dataflow {
+            Job::NativeSpgemm { a, b, dataflow }
+        } else if let Some(bands) = bands {
+            Job::NativeSpgemm {
+                a,
+                b,
+                dataflow: Dataflow::ParGustavsonBlocked {
+                    threads,
+                    accum,
+                    semiring,
+                    bands,
+                },
+            }
+        } else {
+            Job::NativeSpgemm {
+                a,
+                b,
+                dataflow: Dataflow::ParGustavson {
+                    threads,
+                    accum,
+                    semiring,
+                },
+            }
+        };
+        JobSpec {
+            job,
+            deadline,
+            tenant,
+            priority,
         }
     }
 }
@@ -361,6 +632,9 @@ pub struct Response {
     /// Registered operands this job resolved at submit time, in (a, b)
     /// order; inline operands contribute nothing.
     pub registered: Vec<MatrixId>,
+    /// The tenant the job was submitted under, filled in at collect time
+    /// from the coordinator's submit-side bookkeeping.
+    pub tenant: TenantId,
     /// Plan-cache provenance (native symbolic plans *and* SMASH window
     /// plans): `None` — no plan cache was involved (inline operands,
     /// non-batchable dataflow, or cache disabled); `Some(false)` — this
@@ -410,6 +684,7 @@ impl Response {
             wall,
             worker,
             registered,
+            tenant: TenantId::default(),
             symbolic_reused: None,
             traffic: None,
             accum_policy: None,
@@ -470,11 +745,35 @@ struct Resident {
     bytes: usize,
     /// Logical timestamp of the last register/submit touch (LRU order).
     last_use: u64,
+    /// The tenant whose resident-byte quota this matrix counts against.
+    tenant: TenantId,
 }
 
 enum Envelope {
-    Work(JobId, Work),
+    /// One job was pushed into the shared [`JobScheduler`]; the worker
+    /// receiving the tick pops whatever job the fair-share policy picks.
+    /// Ticks ride the same bounded channel `Work` envelopes used to, so
+    /// submit-side backpressure is unchanged.
+    Tick,
     Stop,
+}
+
+/// Per-tenant completion counters plus a log-bucketed submit-to-collect
+/// latency histogram (bucket `i` counts latencies in `[2^i, 2^{i+1})`
+/// microseconds).
+#[derive(Clone, Default)]
+struct TenantCounters {
+    completed: u64,
+    ok: u64,
+    failed: u64,
+    shed: u64,
+    expired: u64,
+    latency_us_hist: [u64; 32],
+}
+
+/// The histogram bucket for a submit-to-collect latency in microseconds.
+fn latency_bucket(us: u64) -> usize {
+    (63 - us.max(1).leading_zeros() as usize).min(31)
 }
 
 /// The coordinator: owns the pool and the matrix registry; `submit` routes
@@ -509,6 +808,20 @@ pub struct Coordinator {
     /// Aggregate fault/overload observability, folded from shed submits
     /// and collected responses ([`Coordinator::fault_stats`]).
     faults: FaultStats,
+    /// The weighted-fair dequeue in front of the pool: `try_submit`
+    /// pushes here then sends one `Envelope::Tick`; each worker pops on
+    /// tick receipt, so ticks-in-channel == jobs-in-scheduler always.
+    sched: Arc<Mutex<JobScheduler<(JobId, Work)>>>,
+    /// Submit-side metadata for in-flight jobs (tenant + submit instant),
+    /// consumed at collect to attribute the response and bucket its
+    /// latency. Keyed by `JobId.0`.
+    pending_meta: HashMap<u64, (TenantId, Instant)>,
+    /// Per-tenant submitted-but-uncollected job counts (queue depths).
+    tenant_pending: HashMap<TenantId, usize>,
+    /// Per-tenant lifetime completion/latency counters.
+    tenant_stats: HashMap<TenantId, TenantCounters>,
+    /// Installed per-tenant quotas; absent tenants are unlimited.
+    quotas: HashMap<TenantId, TenantQuota>,
 }
 
 impl Coordinator {
@@ -518,18 +831,29 @@ impl Coordinator {
         let rx = Arc::new(Mutex::new(rx));
         let (tx_done, rx_done) = sync_channel::<Response>(cfg.queue_depth.max(1024));
         let stats = Arc::new(SymbolicStats::default());
+        let sched: Arc<Mutex<JobScheduler<(JobId, Work)>>> =
+            Arc::new(Mutex::new(JobScheduler::new()));
         let mut handles = Vec::new();
         for worker in 0..cfg.workers.max(1) {
             let rx = Arc::clone(&rx);
             let tx_done = tx_done.clone();
             let stats = Arc::clone(&stats);
+            let sched = Arc::clone(&sched);
             handles.push(std::thread::spawn(move || loop {
                 let msg = {
                     let guard = rx.lock().unwrap();
                     guard.recv()
                 };
                 match msg {
-                    Ok(Envelope::Work(id, work)) => {
+                    Ok(Envelope::Tick) => {
+                        // `try_submit` pushes into the scheduler before
+                        // sending the tick, so a received tick always has
+                        // at least one queued job behind it.
+                        let (id, work) = sched
+                            .lock()
+                            .unwrap()
+                            .pop()
+                            .expect("a delivered tick always has a scheduled job behind it");
                         let t0 = std::time::Instant::now();
                         // Metadata a failed response still needs, pulled
                         // out before `work` moves into execution.
@@ -563,6 +887,10 @@ impl Coordinator {
                                 wall: t0.elapsed(),
                                 worker,
                                 registered,
+                                // Workers don't know tenants; the collect
+                                // path fills this from the submit-side
+                                // bookkeeping.
+                                tenant: TenantId::default(),
                                 symbolic_reused: sj.symbolic_reused,
                                 traffic: sj.traffic,
                                 accum_policy: sj.accum_policy,
@@ -596,6 +924,11 @@ impl Coordinator {
             evictions: 0,
             max_queued_jobs: cfg.max_queued_jobs,
             faults: FaultStats::default(),
+            sched,
+            pending_meta: HashMap::new(),
+            tenant_pending: HashMap::new(),
+            tenant_stats: HashMap::new(),
+            quotas: HashMap::new(),
         }
     }
 
@@ -629,16 +962,42 @@ impl Coordinator {
         self.try_register_arc(name, Arc::new(m))
     }
 
-    /// Fallible [`Coordinator::register_arc`] — the one place every
-    /// registered matrix passes through, so the canonical-form check here
-    /// covers all registration paths.
+    /// [`Coordinator::try_register`] under a specific tenant's resident
+    /// quota instead of the default tenant's.
+    pub fn try_register_for(
+        &mut self,
+        tenant: impl Into<TenantId>,
+        name: impl Into<String>,
+        m: Csr,
+    ) -> Result<MatrixId, ServeError> {
+        self.try_register_arc_for(tenant, name, Arc::new(m))
+    }
+
+    /// Fallible [`Coordinator::register_arc`], owned by the default
+    /// tenant.
     pub fn try_register_arc(
         &mut self,
         name: impl Into<String>,
         m: Arc<Csr>,
     ) -> Result<MatrixId, ServeError> {
+        self.try_register_arc_for(TenantId::default(), name, m)
+    }
+
+    /// The one place every registered matrix passes through, so the
+    /// canonical-form check here covers all registration paths. The
+    /// matrix counts against `tenant`'s [`TenantQuota::max_resident_bytes`]
+    /// (if one is installed) as well as the global budget; a tenant past
+    /// its quota evicts its *own* least-recently-used resident, never
+    /// another tenant's.
+    pub fn try_register_arc_for(
+        &mut self,
+        tenant: impl Into<TenantId>,
+        name: impl Into<String>,
+        m: Arc<Csr>,
+    ) -> Result<MatrixId, ServeError> {
         m.validate_canonical()
             .map_err(|reason| ServeError::InvalidCsr { reason })?;
+        let tenant = tenant.into();
         let name = name.into();
         let id = MatrixId(self.next_matrix);
         self.next_matrix += 1;
@@ -652,13 +1011,21 @@ impl Coordinator {
                 name: name.clone(),
                 bytes,
                 last_use: self.clock,
+                tenant: tenant.clone(),
             },
         );
         if let Some(old) = self.names.insert(name, id) {
             self.evict_id(old);
         }
         self.enforce_budget(&[id]);
+        self.enforce_tenant_budget(&tenant, &[id]);
         Ok(id)
+    }
+
+    /// Install (or replace) a tenant's admission and resident-byte
+    /// quotas. Tenants without one are unlimited on both axes.
+    pub fn set_tenant_quota(&mut self, tenant: impl Into<TenantId>, quota: TenantQuota) {
+        self.quotas.insert(tenant.into(), quota);
     }
 
     /// Look up a registered matrix id by name.
@@ -694,30 +1061,81 @@ impl Coordinator {
     }
 
     /// Matrices dropped from the registry so far (LRU budget evictions
-    /// plus re-register supersessions).
+    /// plus re-register supersessions). Delegates to
+    /// [`Coordinator::metrics`], the one stats surface.
     pub fn evictions(&self) -> u64 {
-        self.evictions
+        self.metrics().evictions
     }
 
     /// Symbolic-plan cache counters: `(passes computed, cache hits)`.
     /// A burst of N batchable jobs sharing one registered operand pair
-    /// reports `(1, N - 1)`.
+    /// reports `(1, N - 1)`. Delegates to [`Coordinator::metrics`].
     pub fn symbolic_stats(&self) -> (u64, u64) {
-        (
-            self.stats.passes.load(Ordering::Relaxed),
-            self.stats.hits.load(Ordering::Relaxed),
-        )
+        let m = self.metrics();
+        (m.symbolic_passes, m.symbolic_hits)
     }
 
     /// SMASH window-plan cache counters: `(plans computed, cache hits)`.
     /// The simulator analogue of [`Coordinator::symbolic_stats`] — a
     /// burst of N simulated jobs sharing one registered pair (and
-    /// planning config) reports `(1, N - 1)`.
+    /// planning config) reports `(1, N - 1)`. Delegates to
+    /// [`Coordinator::metrics`].
     pub fn window_plan_stats(&self) -> (u64, u64) {
-        (
-            self.stats.window_passes.load(Ordering::Relaxed),
-            self.stats.window_hits.load(Ordering::Relaxed),
-        )
+        let m = self.metrics();
+        (m.window_passes, m.window_hits)
+    }
+
+    /// One snapshot of every counter the coordinator keeps: cache
+    /// passes/hits, residency, eviction and fault totals, and a
+    /// per-tenant block (queue depth, completion counters, log-bucketed
+    /// latency histogram). This is the *only* stats surface — the older
+    /// getters ([`Coordinator::symbolic_stats`],
+    /// [`Coordinator::window_plan_stats`], [`Coordinator::evictions`],
+    /// [`Coordinator::fault_stats`]) all delegate to it — and it
+    /// round-trips through [`crate::util::json`] for `serve
+    /// --metrics-out` and the wire `Metrics` frame.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        let mut names: Vec<&TenantId> = self
+            .tenant_stats
+            .keys()
+            .chain(self.tenant_pending.keys())
+            .collect();
+        names.sort();
+        names.dedup();
+        let tenants = names
+            .into_iter()
+            .map(|t| {
+                let c = self.tenant_stats.get(t).cloned().unwrap_or_default();
+                TenantMetrics {
+                    tenant: t.0.clone(),
+                    queued: self.tenant_pending.get(t).copied().unwrap_or(0) as u64,
+                    completed: c.completed,
+                    ok: c.ok,
+                    failed: c.failed,
+                    shed: c.shed,
+                    expired: c.expired,
+                    latency_us_hist: c.latency_us_hist,
+                }
+            })
+            .collect();
+        MetricsSnapshot {
+            schema: METRICS_SCHEMA_VERSION,
+            symbolic_passes: self.stats.passes.load(Ordering::Relaxed),
+            symbolic_hits: self.stats.hits.load(Ordering::Relaxed),
+            window_passes: self.stats.window_passes.load(Ordering::Relaxed),
+            window_hits: self.stats.window_hits.load(Ordering::Relaxed),
+            evictions: self.evictions,
+            resident_bytes: self.resident_bytes as u64,
+            plan_resident_bytes: self.plan_resident_bytes() as u64,
+            resident_count: self.registry.len() as u64,
+            pending: self.pending as u64,
+            shed: self.faults.shed,
+            expired: self.faults.expired,
+            failed: self.faults.failed,
+            observed: self.faults.observed,
+            injected: self.faults.injected,
+            tenants,
+        }
     }
 
     /// Manually evict a named matrix; returns `false` for unknown names.
@@ -783,6 +1201,81 @@ impl Coordinator {
                     let prot = |id: u64| protect.iter().any(|p| p.0 == id);
                     self.plans.retain(|&(pa, pb, _), _| prot(pa) && prot(pb));
                     self.window_plans.retain(|k, _| prot(k.a) && prot(k.b));
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Bytes attributable to one tenant: its own resident matrices plus
+    /// published plan-cache entries keyed entirely on its matrices.
+    /// (A plan over a cross-tenant pair — possible via inline re-register
+    /// games, not via the normal per-tenant API — is charged to nobody;
+    /// the global budget still covers it.)
+    fn tenant_resident_bytes(&self, tenant: &TenantId) -> usize {
+        let owns = |id: u64| self.registry.get(&id).map_or(false, |r| &r.tenant == tenant);
+        let own_matrices: usize = self
+            .registry
+            .values()
+            .filter(|r| &r.tenant == tenant)
+            .map(|r| r.bytes)
+            .sum();
+        let own_plans = published_bytes(
+            self.plans
+                .iter()
+                .filter(|(&(pa, pb, _), _)| owns(pa) && owns(pb))
+                .map(|(_, s)| s),
+            SymbolicPlan::resident_bytes,
+        ) + published_bytes(
+            self.window_plans
+                .iter()
+                .filter(|(k, _)| owns(k.a) && owns(k.b))
+                .map(|(_, s)| s),
+            WindowPlan::resident_bytes,
+        );
+        own_matrices + own_plans
+    }
+
+    /// Per-tenant analogue of [`Coordinator::enforce_budget`]: evict the
+    /// tenant's least-recently-used residents until its own footprint
+    /// fits its [`TenantQuota::max_resident_bytes`]. Only the tenant's
+    /// own entries are candidates — one tenant's registrations can never
+    /// push another tenant's matrices out.
+    fn enforce_tenant_budget(&mut self, tenant: &TenantId, protect: &[MatrixId]) {
+        let cap = match self.quotas.get(tenant) {
+            Some(q) if q.max_resident_bytes != usize::MAX => q.max_resident_bytes,
+            _ => return, // unquoted tenant: skip the walk
+        };
+        while self.tenant_resident_bytes(tenant) > cap {
+            let victim = self
+                .registry
+                .iter()
+                .filter(|(_, r)| &r.tenant == tenant)
+                .filter(|(&id, _)| !protect.iter().any(|p| p.0 == id))
+                .min_by_key(|(_, r)| r.last_use)
+                .map(|(&id, _)| MatrixId(id));
+            match victim {
+                Some(id) => {
+                    self.evict_id(id);
+                }
+                None => {
+                    // Every remaining owned matrix is protected; shed the
+                    // tenant's plan caches (except the protected pair's
+                    // own slots) and accept the overshoot, mirroring the
+                    // global-budget fallback.
+                    let owned: HashSet<u64> = self
+                        .registry
+                        .iter()
+                        .filter(|(_, r)| &r.tenant == tenant)
+                        .map(|(&id, _)| id)
+                        .collect();
+                    let prot = |id: u64| protect.iter().any(|p| p.0 == id);
+                    self.plans.retain(|&(pa, pb, _), _| {
+                        !(owned.contains(&pa) && owned.contains(&pb)) || (prot(pa) && prot(pb))
+                    });
+                    self.window_plans.retain(|k, _| {
+                        !(owned.contains(&k.a) && owned.contains(&k.b)) || (prot(k.a) && prot(k.b))
+                    });
                     break;
                 }
             }
@@ -873,6 +1366,7 @@ impl Coordinator {
     /// Submit a job (blocks when the queue is full — backpressure).
     /// Keeps the historical panic contract for bad requests; use
     /// [`Coordinator::try_submit`] for the typed admission path.
+    #[deprecated(note = "panics on rejection — use `try_submit` and handle the typed ServeError")]
     pub fn submit(&mut self, job: impl Into<JobSpec>) -> JobId {
         self.try_submit(job)
             .unwrap_or_else(|e| panic!("submit failed: {e}"))
@@ -886,11 +1380,30 @@ impl Coordinator {
     /// fully serviceable after any of them. Accepts plain [`Job`] values
     /// or a [`JobSpec`] carrying a deadline budget.
     pub fn try_submit(&mut self, job: impl Into<JobSpec>) -> Result<JobId, ServeError> {
-        let JobSpec { job, deadline } = job.into();
+        let JobSpec {
+            job,
+            deadline,
+            tenant,
+            priority,
+        } = job.into();
         if self.pending >= self.max_queued_jobs {
             self.faults.shed += 1;
+            self.tenant_counters(&tenant).shed += 1;
             return Err(ServeError::QueueFull {
                 retry_after_jobs: self.pending + 1 - self.max_queued_jobs,
+            });
+        }
+        let tenant_cap = self
+            .quotas
+            .get(&tenant)
+            .map(|q| q.max_queued_jobs)
+            .unwrap_or(usize::MAX);
+        let t_pending = self.tenant_pending.get(&tenant).copied().unwrap_or(0);
+        if t_pending >= tenant_cap {
+            self.faults.shed += 1;
+            self.tenant_counters(&tenant).shed += 1;
+            return Err(ServeError::QueueFull {
+                retry_after_jobs: t_pending + 1 - tenant_cap,
             });
         }
         // The budget is a wall-clock promise to the caller, so it starts
@@ -939,12 +1452,21 @@ impl Coordinator {
         // registry budget too; evict LRU residents (never this job's own
         // operands) if they pushed past it.
         self.enforce_budget(&used);
+        self.enforce_tenant_budget(&tenant, &used);
         let id = JobId(self.next_id);
         self.next_id += 1;
         self.pending += 1;
-        self.tx
-            .send(Envelope::Work(id, work))
-            .expect("worker pool hung up");
+        *self.tenant_pending.entry(tenant.clone()).or_insert(0) += 1;
+        self.pending_meta
+            .insert(id.0, (tenant.clone(), Instant::now()));
+        // Push before tick: a delivered tick must always find a job in
+        // the scheduler. The sync channel carries only the (bounded)
+        // tick count, so submit-side backpressure is unchanged.
+        self.sched
+            .lock()
+            .unwrap()
+            .push(tenant, priority.0, deadline, (id, work));
+        self.tx.send(Envelope::Tick).expect("worker pool hung up");
         Ok(id)
     }
 
@@ -999,27 +1521,64 @@ impl Coordinator {
     /// aggregate fault/failure accounting — the one bookkeeping path
     /// shared by every collect flavor, so the counters cannot diverge by
     /// collection strategy.
-    fn note_collected(&mut self, r: Response) -> Response {
+    fn note_collected(&mut self, mut r: Response) -> Response {
         self.pending -= 1;
-        if let Some(e) = &r.error {
+        let (tenant, submitted) = self
+            .pending_meta
+            .remove(&r.id.0)
+            .unwrap_or((TenantId::default(), Instant::now()));
+        if let Some(n) = self.tenant_pending.get_mut(&tenant) {
+            *n = n.saturating_sub(1);
+        }
+        let failed = r.error.is_some();
+        let expired = r.error == Some(ServeError::DeadlineExceeded);
+        if failed {
             self.faults.failed += 1;
-            if *e == ServeError::DeadlineExceeded {
-                self.faults.expired += 1;
-            }
+        }
+        if expired {
+            self.faults.expired += 1;
         }
         if let Some(t) = &r.traffic {
             self.faults.observed += t.faults.observed;
             self.faults.injected += t.faults.injected;
         }
+        let latency_us = submitted.elapsed().as_micros() as u64;
+        let stats = self.tenant_stats.entry(tenant.clone()).or_default();
+        stats.completed += 1;
+        stats.latency_us_hist[latency_bucket(latency_us)] += 1;
+        if failed {
+            stats.failed += 1;
+        } else {
+            stats.ok += 1;
+        }
+        if expired {
+            stats.expired += 1;
+        }
+        // Workers don't know tenants; the submit-side bookkeeping fills
+        // the response's tenant in at collect time.
+        r.tenant = tenant;
         r
+    }
+
+    /// The tenant's counter row, created on first touch.
+    fn tenant_counters(&mut self, tenant: &TenantId) -> &mut TenantCounters {
+        self.tenant_stats.entry(tenant.clone()).or_default()
     }
 
     /// Aggregate fault/overload counters for this coordinator's lifetime:
     /// submits shed at admission, jobs completed failed, deadline
     /// expiries, and the fault-plane site hits / injections its jobs
     /// observed (folded from each collected response's traffic).
+    /// Delegates to [`Coordinator::metrics`].
     pub fn fault_stats(&self) -> FaultStats {
-        self.faults
+        let m = self.metrics();
+        FaultStats {
+            observed: m.observed,
+            injected: m.injected,
+            failed: m.failed,
+            shed: m.shed,
+            expired: m.expired,
+        }
     }
 
     /// Collect all outstanding responses, keyed by id.
@@ -1039,6 +1598,199 @@ impl Coordinator {
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
+    }
+}
+
+/// Version stamp on [`MetricsSnapshot`] JSON: bump whenever the schema
+/// changes shape so downstream scrapers (CI's QoS gate, `smash spray`'s
+/// mid-run scrape) can reject snapshots they don't understand.
+pub const METRICS_SCHEMA_VERSION: u64 = 1;
+
+/// One tenant's block inside [`MetricsSnapshot`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantMetrics {
+    /// Tenant name (`"default"` for untagged work).
+    pub tenant: String,
+    /// Jobs submitted but not yet collected.
+    pub queued: u64,
+    /// Jobs collected, successful or not.
+    pub completed: u64,
+    /// Collected with a result.
+    pub ok: u64,
+    /// Collected with a [`ServeError`].
+    pub failed: u64,
+    /// Submits rejected at admission (global or per-tenant queue cap).
+    pub shed: u64,
+    /// Failures that were specifically [`ServeError::DeadlineExceeded`].
+    pub expired: u64,
+    /// Log-bucketed submit→collect latency histogram: bucket `i` counts
+    /// completions with latency in `[2^i, 2^(i+1))` microseconds
+    /// (bucket 0 also absorbs sub-microsecond completions, bucket 31
+    /// anything slower than ~36 minutes).
+    pub latency_us_hist: [u64; 32],
+}
+
+impl TenantMetrics {
+    /// Upper bound (in microseconds) of the histogram bucket containing
+    /// the `q`-quantile completion, e.g. `quantile_us(0.99)` for p99.
+    /// Returns 0 when nothing has completed.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total: u64 = self.latency_us_hist.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, &n) in self.latency_us_hist.iter().enumerate() {
+            seen += n;
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        1u64 << 32
+    }
+
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("tenant".into(), Json::Str(self.tenant.clone())),
+            ("queued".into(), Json::u64(self.queued)),
+            ("completed".into(), Json::u64(self.completed)),
+            ("ok".into(), Json::u64(self.ok)),
+            ("failed".into(), Json::u64(self.failed)),
+            ("shed".into(), Json::u64(self.shed)),
+            ("expired".into(), Json::u64(self.expired)),
+            (
+                "latency_us_hist".into(),
+                Json::Arr(self.latency_us_hist.iter().map(|&n| Json::u64(n)).collect()),
+            ),
+        ])
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let hist_arr = j.field("latency_us_hist")?.as_arr()?;
+        if hist_arr.len() != 32 {
+            bail!("latency_us_hist: expected 32 buckets, got {}", hist_arr.len());
+        }
+        let mut latency_us_hist = [0u64; 32];
+        for (slot, v) in latency_us_hist.iter_mut().zip(hist_arr) {
+            *slot = v.as_u64()?;
+        }
+        Ok(TenantMetrics {
+            tenant: j.field("tenant")?.as_str()?.to_string(),
+            queued: j.field("queued")?.as_u64()?,
+            completed: j.field("completed")?.as_u64()?,
+            ok: j.field("ok")?.as_u64()?,
+            failed: j.field("failed")?.as_u64()?,
+            shed: j.field("shed")?.as_u64()?,
+            expired: j.field("expired")?.as_u64()?,
+            latency_us_hist,
+        })
+    }
+}
+
+/// The coordinator's one observability surface — see
+/// [`Coordinator::metrics`]. Serializable both ways through
+/// [`crate::util::json`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricsSnapshot {
+    /// [`METRICS_SCHEMA_VERSION`] at capture time.
+    pub schema: u64,
+    /// Symbolic plans computed.
+    pub symbolic_passes: u64,
+    /// Symbolic-plan cache hits.
+    pub symbolic_hits: u64,
+    /// SMASH window plans computed.
+    pub window_passes: u64,
+    /// Window-plan cache hits.
+    pub window_hits: u64,
+    /// Matrices dropped from the registry (LRU + supersession).
+    pub evictions: u64,
+    /// Bytes of resident CSR data (matrices only).
+    pub resident_bytes: u64,
+    /// Bytes of published plan-cache entries.
+    pub plan_resident_bytes: u64,
+    /// Registered resident matrices.
+    pub resident_count: u64,
+    /// Submitted-but-uncollected jobs, all tenants.
+    pub pending: u64,
+    /// Submits shed at admission.
+    pub shed: u64,
+    /// Jobs that failed with [`ServeError::DeadlineExceeded`].
+    pub expired: u64,
+    /// Jobs collected with any error.
+    pub failed: u64,
+    /// Fault-plane site hits observed by collected jobs.
+    pub observed: u64,
+    /// Fault-plane injections fired in collected jobs.
+    pub injected: u64,
+    /// Per-tenant blocks, sorted by tenant name.
+    pub tenants: Vec<TenantMetrics>,
+}
+
+impl MetricsSnapshot {
+    /// Serialize for `serve --metrics-out` and the wire `Metrics` frame.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("schema".into(), Json::u64(self.schema)),
+            ("symbolic_passes".into(), Json::u64(self.symbolic_passes)),
+            ("symbolic_hits".into(), Json::u64(self.symbolic_hits)),
+            ("window_passes".into(), Json::u64(self.window_passes)),
+            ("window_hits".into(), Json::u64(self.window_hits)),
+            ("evictions".into(), Json::u64(self.evictions)),
+            ("resident_bytes".into(), Json::u64(self.resident_bytes)),
+            (
+                "plan_resident_bytes".into(),
+                Json::u64(self.plan_resident_bytes),
+            ),
+            ("resident_count".into(), Json::u64(self.resident_count)),
+            ("pending".into(), Json::u64(self.pending)),
+            ("shed".into(), Json::u64(self.shed)),
+            ("expired".into(), Json::u64(self.expired)),
+            ("failed".into(), Json::u64(self.failed)),
+            ("observed".into(), Json::u64(self.observed)),
+            ("injected".into(), Json::u64(self.injected)),
+            (
+                "tenants".into(),
+                Json::Arr(self.tenants.iter().map(TenantMetrics::to_json).collect()),
+            ),
+        ])
+    }
+
+    /// Parse a snapshot back out of its JSON form, rejecting unknown
+    /// schema versions.
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let schema = j.field("schema")?.as_u64()?;
+        if schema != METRICS_SCHEMA_VERSION {
+            bail!(
+                "metrics schema {} unsupported (this build speaks {})",
+                schema,
+                METRICS_SCHEMA_VERSION
+            );
+        }
+        let tenants = j
+            .field("tenants")?
+            .as_arr()?
+            .iter()
+            .map(TenantMetrics::from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(MetricsSnapshot {
+            schema,
+            symbolic_passes: j.field("symbolic_passes")?.as_u64()?,
+            symbolic_hits: j.field("symbolic_hits")?.as_u64()?,
+            window_passes: j.field("window_passes")?.as_u64()?,
+            window_hits: j.field("window_hits")?.as_u64()?,
+            evictions: j.field("evictions")?.as_u64()?,
+            resident_bytes: j.field("resident_bytes")?.as_u64()?,
+            plan_resident_bytes: j.field("plan_resident_bytes")?.as_u64()?,
+            resident_count: j.field("resident_count")?.as_u64()?,
+            pending: j.field("pending")?.as_u64()?,
+            shed: j.field("shed")?.as_u64()?,
+            expired: j.field("expired")?.as_u64()?,
+            failed: j.field("failed")?.as_u64()?,
+            observed: j.field("observed")?.as_u64()?,
+            injected: j.field("injected")?.as_u64()?,
+            tenants,
+        })
     }
 }
 
@@ -1338,11 +2090,15 @@ mod tests {
         let (oracle, _) = gustavson(&a, &b);
         let mut ids = Vec::new();
         for df in Dataflow::ALL {
-            ids.push(coord.submit(Job::NativeSpgemm {
-                a: a.clone().into(),
-                b: b.clone().into(),
-                dataflow: df,
-            }));
+            ids.push(
+                coord
+                    .try_submit(Job::NativeSpgemm {
+                        a: a.clone().into(),
+                        b: b.clone().into(),
+                        dataflow: df,
+                    })
+                    .unwrap(),
+            );
         }
         let responses = coord.collect_all();
         assert_eq!(responses.len(), 4);
@@ -1365,12 +2121,14 @@ mod tests {
         let a = rmat(&RmatParams::new(6, 300, 3));
         let b = rmat(&RmatParams::new(6, 300, 4));
         let (oracle, _) = gustavson(&a, &b);
-        let id = coord.submit(Job::SmashSpgemm {
-            a: a.into(),
-            b: b.into(),
-            kernel: KernelConfig::v2(),
-            sim: SimConfig::test_tiny(),
-        });
+        let id = coord
+            .try_submit(Job::SmashSpgemm {
+                a: a.into(),
+                b: b.into(),
+                kernel: KernelConfig::v2(),
+                sim: SimConfig::test_tiny(),
+            })
+            .unwrap();
         let r = coord.collect_one().expect("one job outstanding");
         assert_eq!(r.id, id);
         assert!(r.sim_ms.unwrap() > 0.0);
@@ -1388,11 +2146,15 @@ mod tests {
         let a = erdos_renyi(10, 20, 5);
         let mut ids = Vec::new();
         for _ in 0..5 {
-            ids.push(coord.submit(Job::NativeSpgemm {
-                a: a.clone().into(),
-                b: a.clone().into(),
-                dataflow: Dataflow::RowWiseHash,
-            }));
+            ids.push(
+                coord
+                    .try_submit(Job::NativeSpgemm {
+                        a: a.clone().into(),
+                        b: a.clone().into(),
+                        dataflow: Dataflow::RowWiseHash,
+                    })
+                    .unwrap(),
+            );
         }
         let mut sorted = ids.clone();
         sorted.sort();
@@ -1420,11 +2182,13 @@ mod tests {
 
         // drain a real job, then over-collect again
         let a = erdos_renyi(12, 30, 8);
-        coord.submit(Job::NativeSpgemm {
-            a: a.clone().into(),
-            b: a.into(),
-            dataflow: Dataflow::RowWiseHash,
-        });
+        coord
+            .try_submit(Job::NativeSpgemm {
+                a: a.clone().into(),
+                b: a.into(),
+                dataflow: Dataflow::RowWiseHash,
+            })
+            .unwrap();
         assert!(coord.collect_one().is_some());
         assert!(coord.collect_one().is_none());
         assert_eq!(coord.pending(), 0);
@@ -1453,11 +2217,13 @@ mod tests {
         assert!(Arc::ptr_eq(&a_shared, &coord.matrix(id_a).unwrap()));
 
         for _ in 0..8 {
-            coord.submit(Job::NativeSpgemm {
-                a: id_a.into(),
-                b: id_b.into(),
-                dataflow: Dataflow::RowWiseHash,
-            });
+            coord
+                .try_submit(Job::NativeSpgemm {
+                    a: id_a.into(),
+                    b: id_b.into(),
+                    dataflow: Dataflow::RowWiseHash,
+                })
+                .unwrap();
         }
         let responses = coord.collect_all();
         assert_eq!(responses.len(), 8);
@@ -1498,15 +2264,17 @@ mod tests {
         let id_a = coord.register("A", a);
         let id_b = coord.register("B", b);
         for _ in 0..12 {
-            coord.submit(Job::NativeSpgemm {
-                a: id_a.into(),
-                b: id_b.into(),
-                dataflow: Dataflow::ParGustavson {
-                    threads: 2,
-                    accum: AccumSpec::default(),
-                    semiring: SemiringKind::Arithmetic,
-                },
-            });
+            coord
+                .try_submit(Job::NativeSpgemm {
+                    a: id_a.into(),
+                    b: id_b.into(),
+                    dataflow: Dataflow::ParGustavson {
+                        threads: 2,
+                        accum: AccumSpec::default(),
+                        semiring: SemiringKind::Arithmetic,
+                    },
+                })
+                .unwrap();
         }
         let responses = coord.collect_all();
         assert_eq!(responses.len(), 12);
@@ -1546,15 +2314,17 @@ mod tests {
         let id_a = coord.register("A", a);
         let id_b = coord.register("B", b);
         for _ in 0..4 {
-            coord.submit(Job::NativeSpgemm {
-                a: id_a.into(),
-                b: id_b.into(),
-                dataflow: Dataflow::ParGustavson {
-                    threads: 2,
-                    accum: AccumSpec::default(),
-                    semiring: SemiringKind::Arithmetic,
-                },
-            });
+            coord
+                .try_submit(Job::NativeSpgemm {
+                    a: id_a.into(),
+                    b: id_b.into(),
+                    dataflow: Dataflow::ParGustavson {
+                        threads: 2,
+                        accum: AccumSpec::default(),
+                        semiring: SemiringKind::Arithmetic,
+                    },
+                })
+                .unwrap();
         }
         for r in coord.collect_all().values() {
             assert_eq!(r.symbolic_reused, None);
@@ -1585,17 +2355,21 @@ mod tests {
         let id1 = coord.register("M1", m1);
         assert_eq!(coord.resident_count(), 2);
         // A job against M0 resolves its Arc now, before any eviction.
-        let job0 = coord.submit(Job::NativeSpgemm {
-            a: id0.into(),
-            b: id0.into(),
-            dataflow: Dataflow::RowWiseHash,
-        });
+        let job0 = coord
+            .try_submit(Job::NativeSpgemm {
+                a: id0.into(),
+                b: id0.into(),
+                dataflow: Dataflow::RowWiseHash,
+            })
+            .unwrap();
         // Touch M1 so M0 becomes the least-recently-used resident...
-        coord.submit(Job::NativeSpgemm {
-            a: id1.into(),
-            b: id1.into(),
-            dataflow: Dataflow::RowWiseHash,
-        });
+        coord
+            .try_submit(Job::NativeSpgemm {
+                a: id1.into(),
+                b: id1.into(),
+                dataflow: Dataflow::RowWiseHash,
+            })
+            .unwrap();
         // ...then push the registry one byte past its budget.
         let id2 = coord.register("M2", m2);
         assert!(coord.lookup("M0").is_none(), "LRU resident must be evicted");
@@ -1659,15 +2433,17 @@ mod tests {
             AccumMode::Hash,
             AccumMode::Merge,
         ] {
-            coord.submit(Job::NativeSpgemm {
-                a: id_a.into(),
-                b: id_b.into(),
-                dataflow: Dataflow::ParGustavson {
-                    threads: 2,
-                    accum: accum.into(),
-                    semiring: SemiringKind::Arithmetic,
-                },
-            });
+            coord
+                .try_submit(Job::NativeSpgemm {
+                    a: id_a.into(),
+                    b: id_b.into(),
+                    dataflow: Dataflow::ParGustavson {
+                        threads: 2,
+                        accum: accum.into(),
+                        semiring: SemiringKind::Arithmetic,
+                    },
+                })
+                .unwrap();
             let r = coord.collect_one().expect("job outstanding");
             assert_eq!(r.c.row_ptr, oracle.row_ptr, "{}", accum.name());
             assert_eq!(r.c.col_idx, oracle.col_idx, "{}", accum.name());
@@ -1718,15 +2494,17 @@ mod tests {
         let id_a = coord.register("A", a);
         let id_b = coord.register("B", b);
         let submit = |coord: &mut Coordinator, accum: AccumSpec| {
-            coord.submit(Job::NativeSpgemm {
-                a: id_a.into(),
-                b: id_b.into(),
-                dataflow: Dataflow::ParGustavson {
-                    threads: 2,
-                    accum,
-                    semiring: SemiringKind::Arithmetic,
-                },
-            })
+            coord
+                .try_submit(Job::NativeSpgemm {
+                    a: id_a.into(),
+                    b: id_b.into(),
+                    dataflow: Dataflow::ParGustavson {
+                        threads: 2,
+                        accum,
+                        semiring: SemiringKind::Arithmetic,
+                    },
+                })
+                .unwrap()
         };
         let job_lo = submit(&mut coord, AccumSpec::AdaptiveAt(1));
         let job_hi = submit(&mut coord, AccumSpec::AdaptiveAt(u64::MAX));
@@ -1796,15 +2574,17 @@ mod tests {
         for kind in SemiringKind::ALL {
             ids.push((
                 kind,
-                coord.submit(Job::NativeSpgemm {
-                    a: id_a.into(),
-                    b: id_b.into(),
-                    dataflow: Dataflow::ParGustavson {
-                        threads: 2,
-                        accum: AccumSpec::default(),
-                        semiring: kind,
-                    },
-                }),
+                coord
+                    .try_submit(Job::NativeSpgemm {
+                        a: id_a.into(),
+                        b: id_b.into(),
+                        dataflow: Dataflow::ParGustavson {
+                            threads: 2,
+                            accum: AccumSpec::default(),
+                            semiring: kind,
+                        },
+                    })
+                    .unwrap(),
             ));
         }
         let responses = coord.collect_all();
@@ -1850,25 +2630,29 @@ mod tests {
         let (oracle, _) = gustavson(&a, &b);
         let id_a = coord.register("A", a);
         let id_b = coord.register("B", b);
-        let plain = coord.submit(Job::NativeSpgemm {
-            a: id_a.into(),
-            b: id_b.into(),
-            dataflow: Dataflow::ParGustavson {
-                threads: 2,
-                accum: AccumSpec::default(),
-                semiring: SemiringKind::Arithmetic,
-            },
-        });
-        let blocked = coord.submit(Job::NativeSpgemm {
-            a: id_a.into(),
-            b: id_b.into(),
-            dataflow: Dataflow::ParGustavsonBlocked {
-                threads: 2,
-                accum: AccumSpec::default(),
-                semiring: SemiringKind::Arithmetic,
-                bands: BandSpec::Cols(32),
-            },
-        });
+        let plain = coord
+            .try_submit(Job::NativeSpgemm {
+                a: id_a.into(),
+                b: id_b.into(),
+                dataflow: Dataflow::ParGustavson {
+                    threads: 2,
+                    accum: AccumSpec::default(),
+                    semiring: SemiringKind::Arithmetic,
+                },
+            })
+            .unwrap();
+        let blocked = coord
+            .try_submit(Job::NativeSpgemm {
+                a: id_a.into(),
+                b: id_b.into(),
+                dataflow: Dataflow::ParGustavsonBlocked {
+                    threads: 2,
+                    accum: AccumSpec::default(),
+                    semiring: SemiringKind::Arithmetic,
+                    bands: BandSpec::Cols(32),
+                },
+            })
+            .unwrap();
         let responses = coord.collect_all();
         assert_eq!(responses.len(), 2);
         assert_eq!(
@@ -1919,16 +2703,18 @@ mod tests {
             AccumSpec::Auto,
             AccumSpec::Auto,
         ] {
-            coord.submit(Job::NativeSpgemm {
-                a: id_a.into(),
-                b: id_b.into(),
-                dataflow: Dataflow::ParGustavsonBlocked {
-                    threads: 2,
-                    accum,
-                    semiring: SemiringKind::Arithmetic,
-                    bands: BandSpec::Auto,
-                },
-            });
+            coord
+                .try_submit(Job::NativeSpgemm {
+                    a: id_a.into(),
+                    b: id_b.into(),
+                    dataflow: Dataflow::ParGustavsonBlocked {
+                        threads: 2,
+                        accum,
+                        semiring: SemiringKind::Arithmetic,
+                        bands: BandSpec::Auto,
+                    },
+                })
+                .unwrap();
         }
         let responses = coord.collect_all();
         assert_eq!(responses.len(), 6);
@@ -1965,12 +2751,14 @@ mod tests {
         let id_a = coord.register("A", a);
         let id_b = coord.register("B", b);
         for _ in 0..6 {
-            coord.submit(Job::SmashSpgemm {
-                a: id_a.into(),
-                b: id_b.into(),
-                kernel: KernelConfig::v2(),
-                sim: SimConfig::test_tiny(),
-            });
+            coord
+                .try_submit(Job::SmashSpgemm {
+                    a: id_a.into(),
+                    b: id_b.into(),
+                    kernel: KernelConfig::v2(),
+                    sim: SimConfig::test_tiny(),
+                })
+                .unwrap();
         }
         let responses = coord.collect_all();
         assert_eq!(responses.len(), 6);
@@ -2023,15 +2811,17 @@ mod tests {
         let id0 = coord.register("M0", m0);
         let id1 = coord.register("M1", m1);
         assert_eq!(coord.resident_count(), 2);
-        coord.submit(Job::NativeSpgemm {
-            a: id0.into(),
-            b: id1.into(),
-            dataflow: Dataflow::ParGustavson {
-                threads: 2,
-                accum: AccumSpec::default(),
-                semiring: SemiringKind::Arithmetic,
-            },
-        });
+        coord
+            .try_submit(Job::NativeSpgemm {
+                a: id0.into(),
+                b: id1.into(),
+                dataflow: Dataflow::ParGustavson {
+                    threads: 2,
+                    accum: AccumSpec::default(),
+                    semiring: SemiringKind::Arithmetic,
+                },
+            })
+            .unwrap();
         // Drain so the worker has definitely published the plan.
         let r = coord.collect_one().expect("job outstanding");
         assert_eq!(r.symbolic_reused, Some(false));
@@ -2054,8 +2844,10 @@ mod tests {
         coord.shutdown();
     }
 
+    /// The deprecated `submit` keeps its historical panic contract.
     #[test]
     #[should_panic(expected = "not registered")]
+    #[allow(deprecated)]
     fn unregistered_id_panics_at_submit() {
         let mut coord = Coordinator::start(ServerConfig {
             workers: 1,
@@ -2206,6 +2998,289 @@ mod tests {
         assert_eq!(coord.fault_stats().failed, 1);
         assert_eq!(coord.fault_stats().expired, 1);
         coord.shutdown();
+    }
+
+    /// FIFO parity: a default-tenant-only workload through the new
+    /// scheduler completes in exact submission order on one worker, with
+    /// the same (1, N-1) plan provenance and bitwise outputs as the
+    /// pre-scheduler FIFO.
+    #[test]
+    fn default_tenant_workload_matches_fifo() {
+        let mut coord = Coordinator::start(ServerConfig {
+            workers: 1,
+            queue_depth: 16,
+            ..ServerConfig::default()
+        });
+        let a = rmat(&RmatParams::new(6, 400, 111));
+        let b = rmat(&RmatParams::new(6, 400, 112));
+        let (oracle, _) = gustavson(&a, &b);
+        let id_a = coord.register("A", a);
+        let id_b = coord.register("B", b);
+        let n = 6;
+        let mut ids = Vec::new();
+        for _ in 0..n {
+            ids.push(
+                coord
+                    .try_submit(Job::NativeSpgemm {
+                        a: id_a.into(),
+                        b: id_b.into(),
+                        dataflow: Dataflow::ParGustavson {
+                            threads: 2,
+                            accum: AccumSpec::default(),
+                            semiring: SemiringKind::Arithmetic,
+                        },
+                    })
+                    .unwrap(),
+            );
+        }
+        // One worker + one tenant: completion order IS submission order.
+        let mut order = Vec::new();
+        let mut provenance = Vec::new();
+        while let Some(r) = coord.collect_one() {
+            assert_eq!(r.c.data, oracle.data, "bitwise parity with the FIFO path");
+            assert_eq!(r.tenant, TenantId::default());
+            order.push(r.id);
+            provenance.push(r.symbolic_reused);
+        }
+        assert_eq!(order, ids, "single-tenant scheduling must stay FIFO");
+        assert_eq!(provenance[0], Some(false), "first job computes the plan");
+        assert!(provenance[1..].iter().all(|p| *p == Some(true)));
+        assert_eq!(coord.symbolic_stats(), (1, n as u64 - 1));
+        coord.shutdown();
+    }
+
+    /// Per-tenant admission: one tenant's queue cap sheds only that
+    /// tenant's submits (with its own retry-after arithmetic) while
+    /// other tenants keep submitting freely.
+    #[test]
+    fn tenant_queue_quota_sheds_only_that_tenant() {
+        let mut coord = Coordinator::start(ServerConfig {
+            workers: 1,
+            queue_depth: 16,
+            ..ServerConfig::default()
+        });
+        let id = coord.register("A", erdos_renyi(16, 40, 113));
+        coord.set_tenant_quota(
+            "capped",
+            TenantQuota {
+                max_queued_jobs: 1,
+                ..TenantQuota::default()
+            },
+        );
+        let job = |coord: &mut Coordinator, tenant: &str| {
+            coord.try_submit(
+                Job::pair(id, id)
+                    .dataflow(Dataflow::RowWiseHash)
+                    .tenant(tenant),
+            )
+        };
+        assert!(job(&mut coord, "capped").is_ok());
+        assert_eq!(
+            job(&mut coord, "capped").unwrap_err(),
+            ServeError::QueueFull { retry_after_jobs: 1 },
+            "second capped-tenant submit must shed"
+        );
+        assert!(job(&mut coord, "free").is_ok(), "other tenants unaffected");
+        assert!(job(&mut coord, "free").is_ok());
+        let m = coord.metrics();
+        let capped = m.tenants.iter().find(|t| t.tenant == "capped").unwrap();
+        assert_eq!(capped.shed, 1);
+        let free = m.tenants.iter().find(|t| t.tenant == "free").unwrap();
+        assert_eq!(free.shed, 0);
+        assert_eq!(coord.collect_all().len(), 3);
+        assert_eq!(coord.fault_stats().shed, 1);
+        coord.shutdown();
+    }
+
+    /// Per-tenant resident quota: a tenant over its byte quota evicts its
+    /// own LRU matrix; another tenant's resident is untouchable even when
+    /// it is globally least-recently-used.
+    #[test]
+    fn tenant_resident_quota_evicts_only_own_matrices() {
+        let mut coord = Coordinator::start(ServerConfig {
+            workers: 1,
+            queue_depth: 4,
+            ..ServerConfig::default()
+        });
+        let m0 = erdos_renyi(48, 300, 114);
+        let m1 = erdos_renyi(48, 300, 115);
+        let m2 = erdos_renyi(48, 300, 116);
+        // Quota fits two of the tenant's matrices but not three.
+        let quota = m0.resident_bytes() + m1.resident_bytes() + m2.resident_bytes() - 1;
+        coord.set_tenant_quota(
+            "t1",
+            TenantQuota {
+                max_resident_bytes: quota,
+                ..TenantQuota::default()
+            },
+        );
+        // The OTHER tenant's matrix registers first, so it is globally
+        // least-recently-used when t1 overflows.
+        let other = coord
+            .try_register_for("t2", "other", erdos_renyi(48, 300, 117))
+            .unwrap();
+        let id0 = coord.try_register_for("t1", "m0", m0).unwrap();
+        let id1 = coord.try_register_for("t1", "m1", m1).unwrap();
+        assert_eq!(coord.resident_count(), 3);
+        let id2 = coord.try_register_for("t1", "m2", m2).unwrap();
+        assert!(
+            coord.matrix(other).is_some(),
+            "a tenant must never evict another tenant's resident"
+        );
+        assert!(coord.matrix(id0).is_none(), "t1's own LRU matrix evicted");
+        assert!(coord.matrix(id1).is_some());
+        assert!(coord.matrix(id2).is_some());
+        assert_eq!(coord.evictions(), 1);
+        coord.shutdown();
+    }
+
+    /// `metrics()` is the one stats surface: the legacy getters agree
+    /// with it field-for-field, the per-tenant block carries the
+    /// completion counters and histogram, and the snapshot round-trips
+    /// through `util::json` losslessly.
+    #[test]
+    fn metrics_snapshot_delegation_and_json_round_trip() {
+        let mut coord = Coordinator::start(ServerConfig {
+            workers: 2,
+            queue_depth: 16,
+            ..ServerConfig::default()
+        });
+        let a = rmat(&RmatParams::new(6, 400, 118));
+        let b = rmat(&RmatParams::new(6, 400, 119));
+        let id_a = coord.register("A", a);
+        let id_b = coord.register("B", b);
+        for i in 0..5 {
+            let tenant = if i % 2 == 0 { "even" } else { "odd" };
+            coord
+                .try_submit(
+                    Job::pair(id_a, id_b)
+                        .semiring(SemiringKind::Arithmetic)
+                        .tenant(tenant)
+                        .priority(1 + i as u32 % 2),
+                )
+                .unwrap();
+        }
+        assert_eq!(coord.collect_all().len(), 5);
+        let m = coord.metrics();
+        assert_eq!(m.schema, METRICS_SCHEMA_VERSION);
+        assert_eq!((m.symbolic_passes, m.symbolic_hits), coord.symbolic_stats());
+        assert_eq!((m.window_passes, m.window_hits), coord.window_plan_stats());
+        assert_eq!(m.evictions, coord.evictions());
+        assert_eq!(m.resident_bytes, coord.resident_bytes() as u64);
+        assert_eq!(m.resident_count, 2);
+        assert_eq!(m.pending, 0);
+        let fs = coord.fault_stats();
+        assert_eq!((m.failed, m.shed, m.expired), (fs.failed, fs.shed, fs.expired));
+        // Per-tenant block: sorted, complete, histogram populated.
+        let names: Vec<&str> = m.tenants.iter().map(|t| t.tenant.as_str()).collect();
+        assert_eq!(names, ["even", "odd"]);
+        let even = &m.tenants[0];
+        assert_eq!((even.completed, even.ok, even.failed), (3, 3, 0));
+        assert_eq!(even.latency_us_hist.iter().sum::<u64>(), 3);
+        assert!(even.quantile_us(0.99) > 0);
+        assert_eq!(m.tenants[1].completed, 2);
+        // Round-trip through util::json.
+        let text = m.to_json().to_string_pretty();
+        let parsed = MetricsSnapshot::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed, m);
+        // Unknown schema versions are rejected.
+        let mut wrong = m.clone();
+        wrong.schema += 1;
+        assert!(MetricsSnapshot::from_json(&wrong.to_json()).is_err());
+        coord.shutdown();
+    }
+
+    /// The fluent builder produces the same `JobSpec` as the literal
+    /// construction it replaces, for each backend-selection path.
+    #[test]
+    fn job_builder_produces_expected_specs() {
+        let a = erdos_renyi(8, 16, 120);
+        let b = erdos_renyi(8, 16, 121);
+        // Default: ParGustavson with default accum/semiring.
+        let spec: JobSpec = Job::pair(a.clone(), b.clone()).into();
+        assert!(matches!(
+            spec.job,
+            Job::NativeSpgemm {
+                dataflow: Dataflow::ParGustavson {
+                    threads: 2,
+                    accum: AccumSpec::Fixed(AccumMode::Adaptive),
+                    semiring: SemiringKind::Arithmetic,
+                },
+                ..
+            }
+        ));
+        assert_eq!(spec.tenant, TenantId::default());
+        assert_eq!(spec.priority, Priority::default());
+        assert_eq!(spec.deadline, None);
+        // Banded + tagged + budgeted.
+        let spec: JobSpec = Job::pair(a.clone(), b.clone())
+            .threads(4)
+            .accum(AccumMode::Merge)
+            .semiring(SemiringKind::MinPlus)
+            .bands(BandSpec::Cols(16))
+            .tenant("batch")
+            .priority(3)
+            .deadline(Duration::from_millis(250))
+            .into();
+        assert!(matches!(
+            spec.job,
+            Job::NativeSpgemm {
+                dataflow: Dataflow::ParGustavsonBlocked {
+                    threads: 4,
+                    semiring: SemiringKind::MinPlus,
+                    bands: BandSpec::Cols(16),
+                    ..
+                },
+                ..
+            }
+        ));
+        assert_eq!(spec.tenant, TenantId::from("batch"));
+        assert_eq!(spec.priority, Priority(3));
+        assert_eq!(spec.deadline, Some(Duration::from_millis(250)));
+        // Explicit dataflow wins over the knob-built one.
+        let spec: JobSpec = Job::pair(a.clone(), b.clone())
+            .dataflow(Dataflow::RowWiseHash)
+            .into();
+        assert!(matches!(
+            spec.job,
+            Job::NativeSpgemm {
+                dataflow: Dataflow::RowWiseHash,
+                ..
+            }
+        ));
+        // Simulation path.
+        let spec: JobSpec = Job::pair(a, b)
+            .simulate(KernelConfig::v2(), SimConfig::test_tiny())
+            .into();
+        assert!(matches!(spec.job, Job::SmashSpgemm { .. }));
+    }
+
+    /// Histogram plumbing: bucket indexing is log2 with saturation at
+    /// both ends, and the quantile walk lands in the right bucket.
+    #[test]
+    fn latency_buckets_and_quantiles() {
+        assert_eq!(latency_bucket(0), 0);
+        assert_eq!(latency_bucket(1), 0);
+        assert_eq!(latency_bucket(2), 1);
+        assert_eq!(latency_bucket(3), 1);
+        assert_eq!(latency_bucket(1024), 10);
+        assert_eq!(latency_bucket(u64::MAX), 31);
+        let mut t = TenantMetrics {
+            tenant: "t".into(),
+            queued: 0,
+            completed: 100,
+            ok: 100,
+            failed: 0,
+            shed: 0,
+            expired: 0,
+            latency_us_hist: [0; 32],
+        };
+        assert_eq!(t.quantile_us(0.99), 0, "empty histogram");
+        t.latency_us_hist[3] = 99; // 99 jobs in [8, 16) us
+        t.latency_us_hist[10] = 1; // 1 straggler in [1024, 2048) us
+        assert_eq!(t.quantile_us(0.5), 16);
+        assert_eq!(t.quantile_us(0.98), 16);
+        assert_eq!(t.quantile_us(1.0), 2048);
     }
 
     // Tests that arm the process-wide fault plane (poison/heal of the

@@ -54,3 +54,18 @@ pub mod bench;
 pub mod report;
 pub mod tune;
 pub mod cli;
+
+/// One-line import for the serving surface: `use smash::prelude::*;`
+/// pulls in the coordinator, the fluent [`Job::pair`](coordinator::Job::pair)
+/// builder and its [`JobSpec`](coordinator::JobSpec) vocabulary
+/// (tenants, priorities, quotas), the consolidated
+/// [`MetricsSnapshot`](coordinator::MetricsSnapshot), and the dataflow /
+/// accumulator / semiring knobs jobs are configured with.
+pub mod prelude {
+    pub use crate::coordinator::{
+        Coordinator, Job, JobBuilder, JobId, JobSpec, MatrixId, MatrixRef, MetricsSnapshot,
+        Priority, Response, ServeError, ServerConfig, TenantId, TenantMetrics, TenantQuota,
+        METRICS_SCHEMA_VERSION,
+    };
+    pub use crate::spgemm::{AccumMode, AccumSpec, BandSpec, Dataflow, SemiringKind};
+}

@@ -131,6 +131,17 @@ impl Client {
         self.tx.send(|tag| Request::Submit { tag, job })
     }
 
+    /// Lock-step scrape of the server's consolidated metrics snapshot:
+    /// the compact-JSON encoding of `Coordinator::metrics()`, answered by
+    /// the pump thread so it is consistent with the completion stream.
+    pub fn metrics(&mut self) -> Result<String, NetError> {
+        let tag = self.tx.send(|tag| Request::Metrics { tag })?;
+        match self.rx.recv()? {
+            Reply::Metrics { tag: t, json } if t == tag => Ok(json),
+            other => Err(unexpected(&other)),
+        }
+    }
+
     /// Next reply in completion order.
     pub fn recv(&mut self) -> Result<Reply, NetError> {
         self.rx.recv()
@@ -181,6 +192,7 @@ fn unexpected(reply: &Reply) -> NetError {
         Reply::Rejected { .. } => "Rejected".to_string(),
         Reply::JobOk { .. } => "JobOk".to_string(),
         Reply::JobErr { .. } => "JobErr".to_string(),
+        Reply::Metrics { .. } => "Metrics".to_string(),
         Reply::Error { detail } => format!("protocol report: {detail}"),
     })
 }

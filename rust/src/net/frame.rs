@@ -31,7 +31,9 @@ use crate::spgemm::{AccumMode, AccumSpec, BandSpec, Dataflow, SemiringKind};
 pub const MAGIC: [u8; 4] = *b"SMSH";
 /// Wire-protocol version carried in every frame header. Peers reject
 /// mismatches with [`FrameError::BadVersion`] instead of misparsing.
-pub const VERSION: u16 = 1;
+/// v2: [`WireJob`] gained tenant/priority fields and the
+/// [`Request::Metrics`] / [`Reply::Metrics`] scrape pair.
+pub const VERSION: u16 = 2;
 /// Bytes in the fixed frame header (magic + version + payload length).
 pub const HEADER_LEN: usize = 10;
 /// Default per-frame size guard. Large enough for the CSR payloads the
@@ -119,6 +121,11 @@ pub struct WireJob {
     pub b: WireOperand,
     pub dataflow: Dataflow,
     pub deadline_ms: Option<u64>,
+    /// Tenant tag for the multi-tenant scheduler; `""` means the default
+    /// tenant (pre-tenancy behavior).
+    pub tenant: String,
+    /// Scheduling weight within the tenant's queue (0 = background).
+    pub priority: u32,
 }
 
 /// Client → server messages. Every request carries a client-chosen `tag`
@@ -134,6 +141,12 @@ pub enum Request {
     Register { tag: u64, name: String, csr: Csr },
     /// Submit one multiply job.
     Submit { tag: u64, job: WireJob },
+    /// Scrape the server's
+    /// [`MetricsSnapshot`](crate::coordinator::MetricsSnapshot).
+    /// Answered synchronously with [`Reply::Metrics`] — the snapshot is
+    /// taken by the pump between job completions, so a load generator
+    /// can scrape mid-run.
+    Metrics { tag: u64 },
 }
 
 /// Server → client messages.
@@ -178,6 +191,11 @@ pub enum Reply {
     /// desynchronized connection, or in place of a reply when a
     /// well-formed frame held a malformed payload (connection survives).
     Error { detail: String },
+    /// Answer to [`Request::Metrics`]: the coordinator's
+    /// [`MetricsSnapshot`](crate::coordinator::MetricsSnapshot) in its
+    /// compact `util::json` form — one codec for the file export, the
+    /// wire, and the spray report embed.
+    Metrics { tag: u64, json: String },
 }
 
 // ---------------------------------------------------------------------------
@@ -619,6 +637,12 @@ impl Request {
                 enc_operand(&mut e, &job.b);
                 enc_dataflow(&mut e, &job.dataflow);
                 e.opt_u64(job.deadline_ms);
+                e.str(&job.tenant);
+                e.u32(job.priority);
+            }
+            Request::Metrics { tag } => {
+                e.u8(3);
+                e.u64(*tag);
             }
         }
         e.buf
@@ -640,8 +664,11 @@ impl Request {
                     b: dec_operand(&mut d)?,
                     dataflow: dec_dataflow(&mut d)?,
                     deadline_ms: d.opt_u64()?,
+                    tenant: d.str()?,
+                    priority: d.u32()?,
                 },
             },
+            3 => Request::Metrics { tag: d.u64()? },
             t => return Err(malformed(format!("unknown request kind {t}"))),
         };
         d.finish()?;
@@ -704,6 +731,11 @@ impl Reply {
                 e.u8(5);
                 e.str(detail);
             }
+            Reply::Metrics { tag, json } => {
+                e.u8(6);
+                e.u64(*tag);
+                e.str(json);
+            }
         }
         e.buf
     }
@@ -748,6 +780,10 @@ impl Reply {
                 error: dec_serve_error(&mut d)?,
             },
             5 => Reply::Error { detail: d.str()? },
+            6 => Reply::Metrics {
+                tag: d.u64()?,
+                json: d.str()?,
+            },
             t => return Err(malformed(format!("unknown reply kind {t}"))),
         };
         d.finish()?;
@@ -979,13 +1015,29 @@ mod tests {
                     b: WireOperand::Inline(tiny_csr()),
                     dataflow: df,
                     deadline_ms: if i % 2 == 0 { Some(250) } else { None },
+                    tenant: if i % 2 == 0 {
+                        String::new()
+                    } else {
+                        format!("tenant-{i}")
+                    },
+                    priority: i as u32,
                 },
             });
         }
+        reqs.push(Request::Metrics { tag: 99 });
         for req in reqs {
             let decoded = Request::decode(&req.encode()).expect("decode");
             assert_eq!(decoded, req);
         }
+    }
+
+    #[test]
+    fn metrics_reply_round_trips() {
+        let reply = Reply::Metrics {
+            tag: 41,
+            json: r#"{"schema":1,"tenants":[]}"#.to_string(),
+        };
+        assert_eq!(Reply::decode(&reply.encode()).expect("decode"), reply);
     }
 
     #[test]
@@ -1095,6 +1147,8 @@ mod tests {
                     semiring: SemiringKind::Arithmetic,
                 },
                 deadline_ms: Some(100),
+                tenant: "interactive".to_string(),
+                priority: 3,
             },
         };
         let mut wire = Vec::new();

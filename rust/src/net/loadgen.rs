@@ -6,7 +6,14 @@
 //! throughput, and shed / failed / expired counts. The report goes out
 //! both human-readable ([`SprayReport::render`]) and as schema-versioned
 //! [`Json`] ([`SprayReport::to_json`]) — the payload CI archives as
-//! `BENCH_9.json`, the repo's first network perf-trajectory artifact.
+//! `BENCH_9.json` / `BENCH_10.json`, the repo's network perf-trajectory
+//! artifacts.
+//!
+//! With [`TrafficClass`]es configured (`smash spray --class`), every
+//! submit is tagged with one class's tenant name, scheduler weight, and
+//! deadline; the report then carries a per-class breakdown and asserts
+//! each class's p99 SLO, and a mid-run [`Client::metrics`] scrape of the
+//! server's consolidated snapshot is embedded as `server_metrics`.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -24,8 +31,82 @@ use crate::util::prng::Xoshiro256;
 
 /// Schema version stamped into every [`SprayReport::to_json`]; bump on
 /// any field change so downstream tooling can refuse reports it does not
-/// understand.
-pub const SPRAY_SCHEMA_VERSION: u64 = 1;
+/// understand. v2 added the per-class breakdown and the embedded
+/// `server_metrics` scrape.
+pub const SPRAY_SCHEMA_VERSION: u64 = 2;
+
+/// One QoS traffic class for a multi-tenant spray. Jobs drawn from a
+/// class ship the class name as their wire tenant and its weight as
+/// their wire priority, so the server's weighted-fair scheduler sees one
+/// tenant per class.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrafficClass {
+    /// Tenant name stamped on every job this class submits.
+    pub name: String,
+    /// Scheduler weight (wire priority); 0 = background, served only by
+    /// the scheduler's aging pass.
+    pub weight: u32,
+    /// Per-job deadline budget in milliseconds; `None` = no deadline.
+    pub deadline_ms: Option<u64>,
+    /// Offered rate in submits/second; `0.0` = always eligible
+    /// (closed-loop against the shared window).
+    pub rate: f64,
+    /// p99 latency SLO asserted by the report, in milliseconds.
+    pub slo_p99_ms: u64,
+}
+
+impl TrafficClass {
+    /// Parse one `name:weight:deadline_ms:rate[:slo_ms]` spec. A zero
+    /// `deadline_ms` means "no deadline"; `slo_ms` defaults to 60000
+    /// (an assertion that only fires on pathological stalls).
+    pub fn parse(spec: &str) -> Result<TrafficClass, String> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        if !(4..=5).contains(&parts.len()) {
+            return Err(format!(
+                "bad class spec `{spec}`: want name:weight:deadline_ms:rate[:slo_ms]"
+            ));
+        }
+        let name = parts[0].trim();
+        if name.is_empty() {
+            return Err(format!("bad class spec `{spec}`: empty name"));
+        }
+        let weight: u32 = parts[1]
+            .parse()
+            .map_err(|_| format!("bad weight in class spec `{spec}`"))?;
+        let deadline: u64 = parts[2]
+            .parse()
+            .map_err(|_| format!("bad deadline_ms in class spec `{spec}`"))?;
+        let rate: f64 = parts[3]
+            .parse()
+            .map_err(|_| format!("bad rate in class spec `{spec}`"))?;
+        if !rate.is_finite() || rate < 0.0 {
+            return Err(format!("bad rate in class spec `{spec}`: want finite >= 0"));
+        }
+        let slo_p99_ms = match parts.get(4) {
+            Some(s) => s
+                .parse()
+                .map_err(|_| format!("bad slo_ms in class spec `{spec}`"))?,
+            None => 60_000,
+        };
+        Ok(TrafficClass {
+            name: name.to_string(),
+            weight,
+            deadline_ms: if deadline == 0 { None } else { Some(deadline) },
+            rate,
+            slo_p99_ms,
+        })
+    }
+
+    /// Parse a comma-separated list of class specs — the value of the
+    /// single `--class` flag.
+    pub fn parse_list(specs: &str) -> Result<Vec<TrafficClass>, String> {
+        specs
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(TrafficClass::parse)
+            .collect()
+    }
+}
 
 /// Traffic-mix and pacing knobs for [`spray`].
 pub struct SprayConfig {
@@ -59,6 +140,10 @@ pub struct SprayConfig {
     pub threads: usize,
     /// Optional per-job deadline budget, milliseconds.
     pub deadline_ms: Option<u64>,
+    /// QoS traffic classes. Empty runs the legacy single-class mix; when
+    /// non-empty every submit is drawn from the earliest-due class and
+    /// tagged with that class's tenant / priority / deadline.
+    pub classes: Vec<TrafficClass>,
 }
 
 impl Default for SprayConfig {
@@ -77,6 +162,7 @@ impl Default for SprayConfig {
             accums: vec![AccumSpec::Fixed(Default::default())],
             threads: 2,
             deadline_ms: None,
+            classes: Vec::new(),
         }
     }
 }
@@ -105,6 +191,25 @@ impl SprayCounts {
     }
 }
 
+/// Per-class slice of a [`SprayReport`] when traffic classes are active.
+#[derive(Clone, Debug)]
+pub struct ClassReport {
+    pub name: String,
+    pub weight: u32,
+    pub slo_p99_ms: u64,
+    pub counts: SprayCounts,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+}
+
+impl ClassReport {
+    /// Whether this class's observed p99 met its SLO.
+    pub fn slo_ok(&self) -> bool {
+        self.p99_us <= self.slo_p99_ms.saturating_mul(1000)
+    }
+}
+
 /// Aggregate result of one [`spray`] run.
 #[derive(Clone, Debug)]
 pub struct SprayReport {
@@ -124,9 +229,20 @@ pub struct SprayReport {
     pub offered_rate: f64,
     pub semirings: Vec<SemiringKind>,
     pub accums: Vec<AccumSpec>,
+    /// Per-class breakdown; empty on legacy (class-less) runs.
+    pub classes: Vec<ClassReport>,
+    /// Mid-run scrape of the server's consolidated metrics snapshot over
+    /// the `Metrics` wire frame; `None` if the scrape was skipped or
+    /// failed (best-effort — the run itself is unaffected).
+    pub server_metrics: Option<Json>,
 }
 
 impl SprayReport {
+    /// True when every class met its p99 SLO (vacuously true with no
+    /// classes configured).
+    pub fn slo_ok(&self) -> bool {
+        self.classes.iter().all(ClassReport::slo_ok)
+    }
     /// Schema-versioned JSON for the CI artifact.
     pub fn to_json(&self) -> Json {
         Json::Obj(vec![
@@ -168,14 +284,43 @@ impl SprayReport {
                         .collect(),
                 ),
             ),
+            (
+                "classes".into(),
+                Json::Arr(
+                    self.classes
+                        .iter()
+                        .map(|c| {
+                            Json::Obj(vec![
+                                ("name".into(), Json::Str(c.name.clone())),
+                                ("weight".into(), Json::u64(c.weight as u64)),
+                                ("slo_p99_ms".into(), Json::u64(c.slo_p99_ms)),
+                                ("sent".into(), Json::u64(c.counts.sent)),
+                                ("ok".into(), Json::u64(c.counts.ok)),
+                                ("shed".into(), Json::u64(c.counts.shed)),
+                                ("expired".into(), Json::u64(c.counts.expired)),
+                                ("failed".into(), Json::u64(c.counts.failed)),
+                                ("p50_us".into(), Json::u64(c.p50_us)),
+                                ("p99_us".into(), Json::u64(c.p99_us)),
+                                ("max_us".into(), Json::u64(c.max_us)),
+                                ("slo_ok".into(), Json::Bool(c.slo_ok())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "server_metrics".into(),
+                self.server_metrics.clone().unwrap_or(Json::Null),
+            ),
         ])
     }
 
-    /// Human-readable summary. The "p99" and "shed: " vocabulary here is
-    /// load-bearing: the CI loopback leg greps for it.
+    /// Human-readable summary. The "p99", "shed: ", and per-class
+    /// "-> PASS" vocabulary here is load-bearing: the CI loopback and QoS
+    /// legs grep for it.
     pub fn render(&self) -> String {
         let c = &self.counts;
-        format!(
+        let mut out = format!(
             "spray: {} sent / {} completed in {:.2}s ({:.1} jobs/s)\n\
              latency: p50 {}us  p90 {}us  p99 {}us  max {}us  mean {:.0}us\n\
              outcomes: ok: {}  shed: {}  expired: {}  failed: {}  protocol: {}",
@@ -193,7 +338,24 @@ impl SprayReport {
             c.expired,
             c.failed,
             c.protocol,
-        )
+        );
+        for cl in &self.classes {
+            out.push_str(&format!(
+                "\nclass {}: sent {} ok {} shed {} expired {} failed {} \
+                 p50 {}us p99 {}us slo {}us -> {}",
+                cl.name,
+                cl.counts.sent,
+                cl.counts.ok,
+                cl.counts.shed,
+                cl.counts.expired,
+                cl.counts.failed,
+                cl.p50_us,
+                cl.p99_us,
+                cl.slo_p99_ms.saturating_mul(1000),
+                if cl.slo_ok() { "PASS" } else { "FAIL" },
+            ));
+        }
+        out
     }
 }
 
@@ -202,9 +364,20 @@ impl SprayReport {
 /// serializes "submit then record" against "receive then classify", so a
 /// reply can never be harvested before its timestamp exists.
 struct Shared {
-    inflight: Mutex<HashMap<u64, Instant>>,
-    results: Mutex<(SprayCounts, Vec<u64>)>,
+    /// tag -> (class index, send timestamp). The class index is
+    /// `usize::MAX` on legacy class-less runs.
+    inflight: Mutex<HashMap<u64, (usize, Instant)>>,
+    results: Mutex<Results>,
     done_sending: AtomicBool,
+}
+
+/// Mutable run state behind the results mutex.
+#[derive(Default)]
+struct Results {
+    counts: SprayCounts,
+    lat: Vec<u64>,
+    /// Per-class (counts, latencies), indexed like [`SprayConfig::classes`].
+    per_class: Vec<(SprayCounts, Vec<u64>)>,
 }
 
 /// How long the harvester keeps draining after the last submit before
@@ -229,7 +402,10 @@ pub fn spray(cfg: &SprayConfig) -> Result<SprayReport, NetError> {
 
     let shared = Arc::new(Shared {
         inflight: Mutex::new(HashMap::new()),
-        results: Mutex::new((SprayCounts::default(), Vec::new())),
+        results: Mutex::new(Results {
+            per_class: vec![Default::default(); cfg.classes.len()],
+            ..Default::default()
+        }),
         done_sending: AtomicBool::new(false),
     });
     let harvester = {
@@ -240,6 +416,9 @@ pub fn spray(cfg: &SprayConfig) -> Result<SprayReport, NetError> {
     let mut mix = Xoshiro256::seed_from_u64(cfg.seed);
     let start = Instant::now();
     let mut sent = 0u64;
+    let mut class_sent = vec![0u64; cfg.classes.len()];
+    let mut scraped: Option<Json> = None;
+    let mut scrape_done = false;
     loop {
         if cfg.count > 0 {
             if sent as usize >= cfg.count {
@@ -248,14 +427,50 @@ pub fn spray(cfg: &SprayConfig) -> Result<SprayReport, NetError> {
         } else if start.elapsed() >= cfg.duration {
             break;
         }
-        // Pacing: offered rate when set, otherwise closed-loop on window.
-        if cfg.rate > 0.0 {
-            let due = start + Duration::from_secs_f64(sent as f64 / cfg.rate);
-            let now = Instant::now();
-            if due > now {
-                thread::sleep(due - now);
+        // Mid-run metrics scrape over a second short-lived connection —
+        // exercises the Metrics frame while the server is under load.
+        if !scrape_done && {
+            if cfg.count > 0 {
+                sent as usize * 2 >= cfg.count
+            } else {
+                start.elapsed() * 2 >= cfg.duration
             }
+        } {
+            scrape_done = true;
+            scraped = scrape_metrics(&cfg.addr);
         }
+        // Pacing. With classes: draw from the earliest-due class (rate
+        // 0.0 is always due), ties broken by fewest-sent then index so
+        // rateless classes interleave. Legacy: one offered rate when
+        // set, otherwise closed-loop on the window.
+        let cls = if cfg.classes.is_empty() {
+            if cfg.rate > 0.0 {
+                let due = start + Duration::from_secs_f64(sent as f64 / cfg.rate);
+                let now = Instant::now();
+                if due > now {
+                    thread::sleep(due - now);
+                }
+            }
+            usize::MAX
+        } else {
+            let due = |i: usize| {
+                let c = &cfg.classes[i];
+                if c.rate > 0.0 {
+                    start + Duration::from_secs_f64(class_sent[i] as f64 / c.rate)
+                } else {
+                    start
+                }
+            };
+            let pick = (0..cfg.classes.len())
+                .min_by_key(|&i| (due(i), class_sent[i], i))
+                .expect("classes is non-empty");
+            let now = Instant::now();
+            let at = due(pick);
+            if at > now {
+                thread::sleep(at - now);
+            }
+            pick
+        };
         let window_wait = Instant::now();
         loop {
             let inflight = shared.inflight.lock().unwrap().len();
@@ -283,6 +498,12 @@ pub fn spray(cfg: &SprayConfig) -> Result<SprayReport, NetError> {
                 WireOperand::Inline(b.clone()),
             )
         };
+        let (tenant, priority, deadline_ms) = if cls == usize::MAX {
+            (String::new(), 1, cfg.deadline_ms)
+        } else {
+            let c = &cfg.classes[cls];
+            (c.name.clone(), c.weight, c.deadline_ms)
+        };
         let job = WireJob {
             a: op_a,
             b: op_b,
@@ -291,17 +512,26 @@ pub fn spray(cfg: &SprayConfig) -> Result<SprayReport, NetError> {
                 accum,
                 semiring,
             },
-            deadline_ms: cfg.deadline_ms,
+            deadline_ms,
+            tenant,
+            priority,
         };
         // Hold the inflight lock across the send so the harvester cannot
         // observe this tag's reply before its timestamp is recorded.
         {
             let mut inflight = shared.inflight.lock().unwrap();
             let tag = tx.submit(job)?;
-            inflight.insert(tag, Instant::now());
+            inflight.insert(tag, (cls, Instant::now()));
         }
         sent += 1;
-        shared.results.lock().unwrap().0.sent = sent;
+        {
+            let mut results = shared.results.lock().unwrap();
+            results.counts.sent = sent;
+            if let Some(slot) = results.per_class.get_mut(cls) {
+                class_sent[cls] += 1;
+                slot.0.sent = class_sent[cls];
+            }
+        }
     }
     shared.done_sending.store(true, Ordering::SeqCst);
     harvester
@@ -309,31 +539,41 @@ pub fn spray(cfg: &SprayConfig) -> Result<SprayReport, NetError> {
         .map_err(|_| NetError::Unexpected("harvest thread panicked".into()))?;
 
     let elapsed = start.elapsed();
-    let (counts, mut lat) = {
+    let (counts, mut lat, per_class) = {
         let guard = shared.results.lock().unwrap();
-        (guard.0, guard.1.clone())
+        (guard.counts, guard.lat.clone(), guard.per_class.clone())
     };
     lat.sort_unstable();
-    let pct = |q: f64| -> u64 {
-        if lat.is_empty() {
-            return 0;
-        }
-        let idx = ((q * lat.len() as f64).ceil() as usize).clamp(1, lat.len()) - 1;
-        lat[idx]
-    };
     let mean = if lat.is_empty() {
         0.0
     } else {
         lat.iter().sum::<u64>() as f64 / lat.len() as f64
     };
+    let classes = cfg
+        .classes
+        .iter()
+        .zip(per_class)
+        .map(|(c, (counts, mut lat))| {
+            lat.sort_unstable();
+            ClassReport {
+                name: c.name.clone(),
+                weight: c.weight,
+                slo_p99_ms: c.slo_p99_ms,
+                counts,
+                p50_us: pct_of(&lat, 0.50),
+                p99_us: pct_of(&lat, 0.99),
+                max_us: lat.last().copied().unwrap_or(0),
+            }
+        })
+        .collect();
     Ok(SprayReport {
         addr: cfg.addr.clone(),
         counts,
         elapsed,
         throughput_rps: counts.completed() as f64 / elapsed.as_secs_f64().max(1e-9),
-        p50_us: pct(0.50),
-        p90_us: pct(0.90),
-        p99_us: pct(0.99),
+        p50_us: pct_of(&lat, 0.50),
+        p90_us: pct_of(&lat, 0.90),
+        p99_us: pct_of(&lat, 0.99),
         max_us: lat.last().copied().unwrap_or(0),
         mean_us: mean,
         reuse_pct: cfg.reuse_pct,
@@ -341,7 +581,27 @@ pub fn spray(cfg: &SprayConfig) -> Result<SprayReport, NetError> {
         offered_rate: cfg.rate,
         semirings: cfg.semirings.clone(),
         accums: cfg.accums.clone(),
+        classes,
+        server_metrics: scraped,
     })
+}
+
+/// Nearest-rank percentile of an ascending-sorted latency vector.
+fn pct_of(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len()) - 1;
+    sorted[idx]
+}
+
+/// Best-effort metrics scrape on a fresh lock-step connection; `None` on
+/// any transport or parse failure (the spray run itself is unaffected).
+fn scrape_metrics(addr: &str) -> Option<Json> {
+    let mut client = Client::connect(addr).ok()?;
+    client.set_read_timeout(Some(Duration::from_secs(2))).ok()?;
+    let json = client.metrics().ok()?;
+    Json::parse(&json).ok()
 }
 
 /// Harvest loop: classify every reply, record its latency, and exit once
@@ -365,38 +625,112 @@ fn harvest(mut rx: ClientReceiver, shared: &Shared) {
                     | Reply::Registered { tag, .. }
                     | Reply::Rejected { tag, .. }
                     | Reply::JobOk { tag, .. }
-                    | Reply::JobErr { tag, .. } => Some(*tag),
+                    | Reply::JobErr { tag, .. }
+                    | Reply::Metrics { tag, .. } => Some(*tag),
                     Reply::Error { .. } => None,
                 };
-                let latency = tag.and_then(|t| {
-                    shared
-                        .inflight
-                        .lock()
-                        .unwrap()
-                        .remove(&t)
-                        .map(|sent_at| sent_at.elapsed())
-                });
-                let mut results = shared.results.lock().unwrap();
-                let (counts, lat) = &mut *results;
-                if let Some(d) = latency {
-                    lat.push(d.as_micros() as u64);
+                let hit = tag.and_then(|t| shared.inflight.lock().unwrap().remove(&t));
+                #[derive(Clone, Copy)]
+                enum Kind {
+                    Ok,
+                    Shed,
+                    Expired,
+                    Failed,
+                    Protocol,
+                    Other,
                 }
-                match reply {
-                    Reply::JobOk { .. } => counts.ok += 1,
+                let kind = match &reply {
+                    Reply::JobOk { .. } => Kind::Ok,
                     Reply::Rejected { error, .. } => match error {
-                        ServeError::QueueFull { .. } => counts.shed += 1,
-                        _ => counts.failed += 1,
+                        ServeError::QueueFull { .. } => Kind::Shed,
+                        _ => Kind::Failed,
                     },
                     Reply::JobErr { error, .. } => match error {
-                        ServeError::DeadlineExceeded => counts.expired += 1,
-                        _ => counts.failed += 1,
+                        ServeError::DeadlineExceeded => Kind::Expired,
+                        _ => Kind::Failed,
                     },
-                    Reply::Error { .. } => counts.protocol += 1,
-                    Reply::Pong { .. } | Reply::Registered { .. } => {}
+                    Reply::Error { .. } => Kind::Protocol,
+                    Reply::Pong { .. } | Reply::Registered { .. } | Reply::Metrics { .. } => {
+                        Kind::Other
+                    }
+                };
+                let bump = |c: &mut SprayCounts| match kind {
+                    Kind::Ok => c.ok += 1,
+                    Kind::Shed => c.shed += 1,
+                    Kind::Expired => c.expired += 1,
+                    Kind::Failed => c.failed += 1,
+                    Kind::Protocol => c.protocol += 1,
+                    Kind::Other => {}
+                };
+                let mut results = shared.results.lock().unwrap();
+                let Results {
+                    counts,
+                    lat,
+                    per_class,
+                } = &mut *results;
+                let mut cls_hit = None;
+                if let Some((cls, sent_at)) = hit {
+                    let us = sent_at.elapsed().as_micros() as u64;
+                    lat.push(us);
+                    if let Some(slot) = per_class.get_mut(cls) {
+                        slot.1.push(us);
+                        cls_hit = Some(cls);
+                    }
+                }
+                bump(counts);
+                if let Some(cls) = cls_hit {
+                    bump(&mut per_class[cls].0);
                 }
             }
             Err(NetError::Frame(FrameError::IdleTimeout)) => continue,
             Err(_) => break,
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_spec_parsing_covers_the_cli_grammar() {
+        let classes = TrafficClass::parse_list("interactive:3:2000:0:5000, batch:1:0:0,").unwrap();
+        assert_eq!(classes.len(), 2);
+        assert_eq!(classes[0].name, "interactive");
+        assert_eq!(classes[0].weight, 3);
+        assert_eq!(classes[0].deadline_ms, Some(2000));
+        assert_eq!(classes[0].rate, 0.0);
+        assert_eq!(classes[0].slo_p99_ms, 5000);
+        // Zero deadline means "no deadline"; the SLO defaults generous.
+        assert_eq!(classes[1].name, "batch");
+        assert_eq!(classes[1].weight, 1);
+        assert_eq!(classes[1].deadline_ms, None);
+        assert_eq!(classes[1].slo_p99_ms, 60_000);
+
+        assert!(TrafficClass::parse("noparts").is_err());
+        assert!(TrafficClass::parse("x:nope:0:0").is_err());
+        assert!(TrafficClass::parse("x:1:0:-2").is_err());
+        assert!(TrafficClass::parse(":1:0:0").is_err());
+        assert!(TrafficClass::parse("x:1:0:0:5000:extra").is_err());
+    }
+
+    #[test]
+    fn nearest_rank_percentiles_and_slo_verdicts() {
+        assert_eq!(pct_of(&[], 0.99), 0);
+        assert_eq!(pct_of(&[10, 20, 30, 40], 0.50), 20);
+        assert_eq!(pct_of(&[10, 20, 30, 40], 0.99), 40);
+
+        let mut report = ClassReport {
+            name: "x".into(),
+            weight: 1,
+            slo_p99_ms: 5,
+            counts: SprayCounts::default(),
+            p50_us: 0,
+            p99_us: 5_000,
+            max_us: 0,
+        };
+        assert!(report.slo_ok()); // exactly at the bound passes
+        report.p99_us = 5_001;
+        assert!(!report.slo_ok());
     }
 }

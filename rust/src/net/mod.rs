@@ -25,5 +25,7 @@ pub mod server;
 
 pub use client::{Client, ClientReceiver, ClientSender, NetError};
 pub use frame::{FrameError, Reply, Request, WireJob, WireOperand};
-pub use loadgen::{spray, SprayConfig, SprayCounts, SprayReport, SPRAY_SCHEMA_VERSION};
+pub use loadgen::{
+    spray, ClassReport, SprayConfig, SprayCounts, SprayReport, TrafficClass, SPRAY_SCHEMA_VERSION,
+};
 pub use server::{NetServer, NetServerConfig};

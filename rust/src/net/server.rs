@@ -29,9 +29,11 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, RecvTimeoutError};
 use std::sync::Arc;
 use std::thread::{self, JoinHandle};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use crate::coordinator::{Coordinator, Job, MatrixId, MatrixRef, Response, ServerConfig};
+use crate::coordinator::{
+    Coordinator, Job, JobSpec, MatrixId, MatrixRef, Priority, Response, ServerConfig, TenantId,
+};
 use crate::formats::Csr;
 use crate::net::frame::{self, FrameError, Reply, Request, WireJob, WireOperand};
 
@@ -45,6 +47,11 @@ pub struct NetServerConfig {
     pub read_timeout: Duration,
     /// Per-frame payload guard, bytes.
     pub max_frame_bytes: usize,
+    /// When set, the pump writes the coordinator's
+    /// [`MetricsSnapshot`](crate::coordinator::MetricsSnapshot) to this
+    /// path (pretty JSON, atomic-enough whole-file rewrite) about once a
+    /// second and once more at shutdown — `serve --metrics-out`.
+    pub metrics_out: Option<std::path::PathBuf>,
 }
 
 impl Default for NetServerConfig {
@@ -53,6 +60,7 @@ impl Default for NetServerConfig {
             server: ServerConfig::default(),
             read_timeout: Duration::from_secs(30),
             max_frame_bytes: frame::DEFAULT_MAX_FRAME_BYTES,
+            metrics_out: None,
         }
     }
 }
@@ -70,6 +78,9 @@ enum Cmd {
         job: WireJob,
         out: ConnHandle,
     },
+    /// Scrape [`Coordinator::metrics`]; answered synchronously by the
+    /// pump, so the snapshot is consistent with the completion stream.
+    Metrics { tag: u64, out: ConnHandle },
 }
 
 /// A connection's reply sink plus its in-flight counter. Readers bump the
@@ -109,7 +120,8 @@ impl NetServer {
         let stop = Arc::new(AtomicBool::new(false));
         let coord = Coordinator::start(cfg.server);
         let (cmd_tx, cmd_rx) = mpsc::channel::<Cmd>();
-        let pump = thread::spawn(move || pump_loop(coord, cmd_rx));
+        let metrics_out = cfg.metrics_out;
+        let pump = thread::spawn(move || pump_loop(coord, cmd_rx, metrics_out));
         let accept = {
             let stop = Arc::clone(&stop);
             let read_timeout = cfg.read_timeout;
@@ -166,10 +178,15 @@ impl NetServer {
 /// The pump: sole owner of the coordinator. Routes every admitted job id
 /// to the connection that submitted it and forwards completions in the
 /// order the pool finishes them.
-fn pump_loop(mut coord: Coordinator, cmd_rx: mpsc::Receiver<Cmd>) {
+fn pump_loop(
+    mut coord: Coordinator,
+    cmd_rx: mpsc::Receiver<Cmd>,
+    metrics_out: Option<std::path::PathBuf>,
+) {
     // JobId.0 -> (reply sink, client correlation tag)
     let mut routes: HashMap<u64, (ConnHandle, u64)> = HashMap::new();
     let mut alive = true;
+    let mut last_metrics_write = Instant::now();
     while alive || !routes.is_empty() {
         let cmd = if !alive {
             None
@@ -208,8 +225,24 @@ fn pump_loop(mut coord: Coordinator, cmd_rx: mpsc::Receiver<Cmd>) {
         while let Some(r) = coord.try_collect_one() {
             route_response(&mut routes, r);
         }
+        if let Some(path) = &metrics_out {
+            if last_metrics_write.elapsed() >= Duration::from_secs(1) {
+                write_metrics(&coord, path);
+                last_metrics_write = Instant::now();
+            }
+        }
+    }
+    if let Some(path) = &metrics_out {
+        write_metrics(&coord, path); // final snapshot at shutdown
     }
     coord.shutdown();
+}
+
+/// Dump the coordinator's metrics snapshot to `path` as pretty JSON.
+/// Best-effort: an unwritable path is ignored rather than killing the
+/// pump (serving keeps priority over observability).
+fn write_metrics(coord: &Coordinator, path: &std::path::Path) {
+    let _ = std::fs::write(path, coord.metrics().to_json().to_string_pretty());
 }
 
 fn handle_cmd(coord: &mut Coordinator, routes: &mut HashMap<u64, (ConnHandle, u64)>, cmd: Cmd) {
@@ -229,22 +262,35 @@ fn handle_cmd(coord: &mut Coordinator, routes: &mut HashMap<u64, (ConnHandle, u6
                 b,
                 dataflow,
                 deadline_ms,
+                tenant,
+                priority,
             } = job;
-            let native = Job::NativeSpgemm {
-                a: wire_operand(a),
-                b: wire_operand(b),
-                dataflow,
+            let spec = JobSpec {
+                job: Job::NativeSpgemm {
+                    a: wire_operand(a),
+                    b: wire_operand(b),
+                    dataflow,
+                },
+                deadline: deadline_ms.map(Duration::from_millis),
+                tenant: if tenant.is_empty() {
+                    TenantId::default()
+                } else {
+                    TenantId(tenant)
+                },
+                priority: Priority(priority),
             };
-            let admitted = match deadline_ms {
-                Some(ms) => coord.try_submit(native.deadline(Duration::from_millis(ms))),
-                None => coord.try_submit(native),
-            };
-            match admitted {
+            match coord.try_submit(spec) {
                 Ok(id) => {
                     routes.insert(id.0, (out, tag));
                 }
                 Err(error) => out.reply(Reply::Rejected { tag, error }),
             }
+        }
+        Cmd::Metrics { tag, out } => {
+            out.reply(Reply::Metrics {
+                tag,
+                json: coord.metrics().to_json().to_string_compact(),
+            });
         }
     }
 }
@@ -352,6 +398,16 @@ fn serve_conn(
                     let cmd = Cmd::Submit {
                         tag,
                         job,
+                        out: handle.clone(),
+                    };
+                    if cmd_tx.send(cmd).is_err() {
+                        break;
+                    }
+                }
+                Ok(Request::Metrics { tag }) => {
+                    handle.inflight.fetch_add(1, Ordering::SeqCst);
+                    let cmd = Cmd::Metrics {
+                        tag,
                         out: handle.clone(),
                     };
                     if cmd_tx.send(cmd).is_err() {

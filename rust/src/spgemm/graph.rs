@@ -11,8 +11,9 @@
 //! * **served** ([`bfs_levels_served`], [`apsp_minplus_served`],
 //!   [`transitive_closure_served`], [`triangles_served`]) — the same
 //!   algorithms with every matrix product routed through the
-//!   [`Coordinator`] as a [`Dataflow::ParGustavson`] job carrying the
-//!   right [`SemiringKind`]. The products run on the persistent worker
+//!   [`Coordinator`] as a [`crate::spgemm::Dataflow::ParGustavson`] job
+//!   (built with the fluent [`Job::pair`] builder) carrying the right
+//!   [`SemiringKind`]. The products run on the persistent worker
 //!   pool with hybrid accumulators, and products over the *registered*
 //!   adjacency pair share one cached symbolic plan — even across
 //!   semirings, because plans are value-free. Results are identical to
@@ -31,7 +32,6 @@
 //! ([`Csr::prune_zeros`]) if that distinction matters for your graph.
 
 use super::semiring::{ewise_add, spgemm_semiring, Boolean, MinPlus, SemiringKind};
-use super::{AccumSpec, Dataflow};
 use crate::coordinator::{Coordinator, Job, MatrixId, MatrixRef};
 use crate::formats::{Csr, Value};
 use std::sync::Arc;
@@ -186,11 +186,9 @@ fn served_spgemm(
         0,
         "served graph algorithms need exclusive use of the coordinator"
     );
-    let id = coord.submit(Job::NativeSpgemm {
-        a,
-        b,
-        dataflow: Dataflow::ParGustavson { threads, accum: AccumSpec::default(), semiring: kind },
-    });
+    let id = coord
+        .try_submit(Job::pair(a, b).threads(threads).semiring(kind))
+        .expect("graph jobs run against an unbounded default tenant");
     let r = coord.collect_one().expect("graph job outstanding");
     debug_assert_eq!(r.id, id, "exclusive use violated");
     r.c

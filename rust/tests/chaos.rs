@@ -260,11 +260,9 @@ fn poisoned_plan_slot_fails_waiters_fast_then_heals() {
     // *after* the slot poisons would heal it and hide the waiters'
     // fail-fast path.
     let stall = rmat(&RmatParams::new(9, 20_000, 43));
-    let stall_id = coord.submit(Job::NativeSpgemm {
-        a: stall.clone().into(),
-        b: stall.into(),
-        dataflow: Dataflow::RowWiseHash,
-    });
+    let stall_id = coord
+        .try_submit(Job::pair(stall.clone(), stall).dataflow(Dataflow::RowWiseHash))
+        .expect("admission");
     faults::install(single_spec(FaultSite::Symbolic, FaultKind::Panic));
     let ids: Vec<JobId> = (0..3)
         .map(|_| coord.try_submit(par_job(id_a, id_b)).expect("admission"))
@@ -371,7 +369,7 @@ fn traffic_and_coordinator_carry_fault_observability() {
     // A zero-length delay: an injection that fires without failing the
     // job — pure observability.
     faults::install(single_spec(FaultSite::NumericRow, FaultKind::Delay(Duration::ZERO)));
-    coord.submit(par_job(id_a, id_b));
+    coord.try_submit(par_job(id_a, id_b)).expect("admission");
     let r = coord.collect_one().expect("one outstanding");
     faults::clear();
 

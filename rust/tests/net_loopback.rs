@@ -21,13 +21,16 @@
 //! on `faults::test_lock()` and the suite runs as its own test binary
 //! (see the `[[test]]` note in Cargo.toml).
 
-use smash::coordinator::{Coordinator, ServeError, ServerConfig};
+use smash::coordinator::{
+    Coordinator, MetricsSnapshot, ServeError, ServerConfig, METRICS_SCHEMA_VERSION,
+};
 use smash::faults::{self, FaultKind, FaultPlan, FaultSpec};
 use smash::formats::Csr;
 use smash::gen::{rmat, RmatParams};
 use smash::net::frame::{self, Reply, Request, WireJob, WireOperand};
 use smash::net::{Client, NetError, NetServer, NetServerConfig};
 use smash::spgemm::{spgemm_semiring, AccumSpec, Dataflow, SemiringKind};
+use smash::util::json::Json;
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{Shutdown, TcpStream};
 use std::time::Duration;
@@ -46,6 +49,8 @@ fn par_job(a: WireOperand, b: WireOperand, semiring: SemiringKind) -> WireJob {
             semiring,
         },
         deadline_ms: None,
+        tenant: String::new(),
+        priority: 1,
     }
 }
 
@@ -267,6 +272,8 @@ fn typed_rejections_round_trip_and_connection_survives() {
                 semiring: SemiringKind::Arithmetic,
             },
             deadline_ms: Some(0),
+            tenant: String::new(),
+            priority: 1,
         })
         .expect("submit");
     match client.recv().expect("recv") {
@@ -413,6 +420,70 @@ fn injected_fault_is_contained_to_one_wire_error() {
         }
         other => panic!("post-panic job must succeed, got {other:?}"),
     }
+    server.shutdown();
+}
+
+/// The consolidated observability surface crosses the wire: a `Metrics`
+/// frame returns the coordinator's [`MetricsSnapshot`] as compact JSON —
+/// schema-versioned, decodable with the same codec the file export uses,
+/// and carrying the per-tenant counters the burst just produced (the
+/// wire job's `tenant`/`priority` fields route into the scheduler).
+#[test]
+fn metrics_frame_scrapes_per_tenant_counters_over_the_wire() {
+    let _g = faults::test_lock();
+    faults::clear();
+    let a = rmat(&RmatParams::new(5, 200, 61));
+    let b = rmat(&RmatParams::new(5, 200, 62));
+    let server = start(NetServerConfig::default());
+    let mut client = Client::connect(&server.local_addr().to_string()).expect("connect");
+    let id_a = client.register("A", &a).expect("register A");
+    let id_b = client.register("B", &b).expect("register B");
+    // Two tenants on one connection: one untagged job plus two tagged
+    // `interactive` at weight 3.
+    for (tenant, priority) in [("", 1u32), ("interactive", 3), ("interactive", 3)] {
+        let mut job = par_job(
+            WireOperand::Registered(id_a),
+            WireOperand::Registered(id_b),
+            SemiringKind::Arithmetic,
+        );
+        job.tenant = tenant.to_string();
+        job.priority = priority;
+        client.submit(job).expect("submit");
+    }
+    for _ in 0..3 {
+        match client.recv().expect("recv") {
+            Reply::JobOk { .. } => {}
+            other => panic!("burst job must succeed, got {other:?}"),
+        }
+    }
+    let text = client.metrics().expect("metrics over the wire");
+    let json = Json::parse(&text).expect("metrics frame carries valid JSON");
+    assert_eq!(
+        json.get("schema").and_then(|v| v.as_u64().ok()),
+        Some(METRICS_SCHEMA_VERSION),
+        "the wire snapshot is schema-versioned"
+    );
+    let snap = MetricsSnapshot::from_json(&json).expect("snapshot decodes");
+    assert_eq!(
+        snap.symbolic_passes, 1,
+        "the same-pair burst shares one symbolic pass"
+    );
+    let interactive = snap
+        .tenants
+        .iter()
+        .find(|t| t.tenant == "interactive")
+        .expect("the tagged tenant shows up in the scrape");
+    assert_eq!((interactive.completed, interactive.ok), (2, 2));
+    assert!(
+        interactive.quantile_us(0.99) > 0,
+        "completions land in the latency histogram"
+    );
+    let default = snap
+        .tenants
+        .iter()
+        .find(|t| t.tenant == "default")
+        .expect("untagged wire jobs land on the default tenant");
+    assert_eq!((default.completed, default.ok), (1, 1));
     server.shutdown();
 }
 

@@ -123,11 +123,9 @@ fn coordinator_never_drops_or_duplicates() {
     let mut expected = std::collections::HashSet::new();
     for seed in 0..10 {
         let a = erdos_renyi(24, 60, seed);
-        let id = coord.submit(Job::NativeSpgemm {
-            a: a.clone().into(),
-            b: a.into(),
-            dataflow: Dataflow::RowWiseHash,
-        });
+        let id = coord
+            .try_submit(Job::pair(a.clone(), a).dataflow(Dataflow::RowWiseHash))
+            .expect("admission is unbounded");
         expected.insert(id);
     }
     let responses = coord.collect_all();
@@ -148,18 +146,16 @@ fn coordinator_mixed_jobs_correct() {
     let (oracle, _) = smash::spgemm::gustavson(&a, &b);
     for i in 0..6 {
         if i % 2 == 0 {
-            coord.submit(Job::SmashSpgemm {
-                a: a.clone().into(),
-                b: b.clone().into(),
-                kernel: KernelConfig::v3(),
-                sim: SimConfig::test_tiny(),
-            });
+            coord
+                .try_submit(
+                    Job::pair(a.clone(), b.clone())
+                        .simulate(KernelConfig::v3(), SimConfig::test_tiny()),
+                )
+                .expect("admission is unbounded");
         } else {
-            coord.submit(Job::NativeSpgemm {
-                a: a.clone().into(),
-                b: b.clone().into(),
-                dataflow: Dataflow::Outer,
-            });
+            coord
+                .try_submit(Job::pair(a.clone(), b.clone()).dataflow(Dataflow::Outer))
+                .expect("admission is unbounded");
         }
     }
     for r in coord.collect_all().values() {
